@@ -1,0 +1,116 @@
+//! End-to-end driver (DESIGN.md §4): proves every layer composes.
+//!
+//! 1. Loads the AOT train-step for the `e2e` config (6-layer, d=384
+//!    LLaMA-style QAT transformer with Sherry 3:4 + Arenas) and trains it
+//!    for a few hundred steps on the synthetic corpus via PJRT, logging
+//!    the loss curve while Layer-3 anneals λ_t.
+//! 2. Exports the trained latents as a checkpoint.
+//! 3. PTQ-projects them, packs to 1.25-bit, and serves the model on the
+//!    native LUT engine — reporting accuracy, perplexity, tokens/s and
+//!    model bytes against the BF16 / I2_S / TL2 baselines.
+//!
+//! Run: `cargo run --release --example e2e_train -- [steps]`
+//! (default 250; results recorded in EXPERIMENTS.md)
+
+use std::time::Instant;
+
+use sherry::engine::{KvCache, NativeConfig, Scratch, TernaryModel};
+use sherry::eval;
+use sherry::pack::Format;
+use sherry::quant::Schedule;
+use sherry::runtime::Runtime;
+use sherry::train::{checkpoint, TrainConfig, Trainer};
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(250);
+    let artifacts = sherry::artifacts_dir();
+    anyhow::ensure!(
+        artifacts.join("manifest.tsv").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+
+    // --- 1. QAT training through PJRT -----------------------------------
+    let cfg = TrainConfig {
+        config: "e2e".into(),
+        method: "sherry34".into(),
+        granularity: "per_channel".into(),
+        steps,
+        lr: 1e-3,
+        schedule: Schedule::CosineWarmup,
+        seed: 0,
+        er_layer: "layer0.wq".into(),
+        er_every: (steps / 8).max(1),
+    };
+    let mut rt = Runtime::cpu(&artifacts)?;
+    let mut trainer = Trainer::new(&mut rt, &cfg)?;
+    println!("[e2e] training e2e/sherry34 for {steps} steps (Arenas cosine-warmup)...");
+    let t0 = Instant::now();
+    let outcome = trainer.run(&cfg)?;
+    let train_s = t0.elapsed().as_secs_f64();
+    println!("[e2e] loss curve:");
+    for (i, l) in outcome.losses.iter().enumerate() {
+        if i % (steps / 20).max(1) == 0 || i + 1 == steps {
+            println!("  step {i:>5}  loss {l:.4}");
+        }
+    }
+    println!("[e2e] gradient effective-rank trace (layer0.wq):");
+    for (s, er) in &outcome.er_trace {
+        println!("  step {s:>5}  ER {er:.1}");
+    }
+    let eval_loss = trainer.eval_loss(&cfg, &outcome.params, 4)?;
+    println!(
+        "[e2e] trained in {train_s:.0}s ({:.2} s/step) | final train loss {:.4} | heldout loss {:.4} (ppl {:.1}) | final λ {:.4}",
+        train_s / steps as f64,
+        outcome.losses.last().unwrap(),
+        eval_loss,
+        eval_loss.exp(),
+        outcome.final_lambda,
+    );
+
+    // --- 2. checkpoint ----------------------------------------------------
+    let ckpt = artifacts.join("checkpoints/e2e_sherry.ckpt");
+    checkpoint::save(&ckpt, &outcome.params)?;
+    println!("[e2e] checkpoint → {}", ckpt.display());
+
+    // --- 3. native serving: accuracy + efficiency across formats ----------
+    let native = NativeConfig::named("e2e").unwrap();
+    println!("\n[e2e] synthetic-benchmark accuracy (PTQ sherry34, LUT-served):");
+    let row = eval::evaluate_ptq(
+        "SherryLLM-e2e",
+        native,
+        &outcome.params,
+        sherry::quant::Method::Sherry34,
+        sherry::quant::Granularity::PerChannel,
+        25,
+        0,
+    );
+    println!("{}", eval::render_table("e2e evaluation", &[row]));
+
+    println!("[e2e] token-generation efficiency across formats (Table 4 shape):");
+    println!("{:<8} {:>10} {:>12} {:>12}", "format", "size MB", "tok/s", "vs bf16");
+    let mut bf16_tps = 0.0f64;
+    for format in [Format::Dense, Format::I2S, Format::Tl2, Format::Sherry] {
+        let model = TernaryModel::build(native, &outcome.params, format);
+        let mut cache = KvCache::new(&native);
+        let mut scratch = Scratch::default();
+        // warmup + timed generation
+        model.generate(&[1, 2, 3, 4], 16, &mut cache, &mut scratch);
+        let n_tok = 96usize;
+        let t0 = Instant::now();
+        let out = model.generate(&[1, 2, 3, 4], n_tok, &mut cache, &mut scratch);
+        let dt = t0.elapsed().as_secs_f64();
+        let tps = out.len() as f64 / dt;
+        if format == Format::Dense {
+            bf16_tps = tps;
+        }
+        println!(
+            "{:<8} {:>10.2} {:>12.1} {:>11.2}x",
+            format.name(),
+            model.bytes() as f64 / 1e6,
+            tps,
+            tps / bf16_tps
+        );
+    }
+    println!("\ne2e_train OK");
+    Ok(())
+}

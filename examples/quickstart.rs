@@ -1,0 +1,85 @@
+//! Quickstart: the Sherry pipeline on one weight matrix.
+//!
+//! 1. Quantize a float matrix with the 3:4 Sparse-AbsMean quantizer
+//!    (paper Eq. 4-5) and compare reconstruction error against baselines.
+//! 2. Pack it into the 1.25-bit format (4-bit index + 1 sign bit per
+//!    4-weight block) next to TL2 (1.67-bit) and I2_S (2-bit).
+//! 3. Run the multiplication-free LUT GEMV and verify it matches the
+//!    dense product exactly.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sherry::engine::lut;
+use sherry::pack::{Format, Packed34, PackedMatrix};
+use sherry::quant::{quantize, reconstruction_error, Granularity, Method};
+use sherry::tensor::Mat;
+use sherry::util::Pcg64;
+
+fn main() {
+    let (d_in, d_out) = (1024, 256);
+    let mut rng = Pcg64::seeded(42);
+    let w = Mat::randn(&mut rng, d_in, d_out, 0.05);
+
+    println!("== 1. Quantization (d_in={d_in}, d_out={d_out}) ==");
+    println!("{:<12} {:>12} {:>10} {:>10}", "method", "L2 error", "sparsity", "bits/w");
+    let mut sherry_q = None;
+    for m in [Method::Sherry34, Method::AbsMean, Method::AbsMedian, Method::Twn, Method::Binary] {
+        let q = quantize(&w, m, Granularity::PerChannel);
+        println!(
+            "{:<12} {:>12.4} {:>9.1}% {:>10.2}",
+            m.name(),
+            reconstruction_error(&w, &q),
+            q.sparsity() * 100.0,
+            m.bits_per_weight()
+        );
+        if m == Method::Sherry34 {
+            assert!(q.is_34_sparse(), "3:4 constraint (Eq. 3) violated");
+            sherry_q = Some(q);
+        }
+    }
+    let q = sherry_q.unwrap();
+
+    println!("\n== 2. Packing ==");
+    let p34 = Packed34::from_ternary(&q);
+    let n = (d_in * d_out) as f32;
+    println!(
+        "sherry 1.25-bit: {} weight bytes ({:.3} bits/weight; {} idx + {} sign bytes/channel)",
+        p34.weight_bytes(),
+        p34.weight_bytes() as f32 * 8.0 / n,
+        p34.idx_bytes_per_ch,
+        p34.sign_bytes_per_ch,
+    );
+    let qd = quantize(&w, Method::AbsMean, Granularity::PerChannel);
+    for f in [Format::Tl2, Format::I2S] {
+        let p = sherry::pack::pack(&qd, f);
+        println!(
+            "{:<6} {:>5.2}-bit: {} weight bytes ({:.3} bits/weight)",
+            f.name(),
+            f.bits_per_weight(),
+            p.weight_bytes(),
+            p.weight_bytes() as f32 * 8.0 / n
+        );
+    }
+    // round-trip check
+    for j in [0usize, 17, d_out - 1] {
+        assert_eq!(p34.decode_channel(j), q.t_col(j), "pack34 round-trip");
+    }
+
+    println!("\n== 3. LUT GEMV (Fig. 9 engine) ==");
+    let x = rng.normal_vec(d_in);
+    let mut luts = vec![0.0f32; (d_in / 4) * 16];
+    let mut y = vec![0.0f32; d_out];
+    lut::gemv_pack34(&p34, &x, &mut luts, &mut y);
+    // dense reference
+    let deq = q.dequant().transpose();
+    let mut y_ref = vec![0.0f32; d_out];
+    sherry::tensor::gemv_f32(&deq.data, d_out, d_in, &x, &mut y_ref);
+    let max_err = y
+        .iter()
+        .zip(&y_ref)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("LUT vs dense max |Δ| = {max_err:.2e} (pure adds + one α multiply per channel)");
+    assert!(max_err < 1e-3, "LUT engine must match dense");
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,63 @@
+//! Serving demo: the Layer-3 coordinator under a bursty request trace.
+//!
+//! Spins up the native Sherry 1.25-bit engine behind the continuous
+//! batcher + KV pool, replays a Poisson trace, and prints routing +
+//! latency metrics per format — the edge-deployment scenario the paper's
+//! introduction motivates.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use sherry::coordinator::{serve_trace, BatcherConfig, ServerConfig, TraceSpec};
+use sherry::engine::{random_weights, NativeConfig, TernaryModel};
+use sherry::pack::Format;
+use sherry::train::checkpoint;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = NativeConfig::named("micro").unwrap();
+    // Use the e2e-trained checkpoint when present, else random weights.
+    let ckpt = sherry::artifacts_dir().join("checkpoints/micro_sherry.ckpt");
+    let weights = if ckpt.exists() {
+        println!("[serve_demo] using checkpoint {}", ckpt.display());
+        checkpoint::load(&ckpt)?
+    } else {
+        println!("[serve_demo] no checkpoint; random weights");
+        random_weights(&cfg, 7)
+    };
+
+    let trace = TraceSpec {
+        n_requests: 24,
+        mean_interarrival_s: 0.005,
+        prompt_len: 12,
+        max_new_tokens: 32,
+        seed: 3,
+    };
+    let server_cfg = ServerConfig {
+        batcher: BatcherConfig { max_active: 6, token_budget: 6 * (12 + 32) },
+        kv_capacity: 6,
+        workers: 6,
+    };
+
+    println!(
+        "[serve_demo] trace: {} requests, {} prompt + {} gen tokens, Poisson {:.0}ms\n",
+        trace.n_requests,
+        trace.prompt_len,
+        trace.max_new_tokens,
+        trace.mean_interarrival_s * 1e3
+    );
+    println!("{:<8} {:>9} {:>12} {:>10} {:>10}", "format", "size MB", "tok/s", "p50 lat", "p99 lat");
+    for format in [Format::Dense, Format::I2S, Format::Tl2, Format::Sherry] {
+        let model = TernaryModel::build(cfg, &weights, format);
+        let (completions, metrics) = serve_trace(&model, server_cfg, trace);
+        assert_eq!(completions.len(), trace.n_requests, "all requests must finish");
+        println!(
+            "{:<8} {:>9.2} {:>12.1} {:>9.3}s {:>9.3}s",
+            format.name(),
+            model.bytes() as f64 / 1e6,
+            metrics.throughput_tps(),
+            metrics.latency_p50(),
+            metrics.latency_p99(),
+        );
+    }
+    println!("\nserve_demo OK");
+    Ok(())
+}

@@ -1,0 +1,180 @@
+"""AOT exporter: lower the Layer-2 graphs to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+the ``xla`` crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+(64-bit instruction ids); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Outputs, under ``artifacts/``:
+
+  {cfg}_{method}_{gran}.train.hlo.txt   Adam train step (fwd+bwd, STE+Arenas)
+  {cfg}_{method}_{gran}.loss.hlo.txt    eval loss (perplexity)
+  {cfg}_{method}_{gran}.fwd.hlo.txt     inference logits (Pallas sherry path)
+  kernel_quantize34.hlo.txt             standalone L1 kernel round-trip test
+  kernel_ternary_matmul.hlo.txt         standalone L1 kernel round-trip test
+  {cfg}.params.tsv                      ordered param ABI (name, shape)
+  manifest.tsv                          artifact index for the Rust runtime
+
+Batch sizes are fixed per config (PJRT executables are shape-specialized);
+the Rust coordinator reads them from the manifest.
+
+Run as ``python -m compile.aot --out ../artifacts`` from ``python/``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import quantize34, ternary_matmul
+
+# (config name, batch size) pairs: train batch is (B, T+1) int32.
+BATCH = {"nano": 16, "micro": 8, "e2e": 8}
+
+ALL_METHODS = [
+    "bf16",
+    "sherry34",
+    "absmean",
+    "absmedian",
+    "twn",
+    "binary",
+    "lsq",
+    "seq",
+    "dlt",
+    "tequila",
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def export_model_artifacts(cfg_name: str, method: str, granularity: str, out_dir: str, kinds):
+    cfg = M.CONFIGS[cfg_name]
+    cfg = M.ModelConfig(**{**cfg.__dict__, "method": method, "granularity": granularity})
+    b = BATCH[cfg_name]
+    pspecs = [_spec(s) for _, s in M.param_spec(cfg)]
+    stem = f"{cfg_name}_{method}_{granularity}"
+    rows = []
+
+    if "train" in kinds:
+        fn = M.make_train_step_fn(cfg)
+        args = (
+            pspecs
+            + pspecs
+            + pspecs
+            + [
+                _spec((b, cfg.seq_len + 1), jnp.int32),
+                _spec((), jnp.int32),
+                _spec((), jnp.float32),
+                _spec((), jnp.float32),
+            ]
+        )
+        path = f"{stem}.train.hlo.txt"
+        _write(out_dir, path, to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args)))
+        rows.append((stem, "train", cfg_name, method, granularity, path, str(len(pspecs)), str(b)))
+
+    if "loss" in kinds:
+        fn = M.make_loss_fn(cfg)
+        args = pspecs + [_spec((b, cfg.seq_len + 1), jnp.int32), _spec((), jnp.float32)]
+        path = f"{stem}.loss.hlo.txt"
+        _write(out_dir, path, to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args)))
+        rows.append((stem, "loss", cfg_name, method, granularity, path, str(len(pspecs)), str(b)))
+
+    if "fwd" in kinds:
+        fn = M.make_forward_fn(cfg)
+        args = pspecs + [_spec((b, cfg.seq_len), jnp.int32)]
+        path = f"{stem}.fwd.hlo.txt"
+        _write(out_dir, path, to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args)))
+        rows.append((stem, "fwd", cfg_name, method, granularity, path, str(len(pspecs)), str(b)))
+
+    return rows
+
+
+def export_param_spec(cfg_name: str, out_dir: str):
+    cfg = M.CONFIGS[cfg_name]
+    lines = [f"{name}\t{','.join(map(str, shape))}" for name, shape in M.param_spec(cfg)]
+    _write(out_dir, f"{cfg_name}.params.tsv", "\n".join(lines) + "\n")
+
+
+def export_kernel_artifacts(out_dir: str):
+    """Standalone Pallas kernels for Rust runtime integration tests."""
+    w = _spec((512, 256))
+    path = "kernel_quantize34.hlo.txt"
+    _write(out_dir, path, to_hlo_text(jax.jit(lambda w: tuple(quantize34(w))).lower(w)))
+    x, t, a = _spec((16, 512)), _spec((512, 256)), _spec((256,))
+    path2 = "kernel_ternary_matmul.hlo.txt"
+    _write(
+        out_dir,
+        path2,
+        to_hlo_text(jax.jit(lambda x, t, a: (ternary_matmul(x, t, a),)).lower(x, t, a)),
+    )
+    return [
+        ("kernel_quantize34", "kernel", "-", "-", "-", path, "1", "-"),
+        ("kernel_ternary_matmul", "kernel", "-", "-", "-", path2, "3", "-"),
+    ]
+
+
+def _write(out_dir: str, rel: str, text: str):
+    p = os.path.join(out_dir, rel)
+    with open(p, "w") as f:
+        f.write(text)
+    print(f"  wrote {rel} ({len(text) // 1024} KiB)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--fast", action="store_true", help="nano sherry34+absmean only (CI)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    from .golden import export_golden
+
+    export_golden(args.out)
+
+    rows = []
+    rows += export_kernel_artifacts(args.out)
+
+    if args.fast:
+        plan = [("nano", ["sherry34", "absmean"], "per_channel", ("train", "loss", "fwd"))]
+        cfgs = ["nano"]
+    else:
+        plan = [
+            ("nano", ALL_METHODS, "per_channel", ("train", "loss", "fwd")),
+            ("nano", ["sherry34"], "per_tensor", ("train", "loss")),
+            ("nano", ["sherry34"], "per_group", ("train", "loss")),
+            ("micro", ["sherry34", "absmean"], "per_channel", ("train", "loss", "fwd")),
+            ("e2e", ["sherry34"], "per_channel", ("train", "loss", "fwd")),
+        ]
+        cfgs = ["nano", "micro", "e2e"]
+
+    for cfg_name in cfgs:
+        export_param_spec(cfg_name, args.out)
+
+    for cfg_name, methods, gran, kinds in plan:
+        for method in methods:
+            print(f"[aot] {cfg_name}/{method}/{gran} {kinds}")
+            rows += export_model_artifacts(cfg_name, method, gran, args.out, kinds)
+
+    header = "stem\tkind\tconfig\tmethod\tgranularity\tpath\tn_params\tbatch\n"
+    with open(os.path.join(args.out, "manifest.tsv"), "w") as f:
+        f.write(header + "\n".join("\t".join(r) for r in rows) + "\n")
+    print(f"[aot] manifest: {len(rows)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Golden-vector exporter: cross-language ground truth for the Rust side.
+
+Writes ``artifacts/golden/*.bin`` files in a trivial binary format
+
+    [u32 rows LE][u32 cols LE][f32 data row-major LE]
+
+so ``rust/src/quant`` and ``rust/src/engine`` can be tested bit-for-bit
+against the jnp oracles without any PRNG coordination. Vectors (α, y) are
+stored as 1×n matrices.
+
+Invoked from ``aot.py`` (part of ``make artifacts``).
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+from . import model as M
+
+SEED = 20260710
+D_IN, D_OUT, D_T = 256, 128, 16
+
+
+def write_mat(path: str, a: np.ndarray):
+    a = np.asarray(a, dtype=np.float32)
+    if a.ndim == 1:
+        a = a[None, :]
+    assert a.ndim == 2
+    with open(path, "wb") as f:
+        f.write(struct.pack("<II", a.shape[0], a.shape[1]))
+        f.write(a.astype("<f4").tobytes())
+
+
+def export_golden(out_dir: str):
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(SEED)
+    w = rng.normal(size=(D_IN, D_OUT)).astype(np.float32)
+    x = rng.normal(size=(D_T, D_IN)).astype(np.float32)
+    wj = jnp.asarray(w)
+    write_mat(os.path.join(gdir, "w.bin"), w)
+    write_mat(os.path.join(gdir, "x.bin"), x)
+
+    # Per-channel quantizers: T and alpha for each method.
+    cases = {
+        "sherry34": ref.sherry34_quantize,
+        "absmean": ref.absmean_quantize,
+        "absmedian": ref.absmedian_quantize,
+        "twn": ref.twn_quantize,
+        "binary": ref.binary_quantize,
+    }
+    for name, fn in cases.items():
+        t, a = fn(wj)
+        write_mat(os.path.join(gdir, f"{name}.t.bin"), np.asarray(t))
+        write_mat(os.path.join(gdir, f"{name}.alpha.bin"), np.asarray(a))
+
+    # Sherry at all three granularities: full dequant matrix.
+    for gran in ("per_tensor", "per_channel", "per_group"):
+        cfg = M.ModelConfig(**{**M.CONFIGS["nano"].__dict__, "granularity": gran, "group_size": 128})
+        deq = M._deq_sherry34(wj, None, cfg)
+        write_mat(os.path.join(gdir, f"sherry34_{gran}.deq.bin"), np.asarray(deq))
+
+    # Matmul ground truth for the LUT engine: y = x @ (T∘α), sherry per-channel.
+    t, a = ref.sherry34_quantize(wj)
+    y = ref.ternary_matmul(jnp.asarray(x), t, a)
+    write_mat(os.path.join(gdir, "sherry34.y.bin"), np.asarray(y))
+
+    # Arenas forward ground truth at λ = 0.37.
+    ya = ref.arenas_matmul(jnp.asarray(x), t, a, wj, 0.37)
+    write_mat(os.path.join(gdir, "sherry34.arenas_y.bin"), np.asarray(ya))
+
+    # Effective-rank scalars for the Rust SVD/ER implementation.
+    g1 = rng.normal(size=(64, 48)).astype(np.float32)
+    g2 = (np.outer(rng.normal(size=64), rng.normal(size=48)) + 0.01 * rng.normal(size=(64, 48))).astype(np.float32)
+    write_mat(os.path.join(gdir, "er_g1.bin"), g1)
+    write_mat(os.path.join(gdir, "er_g2.bin"), g2)
+    ers = np.array(
+        [float(ref.effective_rank(jnp.asarray(g1))), float(ref.effective_rank(jnp.asarray(g2)))],
+        dtype=np.float32,
+    )
+    write_mat(os.path.join(gdir, "er_expected.bin"), ers)
+    print(f"  wrote golden vectors to {gdir}")

@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for Sherry (build-time only; interpret=True).
+
+Public surface:
+  quantize34       — 3:4 sparse-absmean ternary quantizer (Eq. 4-5)
+  ternary_matmul   — Y = X·(T∘α) inference matmul (Eq. 2)
+  arenas_matmul    — fused Y = X·Tα + λ·X·W training forward (Eq. 7)
+  ref              — pure-jnp oracles for all of the above + baselines
+"""
+
+from .quantize34 import quantize34
+from .ternary_matmul import ternary_matmul
+from .arenas_matmul import arenas_matmul
+from . import ref
+
+__all__ = ["quantize34", "ternary_matmul", "arenas_matmul", "ref"]

@@ -1,0 +1,79 @@
+"""Pallas kernel: fused Arenas training forward Y = X·Tα + λ_t·X·W (Eq. 7).
+
+During QAT both the ternary product and the full-precision residual read
+the *same* X tile, so fusing them halves activation traffic — on TPU the
+X tile is loaded into VMEM once and feeds two MXU passes (T widened, W
+native). λ_t enters as a scalar in SMEM, prefetched per program.
+
+Same grid/tiling as ``ternary_matmul``; the scale-and-residual epilogue
+runs on the last k step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ternary_matmul import _pick, COL_TILE, K_TILE, ROW_TILE
+
+
+def _arenas_kernel(lam_ref, x_ref, t_ref, alpha_ref, w_ref, tern_ref, res_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        tern_ref[...] = jnp.zeros_like(tern_ref)
+        res_ref[...] = jnp.zeros_like(res_ref)
+
+    x = x_ref[...]
+    tern_ref[...] += x @ t_ref[...]
+    res_ref[...] += x @ w_ref[...]
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        lam = lam_ref[0]
+        tern_ref[...] = tern_ref[...] * alpha_ref[...][None, :] + lam * res_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def arenas_matmul(x, t, alpha, w, lam):
+    """Fused Y = X·Tα + λ·X·W.
+
+    Args:
+      x: (d_t, d_in); t, w: (d_in, d_out); alpha: (d_out,); lam: scalar.
+
+    Returns:
+      (d_t, d_out) output. The residual accumulator is an internal
+      second output discarded here (Pallas needs it materialized to
+      revisit across k steps).
+    """
+    d_t, d_in = x.shape
+    _, d_out = t.shape
+    rt, ct, kt = _pick(ROW_TILE, d_t), _pick(COL_TILE, d_out), _pick(K_TILE, d_in)
+    grid = (d_t // rt, d_out // ct, d_in // kt)
+    lam_arr = jnp.asarray(lam, x.dtype).reshape(1)
+    out, _res = pl.pallas_call(
+        _arenas_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j, k: (0,)),
+            pl.BlockSpec((rt, kt), lambda i, j, k: (i, k)),
+            pl.BlockSpec((kt, ct), lambda i, j, k: (k, j)),
+            pl.BlockSpec((ct,), lambda i, j, k: (j,)),
+            pl.BlockSpec((kt, ct), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rt, ct), lambda i, j, k: (i, j)),
+            pl.BlockSpec((rt, ct), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_t, d_out), x.dtype),
+            jax.ShapeDtypeStruct((d_t, d_out), x.dtype),
+        ],
+        interpret=True,
+    )(lam_arr, x, t, alpha, w)
+    return out

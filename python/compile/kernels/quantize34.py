@@ -1,0 +1,81 @@
+"""Pallas kernel: Sherry 3:4 sparse-absmean block quantizer (paper Eq. 4-5).
+
+The kernel tiles the weight matrix along the output-channel axis so each
+program instance quantizes a full column stripe: the per-channel scale α_j
+is a reduction over the whole column, so d_in is kept inside one block and
+only d_out is gridded. For the LLaMA layer shapes the column stripe easily
+fits VMEM (d_in ≤ 8192 → ≤ 4 MB per 128-channel stripe at f32).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): blocks of 4 never straddle
+a tile because the tile covers all of d_in; the inner prune/sign selection
+is pure VPU element-wise work; no MXU involvement.
+
+interpret=True everywhere — real-TPU lowering would emit a Mosaic
+custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output-channel tile. 128 matches the TPU lane width; it is also the
+# paper's quantization group size, so per-group granularity reuses the
+# same tiling.
+COL_TILE = 128
+
+
+def _quantize34_kernel(w_ref, t_ref, alpha_ref):
+    """One column stripe: T* per Eq. 4, α* per Eq. 5."""
+    w = w_ref[...]  # (d_in, COL_TILE)
+    d_in = w.shape[0]
+    aw = jnp.abs(w)
+    blocks = aw.reshape(d_in // 4, 4, w.shape[1])
+    # Stable argmin across the 4-lane axis → the pruned position.
+    prune = jnp.argmin(blocks, axis=1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, blocks.shape, 1)
+    keep = lane != prune[:, None, :]
+    sign = jnp.where(w >= 0, 1.0, -1.0).reshape(blocks.shape)
+    # sign(0) should be 0 for exact zeros so T stays ternary-faithful;
+    # jnp.sign handles that, but we need the tie-break of argmin to zero
+    # the *pruned* slot, so apply keep-mask to the sign grid.
+    sign = jnp.where(w.reshape(blocks.shape) == 0.0, 0.0, sign)
+    t = jnp.where(keep, sign, 0.0)
+    t = t.reshape(d_in, w.shape[1])
+    t_ref[...] = t
+    # α_j = 4/(3 d_in) Σ_{active} |w| (Eq. 5).
+    alpha_ref[...] = (4.0 / (3.0 * d_in)) * jnp.sum(aw * jnp.abs(t), axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def quantize34(w: jnp.ndarray):
+    """Sherry 3:4 quantizer as a Pallas call.
+
+    Args:
+      w: (d_in, d_out) float weights; d_in % 4 == 0, d_out % COL_TILE == 0.
+
+    Returns:
+      (t, alpha): t is (d_in, d_out) in {-1,0,+1} (as w.dtype), alpha is
+      (d_out,) per-channel scales.
+    """
+    d_in, d_out = w.shape
+    assert d_in % 4 == 0, "d_in must be a multiple of 4"
+    assert d_out % COL_TILE == 0, f"d_out must be a multiple of {COL_TILE}"
+    grid = (d_out // COL_TILE,)
+    return pl.pallas_call(
+        _quantize34_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((d_in, COL_TILE), lambda j: (0, j))],
+        out_specs=[
+            pl.BlockSpec((d_in, COL_TILE), lambda j: (0, j)),
+            pl.BlockSpec((COL_TILE,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_in, d_out), w.dtype),
+            jax.ShapeDtypeStruct((d_out,), w.dtype),
+        ],
+        interpret=True,
+    )(w)

@@ -1,0 +1,165 @@
+"""Pure-jnp reference oracles for the Sherry kernels and all baseline
+ternary quantizers.
+
+Everything here is the *correctness ground truth*: the Pallas kernels in
+this package and the Rust implementations in ``rust/src/quant`` are both
+tested against these functions (the Rust side via golden vectors exported
+by ``python/tests/test_golden.py``).
+
+Shapes follow the paper's convention: ``W`` is ``(d_in, d_out)``, ``X`` is
+``(d_t, d_in)``, quantization is per output channel (column) unless a
+granularity is specified.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Sherry 3:4 sparse ternary quantization (paper Eq. 3-5, App. D)
+# ---------------------------------------------------------------------------
+
+
+def sherry34_ternary(w: jnp.ndarray) -> jnp.ndarray:
+    """Optimal 3:4 sparse ternary assignment T* (paper Eq. 4).
+
+    For every contiguous block of four weights along axis 0, the element
+    with the smallest |w| is pruned to 0 and the remaining three take
+    sign(w). Ties are broken toward the *lowest index*, matching the Rust
+    implementation (stable argmin).
+    """
+    d_in, d_out = w.shape
+    assert d_in % 4 == 0, "d_in must be a multiple of the block size 4"
+    blocks = jnp.abs(w).reshape(d_in // 4, 4, d_out)
+    # Stable argmin over the block dimension.
+    prune = jnp.argmin(blocks, axis=1)  # (d_in/4, d_out)
+    lane = jnp.arange(4)[None, :, None]
+    keep = lane != prune[:, None, :]
+    t = jnp.sign(w).reshape(d_in // 4, 4, d_out) * keep
+    return t.reshape(d_in, d_out)
+
+
+def sherry34_scale(w: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """Optimal per-channel scale α* (paper Eq. 5).
+
+    α_j = (4 / (3·d_in)) · Σ_{i∈S_j} |W_ij| — i.e. the mean |w| over the
+    3·d_in/4 surviving (non-pruned) entries of column j.
+    """
+    d_in = w.shape[0]
+    active = (t != 0).astype(w.dtype)
+    return (4.0 / (3.0 * d_in)) * jnp.sum(jnp.abs(w) * active, axis=0)
+
+
+def sherry34_quantize(w: jnp.ndarray):
+    """Full Sherry quantizer: returns (T, α) with T 3:4-sparse ternary."""
+    t = sherry34_ternary(w)
+    alpha = sherry34_scale(w, t)
+    return t, alpha
+
+
+def sherry34_dequant(t: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Dequantized weights Tα (element-wise column scaling)."""
+    return t * alpha[None, :]
+
+
+# ---------------------------------------------------------------------------
+# Ternary matmul + Arenas forward (paper Eq. 2, Eq. 7)
+# ---------------------------------------------------------------------------
+
+
+def ternary_matmul(x: jnp.ndarray, t: jnp.ndarray, alpha: jnp.ndarray) -> jnp.ndarray:
+    """Y = X · (T ∘ α): the multiplication-free inference matmul."""
+    return (x @ t) * alpha[None, :]
+
+
+def arenas_matmul(
+    x: jnp.ndarray,
+    t: jnp.ndarray,
+    alpha: jnp.ndarray,
+    w: jnp.ndarray,
+    lam,
+) -> jnp.ndarray:
+    """Arenas training forward Y = X·Tα + λ_t·X·W (paper Eq. 7)."""
+    return ternary_matmul(x, t, alpha) + lam * (x @ w)
+
+
+# ---------------------------------------------------------------------------
+# Baseline ternary quantizers (paper §2.1, App. E)
+# ---------------------------------------------------------------------------
+
+
+def _threshold_ternary(w: jnp.ndarray, delta: jnp.ndarray) -> jnp.ndarray:
+    """General thresholded ternarization (paper Eq. 1): ±1 outside ±Δ_j."""
+    return jnp.where(w > delta[None, :], 1.0, jnp.where(w < -delta[None, :], -1.0, 0.0))
+
+
+def _masked_absmean_scale(w: jnp.ndarray, t: jnp.ndarray) -> jnp.ndarray:
+    """α_j = mean |w| over active entries (paper Eq. 18); 0 if none."""
+    active = (t != 0).astype(w.dtype)
+    n = jnp.sum(active, axis=0)
+    s = jnp.sum(jnp.abs(w) * active, axis=0)
+    return jnp.where(n > 0, s / jnp.maximum(n, 1.0), 0.0)
+
+
+def absmean_quantize(w: jnp.ndarray):
+    """BitNet-style AbsMean (paper Eq. 15): Δ_j = α̅_j/2, α̅_j = mean|W_:,j|."""
+    abs_mean = jnp.mean(jnp.abs(w), axis=0)
+    t = _threshold_ternary(w, abs_mean / 2.0)
+    return t, _masked_absmean_scale(w, t)
+
+
+def absmedian_quantize(w: jnp.ndarray):
+    """AbsMedian variant: Δ_j = median(|W_:,j|)/2."""
+    abs_med = jnp.median(jnp.abs(w), axis=0)
+    t = _threshold_ternary(w, abs_med / 2.0)
+    return t, _masked_absmean_scale(w, t)
+
+
+def twn_quantize(w: jnp.ndarray):
+    """Ternary Weight Networks (paper Eq. 17): Δ*_j ≈ 0.7·E|W_:,j|."""
+    t = _threshold_ternary(w, 0.7 * jnp.mean(jnp.abs(w), axis=0))
+    return t, _masked_absmean_scale(w, t)
+
+
+def binary_quantize(w: jnp.ndarray):
+    """1-bit sign quantization with absmean scale (Fig. 6 ablation arm)."""
+    t = jnp.where(w >= 0, 1.0, -1.0)
+    return t, jnp.mean(jnp.abs(w), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Arenas λ_t schedules (paper Eq. 23-25, Fig. 7)
+# ---------------------------------------------------------------------------
+
+
+def lambda_linear(p):
+    return 1.0 - p
+
+
+def lambda_cosine(p):
+    return 0.5 * (1.0 + jnp.cos(jnp.pi * p))
+
+
+def lambda_exponential(p):
+    return jnp.exp(-5.0 * p)
+
+
+def lambda_with_warmup(base, p, warmup: float = 0.1):
+    """Ramp 0→1 over the first ``warmup`` fraction, then decay on the
+    re-normalized remaining progress."""
+    ramp = p / warmup
+    rest = (p - warmup) / (1.0 - warmup)
+    return jnp.where(p < warmup, ramp, base(jnp.clip(rest, 0.0, 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# Effective rank (paper Eq. 21-22, App. F)
+# ---------------------------------------------------------------------------
+
+
+def effective_rank(g: jnp.ndarray, eps: float = 1e-12) -> jnp.ndarray:
+    """ER(G) = exp(H(p)), p = σ/Σσ over the singular values of G."""
+    s = jnp.linalg.svd(g, compute_uv=False)
+    p = s / jnp.maximum(jnp.sum(s), eps)
+    h = -jnp.sum(jnp.where(p > eps, p * jnp.log(p), 0.0))
+    return jnp.exp(h)

@@ -1,0 +1,84 @@
+"""Pallas kernel: ternary matmul Y = X · (T ∘ α) (paper Eq. 2, inference path).
+
+Tiling (DESIGN.md §6, L1):
+
+  grid = (d_t / ROW_TILE, d_out / COL_TILE, d_in / K_TILE)
+
+with an f32 accumulator tile revisited across the k axis — the classic
+MXU-shaped schedule. K_TILE is a multiple of 4·128 so 3:4 sparse blocks
+never straddle a VMEM tile, and the α scaling is applied once on the final
+k step. On a real TPU, T would be streamed at 1.25 bits and widened to
+bf16 in VMEM; under interpret=True both operands are f32 but the HBM↔VMEM
+schedule expressed by the BlockSpecs is identical.
+
+VMEM budget per program (defaults, f32): X tile 8×512×4B = 16 KB, T tile
+512×128×4B = 256 KB (real TPU: 1.25-bit packed ≈ 10 KB), acc 8×128×4B =
+4 KB — far under the 16 MB VMEM ceiling, leaving room for 4-deep double
+buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+COL_TILE = 128
+K_TILE = 512
+
+
+def _ternary_matmul_kernel(x_ref, t_ref, alpha_ref, o_ref):
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # The matmul itself: on TPU this hits the MXU with T widened to the
+    # activation dtype; ternary values make it an add/sub tree on LUT
+    # hardware, but the dataflow (and numerics) are this exact product.
+    o_ref[...] += x_ref[...] @ t_ref[...]
+
+    @pl.when(k == nk - 1)
+    def _scale():
+        o_ref[...] *= alpha_ref[...][None, :]
+
+
+def _pick(tile: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is ≤ tile (shapes in tests vary)."""
+    t = min(tile, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+@functools.partial(jax.jit, static_argnames=())
+def ternary_matmul(x: jnp.ndarray, t: jnp.ndarray, alpha: jnp.ndarray):
+    """Y = X·(T∘α) as a tiled Pallas matmul.
+
+    Args:
+      x: (d_t, d_in) activations.
+      t: (d_in, d_out) ternary weights in {-1,0,+1} (stored as x.dtype).
+      alpha: (d_out,) per-channel scales.
+    """
+    d_t, d_in = x.shape
+    d_in2, d_out = t.shape
+    assert d_in == d_in2
+    rt, ct, kt = _pick(ROW_TILE, d_t), _pick(COL_TILE, d_out), _pick(K_TILE, d_in)
+    grid = (d_t // rt, d_out // ct, d_in // kt)
+    return pl.pallas_call(
+        _ternary_matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rt, kt), lambda i, j, k: (i, k)),
+            pl.BlockSpec((kt, ct), lambda i, j, k: (k, j)),
+            pl.BlockSpec((ct,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((rt, ct), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_t, d_out), x.dtype),
+        interpret=True,
+    )(x, t, alpha)

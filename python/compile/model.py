@@ -1,0 +1,443 @@
+"""Layer-2: the QAT transformer (tiny-LLaMA) in pure JAX.
+
+This is the build-time model definition that `aot.py` lowers to HLO text
+for the Rust coordinator. It implements:
+
+  * a LLaMA-style decoder (RMSNorm, RoPE, SwiGLU, causal attention),
+  * QAT linear layers for every quantization method the paper compares
+    (sherry34 / absmean / absmedian / twn / binary / lsq / seq / dlt),
+    with the Straight-Through Estimator and the Arenas annealing residual
+    synapse  Y = X·Tα + λ_t·X·W  (paper Eq. 7),
+  * cross-entropy loss and an Adam train step,
+  * forward/eval graphs whose sherry34 path calls the Layer-1 Pallas
+    kernels (quantize34 / ternary_matmul).
+
+STE wiring (no custom_vjp needed):
+
+    deq = dequant(stop_gradient(W), aux)        # aux stays differentiable
+    Q   = deq + (W - stop_gradient(W))          # identity gradient to W
+    Y   = X @ Q + λ_t * (X @ W)                 # Arenas residual
+
+which yields exactly the paper's gradients:  ∂L/∂W ≈ (1+λ)·Xᵀ∂L/∂Y
+(Eq. 2 plus the residual term) and ∂L/∂X = ∂L/∂Y·(Tα + λW)ᵀ (Eq. 8).
+
+Params are a flat ordered dict (name → array); the same ordering is used
+for the PJRT ABI and written into the artifact manifest by `aot.py`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import quantize34 as pallas_quantize34
+from .kernels import ternary_matmul as pallas_ternary_matmul
+from .kernels import ref
+
+Params = Dict[str, jnp.ndarray]
+
+# ---------------------------------------------------------------------------
+# Config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture hyper-parameters.
+
+    Dimensions are chosen as multiples of 128 so Pallas COL_TILE tiling and
+    the paper's group size both divide evenly.
+    """
+
+    vocab_size: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 4
+    d_ff: int = 384
+    seq_len: int = 64
+
+    # QAT settings
+    method: str = "sherry34"  # quantizer registry key
+    granularity: str = "per_channel"  # per_tensor | per_channel | per_group
+    group_size: int = 128
+    use_arenas: bool = True  # when False λ_t is forced to 0
+    # Use the Pallas kernels on the (non-differentiated) quantize path of
+    # the *forward* graph. The train graph keeps plain-jnp quantize for
+    # compact HLO; both are tested equal.
+    pallas_forward: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Named configs used by the Rust side (keep in sync with rust/src/config).
+CONFIGS: Dict[str, ModelConfig] = {
+    "nano": ModelConfig(vocab_size=256, d_model=128, n_layers=2, n_heads=4, d_ff=384, seq_len=64),
+    "micro": ModelConfig(vocab_size=512, d_model=256, n_layers=4, n_heads=4, d_ff=768, seq_len=128),
+    "e2e": ModelConfig(vocab_size=1024, d_model=384, n_layers=6, n_heads=6, d_ff=1152, seq_len=128),
+}
+
+
+# ---------------------------------------------------------------------------
+# Quantizer registry: method -> dequant(stopped_w, aux) -> (d_in, d_out)
+# ---------------------------------------------------------------------------
+
+
+def _granular(w: jnp.ndarray, cfg: ModelConfig, tern_fn, scale_fn):
+    """Apply a (ternarize, scale) pair at the configured granularity.
+
+    tern_fn: w -> T.  scale_fn: (w, t) -> per-channel scales for its input.
+    Granularity reshapes rows into groups so that each (group, channel)
+    cell gets its own scale; per-tensor collapses everything into one
+    column.
+    """
+    d_in, d_out = w.shape
+    t = tern_fn(w)
+    if cfg.granularity == "per_channel":
+        alpha = scale_fn(w, t)  # (d_out,)
+        return t * alpha[None, :]
+    if cfg.granularity == "per_tensor":
+        alpha = scale_fn(w.reshape(-1, 1), t.reshape(-1, 1))  # (1,)
+        return t * alpha[0]
+    if cfg.granularity == "per_group":
+        g = cfg.group_size
+        assert d_in % g == 0, "group_size must divide d_in"
+        wg = w.reshape(d_in // g, g, d_out)
+        tg = t.reshape(d_in // g, g, d_out)
+        # vmap the per-channel scale over groups.
+        alpha = jax.vmap(scale_fn)(wg, tg)  # (d_in/g, d_out)
+        return (tg * alpha[:, None, :]).reshape(d_in, d_out)
+    raise ValueError(f"unknown granularity {cfg.granularity}")
+
+
+def _deq_sherry34(w, aux, cfg: ModelConfig):
+    return _granular(w, cfg, ref.sherry34_ternary, ref.sherry34_scale)
+
+
+def _deq_sherry34_pallas(w, aux, cfg: ModelConfig):
+    # Pallas path (forward graphs only): per-channel granularity.
+    if cfg.granularity == "per_channel" and w.shape[1] % 128 == 0:
+        t, alpha = pallas_quantize34(w)
+        return t * alpha[None, :]
+    return _deq_sherry34(w, aux, cfg)
+
+
+def _mk_threshold_deq(tern_of):
+    def deq(w, aux, cfg: ModelConfig):
+        def tern(wx):
+            return ref._threshold_ternary(wx, tern_of(wx))
+
+        return _granular(w, cfg, tern, ref._masked_absmean_scale)
+
+    return deq
+
+
+def _deq_binary(w, aux, cfg: ModelConfig):
+    def tern(wx):
+        return jnp.where(wx >= 0, 1.0, -1.0)
+
+    def scale(wx, tx):
+        return jnp.mean(jnp.abs(wx), axis=0)
+
+    return _granular(w, cfg, tern, scale)
+
+
+def _deq_lsq(w, aux, cfg: ModelConfig):
+    """LSQ-style: learnable per-channel step `aux`; round(clamp(w/s)) · s.
+
+    The gradient to `aux` flows naturally because only `w` is stopped.
+    """
+    s = jnp.maximum(jnp.abs(aux), 1e-6)
+    t = jnp.clip(jnp.round(w / s[None, :]), -1.0, 1.0)
+    return jax.lax.stop_gradient(t) * s[None, :]
+
+
+def _deq_seq(w, aux, cfg: ModelConfig):
+    """SEQ (ParetoQ-style, paper Eq. 20): zero state re-assigned to α·b."""
+    abs_mean = jnp.mean(jnp.abs(w), axis=0)
+    t = ref._threshold_ternary(w, abs_mean / 2.0)
+    alpha = ref._masked_absmean_scale(w, t)
+    deq = t * alpha[None, :]
+    zero_fill = (alpha * aux)[None, :] * (t == 0)
+    return deq + zero_fill
+
+
+def _deq_dlt(w, aux, cfg: ModelConfig):
+    """DLT (TernaryLLM-style, paper Eq. 19): additive learnable bias."""
+    t, alpha = ref.absmean_quantize(w)
+    return t * alpha[None, :] + aux[None, :] / jnp.sqrt(w.shape[0]).astype(w.dtype)
+
+
+def _deq_tequila(w, aux, cfg: ModelConfig):
+    """Tequila-style trap-mitigated ternary: absmean thresholds with a
+    magnitude-compensated scale (survivor absmean, slightly sharpened
+    threshold 0.4·E|w| per the TequilaLLM recipe)."""
+
+    def tern(wx):
+        return ref._threshold_ternary(wx, 0.4 * jnp.mean(jnp.abs(wx), axis=0))
+
+    return _granular(w, cfg, tern, ref._masked_absmean_scale)
+
+
+def _deq_bf16(w, aux, cfg: ModelConfig):
+    """Identity 'quantizer': the full-precision reference rows of
+    Tables 1-2. With STE wiring, q = w exactly."""
+    return w
+
+
+QUANTIZERS: Dict[str, Callable] = {
+    "bf16": _deq_bf16,
+    "sherry34": _deq_sherry34,
+    "absmean": _mk_threshold_deq(lambda w: jnp.mean(jnp.abs(w), axis=0) / 2.0),
+    "absmedian": _mk_threshold_deq(lambda w: jnp.median(jnp.abs(w), axis=0) / 2.0),
+    "twn": _mk_threshold_deq(lambda w: 0.7 * jnp.mean(jnp.abs(w), axis=0)),
+    "binary": _deq_binary,
+    "lsq": _deq_lsq,
+    "seq": _deq_seq,
+    "dlt": _deq_dlt,
+    "tequila": _deq_tequila,
+}
+
+# Methods whose `aux` parameter is trained.
+LEARNABLE_AUX = {"lsq", "seq", "dlt"}
+
+
+# ---------------------------------------------------------------------------
+# QAT linear
+# ---------------------------------------------------------------------------
+
+
+def qat_linear(x, w, aux, lam, cfg: ModelConfig, *, forward_only: bool = False):
+    """Quantization-aware linear with STE + Arenas residual (Eq. 7).
+
+    forward_only=True builds the inference graph: pure quantized matmul
+    with λ ignored (post-training, λ has annealed to 0) and the Pallas
+    kernels on the sherry34 path.
+    """
+    deq_fn = QUANTIZERS[cfg.method]
+    if forward_only:
+        if cfg.method == "sherry34" and cfg.pallas_forward and cfg.granularity == "per_channel" and w.shape[1] % 128 == 0:
+            t, alpha = pallas_quantize34(w)
+            return pallas_ternary_matmul(x, t, alpha)
+        deq = deq_fn(jax.lax.stop_gradient(w), aux, cfg)
+        return x @ deq
+
+    w_stop = jax.lax.stop_gradient(w)
+    deq = deq_fn(w_stop, aux, cfg)
+    q = deq + (w - w_stop)  # STE
+    y = x @ q
+    if cfg.use_arenas:
+        y = y + lam * (x @ w)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Model definition
+# ---------------------------------------------------------------------------
+
+
+def _linear_names(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, int]]]:
+    d, f = cfg.d_model, cfg.d_ff
+    names = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        names += [
+            (p + "wq", (d, d)),
+            (p + "wk", (d, d)),
+            (p + "wv", (d, d)),
+            (p + "wo", (d, d)),
+            (p + "w_gate", (d, f)),
+            (p + "w_up", (d, f)),
+            (p + "w_down", (f, d)),
+        ]
+    return names
+
+
+def param_spec(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the PJRT ABI. Keep deterministic!"""
+    spec: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab_size, cfg.d_model))]
+    for i in range(cfg.n_layers):
+        spec.append((f"layer{i}.norm_attn", (cfg.d_model,)))
+        spec.append((f"layer{i}.norm_mlp", (cfg.d_model,)))
+    for name, shape in _linear_names(cfg):
+        spec.append((name, shape))
+        spec.append((name + ".aux", (shape[1],)))
+    spec.append(("norm_out", (cfg.d_model,)))
+    spec.append(("lm_head", (cfg.d_model, cfg.vocab_size)))
+    return spec
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    params: Params = {}
+    for name, shape in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(".aux"):
+            if cfg.method == "lsq":
+                params[name] = jnp.full(shape, 0.05, jnp.float32)
+            else:
+                params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(("norm_attn", "norm_mlp", "norm_out")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * (fan_in**-0.5)
+    return params
+
+
+def rmsnorm(x, g, eps: float = 1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, positions):
+    """Rotary position embedding over the last dim (pairs)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(q, k, v, causal: bool = True):
+    # q,k,v: (B, T, H, Dh)
+    scale = q.shape[-1] ** -0.5
+    att = jnp.einsum("bthd,bshd->bhts", q, k) * scale
+    if causal:
+        t, s = att.shape[-2], att.shape[-1]
+        mask = jnp.tril(jnp.ones((t, s), bool), k=s - t)
+        att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", att, v)
+
+
+def forward(params: Params, tokens, lam, cfg: ModelConfig, *, forward_only: bool = False):
+    """Logits for a (B, T) int32 token batch."""
+    b, t = tokens.shape
+    h = params["embed"][tokens]  # (B, T, D)
+    pos = jnp.arange(t)[None, :].repeat(b, axis=0)
+
+    def lin(name, x2d):
+        w = params[name]
+        aux = params[name + ".aux"]
+        return qat_linear(x2d, w, aux, lam, cfg, forward_only=forward_only)
+
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        xin = rmsnorm(h, params[p + "norm_attn"])
+        x2 = xin.reshape(b * t, cfg.d_model)
+        q = lin(p + "wq", x2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        k = lin(p + "wk", x2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        v = lin(p + "wv", x2).reshape(b, t, cfg.n_heads, cfg.head_dim)
+        q, k = rope(q, pos[..., None]), rope(k, pos[..., None])
+        att = _attention(q, k, v).reshape(b * t, cfg.d_model)
+        h = h + lin(p + "wo", att).reshape(b, t, cfg.d_model)
+
+        xin = rmsnorm(h, params[p + "norm_mlp"])
+        x2 = xin.reshape(b * t, cfg.d_model)
+        gate = jax.nn.silu(lin(p + "w_gate", x2))
+        up = lin(p + "w_up", x2)
+        down = lin(p + "w_down", gate * up)
+        h = h + down.reshape(b, t, cfg.d_model)
+
+    h = rmsnorm(h, params["norm_out"])
+    return h.reshape(b * t, cfg.d_model) @ params["lm_head"]
+
+
+def loss_fn(params: Params, batch, lam, cfg: ModelConfig):
+    """Next-token cross entropy. batch: (B, T+1) int32."""
+    tokens, targets = batch[:, :-1], batch[:, 1:]
+    logits = forward(params, tokens, lam, cfg)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = targets.reshape(-1)
+    nll = -jnp.take_along_axis(logp, tgt[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------------------
+# Adam train step (flat-ordered ABI for PJRT)
+# ---------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+
+def _trainable(name: str, cfg: ModelConfig) -> bool:
+    if name.endswith(".aux"):
+        return cfg.method in LEARNABLE_AUX
+    return True
+
+
+def train_step(params: Params, m: Params, v: Params, batch, step, lam, lr, cfg: ModelConfig):
+    """One Adam step. Returns (loss, params', m', v')."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, batch, lam, cfg)
+    step_f = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - ADAM_B1**step_f
+    bc2 = 1.0 - ADAM_B2**step_f
+    new_p, new_m, new_v = {}, {}, {}
+    for name in params:
+        g = grads[name]
+        if not _trainable(name, cfg):
+            g = jnp.zeros_like(g)
+        nm = ADAM_B1 * m[name] + (1.0 - ADAM_B1) * g
+        nv = ADAM_B2 * v[name] + (1.0 - ADAM_B2) * (g * g)
+        upd = (nm / bc1) / (jnp.sqrt(nv / bc2) + ADAM_EPS)
+        new_p[name] = params[name] - lr * upd
+        new_m[name] = nm
+        new_v[name] = nv
+    return loss, new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Flat ABI helpers for aot.py
+# ---------------------------------------------------------------------------
+
+
+def flatten(params: Params, cfg: ModelConfig):
+    return [params[name] for name, _ in param_spec(cfg)]
+
+
+def unflatten(flat, cfg: ModelConfig) -> Params:
+    return {name: arr for (name, _), arr in zip(param_spec(cfg), flat)}
+
+
+def make_train_step_fn(cfg: ModelConfig):
+    """(flat_params..., flat_m..., flat_v..., batch, step, lam, lr) -> tuple."""
+    n = len(param_spec(cfg))
+
+    def fn(*args):
+        flat_p, flat_m, flat_v = args[:n], args[n : 2 * n], args[2 * n : 3 * n]
+        batch, step, lam, lr = args[3 * n :]
+        p, m, v = unflatten(flat_p, cfg), unflatten(flat_m, cfg), unflatten(flat_v, cfg)
+        loss, p2, m2, v2 = train_step(p, m, v, batch, step, lam, lr, cfg)
+        return tuple([loss] + flatten(p2, cfg) + flatten(m2, cfg) + flatten(v2, cfg))
+
+    return fn
+
+
+def make_forward_fn(cfg: ModelConfig, forward_only: bool = True):
+    """(flat_params..., tokens) -> (logits,). λ fixed at 0 (post-anneal)."""
+    n = len(param_spec(cfg))
+
+    def fn(*args):
+        flat_p, tokens = args[:n], args[n]
+        p = unflatten(flat_p, cfg)
+        logits = forward(p, tokens, jnp.float32(0.0), cfg, forward_only=forward_only)
+        return (logits,)
+
+    return fn
+
+
+def make_loss_fn(cfg: ModelConfig):
+    """(flat_params..., batch, lam) -> (loss,). For eval perplexity."""
+    n = len(param_spec(cfg))
+
+    def fn(*args):
+        flat_p, batch, lam = args[:n], args[n], args[n + 1]
+        p = unflatten(flat_p, cfg)
+        return (loss_fn(p, batch, lam, cfg),)
+
+    return fn

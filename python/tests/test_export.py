@@ -1,0 +1,73 @@
+"""Export-path sanity: HLO text generation and golden vectors."""
+
+import os
+import struct
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.aot import to_hlo_text, _spec
+from compile.golden import export_golden, write_mat
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_hlo_text_roundtrips_through_parser(tmp_path):
+    """Lowered HLO text must contain an ENTRY and parameter decls that the
+    xla text parser (rust side) can consume."""
+    cfg = M.CONFIGS["nano"]
+    fn = M.make_loss_fn(cfg)
+    pspecs = [_spec(s) for _, s in M.param_spec(cfg)]
+    args = pspecs + [_spec((2, cfg.seq_len + 1), jnp.int32), _spec((), jnp.float32)]
+    text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+    assert "ENTRY" in text
+    assert "parameter(0)" in text  # ENTRY params kept via keep_unused=True
+    # one parameter per input
+    n_inputs = len(args)
+    assert f"parameter({n_inputs - 1})" in text
+    assert f"parameter({n_inputs})" not in text
+
+
+def test_write_mat_format(tmp_path):
+    p = tmp_path / "m.bin"
+    a = np.arange(6, dtype=np.float32).reshape(2, 3)
+    write_mat(str(p), a)
+    raw = p.read_bytes()
+    r, c = struct.unpack("<II", raw[:8])
+    assert (r, c) == (2, 3)
+    back = np.frombuffer(raw[8:], dtype="<f4").reshape(2, 3)
+    np.testing.assert_array_equal(back, a)
+
+
+def test_export_golden_writes_all(tmp_path):
+    export_golden(str(tmp_path))
+    gdir = tmp_path / "golden"
+    expected = [
+        "w.bin",
+        "x.bin",
+        "sherry34.t.bin",
+        "sherry34.alpha.bin",
+        "absmean.t.bin",
+        "absmedian.t.bin",
+        "twn.t.bin",
+        "binary.t.bin",
+        "sherry34_per_tensor.deq.bin",
+        "sherry34_per_channel.deq.bin",
+        "sherry34_per_group.deq.bin",
+        "sherry34.y.bin",
+        "sherry34.arenas_y.bin",
+        "er_expected.bin",
+    ]
+    for name in expected:
+        assert (gdir / name).exists(), name
+
+
+def test_golden_sherry_t_is_34_sparse(tmp_path):
+    export_golden(str(tmp_path))
+    raw = (tmp_path / "golden" / "sherry34.t.bin").read_bytes()
+    r, c = struct.unpack("<II", raw[:8])
+    t = np.frombuffer(raw[8:], dtype="<f4").reshape(r, c)
+    nnz = (t.reshape(r // 4, 4, c) != 0).sum(axis=1)
+    assert (nnz == 3).all()

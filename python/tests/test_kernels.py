@@ -1,0 +1,227 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes/seeds; assert_allclose against ref.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quantize34, ternary_matmul, arenas_matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_w(seed, d_in, d_out, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(d_in, d_out)).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# quantize34
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 64),
+    cols=st.integers(1, 4),
+)
+def test_quantize34_matches_ref(seed, blocks, cols):
+    w = _rand_w(seed, 4 * blocks, 128 * cols)
+    t, a = quantize34(w)
+    t_ref, a_ref = ref.sherry34_quantize(w)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(t_ref))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(a_ref), rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantize34_is_34_sparse(seed):
+    """Every 4-block has exactly one zero and three ±1 (paper Eq. 3)."""
+    w = _rand_w(seed, 256, 128)
+    t, _ = quantize34(w)
+    t = np.asarray(t).reshape(64, 4, 128)
+    nnz = (t != 0).sum(axis=1)
+    assert (nnz == 3).all()
+    assert np.isin(t, [-1.0, 0.0, 1.0]).all()
+
+
+def test_quantize34_prunes_min_abs():
+    """The pruned lane is the min-|w| lane (Eq. 4)."""
+    w = _rand_w(7, 512, 128)
+    t, _ = quantize34(w)
+    t = np.asarray(t).reshape(-1, 4, 128)
+    aw = np.abs(np.asarray(w)).reshape(-1, 4, 128)
+    pruned = np.argmin(np.where(t == 0, 0.0, 1.0), axis=1)  # lane of the zero
+    assert (pruned == np.argmin(aw, axis=1)).all()
+
+
+def test_quantize34_alpha_formula():
+    """α_j = 4/(3 d_in) Σ_active |w| (Eq. 5)."""
+    w = _rand_w(3, 64, 128)
+    t, a = quantize34(w)
+    t_np, w_np = np.asarray(t), np.asarray(w)
+    expect = (4.0 / (3.0 * 64)) * (np.abs(w_np) * (t_np != 0)).sum(axis=0)
+    np.testing.assert_allclose(np.asarray(a), expect, rtol=1e-5)
+
+
+def test_quantize34_optimality_bruteforce():
+    """No other 3:4 sign assignment has lower per-block correlation loss
+    (App. D): the greedy choice maximizes Σ w_i t_i per block."""
+    rng = np.random.default_rng(11)
+    w = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    t, _ = quantize34(w)
+    w_np, t_np = np.asarray(w), np.asarray(t)
+    # enumerate all 32 valid block patterns
+    pats = []
+    for zero in range(4):
+        for bits in range(8):
+            p = []
+            k = 0
+            for lane in range(4):
+                if lane == zero:
+                    p.append(0.0)
+                else:
+                    p.append(1.0 if (bits >> k) & 1 else -1.0)
+                    k += 1
+            pats.append(p)
+    pats = np.array(pats)  # (32, 4)
+    for j in range(w_np.shape[1]):
+        for b in range(2):
+            blk = w_np[4 * b : 4 * b + 4, j]
+            ours = (blk * t_np[4 * b : 4 * b + 4, j]).sum()
+            best = (pats * blk[None, :]).sum(axis=1).max()
+            assert ours >= best - 1e-6
+
+
+# ---------------------------------------------------------------------------
+# ternary_matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    dt=st.sampled_from([1, 3, 8, 16, 33]),
+    din=st.sampled_from([4, 64, 512, 520]),
+    dout=st.sampled_from([1, 16, 128, 256]),
+)
+def test_ternary_matmul_matches_ref(seed, dt, din, dout):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(dt, din)).astype(np.float32))
+    t = jnp.asarray(rng.integers(-1, 2, size=(din, dout)).astype(np.float32))
+    a = jnp.asarray(np.abs(rng.normal(size=(dout,))).astype(np.float32))
+    y = ternary_matmul(x, t, a)
+    y_ref = ref.ternary_matmul(x, t, a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_ternary_matmul_zero_alpha_zeroes_output():
+    x = _rand_w(0, 8, 64).T  # (64, 8) -> transpose to (8, 64)? keep simple:
+    x = _rand_w(0, 8, 64)
+    t = jnp.ones((64, 128), jnp.float32)
+    a = jnp.zeros((128,), jnp.float32)
+    y = ternary_matmul(x, t, a)
+    assert np.abs(np.asarray(y)).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# arenas_matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    lam=st.floats(0.0, 1.0),
+)
+def test_arenas_matmul_matches_ref(seed, lam):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 256)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(256, 128)).astype(np.float32))
+    t, a = ref.sherry34_quantize(w)
+    y = arenas_matmul(x, t, a, w, lam)
+    y_ref = ref.arenas_matmul(x, t, a, w, lam)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_arenas_lambda_zero_equals_ternary():
+    """λ=0 must reduce to the pure ternary product (zero-overhead claim)."""
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    t, a = ref.sherry34_quantize(w)
+    y0 = arenas_matmul(x, t, a, w, 0.0)
+    yt = ternary_matmul(x, t, a)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(yt), rtol=1e-5, atol=1e-5)
+
+
+def test_arenas_lambda_one_adds_full_residual():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    t, a = ref.sherry34_quantize(w)
+    y1 = arenas_matmul(x, t, a, w, 1.0)
+    expect = np.asarray(ternary_matmul(x, t, a)) + np.asarray(x) @ np.asarray(w)
+    np.testing.assert_allclose(np.asarray(y1), expect, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# baseline quantizer oracles: internal consistency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "quant",
+    [ref.absmean_quantize, ref.absmedian_quantize, ref.twn_quantize],
+)
+def test_threshold_quantizers_are_ternary(quant):
+    w = _rand_w(9, 128, 64)
+    t, a = quant(w)
+    t_np = np.asarray(t)
+    assert np.isin(t_np, [-1.0, 0.0, 1.0]).all()
+    assert (np.asarray(a) >= 0).all()
+
+
+def test_sherry_reconstruction_beats_naive_over_blocks():
+    """Sanity: Sparse-AbsMean reconstruction error ≤ pruning a random lane."""
+    rng = np.random.default_rng(13)
+    w = jnp.asarray(rng.normal(size=(256, 64)).astype(np.float32))
+    t, a = ref.sherry34_quantize(w)
+    err_opt = float(jnp.sum((w - ref.sherry34_dequant(t, a)) ** 2))
+    # prune lane 0 of each block instead
+    t_bad = np.sign(np.asarray(w))
+    t_bad.reshape(-1, 4, 64)[:, 0, :] = 0
+    t_bad = jnp.asarray(t_bad)
+    a_bad = ref.sherry34_scale(w, t_bad)
+    err_bad = float(jnp.sum((w - ref.sherry34_dequant(t_bad, a_bad)) ** 2))
+    assert err_opt <= err_bad + 1e-4
+
+
+# ---------------------------------------------------------------------------
+# λ schedules + effective rank oracles
+# ---------------------------------------------------------------------------
+
+
+def test_lambda_schedules_boundaries():
+    for fn in (ref.lambda_linear, ref.lambda_cosine, ref.lambda_exponential):
+        assert float(fn(jnp.float32(0.0))) == pytest.approx(1.0, abs=1e-2)
+        assert float(fn(jnp.float32(1.0))) == pytest.approx(0.0, abs=1e-2)
+
+
+def test_lambda_warmup_starts_at_zero():
+    f = lambda p: ref.lambda_with_warmup(ref.lambda_cosine, p, 0.1)
+    assert float(f(jnp.float32(0.0))) == pytest.approx(0.0, abs=1e-6)
+    assert float(f(jnp.float32(0.1))) == pytest.approx(1.0, abs=1e-5)
+    assert float(f(jnp.float32(1.0))) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_effective_rank_identity():
+    """ER of the identity = full rank; ER of rank-1 = 1 (Eq. 22 bounds)."""
+    assert float(ref.effective_rank(jnp.eye(32))) == pytest.approx(32.0, rel=1e-3)
+    r1 = jnp.outer(jnp.arange(1.0, 9.0), jnp.arange(1.0, 17.0))
+    assert float(ref.effective_rank(r1)) == pytest.approx(1.0, abs=1e-3)

@@ -1,0 +1,168 @@
+"""L2 correctness: QAT model shapes, STE gradients, Arenas dynamics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = M.CONFIGS["nano"]
+
+
+def _params(seed=0, **over):
+    cfg = M.ModelConfig(**{**CFG.__dict__, **over})
+    return M.init_params(jax.random.PRNGKey(seed), cfg), cfg
+
+
+def _batch(cfg, b=2, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (b, cfg.seq_len + 1), 0, cfg.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# shapes and ABI
+# ---------------------------------------------------------------------------
+
+
+def test_param_spec_matches_init():
+    params, cfg = _params()
+    spec = M.param_spec(cfg)
+    assert list(params.keys()) == [n for n, _ in spec]
+    for name, shape in spec:
+        assert params[name].shape == shape, name
+
+
+def test_flatten_roundtrip():
+    params, cfg = _params()
+    flat = M.flatten(params, cfg)
+    back = M.unflatten(flat, cfg)
+    assert set(back) == set(params)
+    for k in params:
+        assert (back[k] == params[k]).all()
+
+
+@pytest.mark.parametrize("method", list(M.QUANTIZERS))
+def test_forward_shapes_all_methods(method):
+    params, cfg = _params(method=method)
+    tokens = _batch(cfg)[:, :-1]
+    logits = M.forward(params, tokens, jnp.float32(0.5), cfg)
+    assert logits.shape == (tokens.shape[0] * cfg.seq_len, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("gran", ["per_tensor", "per_channel", "per_group"])
+def test_forward_granularities(gran):
+    params, cfg = _params(granularity=gran)
+    loss = M.loss_fn(params, _batch(cfg), jnp.float32(0.3), cfg)
+    assert np.isfinite(float(loss))
+
+
+# ---------------------------------------------------------------------------
+# STE and Arenas gradient structure
+# ---------------------------------------------------------------------------
+
+
+def test_ste_gradient_matches_paper_eq2():
+    """For a single qat_linear, ∂L/∂W = (1+λ)·Xᵀ∂L/∂Y under STE+Arenas."""
+    cfg = M.ModelConfig(**{**CFG.__dict__, "method": "sherry34"})
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    aux = jnp.zeros((128,), jnp.float32)
+    lam = jnp.float32(0.25)
+
+    def scalar_loss(w_):
+        y = M.qat_linear(x, w_, aux, lam, cfg)
+        return jnp.sum(y * y)
+
+    g = jax.grad(scalar_loss)(w)
+    y = M.qat_linear(x, w, aux, lam, cfg)
+    dy = 2.0 * y
+    expect = (1.0 + float(lam)) * (np.asarray(x).T @ np.asarray(dy))
+    np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-4, atol=1e-3)
+
+
+def test_arenas_input_gradient_matches_paper_eq8():
+    """∂L/∂X = ∂L/∂Y (Tα + λW)ᵀ."""
+    cfg = M.ModelConfig(**{**CFG.__dict__, "method": "sherry34"})
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    aux = jnp.zeros((128,), jnp.float32)
+    lam = jnp.float32(0.5)
+
+    def scalar_loss(x_):
+        y = M.qat_linear(x_, w, aux, lam, cfg)
+        return jnp.sum(y * y)
+
+    g = jax.grad(scalar_loss)(x)
+    y = M.qat_linear(x, w, aux, lam, cfg)
+    dy = 2.0 * np.asarray(y)
+    t, a = ref.sherry34_quantize(w)
+    deq = np.asarray(ref.sherry34_dequant(t, a))
+    expect = dy @ (deq + float(lam) * np.asarray(w)).T
+    np.testing.assert_allclose(np.asarray(g), expect, rtol=1e-4, atol=1e-3)
+
+
+def test_lambda_zero_kills_residual():
+    """λ=0 ⇒ output equals the pure quantized product (zero overhead)."""
+    cfg = M.ModelConfig(**{**CFG.__dict__, "method": "sherry34"})
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(4, 128)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    aux = jnp.zeros((128,), jnp.float32)
+    y0 = M.qat_linear(x, w, aux, jnp.float32(0.0), cfg)
+    t, a = ref.sherry34_quantize(w)
+    expect = ref.ternary_matmul(x, t, a)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(expect), rtol=1e-4, atol=1e-4)
+
+
+def test_aux_gradient_only_for_learnable_methods():
+    b = _batch(CFG)
+    for method in ["sherry34", "lsq"]:
+        params, cfg = _params(method=method)
+        g = jax.grad(M.loss_fn)(params, b, jnp.float32(0.2), cfg)
+        aux_g = np.abs(np.asarray(g["layer0.wq.aux"])).sum()
+        if method == "lsq":
+            assert aux_g > 0.0
+        else:
+            assert aux_g == 0.0
+
+
+# ---------------------------------------------------------------------------
+# training dynamics
+# ---------------------------------------------------------------------------
+
+
+def test_train_step_decreases_loss():
+    params, cfg = _params()
+    b = _batch(cfg, b=4)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    losses = []
+    p = params
+    for s in range(8):
+        l, p, m, v = M.train_step(p, m, v, b, jnp.int32(s), jnp.float32(0.5), jnp.float32(1e-3), cfg)
+        losses.append(float(l))
+    assert losses[-1] < losses[0]
+
+
+def test_train_step_respects_frozen_aux():
+    params, cfg = _params(method="absmean")
+    b = _batch(cfg)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(x) for k, x in params.items()}
+    _, p2, _, _ = M.train_step(params, m, v, b, jnp.int32(0), jnp.float32(0.5), jnp.float32(1e-3), cfg)
+    assert (np.asarray(p2["layer0.wq.aux"]) == np.asarray(params["layer0.wq.aux"])).all()
+
+
+def test_forward_only_pallas_close_to_jnp():
+    """Inference graph (Pallas quantize+matmul) ≈ STE graph at λ=0."""
+    params, cfg = _params(method="sherry34")
+    tokens = _batch(cfg)[:, :-1]
+    lp = M.forward(params, tokens, jnp.float32(0.0), cfg, forward_only=True)
+    lj = M.forward(params, tokens, jnp.float32(0.0), cfg, forward_only=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lj), rtol=2e-3, atol=2e-3)

@@ -1,0 +1,37 @@
+//! End-to-end decode throughput on full (small) models per format —
+//! validates that the Table 4 per-layer extrapolation matches a real
+//! decode loop where everything (attention, norms, sampling) is included.
+//!
+//! Run: `cargo bench --bench engine_decode`
+
+use sherry::engine::{random_weights, KvCache, NativeConfig, Scratch, TernaryModel};
+use sherry::pack::Format;
+use sherry::util::bench::bench;
+
+fn main() {
+    println!("\n### End-to-end decode throughput (full model, KV cache)\n");
+    println!("| config | format | tok/s | model MB |");
+    println!("|---|---|---|---|");
+    for cfg_name in ["nano", "micro"] {
+        let cfg = NativeConfig::named(cfg_name).unwrap();
+        let weights = random_weights(&cfg, 5);
+        for format in [Format::Dense, Format::I2S, Format::Tl2, Format::Sherry] {
+            let model = TernaryModel::build(cfg, &weights, format);
+            let mut cache = KvCache::new(&cfg);
+            let mut scratch = Scratch::default();
+            let n_gen = 32usize;
+            let m = bench(format.name(), 1, 7, || {
+                let out = model.generate(&[1, 2, 3], n_gen, &mut cache, &mut scratch);
+                std::hint::black_box(&out);
+            });
+            println!(
+                "| {} | {} | {:.1} | {:.2} |",
+                cfg_name,
+                format.name(),
+                (n_gen + 3) as f64 / m.median_s,
+                model.bytes() as f64 / 1e6
+            );
+        }
+    }
+    println!("\n(nano/micro fit in cache: compute-bound regime. Paper-scale memory-bound numbers: table4_efficiency.)");
+}

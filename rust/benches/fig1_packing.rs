@@ -1,0 +1,48 @@
+//! Fig 1: packing strategies in (bits/weight, relative speed) space —
+//! the scatter the paper opens with.
+//!
+//! Run: `cargo bench --bench fig1_packing`
+
+use sherry::engine::{QuantLinear, Scratch};
+use sherry::pack::Format;
+use sherry::tensor::Mat;
+use sherry::util::{bench::bench, Pcg64};
+
+fn main() {
+    let (d_in, d_out) = (4096usize, 4096usize);
+    let mut rng = Pcg64::seeded(1);
+    let w = Mat::randn(&mut rng, d_in, d_out, 0.02);
+    let x = rng.normal_vec(d_in);
+
+    println!("\n### Fig 1 — packing strategies: bits vs speed ({d_in}x{d_out} GEMV)\n");
+    println!("| strategy | bits/weight | GEMV ms | Mweights/s | speed vs 2-bit |");
+    println!("|---|---|---|---|---|");
+    let mut results = Vec::new();
+    for format in [Format::Dense, Format::I2S, Format::Tl2, Format::Sherry] {
+        let lin = QuantLinear::from_float(&w, format);
+        let mut y = vec![0.0f32; d_out];
+        let mut scratch = Scratch::default();
+        let m = bench(format.name(), 2, 9, || {
+            lin.forward(&x, &mut y, &mut scratch);
+            std::hint::black_box(&y);
+        });
+        results.push((format, m.median_s));
+    }
+    let i2s_t = results.iter().find(|(f, _)| *f == Format::I2S).unwrap().1;
+    for (format, t) in &results {
+        println!(
+            "| {} | {:.2} | {:.3} | {:.1} | {:.2}x |",
+            format.name(),
+            format.bits_per_weight(),
+            t * 1e3,
+            (d_in * d_out) as f64 / t / 1e6,
+            i2s_t / t
+        );
+    }
+    let sherry_t = results.iter().find(|(f, _)| *f == Format::Sherry).unwrap().1;
+    let tl2_t = results.iter().find(|(f, _)| *f == Format::Tl2).unwrap().1;
+    println!(
+        "\nshape check — sherry faster than tl2: {} (paper Fig 1: 1.25-bit sits above-left of both baselines)",
+        if sherry_t < tl2_t { "YES" } else { "NO" }
+    );
+}

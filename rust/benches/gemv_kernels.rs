@@ -1,0 +1,70 @@
+//! Kernel microbench: per-format LUT GEMV across layer widths — the §Perf
+//! workhorse (EXPERIMENTS.md §Perf before/after numbers come from here).
+//!
+//! Run: `cargo bench --bench gemv_kernels`
+
+use sherry::engine::lut::{self, TL2_LUT_STRIDE};
+use sherry::pack::{Packed34, PackedI2S, PackedTl2};
+use sherry::quant::{quantize, Granularity, Method};
+use sherry::tensor::{gemv_f32, Mat};
+use sherry::util::{bench::bench, Pcg64};
+
+fn main() {
+    println!("\n### GEMV kernel microbenchmarks (median, warm cache)\n");
+    println!("| d_in x d_out | kernel | µs | Gweights/s |");
+    println!("|---|---|---|---|");
+    for &(d_in, d_out) in &[(1024usize, 1024usize), (3200, 3200), (3200, 8640)] {
+        let mut rng = Pcg64::seeded(3);
+        let w = Mat::randn(&mut rng, d_in, d_out, 0.02);
+        let x = rng.normal_vec(d_in);
+        let n = (d_in * d_out) as f64;
+
+        let qs = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+        let qd = quantize(&w, Method::AbsMean, Granularity::PerChannel);
+
+        // dense f32
+        let wt = w.transpose();
+        let mut y = vec![0.0f32; d_out];
+        let m = bench("dense", 2, 9, || {
+            gemv_f32(&wt.data, d_out, d_in, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        print_row(d_in, d_out, "dense f32", m.median_s, n);
+
+        // sherry LUT
+        let p34 = Packed34::from_ternary(&qs);
+        let mut luts = vec![0.0f32; (d_in / 4) * 16];
+        let m = bench("sherry", 2, 9, || {
+            lut::gemv_pack34(&p34, &x, &mut luts, &mut y);
+            std::hint::black_box(&y);
+        });
+        print_row(d_in, d_out, "sherry lut16", m.median_s, n);
+        // lut build alone (amortization accounting)
+        let m = bench("sherry-lut-build", 2, 9, || {
+            lut::build_luts34(&x, &mut luts);
+            std::hint::black_box(&luts);
+        });
+        print_row(d_in, d_out, "  (lut build)", m.median_s, n);
+
+        // tl2
+        let ptl2 = PackedTl2::from_ternary(&qd);
+        let mut luts2 = vec![0.0f32; d_in.div_ceil(3) * TL2_LUT_STRIDE];
+        let m = bench("tl2", 2, 9, || {
+            lut::gemv_tl2(&ptl2, &x, &mut luts2, &mut y);
+            std::hint::black_box(&y);
+        });
+        print_row(d_in, d_out, "tl2 lut27", m.median_s, n);
+
+        // i2s
+        let pi2s = PackedI2S::from_ternary(&qd);
+        let m = bench("i2s", 2, 9, || {
+            lut::gemv_i2s(&pi2s, &x, &mut y);
+            std::hint::black_box(&y);
+        });
+        print_row(d_in, d_out, "i2_s decode", m.median_s, n);
+    }
+}
+
+fn print_row(d_in: usize, d_out: usize, name: &str, t: f64, n: f64) {
+    println!("| {d_in}x{d_out} | {name} | {:.1} | {:.2} |", t * 1e6, n / t / 1e9);
+}

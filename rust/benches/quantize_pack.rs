@@ -1,0 +1,48 @@
+//! Offline-phase cost (App. A "Offline Packing Phase"): quantize + pack
+//! throughput per format — one-time conversion cost for a model.
+//!
+//! Run: `cargo bench --bench quantize_pack`
+
+use sherry::pack::{Packed34, PackedI2S, PackedTl2};
+use sherry::quant::{quantize, Granularity, Method};
+use sherry::tensor::Mat;
+use sherry::util::{bench::bench, Pcg64};
+
+fn main() {
+    let (d_in, d_out) = (2048usize, 2048usize);
+    let mut rng = Pcg64::seeded(4);
+    let w = Mat::randn(&mut rng, d_in, d_out, 0.02);
+    let n = (d_in * d_out) as f64;
+
+    println!("\n### Offline phase: quantize + pack throughput ({d_in}x{d_out})\n");
+    println!("| stage | ms | Mweights/s |");
+    println!("|---|---|---|");
+
+    let m = bench("q-sherry", 1, 5, || {
+        std::hint::black_box(quantize(&w, Method::Sherry34, Granularity::PerChannel));
+    });
+    println!("| quantize sherry34 (Eq. 4-5) | {:.1} | {:.1} |", m.median_s * 1e3, n / m.median_s / 1e6);
+
+    let m = bench("q-absmean", 1, 5, || {
+        std::hint::black_box(quantize(&w, Method::AbsMean, Granularity::PerChannel));
+    });
+    println!("| quantize absmean (Eq. 15) | {:.1} | {:.1} |", m.median_s * 1e3, n / m.median_s / 1e6);
+
+    let qs = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+    let qd = quantize(&w, Method::AbsMean, Granularity::PerChannel);
+
+    let m = bench("pack34", 1, 5, || {
+        std::hint::black_box(Packed34::from_ternary(&qs));
+    });
+    println!("| pack 1.25-bit (idx+sign planes) | {:.1} | {:.1} |", m.median_s * 1e3, n / m.median_s / 1e6);
+
+    let m = bench("tl2", 1, 5, || {
+        std::hint::black_box(PackedTl2::from_ternary(&qd));
+    });
+    println!("| pack tl2 1.67-bit (bitstream) | {:.1} | {:.1} |", m.median_s * 1e3, n / m.median_s / 1e6);
+
+    let m = bench("i2s", 1, 5, || {
+        std::hint::black_box(PackedI2S::from_ternary(&qd));
+    });
+    println!("| pack i2_s 2-bit | {:.1} | {:.1} |", m.median_s * 1e3, n / m.median_s / 1e6);
+}

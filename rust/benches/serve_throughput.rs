@@ -1,0 +1,48 @@
+//! Serving-loop throughput: coordinator overhead on top of the engine
+//! (batching, KV pool, scheduling). L3 must not be the bottleneck —
+//! DESIGN.md §6.
+//!
+//! Run: `cargo bench --bench serve_throughput`
+
+use sherry::coordinator::{serve_trace, BatcherConfig, ServerConfig, TraceSpec};
+use sherry::engine::{random_weights, KvCache, NativeConfig, Scratch, TernaryModel};
+use sherry::pack::Format;
+
+fn main() {
+    let cfg = NativeConfig::named("nano").unwrap();
+    let weights = random_weights(&cfg, 5);
+    let model = TernaryModel::build(cfg, &weights, Format::Sherry);
+
+    // raw engine baseline: single-stream decode
+    let mut cache = KvCache::new(&cfg);
+    let mut scratch = Scratch::default();
+    let n = 48usize;
+    let t0 = std::time::Instant::now();
+    for _ in 0..5 {
+        model.generate(&[1, 2, 3], n, &mut cache, &mut scratch);
+    }
+    let single = 5.0 * (n as f64) / t0.elapsed().as_secs_f64();
+
+    println!("\n### Serving throughput vs raw engine (nano, sherry format)\n");
+    println!("| setup | tok/s | vs single-stream |");
+    println!("|---|---|---|");
+    println!("| raw engine single-stream | {single:.1} | 1.00x |");
+
+    for (label, active, workers) in [("serve 1-way", 1usize, 1usize), ("serve 4-way", 4, 4), ("serve 8-way", 8, 8)] {
+        let server_cfg = ServerConfig {
+            batcher: BatcherConfig { max_active: active, token_budget: 100_000 },
+            kv_capacity: active,
+            workers,
+        };
+        let trace = TraceSpec {
+            n_requests: 16,
+            mean_interarrival_s: 0.0,
+            prompt_len: 3,
+            max_new_tokens: 24,
+            seed: 1,
+        };
+        let (_c, m) = serve_trace(&model, server_cfg, trace);
+        println!("| {label} | {:.1} | {:.2}x |", m.throughput_tps(), m.throughput_tps() / single);
+    }
+    println!("\n(>1x at 4/8-way = batching scales; 1-way ratio shows pure coordinator overhead)");
+}

@@ -1,0 +1,115 @@
+//! Table 4: inference speed (t/s) and model size (MB) per format, at the
+//! paper's 0.7B and 3B layer shapes.
+//!
+//! Method: the decode hot path is 7 GEMVs per layer; we measure each
+//! unique layer shape once per format (weights are too large to hold
+//! n_layers copies in RAM at the 3B scale) and extrapolate per-token time
+//! as Σ layer-GEMV × n_layers + LM-head GEMV — the standard per-layer
+//! roofline extrapolation, documented in EXPERIMENTS.md. Sizes are exact
+//! byte counts of the packed planes + scales + bf16 embed/head.
+//!
+//! Run: `cargo bench --bench table4_efficiency` (FAST=1 env for CI sizes)
+
+use sherry::engine::{lut, Scratch};
+use sherry::engine::{NativeConfig, QuantLinear};
+use sherry::pack::Format;
+use sherry::quant::{quantize, Granularity, Method};
+use sherry::tensor::Mat;
+use sherry::util::{bench::bench, Pcg64};
+
+struct Shape {
+    name: &'static str,
+    cfg: NativeConfig,
+}
+
+fn main() {
+    let fast = std::env::var("FAST").is_ok();
+    let shapes = if fast {
+        vec![Shape { name: "0.2B-ish (micro×)", cfg: NativeConfig::named("micro").unwrap() }]
+    } else {
+        vec![
+            Shape { name: "0.7B", cfg: NativeConfig::named("bench700m").unwrap() },
+            Shape { name: "3B", cfg: NativeConfig::named("bench3b").unwrap() },
+        ]
+    };
+
+    println!("\n### Table 4 — inference efficiency (this CPU; paper: i7-14700HX)\n");
+    println!("| Scale | Method | Bits | Speed (t/s) ↑ | Size (MB) ↓ |");
+    println!("|---|---|---|---|---|");
+
+    for shape in &shapes {
+        let cfg = &shape.cfg;
+        let d = cfg.d_model;
+        let layer_shapes = [(d, d, 4usize), (d, cfg.d_ff, 3usize)];
+        // bf16 row first for the ratio.
+        let mut rows: Vec<(String, f32, f64, f64)> = Vec::new();
+        for format in [Format::Dense, Format::I2S, Format::Tl2, Format::Sherry] {
+            let mut per_tok = 0.0f64;
+            let mut lin_bytes = 0usize;
+            for &(d_in, d_out, count) in &layer_shapes {
+                let mut rng = Pcg64::seeded(7);
+                let w = Mat::randn(&mut rng, d_in, d_out, 0.02);
+                let lin = QuantLinear::from_float(&w, format);
+                let x = rng.normal_vec(d_in);
+                let mut y = vec![0.0f32; d_out];
+                let mut scratch = Scratch::default();
+                let m = bench(format.name(), 2, 9, || {
+                    lin.forward(&x, &mut y, &mut scratch);
+                    std::hint::black_box(&y);
+                });
+                per_tok += m.median_s * (count * cfg.n_layers) as f64;
+                lin_bytes += lin.bytes() * count * cfg.n_layers;
+                // also time the down-projection direction for the (d, ff)
+                // shape (w_down is ff→d): reuse transposed shape
+                if d_out == cfg.d_ff {
+                    let wt = Mat::randn(&mut rng, d_out, d_in, 0.02);
+                    let lin2 = QuantLinear::from_float(&wt, format);
+                    let x2 = rng.normal_vec(d_out);
+                    let mut y2 = vec![0.0f32; d_in];
+                    let m2 = bench("down", 2, 9, || {
+                        lin2.forward(&x2, &mut y2, &mut scratch);
+                        std::hint::black_box(&y2);
+                    });
+                    per_tok += m2.median_s * cfg.n_layers as f64;
+                    lin_bytes += lin2.bytes() * cfg.n_layers;
+                }
+            }
+            // LM head (dense in all variants) + embeddings: bf16 bytes.
+            let head_bytes = cfg.d_model * cfg.vocab_size * 2 * 2;
+            // head GEMV time at f32 (same for all formats) — measure once.
+            let mut rng = Pcg64::seeded(9);
+            let wh = Mat::randn(&mut rng, cfg.d_model, cfg.vocab_size, 0.02);
+            let head = QuantLinear::from_float(&wh, Format::Dense);
+            let xh = rng.normal_vec(cfg.d_model);
+            let mut yh = vec![0.0f32; cfg.vocab_size];
+            let mut scratch = Scratch::default();
+            let mh = bench("head", 1, 5, || {
+                head.forward(&xh, &mut yh, &mut scratch);
+                std::hint::black_box(&yh);
+            });
+            per_tok += mh.median_s;
+            let total_bytes = lin_bytes + head_bytes;
+            rows.push((
+                format.name().to_string(),
+                format.bits_per_weight(),
+                1.0 / per_tok,
+                total_bytes as f64 / 1e6,
+            ));
+        }
+        for (name, bits, tps, mb) in &rows {
+            println!("| {} | {} | {:.2} | {:.2} | {:.2} |", shape.name, name, bits, tps, mb);
+        }
+        // shape checks vs paper Table 4
+        let get = |n: &str| rows.iter().find(|r| r.0 == n).unwrap();
+        let (sherry, tl2, i2s, bf16) = (get("sherry"), get("tl2"), get("i2_s"), get("bf16"));
+        println!(
+            "| {} | — | — | sherry/tl2 = {:.2}x (paper 1.18x@3B), sherry/i2s = {:.2}x (paper 1.09-1.12x), sherry/bf16 = {:.1}x | sherry saves {:.0}% vs tl2 (paper ~16%) |",
+            shape.name,
+            sherry.2 / tl2.2,
+            sherry.2 / i2s.2,
+            sherry.2 / bf16.2,
+            (1.0 - sherry.3 / tl2.3) * 100.0
+        );
+    }
+    println!("\n(LUT GEMV timings; per-token = Σ layer GEMVs × n_layers + head — see EXPERIMENTS.md)");
+}

@@ -1,0 +1,242 @@
+//! Declarative CLI parser substrate (clap is unavailable offline).
+//!
+//! Supports subcommands, `--flag value`, `--flag=value`, boolean switches,
+//! typed accessors with defaults, and auto-generated `--help`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// One registered flag.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_switch: bool,
+}
+
+/// Parsed arguments for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// A subcommand: name, summary, flags.
+pub struct Command {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, summary: &'static str) -> Self {
+        Self { name, summary, flags: Vec::new() }
+    }
+
+    /// Register `--name <value>` with an optional default.
+    pub fn flag(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.flags.push(FlagSpec { name, help, default, is_switch: false });
+        self
+    }
+
+    /// Register a boolean `--name` switch.
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None, is_switch: true });
+        self
+    }
+
+    fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        for spec in &self.flags {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let Some(spec) = self.flags.iter().find(|f| f.name == name) else {
+                    bail!("unknown flag --{name} for '{}'; see --help", self.name);
+                };
+                let value = if spec.is_switch {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    i += 1;
+                    if i >= argv.len() {
+                        bail!("flag --{name} expects a value");
+                    }
+                    argv[i].clone()
+                };
+                args.values.insert(name.to_string(), value);
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    fn usage(&self) -> String {
+        let mut s = format!("sherry {} — {}\n\nFlags:\n", self.name, self.summary);
+        for f in &self.flags {
+            let d = match (f.is_switch, f.default) {
+                (true, _) => " (switch)".to_string(),
+                (false, Some(d)) => format!(" (default: {d})"),
+                (false, None) => String::new(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+}
+
+/// Top-level application: a set of subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+/// Parse result: which subcommand and its args, or a help string to print.
+pub enum Parsed {
+    Run { command: String, args: Args },
+    Help(String),
+}
+
+impl App {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, commands: Vec::new() }
+    }
+
+    pub fn command(mut self, c: Command) -> Self {
+        self.commands.push(c);
+        self
+    }
+
+    fn top_usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nCommands:\n", self.name, self.about);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<14} {}\n", c.name, c.summary));
+        }
+        s.push_str("\nUse `sherry <command> --help` for flags.\n");
+        s
+    }
+
+    /// Parse argv (without the binary name).
+    pub fn parse(&self, argv: &[String]) -> Result<Parsed> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" || argv[0] == "help" {
+            return Ok(Parsed::Help(self.top_usage()));
+        }
+        let name = &argv[0];
+        let Some(cmd) = self.commands.iter().find(|c| c.name == *name) else {
+            bail!("unknown command '{name}'\n\n{}", self.top_usage());
+        };
+        if argv.iter().any(|a| a == "--help" || a == "-h") {
+            return Ok(Parsed::Help(cmd.usage()));
+        }
+        let args = cmd.parse(&argv[1..])?;
+        Ok(Parsed::Run { command: name.clone(), args })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App::new("sherry", "test").command(
+            Command::new("train", "train a model")
+                .flag("steps", "number of steps", Some("100"))
+                .flag("method", "quant method", Some("sherry34"))
+                .switch("verbose", "log more"),
+        )
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults() {
+        let Parsed::Run { args, .. } = app().parse(&sv(&["train"])).unwrap() else {
+            panic!()
+        };
+        assert_eq!(args.usize_or("steps", 0), 100);
+        assert_eq!(args.str_or("method", ""), "sherry34");
+        assert!(!args.switch("verbose"));
+    }
+
+    #[test]
+    fn parses_values_and_switches() {
+        let Parsed::Run { args, .. } =
+            app().parse(&sv(&["train", "--steps", "5", "--verbose", "--method=twn"])).unwrap()
+        else {
+            panic!()
+        };
+        assert_eq!(args.usize_or("steps", 0), 5);
+        assert!(args.switch("verbose"));
+        assert_eq!(args.str_or("method", ""), "twn");
+    }
+
+    #[test]
+    fn unknown_flag_errors() {
+        assert!(app().parse(&sv(&["train", "--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(app().parse(&sv(&[])).unwrap(), Parsed::Help(_)));
+        assert!(matches!(app().parse(&sv(&["train", "--help"])).unwrap(), Parsed::Help(_)));
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(app().parse(&sv(&["nope"])).is_err());
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let Parsed::Run { args, .. } = app().parse(&sv(&["train", "foo", "bar"])).unwrap() else {
+            panic!()
+        };
+        assert_eq!(args.positional(), &["foo".to_string(), "bar".to_string()]);
+    }
+}

@@ -1,0 +1,98 @@
+//! KV-cache pool: bounded set of reusable per-sequence caches.
+//!
+//! On edge devices the KV cache dominates transient memory (the paper's
+//! Limitations note BF16 KV). The pool caps concurrency, reuses
+//! allocations across requests, and reports resident bytes to the metrics
+//! registry.
+
+use crate::engine::{KvCache, NativeConfig};
+
+/// Fixed-capacity cache pool.
+pub struct KvPool {
+    cfg: NativeConfig,
+    free: Vec<KvCache>,
+    capacity: usize,
+    leased: usize,
+}
+
+impl KvPool {
+    pub fn new(cfg: NativeConfig, capacity: usize) -> Self {
+        Self { cfg, free: Vec::new(), capacity, leased: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn leased(&self) -> usize {
+        self.leased
+    }
+
+    pub fn available(&self) -> usize {
+        self.capacity - self.leased
+    }
+
+    /// Take a cleared cache, or None at capacity.
+    pub fn acquire(&mut self) -> Option<KvCache> {
+        if self.leased >= self.capacity {
+            return None;
+        }
+        self.leased += 1;
+        Some(match self.free.pop() {
+            Some(mut c) => {
+                c.clear();
+                c
+            }
+            None => KvCache::new(&self.cfg),
+        })
+    }
+
+    /// Return a cache to the pool.
+    pub fn release(&mut self, cache: KvCache) {
+        assert!(self.leased > 0, "release without acquire");
+        self.leased -= 1;
+        self.free.push(cache);
+    }
+
+    /// Bytes resident in pooled (idle) caches.
+    pub fn idle_bytes(&self) -> usize {
+        self.free.iter().map(|c| c.bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(cap: usize) -> KvPool {
+        KvPool::new(NativeConfig::named("nano").unwrap(), cap)
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut p = pool(2);
+        let a = p.acquire().unwrap();
+        let _b = p.acquire().unwrap();
+        assert!(p.acquire().is_none());
+        p.release(a);
+        assert!(p.acquire().is_some());
+    }
+
+    #[test]
+    fn reuses_allocations() {
+        let mut p = pool(1);
+        let c = p.acquire().unwrap();
+        p.release(c);
+        let c2 = p.acquire().unwrap();
+        assert_eq!(c2.len, 0); // cleared on reuse
+        p.release(c2);
+        assert_eq!(p.leased(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "release without acquire")]
+    fn double_release_panics() {
+        let mut p = pool(1);
+        p.release(KvCache::new(&NativeConfig::named("nano").unwrap()));
+    }
+}

@@ -1,0 +1,81 @@
+//! Serving metrics registry: counters + latency reservoirs, rendered as a
+//! human-readable report (and consumed by the Table 4 bench harness).
+
+use crate::util::stats;
+
+/// Aggregated serving metrics.
+#[derive(Default, Clone, Debug)]
+pub struct Metrics {
+    pub requests_in: u64,
+    pub requests_done: u64,
+    pub tokens_generated: u64,
+    pub decode_rounds: u64,
+    /// Per-request end-to-end latencies (s).
+    pub latencies: Vec<f64>,
+    /// Per-request time-to-first-token (s).
+    pub ttfts: Vec<f64>,
+    /// Wall-clock of the serve loop (s).
+    pub wall_seconds: f64,
+}
+
+impl Metrics {
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / self.wall_seconds
+    }
+
+    pub fn latency_p50(&self) -> f64 {
+        stats::percentile(&self.latencies, 50.0)
+    }
+
+    pub fn latency_p99(&self) -> f64 {
+        stats::percentile(&self.latencies, 99.0)
+    }
+
+    pub fn ttft_p50(&self) -> f64 {
+        stats::percentile(&self.ttfts, 50.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests: {}/{} done | tokens: {} | rounds: {} | wall: {:.2}s\n\
+             throughput: {:.1} tok/s | latency p50/p99: {:.3}/{:.3}s | ttft p50: {:.3}s",
+            self.requests_done,
+            self.requests_in,
+            self.tokens_generated,
+            self.decode_rounds,
+            self.wall_seconds,
+            self.throughput_tps(),
+            self.latency_p50(),
+            self.latency_p99(),
+            self.ttft_p50(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = Metrics { tokens_generated: 100, wall_seconds: 4.0, ..Default::default() };
+        assert_eq!(m.throughput_tps(), 25.0);
+    }
+
+    #[test]
+    fn zero_wall_is_zero_throughput() {
+        let m = Metrics::default();
+        assert_eq!(m.throughput_tps(), 0.0);
+    }
+
+    #[test]
+    fn report_contains_counters() {
+        let m = Metrics { requests_in: 5, requests_done: 5, tokens_generated: 42, ..Default::default() };
+        let r = m.report();
+        assert!(r.contains("5/5"));
+        assert!(r.contains("42"));
+    }
+}

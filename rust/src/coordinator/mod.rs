@@ -1,0 +1,39 @@
+//! Layer-3 serving coordinator: request routing, continuous batching,
+//! KV-cache pooling and the decode scheduler over the native LUT engine.
+//!
+//! The paper's system is an edge inference engine (BitNet.cpp-style); the
+//! coordinator wraps it the way a local serving daemon would: requests
+//! arrive (here from a synthetic trace — the environment is offline),
+//! are admitted against a KV-pool budget, batched into decode rounds, and
+//! executed on a worker pool where each worker owns its LUT scratch.
+
+mod batcher;
+mod kvpool;
+mod metrics;
+mod server;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use kvpool::KvPool;
+pub use metrics::Metrics;
+pub use server::{serve_trace, Server, ServerConfig, TraceSpec};
+
+/// An inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// Arrival time offset (seconds from trace start).
+    pub arrival: f64,
+}
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    /// Seconds from arrival to first generated token.
+    pub ttft: f64,
+    /// Seconds from arrival to completion.
+    pub latency: f64,
+}

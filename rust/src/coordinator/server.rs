@@ -1,0 +1,293 @@
+//! The serving loop: trace-driven request arrival → continuous batching →
+//! parallel decode rounds on the worker pool → completions + metrics.
+//!
+//! Decode parallelism is *across sequences*: each active sequence owns a
+//! KV cache from the pool and decodes one token per round; rounds fan out
+//! over the thread pool with one LUT `Scratch` per worker. (Environment
+//! is offline, so "arrival" is simulated from the trace clock; everything
+//! downstream of arrival is the real engine.)
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::{Batcher, BatcherConfig, Completion, KvPool, Metrics, Request};
+use crate::engine::{argmax, KvCache, Scratch, TernaryModel};
+use crate::util::{Pcg64, ThreadPool};
+
+/// Server configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub batcher: BatcherConfig,
+    pub kv_capacity: usize,
+    pub workers: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { batcher: BatcherConfig::default(), kv_capacity: 8, workers: ThreadPool::default_size() }
+    }
+}
+
+/// Synthetic trace parameters (Poisson arrivals).
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpec {
+    pub n_requests: usize,
+    pub mean_interarrival_s: f64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+impl TraceSpec {
+    /// Materialize the request trace.
+    pub fn generate(&self, vocab: usize) -> Vec<Request> {
+        let mut rng = Pcg64::new(self.seed, 31);
+        let mut t = 0.0f64;
+        (0..self.n_requests)
+            .map(|i| {
+                t += -self.mean_interarrival_s * (1.0 - rng.next_f64()).ln();
+                Request {
+                    id: i as u64,
+                    prompt: (0..self.prompt_len).map(|_| rng.below(vocab as u64) as u32).collect(),
+                    max_new_tokens: self.max_new_tokens,
+                    arrival: t,
+                }
+            })
+            .collect()
+    }
+}
+
+/// The serving coordinator.
+pub struct Server<'m> {
+    model: &'m TernaryModel,
+    cfg: ServerConfig,
+    pool: ThreadPool,
+}
+
+struct SeqState {
+    cache: KvCache,
+    last_token: u32,
+    prompt_done: bool,
+    tokens: Vec<u32>,
+    first_token_at: Option<f64>,
+}
+
+impl<'m> Server<'m> {
+    pub fn new(model: &'m TernaryModel, cfg: ServerConfig) -> Self {
+        let pool = ThreadPool::new(cfg.workers);
+        Self { model, cfg, pool }
+    }
+
+    /// Run a full trace to completion; returns (completions, metrics).
+    pub fn run(&self, mut trace: Vec<Request>) -> (Vec<Completion>, Metrics) {
+        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let t0 = Instant::now();
+        let clock = |t0: Instant| t0.elapsed().as_secs_f64();
+
+        let mut batcher = Batcher::new(self.cfg.batcher);
+        let mut kv = KvPool::new(self.model.cfg, self.cfg.kv_capacity);
+        let mut metrics = Metrics { requests_in: trace.len() as u64, ..Default::default() };
+        let mut completions = Vec::new();
+        let mut states: Vec<SeqState> = Vec::new();
+        let mut next_arrival = 0usize;
+        let tokens_done = AtomicU64::new(0);
+
+        while next_arrival < trace.len() || !batcher.is_idle() {
+            // Admit arrivals whose time has come on the wall clock.
+            let now = clock(t0);
+            while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
+                batcher.submit(trace[next_arrival].clone());
+                next_arrival += 1;
+            }
+            // Idle with future arrivals: sleep toward the next one.
+            if batcher.is_idle() {
+                if next_arrival >= trace.len() {
+                    break;
+                }
+                next_arrival_sleep(trace[next_arrival].arrival - clock(t0));
+                continue;
+            }
+
+            // Admission bounded by both the batcher and the KV pool.
+            let before = batcher.active_len();
+            batcher.admit();
+            for _ in before..batcher.active_len() {
+                let cache = match kv.acquire() {
+                    Some(c) => c,
+                    None => {
+                        // KV pool exhausted: put the last admitted back.
+                        // (batcher max_active should be ≤ kv capacity; this
+                        // is a safety valve.)
+                        break;
+                    }
+                };
+                let (req, _) = &batcher.active()[states.len()];
+                states.push(SeqState {
+                    cache,
+                    last_token: *req.prompt.first().unwrap_or(&0),
+                    prompt_done: false,
+                    tokens: Vec::new(),
+                    first_token_at: None,
+                });
+            }
+
+            if batcher.active_len() == 0 {
+                if next_arrival >= trace.len() && batcher.waiting_len() == 0 {
+                    break;
+                }
+                continue;
+            }
+
+            // One decode round across active sequences, in parallel.
+            {
+                let model = self.model;
+                let active: Vec<(usize, Request)> = batcher
+                    .active()
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (r, _))| (i, r.clone()))
+                    .collect();
+                let states_mu: Vec<Mutex<&mut SeqState>> =
+                    states.iter_mut().map(Mutex::new).collect();
+                let td = &tokens_done;
+                self.pool.scope(|s| {
+                    for (i, req) in active {
+                        let st_mu = &states_mu[i];
+                        s.spawn(move || {
+                            let mut st = st_mu.lock().unwrap();
+                            let mut scratch = Scratch::default();
+                            if !st.prompt_done {
+                                // Prefill: feed the whole prompt.
+                                let mut logits = Vec::new();
+                                for &t in &req.prompt {
+                                    logits = model.forward_one(t, &mut st.cache, &mut scratch);
+                                }
+                                st.last_token = argmax(&logits) as u32;
+                                st.prompt_done = true;
+                            } else {
+                                let tok = st.last_token;
+                                let logits = model.forward_one(tok, &mut st.cache, &mut scratch);
+                                st.last_token = argmax(&logits) as u32;
+                            }
+                            let last = st.last_token;
+                            st.tokens.push(last);
+                            td.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+            metrics.decode_rounds += 1;
+
+            // Bookkeeping: advance, record first-token times, retire.
+            let now = clock(t0);
+            let mut finished = Vec::new();
+            for i in 0..batcher.active_len() {
+                if states[i].first_token_at.is_none() {
+                    states[i].first_token_at = Some(now);
+                }
+                let done = batcher.advance(i)
+                    || states[i].cache.len + 1 >= self.model.cfg.seq_len;
+                if done {
+                    finished.push(i);
+                }
+            }
+            // retire uses swap_remove; mirror it on `states`.
+            for &i in finished.iter().rev() {
+                let st = states.swap_remove(i);
+                let (req, _gen) = (
+                    batcher.active()[i].0.clone(),
+                    batcher.active()[i].1,
+                );
+                kv.release(st.cache);
+                completions.push(Completion {
+                    id: req.id,
+                    tokens: st.tokens,
+                    ttft: st.first_token_at.unwrap_or(now) - req.arrival,
+                    latency: now - req.arrival,
+                });
+                metrics.ttfts.push(st.first_token_at.unwrap_or(now) - req.arrival);
+                metrics.latencies.push(now - req.arrival);
+            }
+            batcher.retire(&finished);
+        }
+
+        metrics.requests_done = completions.len() as u64;
+        metrics.tokens_generated = tokens_done.load(Ordering::Relaxed);
+        metrics.wall_seconds = clock(t0);
+        (completions, metrics)
+    }
+}
+
+fn next_arrival_sleep(dt: f64) {
+    if dt > 0.0 {
+        std::thread::sleep(std::time::Duration::from_secs_f64(dt.min(0.01)));
+    }
+}
+
+/// Convenience: build a trace, serve it, return metrics.
+pub fn serve_trace(model: &TernaryModel, server_cfg: ServerConfig, trace: TraceSpec) -> (Vec<Completion>, Metrics) {
+    let reqs = trace.generate(model.cfg.vocab_size);
+    Server::new(model, server_cfg).run(reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{random_weights, NativeConfig, TernaryModel};
+    use crate::pack::Format;
+
+    fn model() -> TernaryModel {
+        let cfg = NativeConfig::named("nano").unwrap();
+        TernaryModel::build(cfg, &random_weights(&cfg, 0), Format::Sherry)
+    }
+
+    #[test]
+    fn serves_all_requests() {
+        let m = model();
+        let (completions, metrics) = serve_trace(
+            &m,
+            ServerConfig::default(),
+            TraceSpec { n_requests: 6, mean_interarrival_s: 0.0, prompt_len: 4, max_new_tokens: 5, seed: 1 },
+        );
+        assert_eq!(completions.len(), 6);
+        assert_eq!(metrics.requests_done, 6);
+        for c in &completions {
+            assert_eq!(c.tokens.len(), 5);
+            assert!(c.latency >= 0.0 && c.ttft >= 0.0);
+            assert!(c.ttft <= c.latency + 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_tokens_per_request() {
+        let m = model();
+        let spec = TraceSpec { n_requests: 3, mean_interarrival_s: 0.0, prompt_len: 3, max_new_tokens: 4, seed: 7 };
+        let (c1, _) = serve_trace(&m, ServerConfig::default(), spec);
+        let (c2, _) = serve_trace(&m, ServerConfig::default(), spec);
+        let mut c1 = c1;
+        let mut c2 = c2;
+        c1.sort_by_key(|c| c.id);
+        c2.sort_by_key(|c| c.id);
+        for (a, b) in c1.iter().zip(&c2) {
+            assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn respects_max_active() {
+        let m = model();
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_active: 2, token_budget: 100_000 },
+            kv_capacity: 2,
+            workers: 2,
+        };
+        let (completions, metrics) = serve_trace(
+            &m,
+            cfg,
+            TraceSpec { n_requests: 5, mean_interarrival_s: 0.0, prompt_len: 2, max_new_tokens: 3, seed: 2 },
+        );
+        assert_eq!(completions.len(), 5);
+        assert!(metrics.decode_rounds >= 3, "must take multiple rounds");
+    }
+}

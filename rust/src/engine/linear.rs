@@ -1,0 +1,174 @@
+//! A quantized linear layer over any packing format, plus the dense f32
+//! baseline — the unit the native transformer and the Table 4 benches are
+//! built from.
+
+use super::lut;
+use crate::pack::{Format, Packed34, PackedI2S, PackedMatrix, PackedTl2};
+use crate::quant::{quantize, Granularity, Method, Ternary};
+use crate::tensor::{ops::gemv_f32, Mat};
+
+/// Reusable scratch buffers for the LUT kernels (one per worker thread).
+#[derive(Default, Clone)]
+pub struct Scratch {
+    luts34: Vec<f32>,
+    luts_tl2: Vec<f32>,
+}
+
+impl Scratch {
+    fn ensure34(&mut self, d_in: usize) -> &mut [f32] {
+        let need = (d_in / 4) * 16;
+        if self.luts34.len() < need {
+            self.luts34.resize(need, 0.0);
+        }
+        &mut self.luts34[..need]
+    }
+
+    fn ensure_tl2(&mut self, d_in: usize) -> &mut [f32] {
+        let need = d_in.div_ceil(3) * lut::TL2_LUT_STRIDE;
+        if self.luts_tl2.len() < need {
+            self.luts_tl2.resize(need, 0.0);
+        }
+        &mut self.luts_tl2[..need]
+    }
+}
+
+/// Weight storage variants.
+enum Weights {
+    /// (d_out × d_in) row-major f32 — the BF16-stand-in baseline.
+    Dense(Vec<f32>),
+    Sherry(Packed34),
+    Tl2(PackedTl2),
+    I2s(PackedI2S),
+}
+
+/// One quantized linear layer: y = Wq · x (+α scaling inside the kernel).
+pub struct QuantLinear {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub format: Format,
+    weights: Weights,
+}
+
+impl QuantLinear {
+    /// Quantize + pack a float weight matrix `w` (d_in × d_out, the
+    /// Python convention) into `format`. Sherry format implies the
+    /// Sherry34 quantizer; ternary baselines use AbsMean, matching the
+    /// paper's Table 4 setup (BitNet-style models, per-channel scales).
+    pub fn from_float(w: &Mat, format: Format) -> Self {
+        let (d_in, d_out) = (w.rows, w.cols);
+        let weights = match format {
+            Format::Dense => Weights::Dense(w.transpose().data),
+            Format::Sherry => {
+                let q = quantize(w, Method::Sherry34, Granularity::PerChannel);
+                Weights::Sherry(Packed34::from_ternary(&q))
+            }
+            Format::Tl2 => {
+                let q = quantize(w, Method::AbsMean, Granularity::PerChannel);
+                Weights::Tl2(PackedTl2::from_ternary(&q))
+            }
+            Format::I2S => {
+                let q = quantize(w, Method::AbsMean, Granularity::PerChannel);
+                Weights::I2s(PackedI2S::from_ternary(&q))
+            }
+        };
+        Self { d_in, d_out, format, weights }
+    }
+
+    /// Pack an already-quantized matrix (QAT checkpoint path).
+    pub fn from_ternary(q: &Ternary, format: Format) -> Self {
+        let weights = match format {
+            Format::Sherry => Weights::Sherry(Packed34::from_ternary(q)),
+            Format::Tl2 => Weights::Tl2(PackedTl2::from_ternary(q)),
+            Format::I2S => Weights::I2s(PackedI2S::from_ternary(q)),
+            Format::Dense => Weights::Dense(q.dequant().transpose().data),
+        };
+        Self { d_in: q.d_in, d_out: q.d_out, format, weights }
+    }
+
+    /// y = W · x. `scratch` carries the LUT buffers.
+    pub fn forward(&self, x: &[f32], y: &mut [f32], scratch: &mut Scratch) {
+        debug_assert_eq!(x.len(), self.d_in);
+        debug_assert_eq!(y.len(), self.d_out);
+        match &self.weights {
+            Weights::Dense(w) => gemv_f32(w, self.d_out, self.d_in, x, y),
+            Weights::Sherry(p) => lut::gemv_pack34(p, x, scratch.ensure34(self.d_in), y),
+            Weights::Tl2(p) => lut::gemv_tl2(p, x, scratch.ensure_tl2(self.d_in), y),
+            Weights::I2s(p) => lut::gemv_i2s(p, x, y),
+        }
+    }
+
+    /// Bytes of weight storage (+ per-channel scales where applicable).
+    pub fn bytes(&self) -> usize {
+        match &self.weights {
+            Weights::Dense(w) => w.len() * 2, // accounted as bf16 (paper baseline)
+            Weights::Sherry(p) => p.weight_bytes() + crate::pack::scale_bytes(self.d_out),
+            Weights::Tl2(p) => p.weight_bytes() + crate::pack::scale_bytes(self.d_out),
+            Weights::I2s(p) => p.weight_bytes() + crate::pack::scale_bytes(self.d_out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn all_formats_forward_and_agree_on_ternary_weights() {
+        // Build from the same AbsMean ternary so LUT kernels must agree
+        // exactly with the dense product of the dequantized weights.
+        let mut rng = Pcg64::seeded(0);
+        let w = Mat::randn(&mut rng, 384, 96, 1.0);
+        let q = quantize(&w, Method::AbsMean, Granularity::PerChannel);
+        let x = rng.normal_vec(384);
+        let mut scratch = Scratch::default();
+
+        let dense = QuantLinear::from_ternary(&q, Format::Dense);
+        let mut y_ref = vec![0.0; 96];
+        dense.forward(&x, &mut y_ref, &mut scratch);
+
+        for format in [Format::Tl2, Format::I2S] {
+            let l = QuantLinear::from_ternary(&q, format);
+            let mut y = vec![0.0; 96];
+            l.forward(&x, &mut y, &mut scratch);
+            for (a, b) in y.iter().zip(&y_ref) {
+                assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{format:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn sherry_linear_matches_dense_of_same_quant() {
+        let mut rng = Pcg64::seeded(1);
+        let w = Mat::randn(&mut rng, 256, 64, 1.0);
+        let q = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+        let x = rng.normal_vec(256);
+        let mut scratch = Scratch::default();
+        let mut y = vec![0.0; 64];
+        QuantLinear::from_ternary(&q, Format::Sherry).forward(&x, &mut y, &mut scratch);
+        let mut y_ref = vec![0.0; 64];
+        QuantLinear::from_ternary(&q, Format::Dense).forward(&x, &mut y_ref, &mut scratch);
+        for (a, b) in y.iter().zip(&y_ref) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn bytes_ordering() {
+        let mut rng = Pcg64::seeded(2);
+        let w = Mat::randn(&mut rng, 768, 768, 1.0);
+        let sherry = QuantLinear::from_float(&w, Format::Sherry).bytes();
+        let tl2 = QuantLinear::from_float(&w, Format::Tl2).bytes();
+        let i2s = QuantLinear::from_float(&w, Format::I2S).bytes();
+        let dense = QuantLinear::from_float(&w, Format::Dense).bytes();
+        assert!(sherry < tl2 && tl2 < i2s && i2s < dense);
+    }
+
+    #[test]
+    fn scratch_grows_monotonically() {
+        let mut s = Scratch::default();
+        assert_eq!(s.ensure34(64).len(), 16 * 16);
+        assert_eq!(s.ensure34(16).len(), 4 * 16);
+        assert!(s.luts34.len() >= 16 * 16);
+    }
+}

@@ -1,0 +1,382 @@
+//! LUT-based multiplication-free GEMV kernels (paper Fig. 9, App. A).
+//!
+//! The engine's two phases:
+//! 1. **Activation preprocessing** — for each input segment, precompute a
+//!    local lookup table of every possible signed partial sum. The table
+//!    is shared across *all* output channels, so its cost amortizes over
+//!    d_out.
+//! 2. **Index-and-accumulate** — per output channel, each packed weight
+//!    code directly indexes the segment's table; partial sums accumulate
+//!    with pure additions. The only multiply per channel is the final
+//!    per-channel scale α.
+//!
+//! Three kernels, one per packing format, sharing the algorithm but not
+//! the code layout:
+//! * [`gemv_pack34`]  — Sherry: 16-entry LUT per 4-segment, nibble index,
+//!   bit-plane mirror sign (power-of-two everything);
+//! * [`gemv_tl2`]     — 27-entry LUT per 3-segment, 5-bit codes pulled
+//!   from a misaligned bitstream (the decode tax the paper measures);
+//! * [`gemv_i2s`]     — 2-bit decode-and-add (no LUT, byte aligned).
+
+use crate::pack::{Packed34, PackedI2S, PackedTl2};
+
+// ---------------------------------------------------------------------------
+// Sherry 1.25-bit kernel
+// ---------------------------------------------------------------------------
+
+/// Build the per-block 16-entry tables for the Sherry kernel.
+///
+/// For block lanes (x0..x3) and zero-lane z, the three active lanes
+/// (a, b, c) produce entries `x_a ± x_b ± x_c` at indices
+/// `z·4 + (s_b<<1|s_c)`. Computed with 6 adds per z via the
+/// sum/difference trick (24 adds per block for all 16 entries).
+///
+/// `luts` must have length `(x.len()/4) * 16`.
+pub fn build_luts34(x: &[f32], luts: &mut [f32]) {
+    let nb = x.len() / 4;
+    debug_assert_eq!(luts.len(), nb * 16);
+    for b in 0..nb {
+        let xs = &x[b * 4..b * 4 + 4];
+        let out = &mut luts[b * 16..b * 16 + 16];
+        for z in 0..4usize {
+            // active lanes in increasing order
+            let (a, bb, c) = match z {
+                0 => (1, 2, 3),
+                1 => (0, 2, 3),
+                2 => (0, 1, 3),
+                _ => (0, 1, 2),
+            };
+            let base = xs[a];
+            let s1 = xs[bb] + xs[c];
+            let s2 = xs[bb] - xs[c];
+            out[z * 4] = base + s1; // (+, +)
+            out[z * 4 + 1] = base + s2; // (+, −)
+            out[z * 4 + 2] = base - s2; // (−, +)
+            out[z * 4 + 3] = base - s1; // (−, −)
+        }
+    }
+}
+
+/// y = (Packed34 weights) · x, with per-channel α applied.
+/// `luts` is caller-provided scratch of length `(d_in/4)*16` so batched
+/// callers reuse the allocation; it is (re)filled from `x` here.
+pub fn gemv_pack34(p: &Packed34, x: &[f32], luts: &mut [f32], y: &mut [f32]) {
+    assert_eq!(x.len(), p.d_in);
+    assert_eq!(y.len(), p.d_out);
+    build_luts34(x, luts);
+    gemv_pack34_preluts(p, luts, y);
+}
+
+/// The accumulate phase only (tables already built — shared across the
+/// channels of every layer consuming the same activations).
+///
+/// Perf notes (EXPERIMENTS.md §Perf):
+/// * sign application is **branchless** — the mirror bit is shifted into
+///   the f32 sign position and XORed (the scalar analogue of the
+///   `vpsignb` the paper's AVX2 kernel would use); the naive branch
+///   version mispredicted ~50% and ran 0.84 Gw/s;
+/// * two accumulators hide the add latency chain;
+/// * the inner loop walks one sign byte = 8 blocks = 32 weights per
+///   iteration, all loads byte-aligned (the point of the 5-bit split
+///   into nibble index + sign plane).
+pub fn gemv_pack34_preluts(p: &Packed34, luts: &[f32], y: &mut [f32]) {
+    let nb = p.n_blocks();
+    let full = nb / 8; // complete sign bytes
+    // Cache blocking: walk the k dimension in tiles of 128 blocks so the
+    // active LUT slice (128×16×4 B = 8 KiB) stays L1-resident across all
+    // d_out channels; the un-tiled version re-streamed the whole LUT
+    // (e.g. 51 KiB at d_in=3200) from L2 once *per channel*.
+    const TILE_SB: usize = 16; // sign bytes per tile = 128 blocks
+    y.fill(0.0);
+    let mut sb0 = 0usize;
+    while sb0 < full {
+        let sb1 = (sb0 + TILE_SB).min(full);
+        for (j, acc_out) in y.iter_mut().enumerate() {
+            let idx_plane = p.idx_plane(j);
+            let sign_plane = p.sign_plane(j);
+            let mut acc0 = 0.0f32;
+            let mut acc1 = 0.0f32;
+            for sb in sb0..sb1 {
+                let signs = sign_plane[sb] as u32;
+                let ibase = sb * 4;
+                let lbase = sb * 8 * 16;
+                for k in 0..4 {
+                    let byte = idx_plane[ibase + k];
+                    let lo = (byte & 0x0F) as usize;
+                    let hi = (byte >> 4) as usize;
+                    let b0 = 2 * k;
+                    let v0 = luts[lbase + b0 * 16 + lo];
+                    let v1 = luts[lbase + (b0 + 1) * 16 + hi];
+                    // branchless mirror: shift the sign bit to f32 bit 31
+                    let s0 = ((signs >> b0) & 1) << 31;
+                    let s1 = ((signs >> (b0 + 1)) & 1) << 31;
+                    acc0 += f32::from_bits(v0.to_bits() ^ s0);
+                    acc1 += f32::from_bits(v1.to_bits() ^ s1);
+                }
+            }
+            *acc_out += acc0 + acc1;
+        }
+        sb0 = sb1;
+    }
+    // Tail blocks + final per-channel scale.
+    for (j, acc_out) in y.iter_mut().enumerate() {
+        let mut acc = *acc_out;
+        for b in full * 8..nb {
+            let v = luts[b * 16 + p.idx_at(j, b) as usize];
+            let s = (p.sign_at(j, b) as u32) << 31;
+            acc += f32::from_bits(v.to_bits() ^ s);
+        }
+        *acc_out = acc * p.alpha[j];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TL2 1.67-bit kernel
+// ---------------------------------------------------------------------------
+
+/// 32-entry stride per group (27 valid codes, padded for alignment).
+pub const TL2_LUT_STRIDE: usize = 32;
+
+/// Build the per-group 27-entry tables (stride 32) for the TL2 kernel.
+/// `x` is zero-padded conceptually to a multiple of 3.
+pub fn build_luts_tl2(x: &[f32], luts: &mut [f32]) {
+    let ng = x.len().div_ceil(3);
+    debug_assert_eq!(luts.len(), ng * TL2_LUT_STRIDE);
+    let get = |i: usize| if i < x.len() { x[i] } else { 0.0 };
+    for g in 0..ng {
+        let (x0, x1, x2) = (get(g * 3), get(g * 3 + 1), get(g * 3 + 2));
+        let out = &mut luts[g * TL2_LUT_STRIDE..g * TL2_LUT_STRIDE + TL2_LUT_STRIDE];
+        let mut code = 0usize;
+        for t0 in [-1.0f32, 0.0, 1.0] {
+            let p0 = t0 * x0; // one fused level; 3-way pattern can't use the
+            for t1 in [-1.0f32, 0.0, 1.0] {
+                let p01 = p0 + t1 * x1; // ± trick as cleanly as 4-way
+                out[code] = p01 - x2;
+                out[code + 1] = p01;
+                out[code + 2] = p01 + x2;
+                code += 3;
+            }
+        }
+    }
+}
+
+/// y = (PackedTl2 weights) · x with per-channel α.
+pub fn gemv_tl2(p: &PackedTl2, x: &[f32], luts: &mut [f32], y: &mut [f32]) {
+    assert_eq!(x.len(), p.d_in);
+    assert_eq!(y.len(), p.d_out);
+    build_luts_tl2(x, luts);
+    gemv_tl2_preluts(p, luts, y);
+}
+
+/// TL2 accumulate phase: every code extraction is a misaligned 16-bit
+/// load + shift + mask — the bit-shuffling overhead of 3-way packing.
+pub fn gemv_tl2_preluts(p: &PackedTl2, luts: &[f32], y: &mut [f32]) {
+    let ng = p.n_groups();
+    for j in 0..p.d_out {
+        let stream = p.stream(j);
+        let mut acc = 0.0f32;
+        let mut bit_off = 0usize;
+        for g in 0..ng {
+            let byte = bit_off / 8;
+            let shift = bit_off % 8;
+            let lo = stream[byte] as u16;
+            let hi = if byte + 1 < stream.len() { stream[byte + 1] as u16 } else { 0 };
+            let code = (((hi << 8) | lo) >> shift) as usize & 0x1F;
+            acc += luts[g * TL2_LUT_STRIDE + code];
+            bit_off += 5;
+        }
+        y[j] = acc * p.alpha[j];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// I2_S 2-bit kernel
+// ---------------------------------------------------------------------------
+
+/// Per-byte decode table: byte → the 4 ternary multipliers it encodes.
+/// 256×4 f32 = 4 KiB, L1-resident. This is the scalar analogue of the
+/// SIMD sign/zero-mask unpack BitNet.cpp's I2_S kernel performs.
+static I2S_DECODE: [[f32; 4]; 256] = build_i2s_decode();
+
+const fn build_i2s_decode() -> [[f32; 4]; 256] {
+    let mut t = [[0.0f32; 4]; 256];
+    let mut b = 0usize;
+    while b < 256 {
+        let mut k = 0usize;
+        while k < 4 {
+            let code = (b >> (k * 2)) & 0x3;
+            t[b][k] = match code {
+                0 => -1.0,
+                2 => 1.0,
+                _ => 0.0,
+            };
+            k += 1;
+        }
+        b += 1;
+    }
+    t
+}
+
+/// y = (PackedI2S weights) · x with per-channel α.
+///
+/// Perf notes (§Perf): the first version selected ±x with a data-dependent
+/// `match` — ~50% mispredict per weight, 0.15 Gw/s. Now each packed byte
+/// indexes a 4-KiB decode table of ternary multipliers and the inner loop
+/// is 4 FMAs per byte, which LLVM vectorizes (this mirrors the real
+/// BitNet.cpp I2_S kernel, which unpacks to SIMD multiplier lanes).
+pub fn gemv_i2s(p: &PackedI2S, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), p.d_in);
+    assert_eq!(y.len(), p.d_out);
+    let full_bytes = p.d_in / 4;
+    for j in 0..p.d_out {
+        let ch = p.channel(j);
+        let mut acc0 = 0.0f32;
+        let mut acc1 = 0.0f32;
+        let pairs = full_bytes / 2;
+        for bi in 0..pairs {
+            let m0 = &I2S_DECODE[ch[2 * bi] as usize];
+            let m1 = &I2S_DECODE[ch[2 * bi + 1] as usize];
+            let xb = &x[bi * 8..bi * 8 + 8];
+            acc0 += m0[0] * xb[0] + m0[1] * xb[1] + m0[2] * xb[2] + m0[3] * xb[3];
+            acc1 += m1[0] * xb[4] + m1[1] * xb[5] + m1[2] * xb[6] + m1[3] * xb[7];
+        }
+        let mut acc = acc0 + acc1;
+        for i in pairs * 8..p.d_in {
+            let m = &I2S_DECODE[ch[i / 4] as usize];
+            acc += m[i % 4] * x[i];
+        }
+        y[j] = acc * p.alpha[j];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{absmean_quantize, sherry34_quantize, Granularity};
+    use crate::tensor::{ops::gemv_f32, Mat};
+    use crate::util::{prop, Pcg64};
+
+    /// Dense reference: y = (Tα)ᵀ · x computed at f32.
+    fn dense_ref(q: &crate::quant::Ternary, x: &[f32]) -> Vec<f32> {
+        let deq = q.dequant(); // (d_in, d_out)
+        let wt = deq.transpose(); // (d_out, d_in)
+        let mut y = vec![0.0; q.d_out];
+        gemv_f32(&wt.data, q.d_out, q.d_in, x, &mut y);
+        y
+    }
+
+    fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn pack34_matches_dense() {
+        let mut rng = Pcg64::seeded(0);
+        let w = Mat::randn(&mut rng, 512, 64, 1.0);
+        let q = sherry34_quantize(&w, Granularity::PerChannel);
+        let p = Packed34::from_ternary(&q);
+        let x = rng.normal_vec(512);
+        let mut luts = vec![0.0; (512 / 4) * 16];
+        let mut y = vec![0.0; 64];
+        gemv_pack34(&p, &x, &mut luts, &mut y);
+        assert_close(&y, &dense_ref(&q, &x), 1e-4, "pack34");
+    }
+
+    #[test]
+    fn prop_pack34_matches_dense_all_shapes() {
+        prop::check(
+            "lut34 == dense",
+            25,
+            |rng| {
+                let nb = prop::gens::usize_in(rng, 1, 64);
+                let d_out = prop::gens::usize_in(rng, 1, 32);
+                (nb * 4, d_out, rng.next_u64())
+            },
+            |&(d_in, d_out, seed)| {
+                let mut rng = Pcg64::seeded(seed);
+                let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+                let q = sherry34_quantize(&w, Granularity::PerChannel);
+                let p = Packed34::from_ternary(&q);
+                let x = rng.normal_vec(d_in);
+                let mut luts = vec![0.0; (d_in / 4) * 16];
+                let mut y = vec![0.0; d_out];
+                gemv_pack34(&p, &x, &mut luts, &mut y);
+                let expect = dense_ref(&q, &x);
+                for (a, b) in y.iter().zip(&expect) {
+                    if (a - b).abs() > 1e-3 * (1.0 + b.abs()) {
+                        return Err(format!("{a} vs {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tl2_matches_dense() {
+        let mut rng = Pcg64::seeded(1);
+        for d_in in [510usize, 512, 513] {
+            let w = Mat::randn(&mut rng, d_in, 32, 1.0);
+            let q = absmean_quantize(&w, Granularity::PerChannel);
+            let p = PackedTl2::from_ternary(&q);
+            let x = rng.normal_vec(d_in);
+            let mut luts = vec![0.0; d_in.div_ceil(3) * TL2_LUT_STRIDE];
+            let mut y = vec![0.0; 32];
+            gemv_tl2(&p, &x, &mut luts, &mut y);
+            assert_close(&y, &dense_ref(&q, &x), 1e-4, "tl2");
+        }
+    }
+
+    #[test]
+    fn i2s_matches_dense() {
+        let mut rng = Pcg64::seeded(2);
+        for d_in in [511usize, 512] {
+            let w = Mat::randn(&mut rng, d_in, 32, 1.0);
+            let q = absmean_quantize(&w, Granularity::PerChannel);
+            let p = PackedI2S::from_ternary(&q);
+            let x = rng.normal_vec(d_in);
+            let mut y = vec![0.0; 32];
+            gemv_i2s(&p, &x, &mut y);
+            assert_close(&y, &dense_ref(&q, &x), 1e-4, "i2s");
+        }
+    }
+
+    #[test]
+    fn pack34_matches_python_golden() {
+        let dir = crate::test_artifacts_dir().join("golden");
+        if !dir.join("w.bin").exists() {
+            eprintln!("skipping: goldens not built");
+            return;
+        }
+        let (r, c, wd) = crate::util::binio::read_mat(&dir.join("w.bin")).unwrap();
+        let w = Mat::from_vec(r, c, wd);
+        let q = sherry34_quantize(&w, Granularity::PerChannel);
+        let p = Packed34::from_ternary(&q);
+        let (_, _, xd) = crate::util::binio::read_mat(&dir.join("x.bin")).unwrap();
+        let (yr, yc, y_gold) = crate::util::binio::read_mat(&dir.join("sherry34.y.bin")).unwrap();
+        assert_eq!((yr, yc), (16, c));
+        let mut luts = vec![0.0; (r / 4) * 16];
+        let mut y = vec![0.0; c];
+        for t in 0..16 {
+            gemv_pack34(&p, &xd[t * r..(t + 1) * r], &mut luts, &mut y);
+            for j in 0..c {
+                let g = y_gold[t * c + j];
+                assert!((y[j] - g).abs() < 1e-3 * (1.0 + g.abs()), "row {t} col {j}: {} vs {g}", y[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn luts34_entries_are_signed_sums() {
+        let x = [1.0f32, 2.0, 4.0, 8.0];
+        let mut luts = vec![0.0; 16];
+        build_luts34(&x, &mut luts);
+        // z=0 (active 1,2,3): idx 0 → +2+4+8 = 14; idx 3 → +2−4−8 = −10
+        assert_eq!(luts[0], 14.0);
+        assert_eq!(luts[3], -10.0);
+        // z=3 (active 0,1,2): idx 12 → 1+2+4 = 7
+        assert_eq!(luts[12], 7.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Native edge-inference engine: quantized linear layers over the packed
+//! formats, and a full ternary transformer with KV cache for token
+//! generation (the Table 4 / Fig. 1 measurement target).
+//!
+//! The engine is Python-free: it either quantizes weights on load (PTQ)
+//! or consumes QAT checkpoints exported by the training driver.
+
+pub mod lut;
+mod linear;
+mod model;
+
+pub use linear::{QuantLinear, Scratch};
+pub use model::{argmax, random_weights, KvCache, ModelWeights, NativeConfig, TernaryModel};

@@ -1,0 +1,242 @@
+//! Evaluation harness: scores quantized models on the synthetic benchmark
+//! suite and renders the paper's table rows (Tables 1-3).
+//!
+//! Scoring runs on the *native* engine (the deployed artifact): after QAT,
+//! weights are fixed ternary, so PTQ-projecting the trained latents and
+//! serving them natively is exactly the paper's deployment path. A
+//! PJRT-vs-native parity test lives in `rust/tests/`.
+
+pub mod tasks;
+
+use std::collections::BTreeMap;
+
+use crate::engine::{KvCache, NativeConfig, Scratch, TernaryModel};
+use crate::quant::{Granularity, Method};
+use crate::tensor::Mat;
+use crate::train::corpus::Corpus;
+use tasks::{questions, Question, Task};
+
+/// Log-probability of `continuation` given `context` under `model`.
+/// Uses one KV-cache pass; length-normalized for candidate comparison.
+pub fn continuation_logprob(
+    model: &TernaryModel,
+    context: &[u32],
+    continuation: &[u32],
+    cache: &mut KvCache,
+    scratch: &mut Scratch,
+) -> f32 {
+    cache.clear();
+    let mut logits = vec![0.0f32; model.cfg.vocab_size];
+    for &t in context {
+        logits = model.forward_one(t, cache, scratch);
+    }
+    let mut total = 0.0f32;
+    for &t in continuation {
+        let lse = log_sum_exp(&logits);
+        total += logits[t as usize] - lse;
+        if cache.len < model.cfg.seq_len {
+            logits = model.forward_one(t, cache, scratch);
+        }
+    }
+    total / continuation.len() as f32
+}
+
+fn log_sum_exp(xs: &[f32]) -> f32 {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    m + xs.iter().map(|x| (x - m).exp()).sum::<f32>().ln()
+}
+
+/// Answer a multiple-choice question: highest normalized logprob wins.
+pub fn answer(model: &TernaryModel, q: &Question, cache: &mut KvCache, scratch: &mut Scratch) -> usize {
+    let mut best = 0usize;
+    let mut best_lp = f32::NEG_INFINITY;
+    for (i, cand) in q.candidates.iter().enumerate() {
+        let lp = continuation_logprob(model, &q.context, cand, cache, scratch);
+        if lp > best_lp {
+            best_lp = lp;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Accuracy of `model` on `n_q` questions of `task`.
+pub fn task_accuracy(model: &TernaryModel, corpus: &Corpus, task: Task, n_q: usize, seed: u64) -> f32 {
+    let mut cache = KvCache::new(&model.cfg);
+    let mut scratch = Scratch::default();
+    let qs = questions(task, corpus, n_q, seed);
+    let correct = qs
+        .iter()
+        .filter(|q| answer(model, q, &mut cache, &mut scratch) == q.correct)
+        .count();
+    correct as f32 / n_q as f32
+}
+
+/// Perplexity on `n_seq` held-out sequences.
+pub fn perplexity(model: &TernaryModel, vocab: usize, n_seq: usize, seed: u64) -> f32 {
+    let mut corpus = Corpus::new(vocab, seed ^ 0xEEE);
+    let mut cache = KvCache::new(&model.cfg);
+    let mut scratch = Scratch::default();
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..n_seq {
+        let seq = corpus.sequence(model.cfg.seq_len);
+        cache.clear();
+        let mut logits = model.forward_one(seq[0], &mut cache, &mut scratch);
+        for &t in &seq[1..] {
+            let lse = log_sum_exp(&logits);
+            nll += (lse - logits[t as usize]) as f64;
+            count += 1;
+            if cache.len < model.cfg.seq_len {
+                logits = model.forward_one(t, &mut cache, &mut scratch);
+            }
+        }
+    }
+    ((nll / count as f64).exp()) as f32
+}
+
+/// One evaluated row: per-task accuracy + average (a Table 1/2 row).
+#[derive(Clone, Debug)]
+pub struct EvalRow {
+    pub label: String,
+    pub bits: f32,
+    pub accs: Vec<(String, f32)>,
+    pub average: f32,
+    pub perplexity: f32,
+}
+
+/// Evaluate a model across the five tasks (+ perplexity).
+pub fn evaluate(
+    label: &str,
+    bits: f32,
+    model: &TernaryModel,
+    vocab: usize,
+    n_q: usize,
+    seed: u64,
+) -> EvalRow {
+    let corpus = Corpus::new(vocab, 0);
+    let mut accs = Vec::new();
+    let mut sum = 0.0;
+    for task in Task::ALL {
+        let acc = task_accuracy(model, &corpus, task, n_q, seed);
+        sum += acc;
+        accs.push((task.name().1.to_string(), acc));
+    }
+    let ppl = perplexity(model, vocab, 8, seed);
+    EvalRow {
+        label: label.to_string(),
+        bits,
+        accs,
+        average: sum / Task::ALL.len() as f32,
+        perplexity: ppl,
+    }
+}
+
+/// PTQ-project trained latents with `method` and evaluate (the deployed
+/// model of Tables 1-3).
+pub fn evaluate_ptq(
+    label: &str,
+    cfg: NativeConfig,
+    params: &BTreeMap<String, Mat>,
+    method: Method,
+    granularity: Granularity,
+    n_q: usize,
+    seed: u64,
+) -> EvalRow {
+    let model = TernaryModel::build_ptq(cfg, params, method, granularity);
+    let bits = method.bits_per_weight();
+    evaluate(label, bits, &model, cfg.vocab_size, n_q, seed)
+}
+
+/// Render rows as the paper-style table.
+pub fn render_table(title: &str, rows: &[EvalRow]) -> String {
+    let mut s = format!("### {title}\n\n");
+    if rows.is_empty() {
+        return s;
+    }
+    s.push_str("| Method | Bits | ");
+    for (name, _) in &rows[0].accs {
+        s.push_str(&format!("{name} | "));
+    }
+    s.push_str("Average | PPL |\n|---|---|");
+    for _ in 0..rows[0].accs.len() + 2 {
+        s.push_str("---|");
+    }
+    s.push('\n');
+    for r in rows {
+        s.push_str(&format!("| {} | {:.2} | ", r.label, r.bits));
+        for (_, a) in &r.accs {
+            s.push_str(&format!("{a:.3} | "));
+        }
+        s.push_str(&format!("{:.3} | {:.2} |\n", r.average, r.perplexity));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::random_weights;
+    use crate::pack::Format;
+
+    fn nano() -> NativeConfig {
+        NativeConfig::named("nano").unwrap()
+    }
+
+    #[test]
+    fn logprob_is_negative_and_finite() {
+        let cfg = nano();
+        let w = random_weights(&cfg, 0);
+        let m = TernaryModel::build(cfg, &w, Format::Dense);
+        let mut cache = KvCache::new(&cfg);
+        let mut scratch = Scratch::default();
+        let lp = continuation_logprob(&m, &[1, 2, 3], &[4, 5], &mut cache, &mut scratch);
+        assert!(lp.is_finite() && lp < 0.0);
+    }
+
+    #[test]
+    fn untrained_model_near_chance() {
+        let cfg = nano();
+        let w = random_weights(&cfg, 1);
+        let m = TernaryModel::build(cfg, &w, Format::Dense);
+        let corpus = Corpus::new(cfg.vocab_size, 0);
+        let acc = task_accuracy(&m, &corpus, Task::Succ, 40, 0);
+        assert!(acc < 0.6, "untrained acc {acc} suspiciously high");
+    }
+
+    #[test]
+    fn perplexity_of_untrained_near_vocab() {
+        let cfg = nano();
+        let w = random_weights(&cfg, 2);
+        let m = TernaryModel::build(cfg, &w, Format::Dense);
+        let ppl = perplexity(&m, cfg.vocab_size, 2, 0);
+        // untrained ≈ uniform ⇒ ppl ≈ vocab (loose band)
+        assert!(ppl > 64.0 && ppl < 1024.0, "ppl {ppl}");
+    }
+
+    #[test]
+    fn render_includes_all_rows() {
+        let rows = vec![EvalRow {
+            label: "sherry".into(),
+            bits: 1.25,
+            accs: vec![("ARC-e".into(), 0.5)],
+            average: 0.5,
+            perplexity: 10.0,
+        }];
+        let t = render_table("Table 1", &rows);
+        assert!(t.contains("sherry"));
+        assert!(t.contains("1.25"));
+        assert!(t.contains("ARC-e"));
+    }
+
+    #[test]
+    fn evaluate_ptq_all_methods_smoke() {
+        let cfg = nano();
+        let w = random_weights(&cfg, 3);
+        for m in [Method::Sherry34, Method::AbsMean, Method::Binary] {
+            let row = evaluate_ptq(m.name(), cfg, &w, m, Granularity::PerChannel, 4, 0);
+            assert_eq!(row.accs.len(), 5);
+            assert!(row.average >= 0.0 && row.average <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,203 @@
+//! Synthetic zero-shot tasks (DESIGN.md substitution for the paper's five
+//! lm-eval-harness benchmarks).
+//!
+//! Each task emits multiple-choice questions over the synthetic corpus
+//! process: a context, four candidate continuations, one correct. Tasks
+//! differ in the *kind* of structure required, giving the same difficulty
+//! spread the paper's suite has:
+//!
+//! | here        | proxies | requires                                  |
+//! |-------------|---------|-------------------------------------------|
+//! | `succ`      | ARC-e   | 1-step bigram structure (easy)            |
+//! | `chain`     | PIQA    | 2-step transition composition             |
+//! | `induction` | HelS    | in-context copy of a repeated motif       |
+//! | `recall`    | WinG    | long-range token membership               |
+//! | `fine`      | ARC-c   | discriminating near-miss successors (hard)|
+
+use crate::train::corpus::Corpus;
+use crate::util::Pcg64;
+
+/// One multiple-choice question.
+#[derive(Clone, Debug)]
+pub struct Question {
+    pub context: Vec<u32>,
+    /// Four candidates, each a short token continuation.
+    pub candidates: Vec<Vec<u32>>,
+    pub correct: usize,
+}
+
+/// Task identifiers (display order matches the paper's tables).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Succ,
+    Fine,
+    Induction,
+    Chain,
+    Recall,
+}
+
+impl Task {
+    pub const ALL: [Task; 5] = [Task::Succ, Task::Fine, Task::Induction, Task::Chain, Task::Recall];
+
+    /// (our name, paper benchmark it proxies)
+    pub fn name(&self) -> (&'static str, &'static str) {
+        match self {
+            Task::Succ => ("succ", "ARC-e"),
+            Task::Fine => ("fine", "ARC-c"),
+            Task::Induction => ("induction", "HelS"),
+            Task::Chain => ("chain", "PIQA"),
+            Task::Recall => ("recall", "WinG"),
+        }
+    }
+}
+
+/// Deterministic question set for a task.
+pub fn questions(task: Task, corpus: &Corpus, n: usize, seed: u64) -> Vec<Question> {
+    let vocab = corpus.vocab() as u64;
+    let mut rng = Pcg64::new(seed ^ 0x7A5C, task.name().0.len() as u64);
+    let mut out = Vec::with_capacity(n);
+    // Fresh corpus stream for contexts (separate from train/heldout seeds).
+    let mut ctx_gen = Corpus::new(corpus.vocab(), seed ^ 0xC0DE);
+    while out.len() < n {
+        let ctx_len = 12 + rng.below(12) as usize;
+        let context = ctx_gen.sequence(ctx_len);
+        let last = *context.last().unwrap();
+        let (s1, s2) = corpus.successors(last);
+        let mut distractor = |exclude: &[u32]| -> u32 {
+            loop {
+                let c = rng.below(vocab) as u32;
+                if !exclude.contains(&c) {
+                    return c;
+                }
+            }
+        };
+        let q = match task {
+            Task::Succ => {
+                let correct = s1;
+                let ex = [s1, s2, last];
+                mk_q(context, vec![vec![correct], vec![distractor(&ex)], vec![distractor(&ex)], vec![distractor(&ex)]], &mut rng)
+            }
+            Task::Fine => {
+                // Discriminate the secondary successor from near misses.
+                let correct = s2;
+                let near1 = (s2 + 1) % vocab as u32;
+                let near2 = (s2 + vocab as u32 - 1) % vocab as u32;
+                let near3 = (s2 + 2) % vocab as u32;
+                if [near1, near2, near3].contains(&s1) {
+                    continue; // ambiguous; resample
+                }
+                mk_q(context, vec![vec![correct], vec![near1], vec![near2], vec![near3]], &mut rng)
+            }
+            Task::Induction => {
+                // context: ... A B C ... A B → C
+                let a = context[2];
+                let b = context[3];
+                let c = context[4];
+                let mut ctx = context;
+                ctx.push(a);
+                ctx.push(b);
+                let ex = [c, a, b];
+                mk_q(ctx, vec![vec![c], vec![distractor(&ex)], vec![distractor(&ex)], vec![distractor(&ex)]], &mut rng)
+            }
+            Task::Chain => {
+                // two-step composition: succ(succ(last)).
+                let step2 = corpus.successors(s1).0;
+                let ex = [s1, s2, step2];
+                mk_q(
+                    context,
+                    vec![
+                        vec![s1, step2],
+                        vec![s1, distractor(&ex)],
+                        vec![distractor(&ex), step2],
+                        vec![distractor(&ex), distractor(&ex)],
+                    ],
+                    &mut rng,
+                )
+            }
+            Task::Recall => {
+                // which token appeared early in the context?
+                let seen = context[1];
+                let ex: Vec<u32> = context.clone();
+                mk_q(context.clone(), vec![vec![seen], vec![distractor(&ex)], vec![distractor(&ex)], vec![distractor(&ex)]], &mut rng)
+            }
+        };
+        out.push(q);
+    }
+    out
+}
+
+fn mk_q(context: Vec<u32>, mut cands: Vec<Vec<u32>>, rng: &mut Pcg64) -> Question {
+    // Shuffle candidate order so position carries no signal.
+    let mut order: Vec<usize> = (0..cands.len()).collect();
+    rng.shuffle(&mut order);
+    let correct = order.iter().position(|&o| o == 0).unwrap();
+    let mut shuffled = Vec::with_capacity(cands.len());
+    for &o in &order {
+        shuffled.push(std::mem::take(&mut cands[o]));
+    }
+    Question { context, candidates: shuffled, correct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        Corpus::new(256, 0)
+    }
+
+    #[test]
+    fn questions_well_formed() {
+        let c = corpus();
+        for task in Task::ALL {
+            let qs = questions(task, &c, 20, 1);
+            assert_eq!(qs.len(), 20, "{task:?}");
+            for q in &qs {
+                assert_eq!(q.candidates.len(), 4);
+                assert!(q.correct < 4);
+                assert!(!q.context.is_empty());
+                assert!(q.candidates.iter().all(|cd| !cd.is_empty()));
+                // distractors must differ from the correct answer
+                let correct = &q.candidates[q.correct];
+                for (i, cd) in q.candidates.iter().enumerate() {
+                    if i != q.correct {
+                        assert_ne!(cd, correct, "{task:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = corpus();
+        let a = questions(Task::Succ, &c, 10, 42);
+        let b = questions(Task::Succ, &c, 10, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.correct, y.correct);
+        }
+    }
+
+    #[test]
+    fn correct_position_is_uniformish() {
+        let c = corpus();
+        let qs = questions(Task::Succ, &c, 200, 3);
+        let mut counts = [0usize; 4];
+        for q in &qs {
+            counts[q.correct] += 1;
+        }
+        for &ct in &counts {
+            assert!(ct > 20, "position bias: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn succ_correct_is_true_successor() {
+        let c = corpus();
+        for q in questions(Task::Succ, &c, 20, 5) {
+            let last = *q.context.last().unwrap();
+            assert_eq!(q.candidates[q.correct][0], c.successors(last).0);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! Experiment drivers: one per paper table/figure (see DESIGN.md §3).
+//!
+//! Accuracy experiments (QAT runs) are CLI subcommands (`sherry exp <id>`)
+//! because they take minutes; timing experiments live in `rust/benches/`.
+//! Every driver writes its artifact under `results/` and prints a summary.
+
+mod figures;
+mod tables;
+
+pub use figures::{fig10_11, fig3, fig4, fig6, fig7, fig8};
+pub use tables::{table1, table2, table3, MethodRow};
+
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Output directory for experiment artifacts.
+pub fn results_dir() -> PathBuf {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+/// Write + echo an experiment artifact.
+pub fn emit(name: &str, content: &str) -> Result<()> {
+    let path = results_dir().join(name);
+    std::fs::write(&path, content)?;
+    println!("{content}");
+    println!("[exp] wrote {}", path.display());
+    Ok(())
+}
+
+/// Simple ASCII horizontal bar (for figure summaries in the terminal).
+pub fn bar(value: f32, max: f32, width: usize) -> String {
+    let n = ((value / max).clamp(0.0, 1.0) * width as f32).round() as usize;
+    "█".repeat(n)
+}
+
+/// Render a histogram as ASCII rows + TSV block.
+pub fn render_histogram(title: &str, edges_lo: f32, edges_hi: f32, counts: &[u64]) -> String {
+    let max = counts.iter().copied().max().unwrap_or(1).max(1) as f32;
+    let bins = counts.len();
+    let w = (edges_hi - edges_lo) / bins as f32;
+    let mut s = format!("#### {title}\n```\n");
+    for (i, &c) in counts.iter().enumerate() {
+        let lo = edges_lo + i as f32 * w;
+        s.push_str(&format!("{lo:>7.2} | {:<40} {c}\n", bar(c as f32, max, 40)));
+    }
+    s.push_str("```\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_widths() {
+        assert_eq!(bar(1.0, 1.0, 10).chars().count(), 10);
+        assert_eq!(bar(0.0, 1.0, 10).chars().count(), 0);
+        assert_eq!(bar(2.0, 1.0, 10).chars().count(), 10); // clamped
+    }
+
+    #[test]
+    fn histogram_renders_all_bins() {
+        let s = render_histogram("t", -1.0, 1.0, &[1, 5, 2]);
+        assert_eq!(s.matches('|').count(), 3);
+    }
+}

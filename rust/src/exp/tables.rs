@@ -1,0 +1,169 @@
+//! Tables 1-3: QAT training sweeps + synthetic-benchmark evaluation.
+//!
+//! Protocol (scaled per DESIGN.md substitutions): for each method, run the
+//! AOT QAT train-step for `steps` steps on the synthetic corpus, PTQ the
+//! trained latents, evaluate on the five tasks. Sherry trains with Arenas
+//! (cosine-warmup); baselines train as published (no residual). The BF16
+//! row trains the identity "quantizer".
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use crate::engine::{NativeConfig, TernaryModel};
+use crate::eval::{evaluate, evaluate_ptq, render_table, EvalRow};
+use crate::pack::Format;
+use crate::quant::{Granularity, Method, Schedule};
+use crate::runtime::Runtime;
+use crate::tensor::Mat;
+use crate::train::{train_and_eval, TrainConfig};
+
+/// One trained + evaluated method.
+#[derive(Clone, Debug)]
+pub struct MethodRow {
+    pub method: String,
+    pub row: EvalRow,
+    pub final_train_loss: f32,
+    pub eval_loss: f32,
+}
+
+/// Train one method (QAT via PJRT) and evaluate it natively.
+pub fn run_method(
+    rt: &mut Runtime,
+    config: &str,
+    method: &str,
+    granularity: &str,
+    schedule: Schedule,
+    steps: usize,
+    n_q: usize,
+    seed: u64,
+) -> Result<MethodRow> {
+    let cfg = TrainConfig {
+        config: config.into(),
+        method: method.into(),
+        granularity: granularity.into(),
+        steps,
+        schedule,
+        seed,
+        ..Default::default()
+    };
+    let (outcome, eval_loss) = train_and_eval(rt, &cfg, 2)?;
+    let native_cfg = NativeConfig::named(config).expect("known config");
+    let gran = Granularity::parse(granularity, 128).expect("granularity");
+    let row = if method == "bf16" {
+        let model = TernaryModel::build(native_cfg, &strip_aux(&outcome.params), Format::Dense);
+        evaluate("BF16", 16.0, &model, native_cfg.vocab_size, n_q, seed)
+    } else {
+        let m = Method::parse(method).expect("method");
+        evaluate_ptq(method, native_cfg, &outcome.params, m, gran, n_q, seed)
+    };
+    Ok(MethodRow {
+        method: method.into(),
+        row,
+        final_train_loss: *outcome.losses.last().unwrap_or(&f32::NAN),
+        eval_loss,
+    })
+}
+
+fn strip_aux(params: &BTreeMap<String, Mat>) -> BTreeMap<String, Mat> {
+    params
+        .iter()
+        .filter(|(k, _)| !k.ends_with(".aux"))
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect()
+}
+
+/// Table 1: ternary quantization method comparison.
+pub fn table1(rt: &mut Runtime, steps: usize, n_q: usize, seed: u64) -> Result<String> {
+    // (label, method, schedule) — Sherry is the only Arenas user, as in
+    // the paper's Table 1.
+    let rows_spec: &[(&str, &str, Schedule)] = &[
+        ("BF16", "bf16", Schedule::Off),
+        ("LSQ", "lsq", Schedule::Off),
+        ("SEQ", "seq", Schedule::Off),
+        ("DLT", "dlt", Schedule::Off),
+        ("TWN", "twn", Schedule::Off),
+        ("AbsMedian", "absmedian", Schedule::Off),
+        ("AbsMean", "absmean", Schedule::Off),
+        ("Tequila", "tequila", Schedule::Off),
+        ("Sherry", "sherry34", Schedule::CosineWarmup),
+    ];
+    let mut rows = Vec::new();
+    for (label, method, schedule) in rows_spec {
+        eprintln!("[table1] training {method} ({steps} steps)...");
+        let mut r = run_method(rt, "nano", method, "per_channel", *schedule, steps, n_q, seed)?;
+        r.row.label = label.to_string();
+        rows.push(r);
+    }
+    let eval_rows: Vec<EvalRow> = rows.iter().map(|r| r.row.clone()).collect();
+    let mut out = render_table("Table 1 — ternary quantization methods (nano scale)", &eval_rows);
+    out.push_str("\nTrain/eval losses:\n");
+    for r in &rows {
+        out.push_str(&format!(
+            "  {:<12} train {:.3}  eval {:.3}\n",
+            r.method, r.final_train_loss, r.eval_loss
+        ));
+    }
+    super::emit("table1_methods.md", &out)?;
+    Ok(out)
+}
+
+/// Table 2: LLM-system comparison — same harness, rows labeled by the
+/// system each quantizer represents.
+pub fn table2(rt: &mut Runtime, steps: usize, n_q: usize, seed: u64) -> Result<String> {
+    let rows_spec: &[(&str, &str, Schedule)] = &[
+        ("LLaMA (BF16)", "bf16", Schedule::Off),
+        ("TernaryLLM* (DLT)", "dlt", Schedule::Off),
+        ("ParetoQ* (SEQ)", "seq", Schedule::Off),
+        ("LLM-QAT (LSQ)", "lsq", Schedule::Off),
+        ("BitNet (AbsMean)", "absmean", Schedule::Off),
+        ("Spectra (AbsMedian)", "absmedian", Schedule::Off),
+        ("TequilaLLM", "tequila", Schedule::Off),
+        ("SherryLLM", "sherry34", Schedule::CosineWarmup),
+    ];
+    let mut eval_rows = Vec::new();
+    for (label, method, schedule) in rows_spec {
+        eprintln!("[table2] training {method} ({steps} steps)...");
+        let mut r = run_method(rt, "nano", method, "per_channel", *schedule, steps, n_q, seed)?;
+        r.row.label = label.to_string();
+        eval_rows.push(r.row);
+    }
+    let out = render_table("Table 2 — SherryLLM vs ternary LLMs (nano scale)", &eval_rows);
+    super::emit("table2_llms.md", &out)?;
+    Ok(out)
+}
+
+/// Table 3: Sherry accuracy across quantization granularities, mean ± std
+/// over `n_seeds` seeds.
+pub fn table3(rt: &mut Runtime, steps: usize, n_q: usize, n_seeds: u64) -> Result<String> {
+    let mut out = String::from("### Table 3 — Sherry across quantization granularities\n\n");
+    out.push_str("| Granularity | Average Acc ± Std |\n|---|---|\n");
+    for gran in ["per_tensor", "per_channel", "per_group"] {
+        let mut accs = Vec::new();
+        for seed in 0..n_seeds {
+            eprintln!("[table3] {gran} seed {seed} ({steps} steps)...");
+            let r = run_method(rt, "nano", "sherry34", gran, Schedule::CosineWarmup, steps, n_q, seed)?;
+            accs.push(r.row.average as f64);
+        }
+        let mean = crate::util::stats::mean(&accs);
+        let std = crate::util::stats::std_dev(&accs);
+        out.push_str(&format!("| {gran} | {mean:.3} ± {std:.3} |\n"));
+    }
+    super::emit("table3_granularity.md", &out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strip_aux_removes_only_aux() {
+        let mut p = BTreeMap::new();
+        p.insert("embed".to_string(), Mat::zeros(2, 2));
+        p.insert("layer0.wq".to_string(), Mat::zeros(2, 2));
+        p.insert("layer0.wq.aux".to_string(), Mat::zeros(1, 2));
+        let s = strip_aux(&p);
+        assert_eq!(s.len(), 2);
+        assert!(!s.contains_key("layer0.wq.aux"));
+    }
+}

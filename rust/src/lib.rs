@@ -1,0 +1,46 @@
+//! # Sherry — hardware-efficient 1.25-bit ternary quantization
+//!
+//! Reproduction of *"Sherry: Hardware-Efficient 1.25-Bit Ternary
+//! Quantization via Fine-grained Sparsification"* (ACL 2026) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the edge-serving coordinator: the native
+//!   LUT inference engine with the paper's 5-bit 3:4 packing (plus TL2 and
+//!   I2_S baselines), request routing/batching, KV-cache management, the
+//!   QAT training driver, and the full evaluation harness.
+//! * **Layer 2** — the QAT transformer in JAX (`python/compile/model.py`),
+//!   AOT-lowered to HLO text artifacts loaded here via PJRT.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
+//!   quantize/matmul hot spots, checked against pure-jnp oracles.
+//!
+//! See DESIGN.md for the complete system inventory and experiment index.
+
+pub mod cli;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod exp;
+pub mod linalg;
+pub mod pack;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Locate the repository's `artifacts/` directory (env override:
+/// `SHERRY_ARTIFACTS`). Used by the runtime, tests and examples.
+pub fn artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("SHERRY_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Test helper: same as [`artifacts_dir`] (kept separate so tests read as
+/// explicitly artifact-dependent and can skip when not built).
+pub fn test_artifacts_dir() -> PathBuf {
+    artifacts_dir()
+}

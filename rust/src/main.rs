@@ -1,0 +1,312 @@
+//! `sherry` — the Layer-3 coordinator CLI.
+//!
+//! Subcommands:
+//!   train      QAT training via the AOT PJRT train-step (+ checkpoint)
+//!   eval       evaluate a checkpoint (or PTQ random init) on the tasks
+//!   serve      trace-driven serving demo on the native LUT engine
+//!   generate   one-shot generation from a checkpoint
+//!   exp        regenerate a paper table/figure (table1..3, fig3..11, appc)
+//!   pack-info  packing format inventory + App. C feasibility table
+
+use anyhow::{bail, Context, Result};
+
+use sherry::cli::{App, Command, Parsed};
+use sherry::coordinator::{serve_trace, ServerConfig, TraceSpec};
+use sherry::engine::{random_weights, NativeConfig, TernaryModel};
+use sherry::pack::{enumerate_nm_formats, Format};
+use sherry::quant::Schedule;
+use sherry::runtime::Runtime;
+use sherry::train::{checkpoint, train_and_eval, TrainConfig};
+
+fn app() -> App {
+    App::new("sherry", "1.25-bit ternary quantization (ACL 2026 reproduction)")
+        .command(
+            Command::new("train", "QAT training via PJRT train-step artifacts")
+                .flag("config", "model config (nano|micro|e2e)", Some("nano"))
+                .flag("method", "quantizer (sherry34|absmean|...|bf16)", Some("sherry34"))
+                .flag("granularity", "per_tensor|per_channel|per_group", Some("per_channel"))
+                .flag("steps", "training steps", Some("200"))
+                .flag("lr", "learning rate", Some("0.001"))
+                .flag("schedule", "arenas λ schedule", Some("cosine_warmup"))
+                .flag("seed", "rng seed", Some("0"))
+                .flag("out", "checkpoint output path", None),
+        )
+        .command(
+            Command::new("eval", "evaluate a checkpoint on the synthetic benchmark suite")
+                .flag("config", "model config", Some("nano"))
+                .flag("ckpt", "checkpoint path (omit = random init)", None)
+                .flag("method", "PTQ method", Some("sherry34"))
+                .flag("questions", "questions per task", Some("40"))
+                .flag("seed", "rng seed", Some("0")),
+        )
+        .command(
+            Command::new("serve", "trace-driven serving on the native LUT engine")
+                .flag("config", "model config", Some("nano"))
+                .flag("ckpt", "checkpoint path (omit = random init)", None)
+                .flag("format", "bf16|i2_s|tl2|sherry", Some("sherry"))
+                .flag("requests", "number of requests", Some("16"))
+                .flag("interarrival", "mean inter-arrival seconds", Some("0.01"))
+                .flag("prompt", "prompt length", Some("8"))
+                .flag("tokens", "max new tokens per request", Some("24"))
+                .flag("active", "max concurrent sequences", Some("8")),
+        )
+        .command(
+            Command::new("generate", "greedy generation from a checkpoint")
+                .flag("config", "model config", Some("nano"))
+                .flag("ckpt", "checkpoint path (omit = random init)", None)
+                .flag("format", "bf16|i2_s|tl2|sherry", Some("sherry"))
+                .flag("prompt", "comma-separated token ids", Some("1,2,3"))
+                .flag("tokens", "tokens to generate", Some("32")),
+        )
+        .command(
+            Command::new("exp", "regenerate a paper table/figure")
+                .flag("id", "table1|table2|table3|fig3|fig4|fig6|fig7|fig8|fig10|appc", None)
+                .flag("steps", "QAT steps per arm", Some("150"))
+                .flag("questions", "questions per task", Some("40"))
+                .flag("seeds", "seeds (table3)", Some("3"))
+                .flag("seed", "base seed", Some("0")),
+        )
+        .command(
+            Command::new("inspect", "per-layer quantization error report for a checkpoint")
+                .flag("config", "model config", Some("nano"))
+                .flag("ckpt", "checkpoint path (omit = random init)", None)
+                .flag("layer", "layer name substring filter", Some("layer0"))
+                .flag("granularity", "per_tensor|per_channel|per_group", Some("per_channel")),
+        )
+        .command(Command::new("pack-info", "packing formats + App. C feasibility"))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (command, args) = match app().parse(&argv)? {
+        Parsed::Help(h) => {
+            println!("{h}");
+            return Ok(());
+        }
+        Parsed::Run { command, args } => (command, args),
+    };
+
+    match command.as_str() {
+        "train" => {
+            let cfg = TrainConfig {
+                config: args.str_or("config", "nano"),
+                method: args.str_or("method", "sherry34"),
+                granularity: args.str_or("granularity", "per_channel"),
+                steps: args.usize_or("steps", 200),
+                lr: args.f64_or("lr", 1e-3) as f32,
+                schedule: Schedule::parse(&args.str_or("schedule", "cosine_warmup"))
+                    .context("unknown schedule")?,
+                seed: args.u64_or("seed", 0),
+                er_layer: "layer0.wq".into(),
+                er_every: 0,
+            };
+            let mut rt = Runtime::cpu(&sherry::artifacts_dir())?;
+            println!(
+                "[train] {}/{}/{} steps={} schedule={:?}",
+                cfg.config, cfg.method, cfg.granularity, cfg.steps, cfg.schedule
+            );
+            let t0 = std::time::Instant::now();
+            let (outcome, eval_loss) = train_and_eval(&mut rt, &cfg, 4)?;
+            for (i, l) in outcome.losses.iter().enumerate() {
+                if i % 10 == 0 || i + 1 == outcome.losses.len() {
+                    println!("  step {i:>5}  loss {l:.4}");
+                }
+            }
+            println!(
+                "[train] done in {:.1}s | final train loss {:.4} | heldout loss {:.4} | ppl {:.2} | final λ {:.4}",
+                t0.elapsed().as_secs_f64(),
+                outcome.losses.last().unwrap(),
+                eval_loss,
+                eval_loss.exp(),
+                outcome.final_lambda
+            );
+            if let Some(out) = args.get("out") {
+                checkpoint::save(std::path::Path::new(out), &outcome.params)?;
+                println!("[train] checkpoint → {out}");
+            }
+        }
+        "eval" => {
+            let cfg_name = args.str_or("config", "nano");
+            let native = NativeConfig::named(&cfg_name).context("unknown config")?;
+            let params = match args.get("ckpt") {
+                Some(p) => checkpoint::load(std::path::Path::new(p))?,
+                None => random_weights(&native, args.u64_or("seed", 0)),
+            };
+            let method = sherry::quant::Method::parse(&args.str_or("method", "sherry34"))
+                .context("unknown method")?;
+            let row = sherry::eval::evaluate_ptq(
+                method.name(),
+                native,
+                &params,
+                method,
+                sherry::quant::Granularity::PerChannel,
+                args.usize_or("questions", 40),
+                args.u64_or("seed", 0),
+            );
+            println!("{}", sherry::eval::render_table("Evaluation", &[row]));
+        }
+        "serve" => {
+            let cfg_name = args.str_or("config", "nano");
+            let native = NativeConfig::named(&cfg_name).context("unknown config")?;
+            let params = match args.get("ckpt") {
+                Some(p) => checkpoint::load(std::path::Path::new(p))?,
+                None => random_weights(&native, 0),
+            };
+            let format = parse_format(&args.str_or("format", "sherry"))?;
+            let model = TernaryModel::build(native, &params, format);
+            println!(
+                "[serve] {} model, format {} ({:.2} MB)",
+                cfg_name,
+                format.name(),
+                model.bytes() as f64 / 1e6
+            );
+            let mut server_cfg = ServerConfig::default();
+            server_cfg.batcher.max_active = args.usize_or("active", 8);
+            server_cfg.kv_capacity = server_cfg.batcher.max_active;
+            let trace = TraceSpec {
+                n_requests: args.usize_or("requests", 16),
+                mean_interarrival_s: args.f64_or("interarrival", 0.01),
+                prompt_len: args.usize_or("prompt", 8),
+                max_new_tokens: args.usize_or("tokens", 24),
+                seed: 0,
+            };
+            let (_completions, metrics) = serve_trace(&model, server_cfg, trace);
+            println!("{}", metrics.report());
+        }
+        "generate" => {
+            let cfg_name = args.str_or("config", "nano");
+            let native = NativeConfig::named(&cfg_name).context("unknown config")?;
+            let params = match args.get("ckpt") {
+                Some(p) => checkpoint::load(std::path::Path::new(p))?,
+                None => random_weights(&native, 0),
+            };
+            let format = parse_format(&args.str_or("format", "sherry"))?;
+            let model = TernaryModel::build(native, &params, format);
+            let prompt: Vec<u32> = args
+                .str_or("prompt", "1,2,3")
+                .split(',')
+                .map(|s| s.trim().parse().context("bad token id"))
+                .collect::<Result<_>>()?;
+            let mut cache = sherry::engine::KvCache::new(&native);
+            let mut scratch = sherry::engine::Scratch::default();
+            let t0 = std::time::Instant::now();
+            let out = model.generate(&prompt, args.usize_or("tokens", 32), &mut cache, &mut scratch);
+            let dt = t0.elapsed().as_secs_f64();
+            println!("prompt: {prompt:?}");
+            println!("output: {out:?}");
+            println!(
+                "[generate] {} tokens in {:.3}s → {:.1} tok/s ({})",
+                out.len(),
+                dt,
+                out.len() as f64 / dt,
+                format.name()
+            );
+        }
+        "exp" => {
+            let id = args
+                .get("id")
+                .map(str::to_string)
+                .or_else(|| args.positional().first().cloned())
+                .context("exp needs --id (or positional id)")?;
+            let steps = args.usize_or("steps", 150);
+            let n_q = args.usize_or("questions", 40);
+            let seed = args.u64_or("seed", 0);
+            run_exp(&id, steps, n_q, args.u64_or("seeds", 3), seed)?;
+        }
+        "inspect" => {
+            let cfg_name = args.str_or("config", "nano");
+            let native = NativeConfig::named(&cfg_name).context("unknown config")?;
+            let params = match args.get("ckpt") {
+                Some(p) => checkpoint::load(std::path::Path::new(p))?,
+                None => random_weights(&native, 0),
+            };
+            let filter = args.str_or("layer", "layer0");
+            let gran = sherry::quant::Granularity::parse(&args.str_or("granularity", "per_channel"), 128)
+                .context("bad granularity")?;
+            for (name, w) in &params {
+                let is_linear = name.contains("layer") && !name.contains("norm") && !name.ends_with(".aux");
+                if !is_linear || !name.contains(&filter) {
+                    continue;
+                }
+                let reports: Vec<_> = sherry::quant::Method::ALL
+                    .iter()
+                    .map(|&m| sherry::quant::error::analyze(w, m, gran))
+                    .collect();
+                println!(
+                    "{}",
+                    sherry::quant::error::render_reports(
+                        &format!("{name} ({}x{})", w.rows, w.cols),
+                        &reports
+                    )
+                );
+            }
+        }
+        "pack-info" => {
+            println!("Packing formats (Table 4 / Fig 1 axes):");
+            for f in Format::ALL {
+                println!("  {:<8} {:>5.2} bits/weight", f.name(), f.bits_per_weight());
+            }
+            println!("\nApp. C — N:M feasibility for LUT-based ternary engines:");
+            println!(
+                "{:<6} {:>6} {:>7} {:>7} {:>6} {:>5} {:>5} {:>6} {:>9}",
+                "N:M", "states", "idx", "bits/w", "simd", "lut", "dens", "eff", "feasible"
+            );
+            for f in enumerate_nm_formats(8) {
+                println!(
+                    "{:<6} {:>6} {:>7} {:>7.3} {:>6} {:>5} {:>5} {:>6} {:>9}",
+                    format!("{}:{}", f.n, f.m),
+                    f.states,
+                    f.index_states,
+                    f.bits_per_weight,
+                    f.simd_aligned,
+                    f.fits_16_entry_lut,
+                    f.density_safe,
+                    f.efficient,
+                    if f.feasible() { "YES ←" } else { "-" }
+                );
+            }
+        }
+        other => bail!("unhandled command {other}"),
+    }
+    Ok(())
+}
+
+fn parse_format(s: &str) -> Result<Format> {
+    Format::ALL
+        .iter()
+        .copied()
+        .find(|f| f.name() == s)
+        .with_context(|| format!("unknown format '{s}' (bf16|i2_s|tl2|sherry)"))
+}
+
+fn run_exp(id: &str, steps: usize, n_q: usize, seeds: u64, seed: u64) -> Result<()> {
+    use sherry::exp;
+    if id == "fig7" {
+        exp::fig7()?;
+        return Ok(());
+    }
+    if id == "appc" {
+        let mut s = String::from("### App. C — N:M feasibility\n\n");
+        for f in enumerate_nm_formats(8) {
+            s.push_str(&format!(
+                "{}:{} states={} idx={} bits/w={:.3} feasible={}\n",
+                f.n, f.m, f.states, f.index_states, f.bits_per_weight, f.feasible()
+            ));
+        }
+        exp::emit("appc_nm_feasibility.md", &s)?;
+        return Ok(());
+    }
+    let mut rt = Runtime::cpu(&sherry::artifacts_dir())?;
+    match id {
+        "table1" => drop(exp::table1(&mut rt, steps, n_q, seed)?),
+        "table2" => drop(exp::table2(&mut rt, steps, n_q, seed)?),
+        "table3" => drop(exp::table3(&mut rt, steps, n_q, seeds)?),
+        "fig3" => drop(exp::fig3(&mut rt, steps, seed)?),
+        "fig4" => drop(exp::fig4(&mut rt, steps, seed)?),
+        "fig6" => drop(exp::fig6(&mut rt, steps, n_q, seed)?),
+        "fig8" => drop(exp::fig8(&mut rt, steps, n_q, seed)?),
+        "fig10" | "fig11" => drop(exp::fig10_11(&mut rt, steps, seed)?),
+        other => bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}

@@ -1,0 +1,127 @@
+//! I2_S: the 2-bit baseline packing (BitNet.cpp / T-MAC; paper Fig. 2
+//! left). One ternary weight per 2 bits (00=−1, 01=0, 10=+1), four to a
+//! byte. Byte-aligned and SIMD-regular but wastes 0.415 bits/weight vs the
+//! ternary entropy bound — the "bit wastage" arm of the trade-off.
+
+use super::PackedMatrix;
+use crate::quant::{Granularity, Ternary};
+
+/// Packed 2-bit weight matrix.
+#[derive(Clone, Debug)]
+pub struct PackedI2S {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// 4 weights per byte, channel-major.
+    pub bytes: Vec<u8>,
+    pub bytes_per_ch: usize,
+    pub alpha: Vec<f32>,
+}
+
+#[inline]
+fn enc(t: i8) -> u8 {
+    (t + 1) as u8 // 0, 1, 2
+}
+
+#[inline]
+fn dec(c: u8) -> i8 {
+    (c & 0x3) as i8 - 1
+}
+
+impl PackedI2S {
+    pub fn from_ternary(q: &Ternary) -> Self {
+        assert!(
+            matches!(q.granularity, Granularity::PerChannel | Granularity::PerTensor),
+            "engine packing uses per-channel scales"
+        );
+        let bytes_per_ch = q.d_in.div_ceil(4);
+        let mut bytes = vec![0u8; bytes_per_ch * q.d_out];
+        for j in 0..q.d_out {
+            for i in 0..q.d_in {
+                let code = enc(q.t_at(i, j));
+                bytes[j * bytes_per_ch + i / 4] |= code << ((i % 4) * 2);
+            }
+        }
+        let alpha = match q.granularity {
+            Granularity::PerChannel => q.alpha.clone(),
+            Granularity::PerTensor => vec![q.alpha[0]; q.d_out],
+            _ => unreachable!(),
+        };
+        Self { d_in: q.d_in, d_out: q.d_out, bytes, bytes_per_ch, alpha }
+    }
+
+    /// Borrow channel `j`'s packed bytes.
+    #[inline]
+    pub fn channel(&self, j: usize) -> &[u8] {
+        &self.bytes[j * self.bytes_per_ch..(j + 1) * self.bytes_per_ch]
+    }
+}
+
+impl PackedMatrix for PackedI2S {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.bytes.len()
+    }
+
+    fn decode_channel(&self, j: usize) -> Vec<i8> {
+        (0..self.d_in)
+            .map(|i| dec(self.channel(j)[i / 4] >> ((i % 4) * 2)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{absmean_quantize, Granularity};
+    use crate::tensor::Mat;
+    use crate::util::{prop, Pcg64};
+
+    #[test]
+    fn enc_dec_all_states() {
+        for t in -1i8..=1 {
+            assert_eq!(dec(enc(t)), t);
+        }
+    }
+
+    #[test]
+    fn prop_matrix_roundtrip() {
+        prop::check(
+            "i2s matrix roundtrip",
+            30,
+            |rng| {
+                let d_in = prop::gens::usize_in(rng, 1, 100);
+                let d_out = prop::gens::usize_in(rng, 1, 8);
+                let seed = rng.next_u64();
+                (d_in, d_out, seed)
+            },
+            |&(d_in, d_out, seed)| {
+                let mut rng = Pcg64::seeded(seed);
+                let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+                let q = absmean_quantize(&w, Granularity::PerChannel);
+                let p = PackedI2S::from_ternary(&q);
+                for j in 0..d_out {
+                    if p.decode_channel(j) != q.t_col(j) {
+                        return Err(format!("channel {j} mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn two_bits_per_weight() {
+        let mut rng = Pcg64::seeded(0);
+        let w = Mat::randn(&mut rng, 256, 4, 1.0);
+        let q = absmean_quantize(&w, Granularity::PerChannel);
+        let p = PackedI2S::from_ternary(&q);
+        assert_eq!(p.weight_bytes() * 8, 2 * 256 * 4);
+    }
+}

@@ -1,0 +1,139 @@
+//! Weight packing formats (paper Fig. 2, App. A): the storage half of the
+//! bit-width / speed trade-off Sherry resolves.
+//!
+//! * [`pack34`] — **Sherry's 1.25-bit format**: every 3:4-sparse block of
+//!   four weights becomes a 4-bit pattern index + 1 sign bit, stored in
+//!   two separate planes (nibble-aligned indices, bit-packed signs) so the
+//!   LUT engine loads power-of-two aligned words with zero bit-shuffling.
+//! * [`tl2`] — the 1.67-bit baseline (BitNet.cpp TL2): 3 dense ternary
+//!   weights → one 5-bit code in a *misaligned bitstream*; decoding
+//!   straddles byte boundaries, which is exactly the overhead the paper
+//!   blames for TL2 losing to 2-bit packing.
+//! * [`i2s`] — the 2.0-bit baseline (BitNet.cpp I2_S): one weight per
+//!   2 bits, four to a byte, decode-and-add.
+//!
+//! All packers consume per-output-channel ternary columns from
+//! [`crate::quant::Ternary`] and store channels contiguously (the GEMV
+//! iteration order).
+
+mod i2s;
+mod optimality;
+pub mod pack34;
+mod tl2;
+
+pub use i2s::PackedI2S;
+pub use optimality::{enumerate_nm_formats, NmFormat};
+pub use pack34::Packed34;
+pub use tl2::PackedTl2;
+
+use crate::quant::Ternary;
+
+/// Storage format tag (Table 4 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Format {
+    /// f32 dense (stands in for the BF16 row; see DESIGN.md substitutions).
+    Dense,
+    /// 2-bit I2_S.
+    I2S,
+    /// 1.67-bit TL2.
+    Tl2,
+    /// 1.25-bit Sherry 3:4.
+    Sherry,
+}
+
+impl Format {
+    pub const ALL: [Format; 4] = [Format::Dense, Format::I2S, Format::Tl2, Format::Sherry];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Format::Dense => "bf16",
+            Format::I2S => "i2_s",
+            Format::Tl2 => "tl2",
+            Format::Sherry => "sherry",
+        }
+    }
+
+    /// Nominal stored bits per weight (weight planes only, excluding the
+    /// per-channel scales, matching the paper's accounting).
+    pub fn bits_per_weight(&self) -> f32 {
+        match self {
+            Format::Dense => 16.0,
+            Format::I2S => 2.0,
+            Format::Tl2 => 5.0 / 3.0,
+            Format::Sherry => 1.25,
+        }
+    }
+}
+
+/// Common trait: packed weight matrix for one linear layer,
+/// `d_out` channels × `d_in` inputs, per-channel scales.
+pub trait PackedMatrix {
+    /// Number of input features.
+    fn d_in(&self) -> usize;
+    /// Number of output channels.
+    fn d_out(&self) -> usize;
+    /// Total bytes of the weight planes (size accounting for Table 4).
+    fn weight_bytes(&self) -> usize;
+    /// Decode channel `j` back to a ternary column (round-trip testing).
+    fn decode_channel(&self, j: usize) -> Vec<i8>;
+}
+
+/// Bytes for the per-channel scale vector (f32), shared across formats.
+pub fn scale_bytes(d_out: usize) -> usize {
+    d_out * 4
+}
+
+/// Pack a quantized matrix into `format`. Panics if `q` violates the
+/// format's structural requirements (Sherry needs 3:4 sparsity).
+pub fn pack(q: &Ternary, format: Format) -> Box<dyn PackedMatrix + Send + Sync> {
+    match format {
+        Format::Sherry => Box::new(Packed34::from_ternary(q)),
+        Format::Tl2 => Box::new(PackedTl2::from_ternary(q)),
+        Format::I2S => Box::new(PackedI2S::from_ternary(q)),
+        Format::Dense => panic!("dense is not a packed format"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, Granularity, Method};
+    use crate::tensor::Mat;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn bits_ordering_matches_paper_fig1() {
+        assert!(Format::Sherry.bits_per_weight() < Format::Tl2.bits_per_weight());
+        assert!(Format::Tl2.bits_per_weight() < Format::I2S.bits_per_weight());
+        assert!(Format::I2S.bits_per_weight() < Format::Dense.bits_per_weight());
+    }
+
+    #[test]
+    fn packed_sizes_match_nominal_bits() {
+        let mut rng = Pcg64::seeded(0);
+        let d_in = 3072usize; // divisible by 4 and 3
+        let d_out = 64usize;
+        let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+        let qs = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+        let qd = quantize(&w, Method::AbsMean, Granularity::PerChannel);
+
+        let p34 = pack(&qs, Format::Sherry);
+        let ptl2 = pack(&qd, Format::Tl2);
+        let pi2s = pack(&qd, Format::I2S);
+
+        let n = (d_in * d_out) as f32;
+        let b34 = p34.weight_bytes() as f32 * 8.0 / n;
+        let btl2 = ptl2.weight_bytes() as f32 * 8.0 / n;
+        let bi2s = pi2s.weight_bytes() as f32 * 8.0 / n;
+        assert!((b34 - 1.25).abs() < 0.01, "sherry {b34} bits/w");
+        assert!((btl2 - 1.6667).abs() < 0.02, "tl2 {btl2} bits/w");
+        assert!((bi2s - 2.0).abs() < 0.01, "i2s {bi2s} bits/w");
+    }
+
+    #[test]
+    fn size_savings_vs_tl2_is_25_percent() {
+        // The paper's headline: 1.25 / 1.67 = 0.75 → 25% bit savings.
+        let saving = 1.0 - Format::Sherry.bits_per_weight() / Format::Tl2.bits_per_weight();
+        assert!((saving - 0.25).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,335 @@
+//! Sherry's 1.25-bit packing (paper §3.1 point (3), App. A).
+//!
+//! A 3:4-sparse ternary block has 4 zero positions × 2³ sign patterns =
+//! 32 states. Mirror symmetry (negating all signs) halves that to 16
+//! canonical patterns — exactly saturating a 4-bit index and the 16-entry
+//! LUT a single `vpshufb` can search — plus 1 sign bit: 5 bits per 4
+//! weights = **1.25 bits/weight**.
+//!
+//! Canonical form: the *first non-zero lane* of a canonical pattern is +1;
+//! the sign bit records whether the stored block is the mirrored
+//! (all-negated) variant.
+//!
+//! Index encoding: `idx = z·4 + (s_b << 1 | s_c)` where `z` is the zero
+//! lane and `s_b`,`s_c` are the signs (1 = −1) of the second and third
+//! non-zero lanes after canonicalization.
+//!
+//! Layout: two planes per channel, both power-of-two aligned —
+//! * index plane: one nibble per block, two blocks per byte;
+//! * sign plane: one bit per block, eight blocks per byte.
+//!
+//! No code crosses a byte boundary, which is the property the 1.67-bit
+//! format lacks.
+
+use super::PackedMatrix;
+use crate::quant::{Granularity, Ternary};
+
+/// All 16 canonical block patterns, precomputed: `PATTERNS[idx][lane]`.
+pub const PATTERNS: [[i8; 4]; 16] = build_patterns();
+
+const fn build_patterns() -> [[i8; 4]; 16] {
+    let mut out = [[0i8; 4]; 16];
+    let mut z = 0;
+    while z < 4 {
+        let mut sb = 0;
+        while sb < 2 {
+            let mut sc = 0;
+            while sc < 2 {
+                let idx = z * 4 + (sb << 1 | sc);
+                let mut pat = [0i8; 4];
+                // active lanes in increasing order; first gets +1
+                let mut lane = 0;
+                let mut active = 0;
+                while lane < 4 {
+                    if lane != z {
+                        pat[lane] = match active {
+                            0 => 1,
+                            1 => {
+                                if sb == 1 {
+                                    -1
+                                } else {
+                                    1
+                                }
+                            }
+                            _ => {
+                                if sc == 1 {
+                                    -1
+                                } else {
+                                    1
+                                }
+                            }
+                        };
+                        active += 1;
+                    }
+                    lane += 1;
+                }
+                out[idx] = pat;
+                sc += 1;
+            }
+            sb += 1;
+        }
+        z += 1;
+    }
+    out
+}
+
+/// Encode one 3:4 block → (index, mirror). Panics if not 3:4.
+pub fn encode_block(block: &[i8]) -> (u8, bool) {
+    assert_eq!(block.len(), 4);
+    let z = block
+        .iter()
+        .position(|&x| x == 0)
+        .expect("pack34 requires exactly one zero per block");
+    assert_eq!(
+        block.iter().filter(|&&x| x == 0).count(),
+        1,
+        "pack34 requires exactly one zero per block"
+    );
+    let active: Vec<i8> = block.iter().copied().filter(|&x| x != 0).collect();
+    let mirror = active[0] == -1;
+    let m = if mirror { -1 } else { 1 };
+    let sb = (active[1] * m == -1) as u8;
+    let sc = (active[2] * m == -1) as u8;
+    ((z as u8) * 4 + (sb << 1 | sc), mirror)
+}
+
+/// Decode (index, mirror) → block of 4 ternary values.
+pub fn decode_block(idx: u8, mirror: bool) -> [i8; 4] {
+    let mut p = PATTERNS[idx as usize];
+    if mirror {
+        for v in &mut p {
+            *v = -*v;
+        }
+    }
+    p
+}
+
+/// Packed 1.25-bit weight matrix (channel-major planes, per-channel α).
+#[derive(Clone, Debug)]
+pub struct Packed34 {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Nibble-packed pattern indices: `idx_bytes_per_ch` bytes per channel.
+    pub idx: Vec<u8>,
+    /// Bit-packed mirror signs: `sign_bytes_per_ch` bytes per channel.
+    pub signs: Vec<u8>,
+    /// Per-channel scales.
+    pub alpha: Vec<f32>,
+    pub idx_bytes_per_ch: usize,
+    pub sign_bytes_per_ch: usize,
+}
+
+impl Packed34 {
+    /// Blocks per channel.
+    #[inline]
+    pub fn n_blocks(&self) -> usize {
+        self.d_in / 4
+    }
+
+    /// Pack a 3:4-sparse [`Ternary`] (per-channel granularity).
+    pub fn from_ternary(q: &Ternary) -> Self {
+        assert_eq!(q.d_in % 4, 0, "d_in must be a multiple of 4");
+        assert!(
+            matches!(q.granularity, Granularity::PerChannel | Granularity::PerTensor),
+            "engine packing uses per-channel scales"
+        );
+        assert!(q.is_34_sparse(), "pack34 requires 3:4 sparsity");
+        let nb = q.d_in / 4;
+        let idx_bpc = nb.div_ceil(2);
+        let sign_bpc = nb.div_ceil(8);
+        let mut idx = vec![0u8; idx_bpc * q.d_out];
+        let mut signs = vec![0u8; sign_bpc * q.d_out];
+        let mut col = vec![0i8; q.d_in];
+        for j in 0..q.d_out {
+            for i in 0..q.d_in {
+                col[i] = q.t_at(i, j);
+            }
+            for b in 0..nb {
+                let (code, mirror) = encode_block(&col[b * 4..b * 4 + 4]);
+                let ib = j * idx_bpc + b / 2;
+                if b % 2 == 0 {
+                    idx[ib] |= code;
+                } else {
+                    idx[ib] |= code << 4;
+                }
+                if mirror {
+                    signs[j * sign_bpc + b / 8] |= 1 << (b % 8);
+                }
+            }
+        }
+        let alpha = match q.granularity {
+            Granularity::PerChannel => q.alpha.clone(),
+            Granularity::PerTensor => vec![q.alpha[0]; q.d_out],
+            _ => unreachable!(),
+        };
+        Self { d_in: q.d_in, d_out: q.d_out, idx, signs, alpha, idx_bytes_per_ch: idx_bpc, sign_bytes_per_ch: sign_bpc }
+    }
+
+    /// Index nibble of block `b` in channel `j`.
+    #[inline]
+    pub fn idx_at(&self, j: usize, b: usize) -> u8 {
+        let byte = self.idx[j * self.idx_bytes_per_ch + b / 2];
+        if b % 2 == 0 {
+            byte & 0x0F
+        } else {
+            byte >> 4
+        }
+    }
+
+    /// Mirror bit of block `b` in channel `j`.
+    #[inline]
+    pub fn sign_at(&self, j: usize, b: usize) -> bool {
+        (self.signs[j * self.sign_bytes_per_ch + b / 8] >> (b % 8)) & 1 == 1
+    }
+
+    /// Borrow channel `j`'s index plane.
+    #[inline]
+    pub fn idx_plane(&self, j: usize) -> &[u8] {
+        &self.idx[j * self.idx_bytes_per_ch..(j + 1) * self.idx_bytes_per_ch]
+    }
+
+    /// Borrow channel `j`'s sign plane.
+    #[inline]
+    pub fn sign_plane(&self, j: usize) -> &[u8] {
+        &self.signs[j * self.sign_bytes_per_ch..(j + 1) * self.sign_bytes_per_ch]
+    }
+}
+
+impl PackedMatrix for Packed34 {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.idx.len() + self.signs.len()
+    }
+
+    fn decode_channel(&self, j: usize) -> Vec<i8> {
+        let mut out = Vec::with_capacity(self.d_in);
+        for b in 0..self.n_blocks() {
+            out.extend_from_slice(&decode_block(self.idx_at(j, b), self.sign_at(j, b)));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{sherry34_quantize, Granularity};
+    use crate::tensor::Mat;
+    use crate::util::{prop, Pcg64};
+
+    #[test]
+    fn patterns_are_all_distinct_and_canonical() {
+        for (i, p) in PATTERNS.iter().enumerate() {
+            // exactly one zero
+            assert_eq!(p.iter().filter(|&&x| x == 0).count(), 1, "pattern {i}");
+            // first non-zero is +1 (canonical)
+            let first = p.iter().find(|&&x| x != 0).unwrap();
+            assert_eq!(*first, 1, "pattern {i}");
+            for (k, q) in PATTERNS.iter().enumerate() {
+                if i != k {
+                    assert_ne!(p, q, "patterns {i} and {k} collide");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn the_32_states_saturate_5_bits() {
+        // 16 patterns × 2 mirrors = 32 distinct blocks = C(4,3)·2³ (paper
+        // §3.1 point (3)).
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..16u8 {
+            for mirror in [false, true] {
+                seen.insert(decode_block(idx, mirror));
+            }
+        }
+        assert_eq!(seen.len(), 32);
+    }
+
+    #[test]
+    fn prop_block_roundtrip() {
+        prop::check(
+            "pack34 block roundtrip",
+            500,
+            |rng| prop::gens::sparse34_vec(rng, 4),
+            |blk| {
+                let (idx, mirror) = encode_block(blk);
+                if idx >= 16 {
+                    return Err(format!("index {idx} out of range"));
+                }
+                let back = decode_block(idx, mirror);
+                if back[..] == blk[..] {
+                    Ok(())
+                } else {
+                    Err(format!("{blk:?} -> ({idx},{mirror}) -> {back:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_matrix_roundtrip() {
+        prop::check(
+            "pack34 matrix roundtrip",
+            30,
+            |rng| {
+                let blocks = prop::gens::usize_in(rng, 1, 32);
+                let d_out = prop::gens::usize_in(rng, 1, 16);
+                let seed = rng.next_u64();
+                (blocks * 4, d_out, seed)
+            },
+            |&(d_in, d_out, seed)| {
+                let mut rng = Pcg64::seeded(seed);
+                let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+                let q = sherry34_quantize(&w, Granularity::PerChannel);
+                let p = Packed34::from_ternary(&q);
+                for j in 0..d_out {
+                    if p.decode_channel(j) != q.t_col(j) {
+                        return Err(format!("channel {j} mismatch"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn exact_bit_budget() {
+        let mut rng = Pcg64::seeded(0);
+        let w = Mat::randn(&mut rng, 256, 8, 1.0);
+        let q = sherry34_quantize(&w, Granularity::PerChannel);
+        let p = Packed34::from_ternary(&q);
+        // 64 blocks/channel: 32 idx bytes + 8 sign bytes = 40 bytes = 320
+        // bits for 256 weights → 1.25 bits/weight exactly.
+        assert_eq!(p.weight_bytes(), 8 * (32 + 8));
+        let bits_per_w = p.weight_bytes() as f32 * 8.0 / (256.0 * 8.0);
+        assert_eq!(bits_per_w, 1.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "3:4")]
+    fn rejects_dense_ternary() {
+        let mut rng = Pcg64::seeded(1);
+        let w = Mat::randn(&mut rng, 64, 4, 1.0);
+        let q = crate::quant::absmean_quantize(&w, Granularity::PerChannel);
+        let _ = Packed34::from_ternary(&q);
+    }
+
+    #[test]
+    fn mirror_symmetry_negates() {
+        for idx in 0..16u8 {
+            let a = decode_block(idx, false);
+            let b = decode_block(idx, true);
+            for lane in 0..4 {
+                assert_eq!(a[lane], -b[lane]);
+            }
+        }
+    }
+}

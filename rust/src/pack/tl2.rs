@@ -1,0 +1,199 @@
+//! TL2: the 1.67-bit baseline packing (BitNet.cpp; paper Fig. 2 middle).
+//!
+//! Three dense ternary weights → one 5-bit code (3³ = 27 ≤ 32 states),
+//! codes written back-to-back in a **misaligned bitstream**: codes
+//! regularly straddle byte boundaries, so every decode needs a 16-bit load
+//! + shift + mask. This is the "SIMD-unfriendly 3-way pattern" whose
+//! shuffling overhead the paper measures against.
+//!
+//! Code: `c = (t0+1)·9 + (t1+1)·3 + (t2+1)` ∈ [0, 27). Channels whose
+//! d_in is not a multiple of 3 are zero-padded.
+
+use super::PackedMatrix;
+use crate::quant::{Granularity, Ternary};
+
+/// Packed 1.67-bit weight matrix.
+#[derive(Clone, Debug)]
+pub struct PackedTl2 {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// 5-bit codes, bit-packed contiguously per channel.
+    pub bits: Vec<u8>,
+    pub bytes_per_ch: usize,
+    pub alpha: Vec<f32>,
+}
+
+/// Encode one 3-weight group.
+#[inline]
+pub fn encode_group(t: &[i8]) -> u8 {
+    debug_assert!(t.len() == 3);
+    ((t[0] + 1) as u8) * 9 + ((t[1] + 1) as u8) * 3 + (t[2] + 1) as u8
+}
+
+/// Decode a 5-bit code back to 3 ternary weights.
+#[inline]
+pub fn decode_group(c: u8) -> [i8; 3] {
+    [(c / 9) as i8 - 1, ((c / 3) % 3) as i8 - 1, (c % 3) as i8 - 1]
+}
+
+impl PackedTl2 {
+    /// Groups per channel (d_in padded up to a multiple of 3).
+    #[inline]
+    pub fn n_groups(&self) -> usize {
+        self.d_in.div_ceil(3)
+    }
+
+    pub fn from_ternary(q: &Ternary) -> Self {
+        assert!(
+            matches!(q.granularity, Granularity::PerChannel | Granularity::PerTensor),
+            "engine packing uses per-channel scales"
+        );
+        let ng = q.d_in.div_ceil(3);
+        let bytes_per_ch = (ng * 5).div_ceil(8);
+        let mut bits = vec![0u8; bytes_per_ch * q.d_out];
+        for j in 0..q.d_out {
+            let base = j * bytes_per_ch;
+            for g in 0..ng {
+                let mut grp = [0i8; 3];
+                for k in 0..3 {
+                    let i = g * 3 + k;
+                    if i < q.d_in {
+                        grp[k] = q.t_at(i, j);
+                    }
+                }
+                let code = encode_group(&grp) as u16;
+                let bit_off = g * 5;
+                let byte = base + bit_off / 8;
+                let shift = bit_off % 8;
+                // May straddle a byte boundary — the TL2 misalignment.
+                bits[byte] |= (code << shift) as u8;
+                if shift > 3 {
+                    bits[byte + 1] |= (code >> (8 - shift)) as u8;
+                }
+            }
+        }
+        let alpha = match q.granularity {
+            Granularity::PerChannel => q.alpha.clone(),
+            Granularity::PerTensor => vec![q.alpha[0]; q.d_out],
+            _ => unreachable!(),
+        };
+        Self { d_in: q.d_in, d_out: q.d_out, bits, bytes_per_ch, alpha }
+    }
+
+    /// Extract the 5-bit code of group `g` in channel `j` (16-bit load +
+    /// shift + mask — the decode cost the paper attributes to TL2).
+    #[inline]
+    pub fn code_at(&self, j: usize, g: usize) -> u8 {
+        let base = j * self.bytes_per_ch;
+        let bit_off = g * 5;
+        let byte = base + bit_off / 8;
+        let lo = self.bits[byte] as u16;
+        let hi = if byte + 1 < (j + 1) * self.bytes_per_ch {
+            self.bits[byte + 1] as u16
+        } else {
+            0
+        };
+        (((hi << 8) | lo) >> (bit_off % 8)) as u8 & 0x1F
+    }
+
+    /// Borrow channel `j`'s bitstream.
+    #[inline]
+    pub fn stream(&self, j: usize) -> &[u8] {
+        &self.bits[j * self.bytes_per_ch..(j + 1) * self.bytes_per_ch]
+    }
+}
+
+impl PackedMatrix for PackedTl2 {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn weight_bytes(&self) -> usize {
+        self.bits.len()
+    }
+
+    fn decode_channel(&self, j: usize) -> Vec<i8> {
+        let mut out = Vec::with_capacity(self.d_in);
+        for g in 0..self.n_groups() {
+            let grp = decode_group(self.code_at(j, g));
+            for (k, &v) in grp.iter().enumerate() {
+                if g * 3 + k < self.d_in {
+                    out.push(v);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{absmean_quantize, Granularity};
+    use crate::tensor::Mat;
+    use crate::util::{prop, Pcg64};
+
+    #[test]
+    fn group_roundtrip_all_27() {
+        for a in -1i8..=1 {
+            for b in -1i8..=1 {
+                for c in -1i8..=1 {
+                    let code = encode_group(&[a, b, c]);
+                    assert!(code < 27);
+                    assert_eq!(decode_group(code), [a, b, c]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_matrix_roundtrip() {
+        prop::check(
+            "tl2 matrix roundtrip",
+            30,
+            |rng| {
+                let d_in = prop::gens::usize_in(rng, 1, 100);
+                let d_out = prop::gens::usize_in(rng, 1, 8);
+                let seed = rng.next_u64();
+                (d_in, d_out, seed)
+            },
+            |&(d_in, d_out, seed)| {
+                let mut rng = Pcg64::seeded(seed);
+                let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+                let q = absmean_quantize(&w, Granularity::PerChannel);
+                let p = PackedTl2::from_ternary(&q);
+                for j in 0..d_out {
+                    if p.decode_channel(j) != q.t_col(j) {
+                        return Err(format!("channel {j} mismatch (d_in={d_in})"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn bit_density_is_5_over_3() {
+        let mut rng = Pcg64::seeded(0);
+        let w = Mat::randn(&mut rng, 3 * 160, 4, 1.0); // 160 groups/channel
+        let q = absmean_quantize(&w, Granularity::PerChannel);
+        let p = PackedTl2::from_ternary(&q);
+        let bits_per_w = p.weight_bytes() as f32 * 8.0 / (3.0 * 160.0 * 4.0);
+        assert!((bits_per_w - 5.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn codes_straddle_byte_boundaries() {
+        // Group 1 occupies bits 5..10 — proof the stream is misaligned.
+        let mut rng = Pcg64::seeded(1);
+        let w = Mat::randn(&mut rng, 9, 1, 1.0);
+        let q = absmean_quantize(&w, Granularity::PerChannel);
+        let p = PackedTl2::from_ternary(&q);
+        // read back group 1 and check against direct decode
+        assert_eq!(decode_group(p.code_at(0, 1))[..], q.t_col(0)[3..6]);
+    }
+}

@@ -1,0 +1,140 @@
+//! Arenas λ_t annealing schedules (paper §3.2, Eq. 23-25, Fig. 7).
+//!
+//! λ_t gates the residual synapse Y = X·Tα + λ_t·X·W. All schedules decay
+//! 1 → 0 over training progress p ∈ [0, 1]; warmup variants ramp 0 → 1
+//! over the first `warmup` fraction first (Fig. 8 shows warmup helps every
+//! decay shape).
+
+/// Annealing schedule for the residual-synapse gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Schedule {
+    /// λ = 0 always — Arenas disabled (the "naive" ablation arm).
+    Off,
+    /// λ = 1 − p (Eq. 23).
+    Linear,
+    /// λ = ½(1 + cos πp) (Eq. 24).
+    Cosine,
+    /// λ = exp(−5p) (Eq. 25).
+    Exponential,
+    LinearWarmup,
+    /// The paper's default (§4.1).
+    CosineWarmup,
+    ExponentialWarmup,
+}
+
+/// Warmup fraction used by the *Warmup variants.
+pub const WARMUP_FRAC: f32 = 0.1;
+
+impl Schedule {
+    pub const ALL: [Schedule; 7] = [
+        Schedule::Off,
+        Schedule::Linear,
+        Schedule::Cosine,
+        Schedule::Exponential,
+        Schedule::LinearWarmup,
+        Schedule::CosineWarmup,
+        Schedule::ExponentialWarmup,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Off => "off",
+            Schedule::Linear => "linear",
+            Schedule::Cosine => "cosine",
+            Schedule::Exponential => "exponential",
+            Schedule::LinearWarmup => "linear_warmup",
+            Schedule::CosineWarmup => "cosine_warmup",
+            Schedule::ExponentialWarmup => "exponential_warmup",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Schedule> {
+        Schedule::ALL.iter().copied().find(|x| x.name() == s)
+    }
+}
+
+fn base(s: Schedule, p: f32) -> f32 {
+    match s {
+        Schedule::Off => 0.0,
+        Schedule::Linear | Schedule::LinearWarmup => 1.0 - p,
+        Schedule::Cosine | Schedule::CosineWarmup => 0.5 * (1.0 + (std::f32::consts::PI * p).cos()),
+        Schedule::Exponential | Schedule::ExponentialWarmup => (-5.0 * p).exp(),
+    }
+}
+
+/// λ_t at training progress `p` ∈ [0, 1] (clamped).
+pub fn lambda_at(schedule: Schedule, p: f32) -> f32 {
+    let p = p.clamp(0.0, 1.0);
+    match schedule {
+        Schedule::Off => 0.0,
+        Schedule::Linear | Schedule::Cosine | Schedule::Exponential => base(schedule, p),
+        Schedule::LinearWarmup | Schedule::CosineWarmup | Schedule::ExponentialWarmup => {
+            if p < WARMUP_FRAC {
+                p / WARMUP_FRAC
+            } else {
+                let rest = (p - WARMUP_FRAC) / (1.0 - WARMUP_FRAC);
+                base(schedule, rest.clamp(0.0, 1.0))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn non_warmup_start_at_one_end_near_zero() {
+        for s in [Schedule::Linear, Schedule::Cosine, Schedule::Exponential] {
+            assert!((lambda_at(s, 0.0) - 1.0).abs() < 1e-6, "{s:?}");
+            assert!(lambda_at(s, 1.0) < 0.01, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn warmup_ramps_from_zero() {
+        for s in [Schedule::LinearWarmup, Schedule::CosineWarmup, Schedule::ExponentialWarmup] {
+            assert_eq!(lambda_at(s, 0.0), 0.0, "{s:?}");
+            assert!((lambda_at(s, WARMUP_FRAC) - 1.0).abs() < 1e-5, "{s:?}");
+            assert!(lambda_at(s, 1.0) < 0.01, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn monotone_decay_after_warmup() {
+        for s in Schedule::ALL {
+            let mut prev = f32::INFINITY;
+            for k in 0..=40 {
+                let p = WARMUP_FRAC + (1.0 - WARMUP_FRAC) * k as f32 / 40.0;
+                let l = lambda_at(s, p);
+                assert!(l <= prev + 1e-6, "{s:?} not monotone at p={p}");
+                prev = l;
+            }
+        }
+    }
+
+    #[test]
+    fn off_is_identically_zero() {
+        for k in 0..=10 {
+            assert_eq!(lambda_at(Schedule::Off, k as f32 / 10.0), 0.0);
+        }
+    }
+
+    #[test]
+    fn cosine_midpoint_is_half() {
+        assert!((lambda_at(Schedule::Cosine, 0.5) - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clamps_out_of_range_progress() {
+        assert_eq!(lambda_at(Schedule::Linear, -1.0), 1.0);
+        assert_eq!(lambda_at(Schedule::Linear, 2.0), 0.0);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in Schedule::ALL {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! Baseline ternary quantizers (paper §2.1, App. E): the comparison rows
+//! of Tables 1-2. All are implemented as PTQ projections of a weight
+//! matrix; their QAT counterparts live in the AOT-lowered JAX graphs.
+//!
+//! * AbsMean / AbsMedian — BitNet/Spectra-style thresholding (Eq. 15);
+//! * TWN — Gaussian-motivated Δ* ≈ 0.7·E|w| (Eq. 17);
+//! * Binary — 1-bit sign quantization (Fig. 6 ablation arm);
+//! * LSQ / SEQ / DLT — the learnable methods, projected with one
+//!   closed-form fitting pass (their learnable parameters are trained in
+//!   the L2 graphs; here we use their calibration initializations);
+//! * Tequila — trap-mitigated thresholding (sharpened 0.4·E|w| threshold).
+
+use super::{Granularity, Ternary};
+use crate::tensor::Mat;
+
+/// Generic thresholded ternarization (paper Eq. 1) + masked-absmean scale,
+/// with the threshold recomputed per granularity cell.
+fn threshold_quantize(
+    w: &Mat,
+    granularity: Granularity,
+    delta_of: impl Fn(&[f32]) -> f32,
+) -> Ternary {
+    let (d_in, d_out) = (w.rows, w.cols);
+    let mut t = vec![0i8; d_in * d_out];
+    let mut alpha = Vec::new();
+
+    let cell = |rows: std::ops::Range<usize>, j: usize, t: &mut Vec<i8>| -> f32 {
+        let vals: Vec<f32> = rows.clone().map(|i| w.at(i, j).abs()).collect();
+        let delta = delta_of(&vals);
+        let mut sum = 0.0f32;
+        let mut n = 0u32;
+        for i in rows {
+            let v = w.at(i, j);
+            let ti = if v > delta {
+                1
+            } else if v < -delta {
+                -1
+            } else {
+                0
+            };
+            t[i * d_out + j] = ti;
+            if ti != 0 {
+                sum += v.abs();
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f32
+        }
+    };
+
+    match granularity {
+        Granularity::PerChannel => {
+            for j in 0..d_out {
+                let a = cell(0..d_in, j, &mut t);
+                alpha.push(a);
+            }
+        }
+        Granularity::PerTensor => {
+            // One threshold from the whole tensor, one scale.
+            let all: Vec<f32> = w.data.iter().map(|x| x.abs()).collect();
+            let delta = delta_of(&all);
+            let mut sum = 0.0f32;
+            let mut n = 0u32;
+            for i in 0..d_in {
+                for j in 0..d_out {
+                    let v = w.at(i, j);
+                    let ti = if v > delta {
+                        1
+                    } else if v < -delta {
+                        -1
+                    } else {
+                        0
+                    };
+                    t[i * d_out + j] = ti;
+                    if ti != 0 {
+                        sum += v.abs();
+                        n += 1;
+                    }
+                }
+            }
+            alpha.push(if n == 0 { 0.0 } else { sum / n as f32 });
+        }
+        Granularity::PerGroup { group_size } => {
+            assert_eq!(d_in % group_size, 0);
+            for g in 0..d_in / group_size {
+                for j in 0..d_out {
+                    let a = cell(g * group_size..(g + 1) * group_size, j, &mut t);
+                    alpha.push(a);
+                }
+            }
+        }
+    }
+    Ternary { d_in, d_out, t, alpha, granularity }
+}
+
+fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+}
+
+fn median(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = s.len();
+    if n % 2 == 1 {
+        s[n / 2]
+    } else {
+        0.5 * (s[n / 2 - 1] + s[n / 2])
+    }
+}
+
+/// BitNet-style AbsMean (Eq. 15): Δ = E|w| / 2.
+pub fn absmean_quantize(w: &Mat, g: Granularity) -> Ternary {
+    threshold_quantize(w, g, |abs| mean(abs) / 2.0)
+}
+
+/// AbsMedian (Spectra-style): Δ = median(|w|) / 2.
+pub fn absmedian_quantize(w: &Mat, g: Granularity) -> Ternary {
+    threshold_quantize(w, g, |abs| median(abs) / 2.0)
+}
+
+/// TWN (Eq. 17): Δ* ≈ 0.7·E|w|.
+pub fn twn_quantize(w: &Mat, g: Granularity) -> Ternary {
+    threshold_quantize(w, g, |abs| 0.7 * mean(abs))
+}
+
+/// Tequila-style: sharpened threshold 0.4·E|w| keeps more weights active,
+/// mitigating the trapped-zero region.
+pub fn tequila_quantize(w: &Mat, g: Granularity) -> Ternary {
+    threshold_quantize(w, g, |abs| 0.4 * mean(abs))
+}
+
+/// 1-bit sign quantization with absmean scale (no zeros).
+pub fn binary_quantize(w: &Mat, g: Granularity) -> Ternary {
+    // threshold −ε: everything non-negative → +1, negatives → −1.
+    threshold_quantize(w, g, |_| -1.0e-30)
+}
+
+/// LSQ-style calibration: grid-search the step size s per scale cell to
+/// minimize ‖w − s·clip(round(w/s))‖² (the QAT version learns s; this is
+/// its standard projection-based init).
+pub fn lsq_quantize(w: &Mat, g: Granularity) -> Ternary {
+    // Reuse threshold machinery: for ternary, round(clip(w/s)) == |w| > s/2.
+    // Grid-search multiplier m in Δ = m·E|w|.
+    let mut best: Option<(f32, Ternary)> = None;
+    for m in [0.3f32, 0.5, 0.7, 0.9, 1.1] {
+        let q = threshold_quantize(w, g, move |abs| m * mean(abs));
+        let err = super::reconstruction_error(w, &q);
+        if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+            best = Some((err, q));
+        }
+    }
+    best.unwrap().1
+}
+
+/// SEQ-style (Eq. 20): absmean ternarization; the zero-state offset b is a
+/// trained parameter in the L2 graph — the PTQ projection uses b = 0, so
+/// this coincides with absmean here (documented difference).
+pub fn seq_quantize(w: &Mat, g: Granularity) -> Ternary {
+    absmean_quantize(w, g)
+}
+
+/// DLT-style (Eq. 19): absmean ternary + learnable dequant bias; the bias
+/// is trained at L2, PTQ projection uses bias = 0.
+pub fn dlt_quantize(w: &Mat, g: Granularity) -> Ternary {
+    absmean_quantize(w, g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::reconstruction_error;
+    use crate::util::Pcg64;
+
+    fn randw(seed: u64, d_in: usize, d_out: usize) -> Mat {
+        let mut rng = Pcg64::seeded(seed);
+        Mat::randn(&mut rng, d_in, d_out, 1.0)
+    }
+
+    #[test]
+    fn absmean_threshold_semantics() {
+        let w = randw(0, 128, 4);
+        let q = absmean_quantize(&w, Granularity::PerChannel);
+        for j in 0..4 {
+            let am: f32 = (0..128).map(|i| w.at(i, j).abs()).sum::<f32>() / 128.0;
+            for i in 0..128 {
+                let v = w.at(i, j);
+                let expect = if v > am / 2.0 {
+                    1
+                } else if v < -am / 2.0 {
+                    -1
+                } else {
+                    0
+                };
+                assert_eq!(q.t_at(i, j), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn twn_sparser_than_absmean() {
+        // 0.7·E|w| > 0.5·E|w| ⇒ TWN prunes strictly more (Gaussian w).
+        let w = randw(1, 512, 8);
+        let s_twn = twn_quantize(&w, Granularity::PerChannel).sparsity();
+        let s_am = absmean_quantize(&w, Granularity::PerChannel).sparsity();
+        assert!(s_twn > s_am, "twn {s_twn} vs absmean {s_am}");
+    }
+
+    #[test]
+    fn tequila_denser_than_absmean() {
+        let w = randw(2, 512, 8);
+        let s_tq = tequila_quantize(&w, Granularity::PerChannel).sparsity();
+        let s_am = absmean_quantize(&w, Granularity::PerChannel).sparsity();
+        assert!(s_tq < s_am, "tequila {s_tq} vs absmean {s_am}");
+    }
+
+    #[test]
+    fn binary_has_no_zeros_for_nonzero_w() {
+        let w = randw(3, 64, 8);
+        let q = binary_quantize(&w, Granularity::PerChannel);
+        assert_eq!(q.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn lsq_beats_or_ties_absmean_reconstruction() {
+        // LSQ grid search includes the absmean multiplier 0.5.
+        let w = randw(4, 256, 8);
+        let e_lsq = reconstruction_error(&w, &lsq_quantize(&w, Granularity::PerChannel));
+        let e_am = reconstruction_error(&w, &absmean_quantize(&w, Granularity::PerChannel));
+        assert!(e_lsq <= e_am + 1e-4);
+    }
+
+    #[test]
+    fn golden_absmean_absmedian_twn_binary() {
+        let dir = crate::test_artifacts_dir().join("golden");
+        if !dir.join("w.bin").exists() {
+            eprintln!("skipping: goldens not built");
+            return;
+        }
+        let (r, c, wd) = crate::util::binio::read_mat(&dir.join("w.bin")).unwrap();
+        let w = Mat::from_vec(r, c, wd);
+        for (name, f) in [
+            ("absmean", absmean_quantize as fn(&Mat, Granularity) -> Ternary),
+            ("absmedian", absmedian_quantize),
+            ("twn", twn_quantize),
+            ("binary", binary_quantize),
+        ] {
+            let q = f(&w, Granularity::PerChannel);
+            let (_, _, t_g) =
+                crate::util::binio::read_mat(&dir.join(format!("{name}.t.bin"))).unwrap();
+            let (_, _, a_g) =
+                crate::util::binio::read_mat(&dir.join(format!("{name}.alpha.bin"))).unwrap();
+            for (i, (&ours, &gold)) in q.t.iter().zip(t_g.iter()).enumerate() {
+                assert_eq!(ours as f32, gold, "{name} T mismatch at {i}");
+            }
+            for (j, (&ours, &gold)) in q.alpha.iter().zip(a_g.iter()).enumerate() {
+                assert!((ours - gold).abs() < 1e-5, "{name} alpha mismatch at {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_tensor_single_alpha() {
+        let w = randw(5, 64, 8);
+        for f in [absmean_quantize, twn_quantize, binary_quantize] {
+            assert_eq!(f(&w, Granularity::PerTensor).alpha.len(), 1);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Quantization-error analytics: the numbers a practitioner checks before
+//! deploying a quantized model (per-layer reconstruction error, SNR,
+//! angular distortion, sparsity), and the output-error propagation bound
+//! used to sanity-check the Eq. 3 objective against actual activations.
+
+use super::{quantize, Granularity, Method, Ternary};
+use crate::tensor::{matmul, Mat};
+
+/// Error report for one weight matrix under one quantizer.
+#[derive(Clone, Debug)]
+pub struct ErrorReport {
+    pub method: Method,
+    pub granularity: Granularity,
+    /// ‖W − Tα‖²_F (the paper's Eq. 3 objective value).
+    pub l2_error: f32,
+    /// Relative error ‖W − Tα‖_F / ‖W‖_F.
+    pub rel_error: f32,
+    /// Quantization SNR in dB: 20·log10(‖W‖/‖W−Tα‖).
+    pub snr_db: f32,
+    /// Mean per-column cosine similarity between W and Tα columns.
+    pub cos_sim: f32,
+    /// Fraction of zero entries in T.
+    pub sparsity: f32,
+}
+
+/// Analyze `w` under `method`/`granularity`.
+pub fn analyze(w: &Mat, method: Method, granularity: Granularity) -> ErrorReport {
+    let q = quantize(w, method, granularity);
+    analyze_quantized(w, &q, method)
+}
+
+/// Analyze a pre-quantized pair.
+pub fn analyze_quantized(w: &Mat, q: &Ternary, method: Method) -> ErrorReport {
+    let deq = q.dequant();
+    let err = w.sq_err(&deq);
+    let wn = w.frob();
+    let en = err.sqrt();
+    let mut cos_total = 0.0f64;
+    let mut cols = 0usize;
+    for j in 0..w.cols {
+        let (mut dot, mut na, mut nb) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..w.rows {
+            let a = w.at(i, j) as f64;
+            let b = deq.at(i, j) as f64;
+            dot += a * b;
+            na += a * a;
+            nb += b * b;
+        }
+        if na > 0.0 && nb > 0.0 {
+            cos_total += dot / (na.sqrt() * nb.sqrt());
+            cols += 1;
+        }
+    }
+    ErrorReport {
+        method,
+        granularity: q.granularity,
+        l2_error: err,
+        rel_error: if wn > 0.0 { en / wn } else { 0.0 },
+        snr_db: if en > 0.0 { 20.0 * (wn / en).log10() } else { f32::INFINITY },
+        cos_sim: if cols > 0 { (cos_total / cols as f64) as f32 } else { 0.0 },
+        sparsity: q.sparsity(),
+    }
+}
+
+/// Measured output error ‖X(W − Tα)‖_F / ‖XW‖_F on a probe batch —
+/// the quantity the weight-space objective (Eq. 3) is a proxy for.
+pub fn output_error(w: &Mat, q: &Ternary, x: &Mat) -> f32 {
+    let y_full = matmul(x, w);
+    let y_quant = matmul(x, &q.dequant());
+    let num = y_full.sq_err(&y_quant).sqrt();
+    let den = y_full.frob();
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Render reports as the `sherry inspect` table.
+pub fn render_reports(title: &str, reports: &[ErrorReport]) -> String {
+    let mut s = format!("### {title}\n\n");
+    s.push_str("| method | gran | rel err | SNR dB | cos sim | sparsity |\n|---|---|---|---|---|---|\n");
+    for r in reports {
+        s.push_str(&format!(
+            "| {} | {:?} | {:.4} | {:.1} | {:.4} | {:.1}% |\n",
+            r.method.name(),
+            r.granularity,
+            r.rel_error,
+            r.snr_db,
+            r.cos_sim,
+            r.sparsity * 100.0
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn w(seed: u64) -> Mat {
+        let mut rng = Pcg64::seeded(seed);
+        Mat::randn(&mut rng, 256, 64, 1.0)
+    }
+
+    #[test]
+    fn snr_consistent_with_rel_error() {
+        let r = analyze(&w(0), Method::Sherry34, Granularity::PerChannel);
+        let expect = -20.0 * r.rel_error.log10();
+        assert!((r.snr_db - expect).abs() < 0.1);
+        assert!(r.rel_error > 0.0 && r.rel_error < 1.0);
+    }
+
+    #[test]
+    fn sherry_sparsity_exactly_quarter() {
+        let r = analyze(&w(1), Method::Sherry34, Granularity::PerChannel);
+        assert!((r.sparsity - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cos_sim_high_for_all_ternary_methods() {
+        for m in [Method::Sherry34, Method::AbsMean, Method::Twn] {
+            let r = analyze(&w(2), m, Granularity::PerChannel);
+            assert!(r.cos_sim > 0.7, "{m:?} cos {:.3}", r.cos_sim);
+        }
+    }
+
+    #[test]
+    fn output_error_tracks_weight_error() {
+        // Lower weight-space error ⇒ lower output error on Gaussian probes
+        // (the Eq. 3 proxy argument).
+        let wm = w(3);
+        let mut rng = Pcg64::seeded(9);
+        let x = Mat::randn(&mut rng, 32, 256, 1.0);
+        let q_good = quantize(&wm, Method::Sherry34, Granularity::PerGroup { group_size: 64 });
+        let q_bad = quantize(&wm, Method::Binary, Granularity::PerTensor);
+        let e_good = output_error(&wm, &q_good, &x);
+        let e_bad = output_error(&wm, &q_bad, &x);
+        assert!(e_good < e_bad, "{e_good} vs {e_bad}");
+    }
+
+    #[test]
+    fn render_contains_all_rows() {
+        let reports: Vec<ErrorReport> = [Method::Sherry34, Method::AbsMean]
+            .iter()
+            .map(|&m| analyze(&w(4), m, Granularity::PerChannel))
+            .collect();
+        let s = render_reports("t", &reports);
+        assert!(s.contains("sherry34") && s.contains("absmean"));
+    }
+}

@@ -1,0 +1,279 @@
+//! Ternary quantization core: the Sherry 3:4 sparse quantizer, every
+//! baseline the paper compares against (§2.1, App. E), quantization
+//! granularities (Table 3), and the Arenas λ_t schedules (Fig. 7).
+//!
+//! Convention (matches `python/compile/kernels/ref.py`): weight matrices
+//! are `(d_in, d_out)` row-major; quantization is per *output channel*
+//! (column) at the default granularity.
+
+mod arenas;
+mod baselines;
+pub mod error;
+mod sherry;
+
+pub use arenas::{lambda_at, Schedule};
+pub use baselines::*;
+pub use sherry::{sherry34_quantize, sherry34_ternary};
+
+use crate::tensor::Mat;
+
+/// Quantization granularity (paper Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    PerTensor,
+    PerChannel,
+    /// Groups of `group_size` consecutive input rows share a scale.
+    PerGroup { group_size: usize },
+}
+
+impl Granularity {
+    pub fn parse(s: &str, group_size: usize) -> Option<Self> {
+        match s {
+            "per_tensor" => Some(Self::PerTensor),
+            "per_channel" => Some(Self::PerChannel),
+            "per_group" => Some(Self::PerGroup { group_size }),
+            _ => None,
+        }
+    }
+}
+
+/// A quantized weight matrix: ternary assignment + scales.
+///
+/// `t` is `(d_in, d_out)` row-major with entries in {-1, 0, +1}.
+/// `alpha` layout depends on granularity:
+/// * PerTensor — 1 entry;
+/// * PerChannel — `d_out` entries;
+/// * PerGroup — `(d_in / g) × d_out` row-major.
+#[derive(Clone, Debug)]
+pub struct Ternary {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub t: Vec<i8>,
+    pub alpha: Vec<f32>,
+    pub granularity: Granularity,
+}
+
+impl Ternary {
+    /// Scale applied to element (i, j).
+    #[inline]
+    pub fn scale_at(&self, i: usize, j: usize) -> f32 {
+        match self.granularity {
+            Granularity::PerTensor => self.alpha[0],
+            Granularity::PerChannel => self.alpha[j],
+            Granularity::PerGroup { group_size } => self.alpha[(i / group_size) * self.d_out + j],
+        }
+    }
+
+    /// Dense dequantized matrix Tα.
+    pub fn dequant(&self) -> Mat {
+        let mut m = Mat::zeros(self.d_in, self.d_out);
+        for i in 0..self.d_in {
+            for j in 0..self.d_out {
+                let t = self.t[i * self.d_out + j];
+                if t != 0 {
+                    *m.at_mut(i, j) = t as f32 * self.scale_at(i, j);
+                }
+            }
+        }
+        m
+    }
+
+    /// Ternary value at (i, j).
+    #[inline]
+    pub fn t_at(&self, i: usize, j: usize) -> i8 {
+        self.t[i * self.d_out + j]
+    }
+
+    /// Column `j` of T (one output channel) — what the packers consume.
+    pub fn t_col(&self, j: usize) -> Vec<i8> {
+        (0..self.d_in).map(|i| self.t_at(i, j)).collect()
+    }
+
+    /// Fraction of zero entries.
+    pub fn sparsity(&self) -> f32 {
+        self.t.iter().filter(|&&x| x == 0).count() as f32 / self.t.len() as f32
+    }
+
+    /// Does every contiguous 4-block of every column hold exactly one zero?
+    /// (the 3:4 constraint, paper Eq. 3)
+    pub fn is_34_sparse(&self) -> bool {
+        if self.d_in % 4 != 0 {
+            return false;
+        }
+        for j in 0..self.d_out {
+            for b in 0..self.d_in / 4 {
+                let zeros = (0..4).filter(|&k| self.t_at(b * 4 + k, j) == 0).count();
+                if zeros != 1 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Quantization method registry (paper Tables 1-2 rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Sherry34,
+    AbsMean,
+    AbsMedian,
+    Twn,
+    Binary,
+    Lsq,
+    Seq,
+    Dlt,
+    Tequila,
+}
+
+impl Method {
+    pub const ALL: [Method; 9] = [
+        Method::Sherry34,
+        Method::AbsMean,
+        Method::AbsMedian,
+        Method::Twn,
+        Method::Binary,
+        Method::Lsq,
+        Method::Seq,
+        Method::Dlt,
+        Method::Tequila,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Sherry34 => "sherry34",
+            Method::AbsMean => "absmean",
+            Method::AbsMedian => "absmedian",
+            Method::Twn => "twn",
+            Method::Binary => "binary",
+            Method::Lsq => "lsq",
+            Method::Seq => "seq",
+            Method::Dlt => "dlt",
+            Method::Tequila => "tequila",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        Method::ALL.iter().copied().find(|m| m.name() == s)
+    }
+
+    /// Effective stored bits per weight under each method's best packing
+    /// (paper Fig. 1 / Tables 1-2 "Bit-width" column).
+    pub fn bits_per_weight(&self) -> f32 {
+        match self {
+            Method::Sherry34 => 1.25, // 4 weights in 5 bits (this paper)
+            Method::Binary => 1.0,
+            _ => 5.0 / 3.0, // 1.67-bit TL2 packing for dense ternary
+        }
+    }
+}
+
+/// Quantize `w` with `method` at `granularity` (PTQ path; the QAT path
+/// lives in the AOT-lowered JAX graphs).
+pub fn quantize(w: &Mat, method: Method, granularity: Granularity) -> Ternary {
+    match method {
+        Method::Sherry34 => sherry::sherry34_quantize(w, granularity),
+        Method::AbsMean => baselines::absmean_quantize(w, granularity),
+        Method::AbsMedian => baselines::absmedian_quantize(w, granularity),
+        Method::Twn => baselines::twn_quantize(w, granularity),
+        Method::Binary => baselines::binary_quantize(w, granularity),
+        Method::Lsq => baselines::lsq_quantize(w, granularity),
+        Method::Seq => baselines::seq_quantize(w, granularity),
+        Method::Dlt => baselines::dlt_quantize(w, granularity),
+        Method::Tequila => baselines::tequila_quantize(w, granularity),
+    }
+}
+
+/// L2 reconstruction error ‖W − Tα‖² (the paper's Eq. 3 objective).
+pub fn reconstruction_error(w: &Mat, q: &Ternary) -> f32 {
+    w.sq_err(&q.dequant())
+}
+
+/// Shared helper: masked absmean scale per column over the active set
+/// (paper Eq. 18). Returns 0 for all-pruned columns.
+pub(crate) fn masked_absmean_col(w: &Mat, t: &[i8], j: usize, row_range: std::ops::Range<usize>) -> f32 {
+    let mut sum = 0.0f32;
+    let mut n = 0u32;
+    for i in row_range {
+        if t[i * w.cols + j] != 0 {
+            sum += w.at(i, j).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn w(seed: u64, d_in: usize, d_out: usize) -> Mat {
+        let mut rng = Pcg64::seeded(seed);
+        Mat::randn(&mut rng, d_in, d_out, 1.0)
+    }
+
+    #[test]
+    fn every_method_produces_valid_ternary() {
+        let w = w(1, 64, 32);
+        for m in Method::ALL {
+            let q = quantize(&w, m, Granularity::PerChannel);
+            assert_eq!(q.t.len(), 64 * 32);
+            assert!(q.t.iter().all(|&x| (-1..=1).contains(&x)), "{m:?}");
+            assert!(q.alpha.iter().all(|a| a.is_finite() && *a >= 0.0), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn sherry_is_34_sparse_baselines_are_not_forced() {
+        let w = w(2, 128, 16);
+        let q = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+        assert!(q.is_34_sparse());
+        assert!((q.sparsity() - 0.25).abs() < 1e-6);
+        let qb = quantize(&w, Method::Binary, Granularity::PerChannel);
+        assert_eq!(qb.sparsity(), 0.0);
+    }
+
+    #[test]
+    fn granularity_alpha_lengths() {
+        let w = w(3, 256, 8);
+        let qt = quantize(&w, Method::Sherry34, Granularity::PerTensor);
+        assert_eq!(qt.alpha.len(), 1);
+        let qc = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+        assert_eq!(qc.alpha.len(), 8);
+        let qg = quantize(&w, Method::Sherry34, Granularity::PerGroup { group_size: 128 });
+        assert_eq!(qg.alpha.len(), 2 * 8);
+    }
+
+    #[test]
+    fn finer_granularity_never_hurts_reconstruction() {
+        // More scales = strictly more expressive fit (Table 3 rationale).
+        let w = w(4, 256, 16);
+        let e_t = reconstruction_error(&w, &quantize(&w, Method::Sherry34, Granularity::PerTensor));
+        let e_c = reconstruction_error(&w, &quantize(&w, Method::Sherry34, Granularity::PerChannel));
+        let e_g = reconstruction_error(
+            &w,
+            &quantize(&w, Method::Sherry34, Granularity::PerGroup { group_size: 64 }),
+        );
+        assert!(e_c <= e_t * 1.001, "per-channel {e_c} vs per-tensor {e_t}");
+        assert!(e_g <= e_c * 1.001, "per-group {e_g} vs per-channel {e_c}");
+    }
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.name()), Some(m));
+        }
+        assert_eq!(Method::parse("nope"), None);
+    }
+
+    #[test]
+    fn bits_per_weight_ordering() {
+        assert!(Method::Sherry34.bits_per_weight() < Method::AbsMean.bits_per_weight());
+        assert_eq!(Method::Sherry34.bits_per_weight(), 1.25);
+    }
+}

@@ -1,0 +1,279 @@
+//! The Sherry 3:4 Sparse-AbsMean quantizer (paper §3.1, Eq. 3-5, App. D).
+//!
+//! Per contiguous block of four input weights: prune the smallest-|w|
+//! element (stable argmin — ties go to the lowest index, matching the jnp
+//! oracle), assign sign(w) to the rest, then scale by the mean |w| of the
+//! surviving entries at the requested granularity.
+
+use super::{Granularity, Ternary};
+use crate::tensor::Mat;
+
+/// Optimal 3:4 ternary assignment T* (Eq. 4). `w` is (d_in, d_out);
+/// d_in must be a multiple of 4.
+pub fn sherry34_ternary(w: &Mat) -> Vec<i8> {
+    assert_eq!(w.rows % 4, 0, "d_in must be a multiple of the block size 4");
+    let (d_in, d_out) = (w.rows, w.cols);
+    let mut t = vec![0i8; d_in * d_out];
+    for j in 0..d_out {
+        for b in (0..d_in).step_by(4) {
+            // Stable argmin of |w| over the block.
+            let mut min_i = b;
+            let mut min_v = w.at(b, j).abs();
+            for i in b + 1..b + 4 {
+                let v = w.at(i, j).abs();
+                if v < min_v {
+                    min_v = v;
+                    min_i = i;
+                }
+            }
+            for i in b..b + 4 {
+                if i != min_i {
+                    let v = w.at(i, j);
+                    // sign(0) = 0 stays ternary-faithful for exact zeros.
+                    t[i * d_out + j] = if v > 0.0 {
+                        1
+                    } else if v < 0.0 {
+                        -1
+                    } else {
+                        0
+                    };
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Full Sherry quantizer at a granularity. Scales are the mean |w| over
+/// *active* entries of each scale cell — for per-channel this equals the
+/// paper's Eq. 5 closed form 4/(3·d_in)·Σ_active|w| because exactly 3/4 of
+/// entries are active.
+pub fn sherry34_quantize(w: &Mat, granularity: Granularity) -> Ternary {
+    let t = sherry34_ternary(w);
+    let (d_in, d_out) = (w.rows, w.cols);
+    let alpha = match granularity {
+        Granularity::PerChannel => (0..d_out)
+            .map(|j| super::masked_absmean_col(w, &t, j, 0..d_in))
+            .collect(),
+        Granularity::PerTensor => {
+            let mut sum = 0.0f32;
+            let mut n = 0u64;
+            for i in 0..d_in {
+                for j in 0..d_out {
+                    if t[i * d_out + j] != 0 {
+                        sum += w.at(i, j).abs();
+                        n += 1;
+                    }
+                }
+            }
+            vec![if n == 0 { 0.0 } else { sum / n as f32 }]
+        }
+        Granularity::PerGroup { group_size } => {
+            assert_eq!(d_in % group_size, 0, "group_size must divide d_in");
+            assert_eq!(group_size % 4, 0, "group_size must be a multiple of 4");
+            let mut alpha = Vec::with_capacity((d_in / group_size) * d_out);
+            for g in 0..d_in / group_size {
+                for j in 0..d_out {
+                    alpha.push(super::masked_absmean_col(
+                        w,
+                        &t,
+                        j,
+                        g * group_size..(g + 1) * group_size,
+                    ));
+                }
+            }
+            alpha
+        }
+    };
+    Ternary { d_in, d_out, t, alpha, granularity }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::reconstruction_error;
+    use crate::util::{prop, Pcg64};
+
+    fn randw(seed: u64, d_in: usize, d_out: usize) -> Mat {
+        let mut rng = Pcg64::seeded(seed);
+        Mat::randn(&mut rng, d_in, d_out, 1.0)
+    }
+
+    #[test]
+    fn eq5_closed_form_per_channel() {
+        // α_j == 4/(3 d_in) Σ_active |w| (Eq. 5).
+        let w = randw(0, 64, 8);
+        let q = sherry34_quantize(&w, Granularity::PerChannel);
+        for j in 0..8 {
+            let mut s = 0.0;
+            for i in 0..64 {
+                if q.t_at(i, j) != 0 {
+                    s += w.at(i, j).abs();
+                }
+            }
+            let expect = 4.0 / (3.0 * 64.0) * s;
+            assert!((q.alpha[j] - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn prunes_exactly_min_abs() {
+        let w = randw(1, 128, 4);
+        let q = sherry34_quantize(&w, Granularity::PerChannel);
+        for j in 0..4 {
+            for b in (0..128).step_by(4) {
+                let zero_lane = (0..4).find(|&k| q.t_at(b + k, j) == 0).unwrap();
+                let min_lane = (0..4)
+                    .min_by(|&a, &bb| {
+                        w.at(b + a, j)
+                            .abs()
+                            .partial_cmp(&w.at(b + bb, j).abs())
+                            .unwrap()
+                    })
+                    .unwrap();
+                assert_eq!(zero_lane, min_lane);
+            }
+        }
+    }
+
+    #[test]
+    fn signs_match_weights() {
+        let w = randw(2, 64, 4);
+        let q = sherry34_quantize(&w, Granularity::PerChannel);
+        for j in 0..4 {
+            for i in 0..64 {
+                let t = q.t_at(i, j);
+                if t != 0 {
+                    assert_eq!(t as f32, w.at(i, j).signum());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_optimality_vs_bruteforce() {
+        // App. D: no other 3:4 sign pattern achieves higher block
+        // correlation Σ w·t (equivalently lower L2 at optimal α).
+        let mut patterns: Vec<[i8; 4]> = Vec::new();
+        for zero in 0..4usize {
+            for bits in 0..8u32 {
+                let mut p = [0i8; 4];
+                let mut k = 0;
+                for lane in 0..4 {
+                    if lane != zero {
+                        p[lane] = if (bits >> k) & 1 == 1 { 1 } else { -1 };
+                        k += 1;
+                    }
+                }
+                patterns.push(p);
+            }
+        }
+        prop::check(
+            "sherry34 block optimality",
+            200,
+            |rng| {
+                let v: Vec<f32> = rng.normal_vec(4);
+                v
+            },
+            |blk| {
+                let w = Mat::from_vec(4, 1, blk.clone());
+                let t = sherry34_ternary(&w);
+                let ours: f32 = (0..4).map(|i| blk[i] * t[i] as f32).sum();
+                let best = patterns
+                    .iter()
+                    .map(|p| (0..4).map(|i| blk[i] * p[i] as f32).sum::<f32>())
+                    .fold(f32::NEG_INFINITY, f32::max);
+                if ours >= best - 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("greedy {ours} < brute-force {best}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_sherry_error_leq_random_34_assignment() {
+        prop::check(
+            "sherry beats random 3:4 masks",
+            50,
+            |rng| {
+                let w: Vec<f32> = rng.normal_vec(32);
+                let seed = rng.next_u64();
+                (w, seed)
+            },
+            |(wdata, seed)| {
+                let w = Mat::from_vec(32, 1, wdata.clone());
+                let q = sherry34_quantize(&w, Granularity::PerChannel);
+                let e_opt = reconstruction_error(&w, &q);
+                let mut rng = Pcg64::seeded(*seed);
+                let t_rand = prop::gens::sparse34_vec(&mut rng, 32);
+                // optimal alpha for that mask
+                let s: f32 = (0..32)
+                    .filter(|&i| t_rand[i] != 0)
+                    .map(|i| wdata[i].abs())
+                    .sum();
+                let alpha = s / 24.0;
+                let q_rand = Ternary {
+                    d_in: 32,
+                    d_out: 1,
+                    t: t_rand,
+                    alpha: vec![alpha],
+                    granularity: Granularity::PerChannel,
+                };
+                // random mask signs may not match w; fix signs to sign(w)
+                // to make it the strongest adversary
+                let mut q_rand = q_rand;
+                for i in 0..32 {
+                    if q_rand.t[i] != 0 {
+                        q_rand.t[i] = if wdata[i] >= 0.0 { 1 } else { -1 };
+                    }
+                }
+                let e_rand = reconstruction_error(&w, &q_rand);
+                if e_opt <= e_rand + 1e-4 {
+                    Ok(())
+                } else {
+                    Err(format!("opt {e_opt} > rand {e_rand}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn matches_python_golden() {
+        let dir = crate::test_artifacts_dir().join("golden");
+        if !dir.join("w.bin").exists() {
+            eprintln!("skipping: goldens not built");
+            return;
+        }
+        let (r, c, wd) = crate::util::binio::read_mat(&dir.join("w.bin")).unwrap();
+        let w = Mat::from_vec(r, c, wd);
+        let q = sherry34_quantize(&w, Granularity::PerChannel);
+        let (_, _, t_g) = crate::util::binio::read_mat(&dir.join("sherry34.t.bin")).unwrap();
+        let (_, _, a_g) = crate::util::binio::read_mat(&dir.join("sherry34.alpha.bin")).unwrap();
+        for (i, (&ours, &gold)) in q.t.iter().zip(t_g.iter()).enumerate() {
+            assert_eq!(ours as f32, gold, "T mismatch at flat index {i}");
+        }
+        for (j, (&ours, &gold)) in q.alpha.iter().zip(a_g.iter()).enumerate() {
+            assert!((ours - gold).abs() < 1e-5, "alpha mismatch at {j}: {ours} vs {gold}");
+        }
+        // Granularity goldens: compare dequant matrices.
+        for (gran, g) in [
+            ("per_tensor", Granularity::PerTensor),
+            ("per_channel", Granularity::PerChannel),
+            ("per_group", Granularity::PerGroup { group_size: 128 }),
+        ] {
+            let (_, _, deq_g) = crate::util::binio::read_mat(
+                &dir.join(format!("sherry34_{gran}.deq.bin")),
+            )
+            .unwrap();
+            let deq = sherry34_quantize(&w, g).dequant();
+            for (i, (&ours, &gold)) in deq.data.iter().zip(deq_g.iter()).enumerate() {
+                assert!(
+                    (ours - gold).abs() < 1e-5,
+                    "{gran} deq mismatch at {i}: {ours} vs {gold}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Artifact manifest + parameter ABI parsing (`manifest.tsv`,
+//! `{cfg}.params.tsv` — written by `python/compile/aot.py`).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// One artifact row from `manifest.tsv`.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub stem: String,
+    pub kind: String,
+    pub config: String,
+    pub method: String,
+    pub granularity: String,
+    pub path: String,
+    pub n_params: usize,
+    pub batch: Option<usize>,
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if i == 0 || line.trim().is_empty() {
+                continue; // header
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            anyhow::ensure!(cols.len() >= 8, "manifest line {i} malformed: {line}");
+            entries.push(ArtifactEntry {
+                stem: cols[0].to_string(),
+                kind: cols[1].to_string(),
+                config: cols[2].to_string(),
+                method: cols[3].to_string(),
+                granularity: cols[4].to_string(),
+                path: cols[5].to_string(),
+                n_params: cols[6].parse().unwrap_or(0),
+                batch: cols[7].parse().ok(),
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    /// Find an artifact by (config, method, granularity, kind).
+    pub fn find(&self, config: &str, method: &str, granularity: &str, kind: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| {
+            e.config == config && e.method == method && e.granularity == granularity && e.kind == kind
+        })
+    }
+}
+
+/// Ordered parameter ABI from `{cfg}.params.tsv`: (name, shape).
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub entries: Vec<(String, Vec<usize>)>,
+}
+
+impl ParamSpec {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read param spec {}", path.display()))?;
+        let mut entries = Vec::new();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let (name, shape_s) = line.split_once('\t').context("param line malformed")?;
+            let shape: Vec<usize> = shape_s
+                .split(',')
+                .map(|d| d.parse().context("bad dim"))
+                .collect::<Result<_>>()?;
+            entries.push((name.to_string(), shape));
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total scalar count across all params.
+    pub fn total_elems(&self) -> usize {
+        self.entries.iter().map(|(_, s)| s.iter().product::<usize>()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_text() {
+        let dir = std::env::temp_dir().join("sherry_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("manifest.tsv");
+        std::fs::write(
+            &p,
+            "stem\tkind\tconfig\tmethod\tgranularity\tpath\tn_params\tbatch\n\
+             nano_x_y\ttrain\tnano\tx\ty\tnano_x_y.train.hlo.txt\t35\t16\n\
+             kern\tkernel\t-\t-\t-\tk.hlo.txt\t1\t-\n",
+        )
+        .unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[0].n_params, 35);
+        assert_eq!(m.entries[0].batch, Some(16));
+        assert_eq!(m.entries[1].batch, None);
+        assert!(m.find("nano", "x", "y", "train").is_some());
+        assert!(m.find("nano", "x", "y", "fwd").is_none());
+    }
+
+    #[test]
+    fn parses_param_spec() {
+        let dir = std::env::temp_dir().join("sherry_pspec_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("nano.params.tsv");
+        std::fs::write(&p, "embed\t256,128\nlayer0.norm_attn\t128\n").unwrap();
+        let s = ParamSpec::load(&p).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.entries[0].1, vec![256, 128]);
+        assert_eq!(s.total_elems(), 256 * 128 + 128);
+    }
+
+    #[test]
+    fn real_param_spec_if_built() {
+        let p = crate::test_artifacts_dir().join("nano.params.tsv");
+        if !p.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let s = ParamSpec::load(&p).unwrap();
+        assert_eq!(s.entries[0].0, "embed");
+        assert_eq!(s.len(), 35);
+    }
+}

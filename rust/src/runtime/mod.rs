@@ -1,0 +1,182 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text* (`HloModuleProto::from_text_file`): the
+//! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//! (64-bit instruction ids); the text parser reassigns ids. See
+//! `/opt/xla-example/README.md` and DESIGN.md.
+
+mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest, ParamSpec};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// A PJRT client plus a compile cache of loaded artifacts.
+pub struct Runtime {
+    client: PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// CPU-backed runtime rooted at the artifacts directory.
+    pub fn cpu(artifacts_dir: &Path) -> Result<Self> {
+        let client = PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, dir: artifacts_dir.to_path_buf(), cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Load + compile an HLO-text artifact (cached by relative path).
+    pub fn load(&mut self, rel_path: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.cache.contains_key(rel_path) {
+            let full = self.dir.join(rel_path);
+            let proto = HloModuleProto::from_text_file(
+                full.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parse HLO text {}", full.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compile {}", full.display()))?;
+            self.cache.insert(rel_path.to_string(), exe);
+        }
+        Ok(&self.cache[rel_path])
+    }
+
+    /// Execute a loaded artifact on literals; returns the flattened tuple
+    /// elements (aot.py lowers with `return_tuple=True`).
+    pub fn run(&mut self, rel_path: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let exe = self.load(rel_path)?;
+        let mut result = exe.execute::<Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+
+    /// Read the artifact manifest.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.dir.join("manifest.tsv"))
+    }
+}
+
+/// Build an f32 literal of `shape` from a slice.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/product mismatch");
+    let flat = Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+/// Build an i32 literal of `shape` from a slice.
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "shape/product mismatch");
+    let flat = Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+/// Scalar literals.
+pub fn scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = crate::test_artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::cpu(&dir).unwrap())
+    }
+
+    #[test]
+    fn kernel_quantize34_roundtrip() {
+        // The standalone Pallas quantize34 kernel, AOT-lowered, must match
+        // the native Rust quantizer on the same input.
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = crate::util::Pcg64::seeded(0);
+        let w = crate::tensor::Mat::randn(&mut rng, 512, 256, 1.0);
+        let lit = literal_f32(&w.data, &[512, 256]).unwrap();
+        let out = rt.run("kernel_quantize34.hlo.txt", &[lit]).unwrap();
+        assert_eq!(out.len(), 2);
+        let t = to_vec_f32(&out[0]).unwrap();
+        let alpha = to_vec_f32(&out[1]).unwrap();
+        let q = crate::quant::sherry34_quantize(&w, crate::quant::Granularity::PerChannel);
+        for (i, (&pj, &rs)) in t.iter().zip(q.t.iter()).enumerate() {
+            assert_eq!(pj, rs as f32, "T mismatch at {i}");
+        }
+        for (j, (&pj, &rs)) in alpha.iter().zip(q.alpha.iter()).enumerate() {
+            assert!((pj - rs).abs() < 1e-5, "alpha mismatch at {j}");
+        }
+    }
+
+    #[test]
+    fn kernel_ternary_matmul_matches_native_lut() {
+        let Some(mut rt) = runtime() else { return };
+        let mut rng = crate::util::Pcg64::seeded(1);
+        let w = crate::tensor::Mat::randn(&mut rng, 512, 256, 1.0);
+        let q = crate::quant::sherry34_quantize(&w, crate::quant::Granularity::PerChannel);
+        let x: Vec<f32> = rng.normal_vec(16 * 512);
+        let t_f32: Vec<f32> = q.t.iter().map(|&v| v as f32).collect();
+        let out = rt
+            .run(
+                "kernel_ternary_matmul.hlo.txt",
+                &[
+                    literal_f32(&x, &[16, 512]).unwrap(),
+                    literal_f32(&t_f32, &[512, 256]).unwrap(),
+                    literal_f32(&q.alpha, &[256]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let y_pjrt = to_vec_f32(&out[0]).unwrap();
+        // native LUT engine on the same rows
+        let p = crate::pack::Packed34::from_ternary(&q);
+        let mut luts = vec![0.0; (512 / 4) * 16];
+        let mut y = vec![0.0; 256];
+        for r in 0..16 {
+            super::super::engine::lut::gemv_pack34(&p, &x[r * 512..(r + 1) * 512], &mut luts, &mut y);
+            for j in 0..256 {
+                let pj = y_pjrt[r * 256 + j];
+                assert!(
+                    (pj - y[j]).abs() < 1e-3 * (1.0 + pj.abs()),
+                    "row {r} col {j}: pjrt {pj} vs native {}",
+                    y[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_lists_artifacts() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.manifest().unwrap();
+        assert!(m.entries.len() >= 8);
+        assert!(m.find("nano", "sherry34", "per_channel", "train").is_some());
+    }
+}

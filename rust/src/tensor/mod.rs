@@ -1,0 +1,138 @@
+//! Row-major f32 matrix substrate used across the native engine, the
+//! quantizers, and the eval harness.
+//!
+//! Deliberately minimal: `Mat` is a shape-checked `Vec<f32>`; the hot
+//! inference path in `engine/` works on raw slices for speed, this type is
+//! for the orchestration/eval layers.
+
+pub mod ops;
+
+pub use ops::{gemv_f32, matmul, rmsnorm_inplace, rope_inplace, softmax_inplace};
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From an existing row-major buffer (length must match).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(rows * cols, data.len(), "shape/data mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, scale²) entries.
+    pub fn randn(rng: &mut crate::util::Pcg64, rows: usize, cols: usize, scale: f32) -> Self {
+        let data = (0..rows * cols).map(|_| rng.normal() * scale).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column `c`.
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        (0..self.rows).map(|r| self.at(r, c)).collect()
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                *t.at_mut(c, r) = self.at(r, c);
+            }
+        }
+        t
+    }
+
+    /// Frobenius norm.
+    pub fn frob(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Σ (a - b)² over all entries.
+    pub fn sq_err(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// Max |a - b|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn indexing_row_major() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.at(0, 2), 3.0);
+        assert_eq!(m.at(1, 0), 4.0);
+        assert_eq!(m.row(1), &[4., 5., 6.]);
+        assert_eq!(m.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let mut rng = Pcg64::seeded(0);
+        let m = Mat::randn(&mut rng, 5, 7, 1.0);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_shape() {
+        Mat::from_vec(2, 2, vec![1.0; 3]);
+    }
+
+    #[test]
+    fn error_metrics() {
+        let a = Mat::from_vec(1, 3, vec![1., 2., 3.]);
+        let b = Mat::from_vec(1, 3, vec![1., 2., 5.]);
+        assert_eq!(a.sq_err(&b), 4.0);
+        assert_eq!(a.max_abs_diff(&b), 2.0);
+        assert!((a.frob() - 14f32.sqrt()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,173 @@
+//! Dense float kernels: the BF16/f32 baseline GEMV (Table 4's "BF16" row),
+//! matmul for the eval path, and the transformer nonlinearities used by the
+//! native inference model.
+
+use super::Mat;
+
+/// y = W·x with W (rows × cols) row-major, x (cols), y (rows).
+///
+/// This is the dense baseline the LUT engines are benchmarked against
+/// (Table 4 "BF16" row runs this at f32 — see DESIGN.md substitutions).
+/// Unrolled by 4 over the row to let LLVM autovectorize.
+pub fn gemv_f32(w: &[f32], rows: usize, cols: usize, x: &[f32], y: &mut [f32]) {
+    assert_eq!(w.len(), rows * cols);
+    assert_eq!(x.len(), cols);
+    assert_eq!(y.len(), rows);
+    for r in 0..rows {
+        let row = &w[r * cols..(r + 1) * cols];
+        let mut acc0 = 0.0f32;
+        let mut acc1 = 0.0f32;
+        let mut acc2 = 0.0f32;
+        let mut acc3 = 0.0f32;
+        let chunks = cols / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            acc0 += row[i] * x[i];
+            acc1 += row[i + 1] * x[i + 1];
+            acc2 += row[i + 2] * x[i + 2];
+            acc3 += row[i + 3] * x[i + 3];
+        }
+        let mut acc = acc0 + acc1 + acc2 + acc3;
+        for i in chunks * 4..cols {
+            acc += row[i] * x[i];
+        }
+        y[r] = acc;
+    }
+}
+
+/// C = A·B (naive blocked; used by eval, not the serving hot path).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "inner dims");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    // i-k-j loop order: streams B rows, accumulates into C rows.
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let aik = a.at(i, k);
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = b.row(k);
+            let crow = c.row_mut(i);
+            for j in 0..b.cols {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// In-place softmax over a slice.
+pub fn softmax_inplace(x: &mut [f32]) {
+    let m = x.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        z += *v;
+    }
+    let inv = 1.0 / z;
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// In-place RMSNorm with gain `g` (LLaMA-style, eps 1e-5).
+pub fn rmsnorm_inplace(x: &mut [f32], g: &[f32]) {
+    assert_eq!(x.len(), g.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    for (v, gi) in x.iter_mut().zip(g) {
+        *v *= inv * gi;
+    }
+}
+
+/// In-place rotary position embedding over head_dim pairs (matches
+/// `python/compile/model.py::rope`: first/second half pairing).
+pub fn rope_inplace(x: &mut [f32], pos: usize) {
+    let d = x.len();
+    let half = d / 2;
+    for i in 0..half {
+        let freq = (-(10000.0f32.ln()) * i as f32 / half as f32).exp();
+        let ang = pos as f32 * freq;
+        let (sin, cos) = ang.sin_cos();
+        let (a, b) = (x[i], x[i + half]);
+        x[i] = a * cos - b * sin;
+        x[i + half] = a * sin + b * cos;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn gemv_matches_matmul() {
+        let mut rng = Pcg64::seeded(4);
+        let w = Mat::randn(&mut rng, 13, 29, 1.0);
+        let x: Vec<f32> = rng.normal_vec(29);
+        let mut y = vec![0.0; 13];
+        gemv_f32(&w.data, 13, 29, &x, &mut y);
+        let xm = Mat::from_vec(29, 1, x);
+        let expect = matmul(&w, &xm);
+        for r in 0..13 {
+            assert!((y[r] - expect.at(r, 0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::seeded(5);
+        let a = Mat::randn(&mut rng, 4, 4, 1.0);
+        let mut eye = Mat::zeros(4, 4);
+        for i in 0..4 {
+            *eye.at_mut(i, i) = 1.0;
+        }
+        assert!(matmul(&a, &eye).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        softmax_inplace(&mut x);
+        assert!((x.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(x[3] > x[2] && x[2] > x[1]);
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut x = vec![1000.0f32, 1000.0];
+        softmax_inplace(&mut x);
+        assert!((x[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_output_scale() {
+        let mut x = vec![3.0f32; 8];
+        let g = vec![1.0f32; 8];
+        rmsnorm_inplace(&mut x, &g);
+        for v in &x {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rope_pos0_is_identity() {
+        let mut x = vec![0.3f32, -0.5, 0.7, 0.2];
+        let orig = x.clone();
+        rope_inplace(&mut x, 0);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rope_preserves_pair_norms() {
+        let mut x = vec![0.3f32, -0.5, 0.7, 0.2, 0.9, -0.1];
+        let half = 3;
+        let before: Vec<f32> = (0..half).map(|i| x[i].hypot(x[i + half])).collect();
+        rope_inplace(&mut x, 17);
+        for (i, b) in before.iter().enumerate() {
+            assert!((x[i].hypot(x[i + half]) - b).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Checkpoint format: named f32 matrices in one file.
+//!
+//! `[u32 n LE]` then per entry: `[u16 name_len][name utf8][u32 rows]
+//! [u32 cols][f32 data LE]`. Written by the QAT driver, consumed by the
+//! native engine (`TernaryModel::build`) and the eval harness.
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::tensor::Mat;
+
+/// Save named matrices (deterministic order: BTreeMap iteration).
+pub fn save(path: &Path, weights: &BTreeMap<String, Mat>) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&(weights.len() as u32).to_le_bytes())?;
+    for (name, m) in weights {
+        let nb = name.as_bytes();
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&(m.rows as u32).to_le_bytes())?;
+        f.write_all(&(m.cols as u32).to_le_bytes())?;
+        let mut buf = Vec::with_capacity(m.data.len() * 4);
+        for &x in &m.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        f.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Load a checkpoint written by [`save`].
+pub fn load(path: &Path) -> Result<BTreeMap<String, Mat>> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut u32b = [0u8; 4];
+    let mut u16b = [0u8; 2];
+    f.read_exact(&mut u32b)?;
+    let n = u32::from_le_bytes(u32b) as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..n {
+        f.read_exact(&mut u16b)?;
+        let name_len = u16::from_le_bytes(u16b) as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let name = String::from_utf8(name).context("bad checkpoint name")?;
+        f.read_exact(&mut u32b)?;
+        let rows = u32::from_le_bytes(u32b) as usize;
+        f.read_exact(&mut u32b)?;
+        let cols = u32::from_le_bytes(u32b) as usize;
+        let mut buf = vec![0u8; rows * cols * 4];
+        f.read_exact(&mut buf)?;
+        let data = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        out.insert(name, Mat::from_vec(rows, cols, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::seeded(0);
+        let mut w = BTreeMap::new();
+        w.insert("embed".to_string(), Mat::randn(&mut rng, 8, 4, 1.0));
+        w.insert("layer0.wq".to_string(), Mat::randn(&mut rng, 4, 4, 1.0));
+        let dir = std::env::temp_dir().join("sherry_ckpt_test");
+        let p = dir.join("a.ckpt");
+        save(&p, &w).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.len(), 2);
+        for (k, m) in &w {
+            assert_eq!(&back[k], m);
+        }
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/x.ckpt")).is_err());
+    }
+}

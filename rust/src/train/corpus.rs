@@ -1,0 +1,144 @@
+//! Synthetic training corpus: a Zipf-marginal Markov language.
+//!
+//! Stands in for the paper's 10B UltraFineWeb tokens (see DESIGN.md
+//! substitutions). The process has genuine sequential structure a small
+//! LM can learn — per-token preferred successors plus periodic motifs —
+//! so quantization methods separate by how much of that structure they
+//! retain, which is all Tables 1-2 measure relatively.
+
+use crate::util::Pcg64;
+
+/// Synthetic corpus sampler.
+pub struct Corpus {
+    vocab: usize,
+    rng: Pcg64,
+    /// Zipf weights for the unconditional mixture component.
+    zipf: Vec<f32>,
+    /// Deterministic preferred successor per token.
+    succ: Vec<u32>,
+    /// Second preferred successor (bimodal transitions).
+    succ2: Vec<u32>,
+}
+
+impl Corpus {
+    /// Corpus over `vocab` tokens, seeded (held-out split uses a
+    /// different seed stream, same process).
+    pub fn new(vocab: usize, seed: u64) -> Self {
+        let mut rng = Pcg64::new(seed, 17);
+        let zipf: Vec<f32> = (0..vocab).map(|i| 1.0 / (i as f32 + 1.0)).collect();
+        // Structured successor maps: affine permutations of the vocab so
+        // transitions are learnable but non-trivial.
+        let a = 5u64; // gcd(5, vocab) == 1 for our power-of-two vocabs
+        let succ = (0..vocab).map(|i| ((a * i as u64 + 3) % vocab as u64) as u32).collect();
+        let succ2 = (0..vocab).map(|i| ((a * i as u64 + 7 * vocab as u64 / 16) % vocab as u64) as u32).collect();
+        let _ = rng.next_u64();
+        Self { vocab, rng, zipf, succ, succ2 }
+    }
+
+    /// Sample one sequence of `len` tokens.
+    pub fn sequence(&mut self, len: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(len);
+        let mut prev = self.rng.categorical(&self.zipf) as u32;
+        out.push(prev);
+        while out.len() < len {
+            let r = self.rng.next_f32();
+            let next = if r < 0.55 {
+                self.succ[prev as usize]
+            } else if r < 0.8 {
+                self.succ2[prev as usize]
+            } else {
+                self.rng.categorical(&self.zipf) as u32
+            };
+            out.push(next);
+            prev = next;
+        }
+        out
+    }
+
+    /// Batch of `b` sequences of `len` tokens, flattened row-major, as the
+    /// i32 the train/loss artifacts expect.
+    pub fn batch_i32(&mut self, b: usize, len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(b * len);
+        for _ in 0..b {
+            out.extend(self.sequence(len).into_iter().map(|t| t as i32));
+        }
+        out
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// The two structured successors of `t` (used by eval task builders).
+    pub fn successors(&self, t: u32) -> (u32, u32) {
+        (self.succ[t as usize], self.succ2[t as usize])
+    }
+
+    /// Entropy rate upper bound of the mixture (nats) — a sanity anchor
+    /// for achievable loss.
+    pub fn entropy_bound(&self) -> f32 {
+        // H ≤ H(mixture indicator) + 0.2·H(zipf); rough but useful.
+        let z: f32 = self.zipf.iter().sum();
+        let h_zipf: f32 = -self
+            .zipf
+            .iter()
+            .map(|w| {
+                let p = w / z;
+                p * p.ln()
+            })
+            .sum::<f32>();
+        let h_mix = -(0.55f32 * 0.55f32.ln() + 0.25 * 0.25f32.ln() + 0.2 * 0.2f32.ln());
+        h_mix + 0.2 * h_zipf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequences_in_vocab() {
+        let mut c = Corpus::new(256, 0);
+        let s = c.sequence(512);
+        assert_eq!(s.len(), 512);
+        assert!(s.iter().all(|&t| t < 256));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = Corpus::new(256, 7);
+        let mut b = Corpus::new(256, 7);
+        assert_eq!(a.sequence(100), b.sequence(100));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Corpus::new(256, 1);
+        let mut b = Corpus::new(256, 2);
+        assert_ne!(a.sequence(100), b.sequence(100));
+    }
+
+    #[test]
+    fn has_learnable_structure() {
+        // Majority of transitions follow the two preferred successors.
+        let mut c = Corpus::new(256, 3);
+        let s = c.sequence(20_000);
+        let mut hits = 0usize;
+        for w in s.windows(2) {
+            let (s1, s2) = c.successors(w[0]);
+            if w[1] == s1 || w[1] == s2 {
+                hits += 1;
+            }
+        }
+        let frac = hits as f32 / (s.len() - 1) as f32;
+        assert!(frac > 0.7, "structured fraction {frac}");
+    }
+
+    #[test]
+    fn batch_shape() {
+        let mut c = Corpus::new(256, 4);
+        let b = c.batch_i32(4, 65);
+        assert_eq!(b.len(), 4 * 65);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+    }
+}

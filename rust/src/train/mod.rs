@@ -1,0 +1,317 @@
+//! QAT training driver: Layer-3 owns the training loop, λ_t annealing and
+//! logging; the fwd+bwd+Adam step itself is the AOT-compiled Layer-2
+//! graph executed via PJRT.
+//!
+//! Per step the driver (1) samples a synthetic batch, (2) computes λ_t
+//! from the Arenas schedule at the current progress, (3) invokes the
+//! train-step executable with the flat parameter ABI, and (4) reads back
+//! loss and updated (params, m, v). Gradients for the Fig. 4 Effective
+//! Rank diagnostics are recovered exactly from the Adam first-moment
+//! outputs: g_t = (m_t − β₁·m_{t−1}) / (1 − β₁).
+
+pub mod checkpoint;
+pub mod corpus;
+
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+use crate::quant::{lambda_at, Schedule};
+use crate::runtime::{literal_f32, literal_i32, scalar_f32, scalar_i32, to_vec_f32, ParamSpec, Runtime};
+use crate::tensor::Mat;
+use crate::util::Pcg64;
+use corpus::Corpus;
+
+/// Adam β₁ — must match `python/compile/model.py::ADAM_B1`.
+pub const ADAM_B1: f32 = 0.9;
+
+/// Training configuration for one QAT run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model config name ("nano" | "micro" | "e2e").
+    pub config: String,
+    /// Quantization method (artifact must exist).
+    pub method: String,
+    /// Granularity name.
+    pub granularity: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub schedule: Schedule,
+    pub seed: u64,
+    /// Compute gradient ER for this layer every `er_every` steps (0 = off).
+    pub er_layer: String,
+    pub er_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            config: "nano".into(),
+            method: "sherry34".into(),
+            granularity: "per_channel".into(),
+            steps: 200,
+            lr: 1e-3,
+            schedule: Schedule::CosineWarmup,
+            seed: 0,
+            er_layer: "layer0.wq".into(),
+            er_every: 0,
+        }
+    }
+}
+
+/// Result of a training run.
+pub struct TrainOutcome {
+    /// Loss at every step.
+    pub losses: Vec<f32>,
+    /// (step, effective-rank of ∂L/∂W for `er_layer`) samples.
+    pub er_trace: Vec<(usize, f32)>,
+    /// Final latent float parameters, keyed by ABI names.
+    pub params: BTreeMap<String, Mat>,
+    /// λ_t at the final step (should be ≈0 for annealing schedules).
+    pub final_lambda: f32,
+}
+
+/// Model dims needed to shape batches (mirrors the Python CONFIGS).
+pub fn config_dims(config: &str) -> Option<(usize, usize)> {
+    // (vocab, seq_len)
+    match config {
+        "nano" => Some((256, 64)),
+        "micro" => Some((512, 128)),
+        "e2e" => Some((1024, 128)),
+        _ => None,
+    }
+}
+
+/// The QAT driver.
+pub struct Trainer<'rt> {
+    rt: &'rt mut Runtime,
+    spec: ParamSpec,
+    artifact: String,
+    batch: usize,
+    vocab: usize,
+    seq_len: usize,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Resolve artifacts for `(config, method, granularity)`.
+    pub fn new(rt: &'rt mut Runtime, cfg: &TrainConfig) -> Result<Self> {
+        let manifest = rt.manifest()?;
+        let entry = manifest
+            .find(&cfg.config, &cfg.method, &cfg.granularity, "train")
+            .with_context(|| {
+                format!(
+                    "no train artifact for {}/{}/{} — re-run `make artifacts`",
+                    cfg.config, cfg.method, cfg.granularity
+                )
+            })?
+            .clone();
+        let spec = ParamSpec::load(&rt.artifacts_dir().join(format!("{}.params.tsv", cfg.config)))?;
+        let (vocab, seq_len) = config_dims(&cfg.config).context("unknown config")?;
+        Ok(Self {
+            rt,
+            spec,
+            artifact: entry.path.clone(),
+            batch: entry.batch.context("train artifact lacks batch size")?,
+            vocab,
+            seq_len,
+        })
+    }
+
+    /// Initialize latent params the same way as the Python side: N(0,
+    /// fan_in^-1/2) for matrices, ones for norms, method-specific aux.
+    pub fn init_params(&self, seed: u64, method: &str) -> Vec<Vec<f32>> {
+        let mut rng = Pcg64::new(seed, 99);
+        self.spec
+            .entries
+            .iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                if name.ends_with(".aux") {
+                    let fill = if method == "lsq" { 0.05 } else { 0.0 };
+                    vec![fill; n]
+                } else if name.contains("norm") {
+                    vec![1.0; n]
+                } else {
+                    let scale = (shape[0] as f32).powf(-0.5);
+                    (0..n).map(|_| rng.normal() * scale).collect()
+                }
+            })
+            .collect()
+    }
+
+    /// Run the full QAT loop.
+    pub fn run(&mut self, cfg: &TrainConfig) -> Result<TrainOutcome> {
+        let n = self.spec.len();
+        let mut params = self.init_params(cfg.seed, &cfg.method);
+        let mut m: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let mut v: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let mut corpus = Corpus::new(self.vocab, cfg.seed.wrapping_add(1));
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut er_trace = Vec::new();
+        let er_idx = self
+            .spec
+            .entries
+            .iter()
+            .position(|(name, _)| name == &cfg.er_layer);
+        let mut final_lambda = 0.0;
+
+        for step in 0..cfg.steps {
+            let progress = if cfg.steps > 1 {
+                step as f32 / (cfg.steps - 1) as f32
+            } else {
+                1.0
+            };
+            let lam = lambda_at(cfg.schedule, progress);
+            final_lambda = lam;
+            let batch = corpus.batch_i32(self.batch, self.seq_len + 1);
+
+            let mut inputs = Vec::with_capacity(3 * n + 4);
+            for (vals, (_, shape)) in params.iter().zip(&self.spec.entries) {
+                inputs.push(literal_f32(vals, shape)?);
+            }
+            for (vals, (_, shape)) in m.iter().zip(&self.spec.entries) {
+                inputs.push(literal_f32(vals, shape)?);
+            }
+            for (vals, (_, shape)) in v.iter().zip(&self.spec.entries) {
+                inputs.push(literal_f32(vals, shape)?);
+            }
+            inputs.push(literal_i32(&batch, &[self.batch, self.seq_len + 1])?);
+            inputs.push(scalar_i32(step as i32));
+            inputs.push(scalar_f32(lam));
+            inputs.push(scalar_f32(cfg.lr));
+
+            let outputs = self.rt.run(&self.artifact, &inputs)?;
+            anyhow::ensure!(outputs.len() == 1 + 3 * n, "train step output arity");
+            let loss = to_vec_f32(&outputs[0])?[0];
+            losses.push(loss);
+
+            // ER diagnostic: recover g from m before overwriting state.
+            if cfg.er_every > 0 && step % cfg.er_every == 0 {
+                if let Some(idx) = er_idx {
+                    let m_new = to_vec_f32(&outputs[1 + n + idx])?;
+                    let m_old = &m[idx];
+                    let shape = &self.spec.entries[idx].1;
+                    let g: Vec<f32> = m_new
+                        .iter()
+                        .zip(m_old)
+                        .map(|(mn, mo)| (mn - ADAM_B1 * mo) / (1.0 - ADAM_B1))
+                        .collect();
+                    let gm = Mat::from_vec(shape[0], shape[1], g);
+                    er_trace.push((step, crate::linalg::effective_rank(&gm)));
+                }
+            }
+
+            for i in 0..n {
+                params[i] = to_vec_f32(&outputs[1 + i])?;
+                m[i] = to_vec_f32(&outputs[1 + n + i])?;
+                v[i] = to_vec_f32(&outputs[1 + 2 * n + i])?;
+            }
+        }
+
+        let mut out_params = BTreeMap::new();
+        for ((name, shape), vals) in self.spec.entries.iter().zip(params) {
+            let (r, c) = match shape.len() {
+                2 => (shape[0], shape[1]),
+                1 => (1, shape[0]),
+                _ => (1, vals.len()),
+            };
+            out_params.insert(name.clone(), Mat::from_vec(r, c, vals));
+        }
+        Ok(TrainOutcome { losses, er_trace, params: out_params, final_lambda })
+    }
+
+    /// Mean eval loss of `params` on `n_batches` held-out batches via the
+    /// loss artifact (λ forced to 0: inference-time behaviour).
+    pub fn eval_loss(
+        &mut self,
+        cfg: &TrainConfig,
+        params: &BTreeMap<String, Mat>,
+        n_batches: usize,
+    ) -> Result<f32> {
+        let manifest = self.rt.manifest()?;
+        let entry = manifest
+            .find(&cfg.config, &cfg.method, &cfg.granularity, "loss")
+            .context("no loss artifact")?
+            .clone();
+        let mut corpus = Corpus::new(self.vocab, 0xEEE); // held-out stream
+        let mut total = 0.0f32;
+        for _ in 0..n_batches {
+            let batch = corpus.batch_i32(self.batch, self.seq_len + 1);
+            let mut inputs = Vec::with_capacity(self.spec.len() + 2);
+            for (name, shape) in &self.spec.entries {
+                let mat = params.get(name).with_context(|| format!("missing param {name}"))?;
+                inputs.push(literal_f32(&mat.data, shape)?);
+            }
+            inputs.push(literal_i32(&batch, &[self.batch, self.seq_len + 1])?);
+            inputs.push(scalar_f32(0.0));
+            let out = self.rt.run(&entry.path, &inputs)?;
+            total += to_vec_f32(&out[0])?[0];
+        }
+        Ok(total / n_batches as f32)
+    }
+}
+
+/// Convenience: run a full QAT training + eval, returning
+/// (losses, eval_loss, outcome).
+pub fn train_and_eval(
+    rt: &mut Runtime,
+    cfg: &TrainConfig,
+    eval_batches: usize,
+) -> Result<(TrainOutcome, f32)> {
+    let mut trainer = Trainer::new(rt, cfg)?;
+    let outcome = trainer.run(cfg)?;
+    let eval = trainer.eval_loss(cfg, &outcome.params, eval_batches)?;
+    Ok((outcome, eval))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = crate::test_artifacts_dir();
+        if !dir.join("manifest.tsv").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Runtime::cpu(&dir).unwrap())
+    }
+
+    #[test]
+    fn short_qat_run_decreases_loss() {
+        let Some(mut rt) = runtime() else { return };
+        let cfg = TrainConfig { steps: 12, er_every: 4, ..Default::default() };
+        let mut t = Trainer::new(&mut rt, &cfg).unwrap();
+        let out = t.run(&cfg).unwrap();
+        assert_eq!(out.losses.len(), 12);
+        assert!(out.losses.iter().all(|l| l.is_finite()));
+        assert!(
+            out.losses[11] < out.losses[0],
+            "loss did not decrease: {:?}",
+            out.losses
+        );
+        assert!(!out.er_trace.is_empty());
+        assert!(out.final_lambda < 0.01, "λ must anneal to ~0");
+    }
+
+    #[test]
+    fn eval_loss_runs() {
+        let Some(mut rt) = runtime() else { return };
+        let cfg = TrainConfig { steps: 6, ..Default::default() };
+        let (out, eval) = train_and_eval(&mut rt, &cfg, 2).unwrap();
+        assert!(eval.is_finite());
+        assert!(eval > 0.0);
+        assert_eq!(out.params.len(), 35);
+    }
+
+    #[test]
+    fn init_params_match_spec_shapes() {
+        let Some(mut rt) = runtime() else { return };
+        let cfg = TrainConfig::default();
+        let t = Trainer::new(&mut rt, &cfg).unwrap();
+        let p = t.init_params(0, "sherry34");
+        assert_eq!(p.len(), t.spec.len());
+        for (vals, (_, shape)) in p.iter().zip(&t.spec.entries) {
+            assert_eq!(vals.len(), shape.iter().product::<usize>());
+        }
+    }
+}

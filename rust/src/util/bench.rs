@@ -1,0 +1,114 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Protocol: warmup runs, then `samples` timed runs; report median, MAD
+//! and derived throughput. Benches (`rust/benches/*.rs`, harness = false)
+//! print one table row per case so `cargo bench` regenerates the paper's
+//! tables directly.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One measured case.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median_s: f64,
+    /// Median absolute deviation (s).
+    pub mad_s: f64,
+    pub samples: usize,
+}
+
+impl Measurement {
+    /// items/second at `items` work items per iteration.
+    pub fn throughput(&self, items: f64) -> f64 {
+        if self.median_s <= 0.0 {
+            return 0.0;
+        }
+        items / self.median_s
+    }
+}
+
+/// Benchmark `f`, self-calibrating the batch size so one sample takes
+/// ≥ `min_sample_s`.
+pub fn bench(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> Measurement {
+    bench_with(name, warmup, samples, 0.005, &mut f)
+}
+
+/// [`bench`] with explicit minimum sample time.
+pub fn bench_with(
+    name: &str,
+    warmup: usize,
+    samples: usize,
+    min_sample_s: f64,
+    f: &mut dyn FnMut(),
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    // calibrate batch
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let batch = ((min_sample_s / once).ceil() as usize).max(1);
+
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        times.push(t0.elapsed().as_secs_f64() / batch as f64);
+    }
+    Measurement {
+        name: name.to_string(),
+        median_s: stats::median(&times),
+        mad_s: stats::mad(&times),
+        samples,
+    }
+}
+
+/// Render a bench table (markdown).
+pub fn render(title: &str, rows: &[(String, String)]) -> String {
+    let mut s = format!("\n## {title}\n\n");
+    for (k, v) in rows {
+        s.push_str(&format!("  {k:<38} {v}\n"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = bench("spin", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.median_s > 0.0);
+        assert_eq!(m.samples, 5);
+    }
+
+    #[test]
+    fn throughput_inverse_of_time() {
+        let m = Measurement { name: "x".into(), median_s: 0.5, mad_s: 0.0, samples: 1 };
+        assert_eq!(m.throughput(10.0), 20.0);
+    }
+
+    #[test]
+    fn ordering_detects_slower_code() {
+        // black_box the bounds so release-mode LLVM can't closed-form the
+        // sums away.
+        let fast = bench("fast", 1, 5, || {
+            let n = std::hint::black_box(100u64);
+            std::hint::black_box((0..n).fold(0u64, |a, x| a ^ x.wrapping_mul(31)));
+        });
+        let slow = bench("slow", 1, 5, || {
+            let n = std::hint::black_box(1_000_000u64);
+            std::hint::black_box((0..n).fold(0u64, |a, x| a ^ x.wrapping_mul(31)));
+        });
+        assert!(slow.median_s > fast.median_s);
+    }
+}

@@ -1,0 +1,73 @@
+//! Binary matrix I/O shared with the Python side.
+//!
+//! Format (see `python/compile/golden.py`):
+//! `[u32 rows LE][u32 cols LE][f32 data row-major LE]`.
+//! Used for golden test vectors and model checkpoints.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Read a `(rows, cols, data)` matrix from the golden/checkpoint format.
+pub fn read_mat(path: &Path) -> Result<(usize, usize, Vec<f32>)> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut hdr = [0u8; 8];
+    f.read_exact(&mut hdr)?;
+    let rows = u32::from_le_bytes(hdr[0..4].try_into().unwrap()) as usize;
+    let cols = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+    let n = rows
+        .checked_mul(cols)
+        .context("matrix dims overflow")?;
+    let mut buf = vec![0u8; n * 4];
+    f.read_exact(&mut buf)
+        .with_context(|| format!("short read in {}", path.display()))?;
+    let mut rest = [0u8; 1];
+    if f.read(&mut rest)? != 0 {
+        bail!("trailing bytes in {}", path.display());
+    }
+    let data = buf
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((rows, cols, data))
+}
+
+/// Write a matrix in the shared format.
+pub fn write_mat(path: &Path, rows: usize, cols: usize, data: &[f32]) -> Result<()> {
+    assert_eq!(rows * cols, data.len());
+    let mut f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    f.write_all(&(rows as u32).to_le_bytes())?;
+    f.write_all(&(cols as u32).to_le_bytes())?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for &x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sherry_binio_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.bin");
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        write_mat(&p, 3, 4, &data).unwrap();
+        let (r, c, back) = read_mat(&p).unwrap();
+        assert_eq!((r, c), (3, 4));
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let dir = std::env::temp_dir().join("sherry_binio_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [2, 0, 0, 0, 2, 0, 0, 0, 1, 2, 3]).unwrap();
+        assert!(read_mat(&p).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Shared substrates: RNG, stats, binary I/O, thread pool, timing, and the
+//! in-repo property-testing framework. All dependency-free (the offline
+//! build vendors only the `xla` closure — see DESIGN.md substitutions).
+
+pub mod bench;
+pub mod binio;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use pool::ThreadPool;
+pub use rng::Pcg64;

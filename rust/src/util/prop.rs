@@ -1,0 +1,167 @@
+//! Mini property-testing framework (proptest is unavailable offline; this
+//! provides the subset we need: seeded generators, N-case sweeps, and
+//! greedy input shrinking on failure).
+//!
+//! ```ignore
+//! prop_check("lut matches dense", 200, gen, |case| { ... Ok(()) });
+//! ```
+//! Generators are plain `Fn(&mut Pcg64) -> T`; shrinkers are optional
+//! `Fn(&T) -> Vec<T>` producing smaller candidates.
+
+use super::rng::Pcg64;
+
+/// Result of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Run `cases` random cases of `prop` over inputs from `gen`.
+/// Panics with the seed + failing input `Debug` on the first failure
+/// (after greedy shrinking when `shrink` yields candidates).
+pub fn check_with_shrink<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Pcg64) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    let seed = std::env::var("SHERRY_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEEu64);
+    let mut rng = Pcg64::new(seed, name.len() as u64);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: keep taking the first failing smaller candidate.
+            let mut cur = input.clone();
+            let mut cur_msg = msg;
+            'outer: loop {
+                for cand in shrink(&cur) {
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (seed={seed}, case={case}):\n  input: {cur:?}\n  error: {cur_msg}"
+            );
+        }
+    }
+}
+
+/// [`check_with_shrink`] without shrinking.
+pub fn check<T: std::fmt::Debug + Clone>(
+    name: &str,
+    cases: usize,
+    gen: impl Fn(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> PropResult,
+) {
+    check_with_shrink(name, cases, gen, |_| Vec::new(), prop);
+}
+
+/// Generator helpers.
+pub mod gens {
+    use super::*;
+
+    /// Uniform usize in [lo, hi].
+    pub fn usize_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+        lo + rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Vec of standard normals with random length in [lo_len, hi_len].
+    pub fn normal_vec(rng: &mut Pcg64, lo_len: usize, hi_len: usize) -> Vec<f32> {
+        let n = usize_in(rng, lo_len, hi_len);
+        rng.normal_vec(n)
+    }
+
+    /// Random ternary vector in {-1, 0, +1}.
+    pub fn ternary_vec(rng: &mut Pcg64, n: usize) -> Vec<i8> {
+        (0..n).map(|_| (rng.below(3) as i8) - 1).collect()
+    }
+
+    /// Random 3:4-sparse ternary vector (n % 4 == 0): one zero per block.
+    pub fn sparse34_vec(rng: &mut Pcg64, n: usize) -> Vec<i8> {
+        assert_eq!(n % 4, 0);
+        let mut t = Vec::with_capacity(n);
+        for _ in 0..n / 4 {
+            let z = rng.below(4) as usize;
+            for lane in 0..4 {
+                if lane == z {
+                    t.push(0i8);
+                } else {
+                    t.push(if rng.below(2) == 0 { -1 } else { 1 });
+                }
+            }
+        }
+        t
+    }
+}
+
+/// Shrinker: halve the length of a Vec (front half), useful default.
+pub fn shrink_vec_halves<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum is commutative", 100, |r| (r.next_f32(), r.next_f32()), |&(a, b)| {
+            if (a + b - (b + a)).abs() < 1e-9 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_context() {
+        check("always fails", 10, |r| r.next_u64(), |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn shrinking_reduces_input() {
+        let result = std::panic::catch_unwind(|| {
+            check_with_shrink(
+                "vec contains 7",
+                100,
+                |r| (0..32).map(|_| r.below(10)).collect::<Vec<u64>>(),
+                shrink_vec_halves,
+                |v| {
+                    if v.contains(&7) {
+                        Err("has a 7".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            )
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The shrunk failing input should be much smaller than 32 elems.
+        let input_part = msg.split("input: ").nth(1).unwrap();
+        let commas = input_part.split("error:").next().unwrap().matches(',').count();
+        assert!(commas < 16, "shrinker did not reduce: {msg}");
+    }
+
+    #[test]
+    fn sparse34_gen_invariant() {
+        let mut r = Pcg64::seeded(1);
+        for _ in 0..50 {
+            let t = gens::sparse34_vec(&mut r, 64);
+            for b in t.chunks(4) {
+                assert_eq!(b.iter().filter(|&&x| x == 0).count(), 1);
+            }
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! Summary statistics for benchmarks and experiment tables.
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Median (interpolated for even lengths).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+/// Median absolute deviation — the robust spread used by the bench harness.
+pub fn mad(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = median(xs);
+    let devs: Vec<f64> = xs.iter().map(|x| (x - m).abs()).collect();
+    median(&devs)
+}
+
+/// Histogram with `bins` equal-width buckets over [lo, hi].
+pub fn histogram(xs: &[f32], lo: f32, hi: f32, bins: usize) -> Vec<u64> {
+    let mut h = vec![0u64; bins];
+    let w = (hi - lo) / bins as f32;
+    if w <= 0.0 {
+        return h;
+    }
+    for &x in xs {
+        if x >= lo && x < hi {
+            let b = ((x - lo) / w) as usize;
+            h[b.min(bins - 1)] += 1;
+        } else if x == hi {
+            h[bins - 1] += 1;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert_eq!(mean(&xs), 5.0);
+        assert!((std_dev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn mad_robust_to_outlier() {
+        let xs = [1.0, 1.1, 0.9, 1.0, 100.0];
+        assert!(mad(&xs) < 0.2);
+    }
+
+    #[test]
+    fn histogram_counts_everything_in_range() {
+        let xs = [0.0f32, 0.5, 0.99, 1.0, -0.1];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h.iter().sum::<u64>(), 4); // -0.1 excluded
+        assert_eq!(h[0], 1); // 0.0
+        assert_eq!(h[1], 3); // 0.5 (boundary), 0.99, 1.0 (hi → last bin)
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(mad(&[]), 0.0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Wall-clock timing helpers for the bench harness and metrics.
+
+use std::time::{Duration, Instant};
+
+/// Measure `f`, returning (result, elapsed).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Simple stopwatch accumulating named segments (used by the training
+/// driver to attribute step time to data/compute/logging).
+#[derive(Default)]
+pub struct Stopwatch {
+    segments: Vec<(String, Duration)>,
+    current: Option<(String, Instant)>,
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Start (or switch to) segment `name`, closing any open segment.
+    pub fn start(&mut self, name: &str) {
+        self.stop();
+        self.current = Some((name.to_string(), Instant::now()));
+    }
+
+    /// Close the open segment, if any.
+    pub fn stop(&mut self) {
+        if let Some((name, t0)) = self.current.take() {
+            self.segments.push((name, t0.elapsed()));
+        }
+    }
+
+    /// Total time attributed to `name` across all segments.
+    pub fn total(&self, name: &str) -> Duration {
+        self.segments
+            .iter()
+            .filter(|(n, _)| n == name)
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    /// (name, total) for each distinct segment, in first-seen order.
+    pub fn summary(&self) -> Vec<(String, Duration)> {
+        let mut order: Vec<String> = Vec::new();
+        for (n, _) in &self.segments {
+            if !order.contains(n) {
+                order.push(n.clone());
+            }
+        }
+        order.into_iter().map(|n| (n.clone(), self.total(&n))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result() {
+        let (x, d) = time_it(|| 21 * 2);
+        assert_eq!(x, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.start("b");
+        std::thread::sleep(Duration::from_millis(1));
+        sw.start("a");
+        sw.stop();
+        assert!(sw.total("a") >= Duration::from_millis(2));
+        assert!(sw.total("b") >= Duration::from_millis(1));
+        assert_eq!(sw.summary().len(), 2);
+        assert_eq!(sw.summary()[0].0, "a");
+    }
+}
