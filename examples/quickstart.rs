@@ -10,7 +10,7 @@
 //! Run: `cargo run --release --example quickstart`
 
 use sherry::engine::lut;
-use sherry::pack::{Format, Packed34, PackedMatrix};
+use sherry::pack::{Format, Packed34, PackedI2S, PackedTl2};
 use sherry::quant::{quantize, reconstruction_error, Granularity, Method};
 use sherry::tensor::Mat;
 use sherry::util::Pcg64;
@@ -50,14 +50,16 @@ fn main() {
         p34.sign_bytes_per_ch,
     );
     let qd = quantize(&w, Method::AbsMean, Granularity::PerChannel);
-    for f in [Format::Tl2, Format::I2S] {
-        let p = sherry::pack::pack(&qd, f);
+    for (f, bytes) in [
+        (Format::Tl2, PackedTl2::from_ternary(&qd).weight_bytes()),
+        (Format::I2S, PackedI2S::from_ternary(&qd).weight_bytes()),
+    ] {
         println!(
             "{:<6} {:>5.2}-bit: {} weight bytes ({:.3} bits/weight)",
             f.name(),
             f.bits_per_weight(),
-            p.weight_bytes(),
-            p.weight_bytes() as f32 * 8.0 / n
+            bytes,
+            bytes as f32 * 8.0 / n
         );
     }
     // round-trip check

@@ -1,15 +1,23 @@
 //! Kernel microbench: per-format LUT GEMV across layer widths — the §Perf
-//! workhorse (EXPERIMENTS.md §Perf before/after numbers come from here).
+//! workhorse (EXPERIMENTS.md §Perf before/after numbers come from here) —
+//! plus the batched LUT-GEMM sweep over B ∈ {1, 4, 16, 64} that tracks
+//! the continuous-batching win (written to `BENCH_batched_gemm.json`).
 //!
 //! Run: `cargo bench --bench gemv_kernels`
 
 use sherry::engine::lut::{self, TL2_LUT_STRIDE};
+use sherry::engine::{Scratch, TernaryKernel};
 use sherry::pack::{Packed34, PackedI2S, PackedTl2};
 use sherry::quant::{quantize, Granularity, Method};
 use sherry::tensor::{gemv_f32, Mat};
-use sherry::util::{bench::bench, Pcg64};
+use sherry::util::{bench::bench, Pcg64, ThreadPool};
 
 fn main() {
+    gemv_table();
+    batched_gemm_sweep();
+}
+
+fn gemv_table() {
     println!("\n### GEMV kernel microbenchmarks (median, warm cache)\n");
     println!("| d_in x d_out | kernel | µs | Gweights/s |");
     println!("|---|---|---|---|");
@@ -67,4 +75,72 @@ fn main() {
 
 fn print_row(d_in: usize, d_out: usize, name: &str, t: f64, n: f64) {
     println!("| {d_in}x{d_out} | {name} | {:.1} | {:.2} |", t * 1e6, n / t / 1e9);
+}
+
+/// Batched LUT-GEMM sweep: one fused `gemm_nt` over B rows vs B
+/// independent `gemv` calls, per packed format. Emits
+/// `BENCH_batched_gemm.json` so the perf trajectory captures the
+/// batching win over time.
+fn batched_gemm_sweep() {
+    let (d_in, d_out) = (3200usize, 3200usize);
+    let batches = [1usize, 4, 16, 64];
+    let pool = ThreadPool::new(ThreadPool::default_size());
+    let mut rng = Pcg64::seeded(11);
+    let w = Mat::randn(&mut rng, d_in, d_out, 0.02);
+    let qs = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+    let qd = quantize(&w, Method::AbsMean, Granularity::PerChannel);
+    let kernels: Vec<(&str, Box<dyn TernaryKernel>)> = vec![
+        ("sherry", Box::new(Packed34::from_ternary(&qs))),
+        ("tl2", Box::new(PackedTl2::from_ternary(&qd))),
+        ("i2_s", Box::new(PackedI2S::from_ternary(&qd))),
+    ];
+
+    println!("\n### Batched LUT-GEMM ({d_in}x{d_out}, {} workers)\n", pool.size());
+    println!("| kernel | B | fused µs/tok | B×gemv µs/tok | speedup | Gweights/s |");
+    println!("|---|---|---|---|---|---|");
+    let n = (d_in * d_out) as f64;
+    let mut records = Vec::new();
+    for (name, k) in &kernels {
+        for &b in &batches {
+            let xs = rng.normal_vec(b * d_in);
+            let mut ys = vec![0.0f32; b * d_out];
+            let mut scratch = Scratch::default();
+            let fused = bench(name, 1, 7, || {
+                k.gemm_nt(&xs, &mut ys, b, &mut scratch, Some(&pool));
+                std::hint::black_box(&ys);
+            });
+            let singles = bench(name, 1, 7, || {
+                for bi in 0..b {
+                    let (x, y) =
+                        (&xs[bi * d_in..(bi + 1) * d_in], &mut ys[bi * d_out..(bi + 1) * d_out]);
+                    k.gemv(x, y, &mut scratch);
+                }
+                std::hint::black_box(&ys);
+            });
+            let fused_tok = fused.median_s / b as f64;
+            let single_tok = singles.median_s / b as f64;
+            println!(
+                "| {name} | {b} | {:.1} | {:.1} | {:.2}x | {:.2} |",
+                fused_tok * 1e6,
+                single_tok * 1e6,
+                single_tok / fused_tok,
+                n / fused_tok / 1e9,
+            );
+            records.push(format!(
+                "    {{\"kernel\": \"{name}\", \"batch\": {b}, \"d_in\": {d_in}, \"d_out\": {d_out}, \
+                 \"fused_us_per_tok\": {:.3}, \"gemv_us_per_tok\": {:.3}, \"speedup\": {:.4}, \
+                 \"gweights_per_s\": {:.4}}}",
+                fused_tok * 1e6,
+                single_tok * 1e6,
+                single_tok / fused_tok,
+                n / fused_tok / 1e9,
+            ));
+        }
+    }
+    let json = format!("{{\n  \"bench\": \"batched_gemm\",\n  \"records\": [\n{}\n  ]\n}}\n", records.join(",\n"));
+    let path = "BENCH_batched_gemm.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
 }

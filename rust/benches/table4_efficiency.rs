@@ -10,8 +10,7 @@
 //!
 //! Run: `cargo bench --bench table4_efficiency` (FAST=1 env for CI sizes)
 
-use sherry::engine::{lut, Scratch};
-use sherry::engine::{NativeConfig, QuantLinear};
+use sherry::engine::{NativeConfig, QuantLinear, Scratch};
 use sherry::pack::Format;
 use sherry::quant::{quantize, Granularity, Method};
 use sherry::tensor::Mat;

@@ -1,5 +1,10 @@
 //! Continuous batcher: admits waiting requests into the active decode set
 //! under a token budget, FIFO within arrival order (no starvation).
+//!
+//! The active set is the decode round's batch: the server feeds every
+//! active sequence's next token through one fused
+//! `TernaryModel::forward_batch` call per (micro-)step, so admission here
+//! directly sets the LUT-GEMM batch width the kernels amortize over.
 
 use std::collections::VecDeque;
 
@@ -25,11 +30,14 @@ pub struct Batcher {
     cfg: BatcherConfig,
     waiting: VecDeque<Request>,
     active: Vec<(Request, usize)>, // (request, generated so far)
+    /// Tokens reserved by the active set (kept incrementally so admission
+    /// is O(1) per candidate instead of re-summing the active set).
+    reserved: usize,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        Self { cfg, waiting: VecDeque::new(), active: Vec::new() }
+        Self { cfg, waiting: VecDeque::new(), active: Vec::new(), reserved: 0 }
     }
 
     /// Enqueue an arriving request.
@@ -47,33 +55,34 @@ impl Batcher {
 
     /// Tokens *reserved* by active sequences (prompt + full generation
     /// allowance): admission is pessimistic so a round never overflows.
-    fn reserved_tokens(&self) -> usize {
-        self.active
-            .iter()
-            .map(|(r, _)| r.prompt.len() + r.max_new_tokens)
-            .sum()
+    pub fn reserved_tokens(&self) -> usize {
+        self.reserved
     }
 
     /// Admit as many waiting requests as fit (FIFO; head-of-line blocking
     /// by design so no request starves).
     pub fn admit(&mut self) -> usize {
+        self.admit_up_to(usize::MAX)
+    }
+
+    /// [`Batcher::admit`] additionally capped at `limit` new admissions —
+    /// the server passes the KV pool's free capacity so every admitted
+    /// sequence is guaranteed a cache (an active entry without one would
+    /// starve and desynchronize the server's per-sequence state).
+    pub fn admit_up_to(&mut self, limit: usize) -> usize {
         let mut admitted = 0;
-        while self.active.len() < self.cfg.max_active {
+        while self.active.len() < self.cfg.max_active && admitted < limit {
             let Some(front) = self.waiting.front() else { break };
             let need = front.prompt.len() + front.max_new_tokens;
-            if self.reserved_tokens() + need > self.cfg.token_budget && !self.active.is_empty() {
+            if self.reserved + need > self.cfg.token_budget && !self.active.is_empty() {
                 break; // wait for space; never skip the head
             }
             let r = self.waiting.pop_front().unwrap();
+            self.reserved += need;
             self.active.push((r, 0));
             admitted += 1;
         }
         admitted
-    }
-
-    /// Current decode round: indices of active sequences.
-    pub fn round(&self) -> Vec<usize> {
-        (0..self.active.len()).collect()
     }
 
     /// Record one generated token for active seq `i`; returns true if the
@@ -89,7 +98,9 @@ impl Batcher {
     pub fn retire(&mut self, finished: &[usize]) -> Vec<(Request, usize)> {
         let mut out = Vec::with_capacity(finished.len());
         for &i in finished.iter().rev() {
-            out.push(self.active.swap_remove(i));
+            let entry = self.active.swap_remove(i);
+            self.reserved -= entry.0.prompt.len() + entry.0.max_new_tokens;
+            out.push(entry);
         }
         out.reverse();
         out
@@ -158,6 +169,20 @@ mod tests {
         assert_eq!(done[0].0.id, 1);
         assert_eq!(b.active_len(), 1);
         assert_eq!(b.active()[0].0.id, 2);
+    }
+
+    #[test]
+    fn reserved_tokens_track_admit_and_retire() {
+        let mut b = Batcher::new(BatcherConfig { max_active: 4, token_budget: 100 });
+        b.submit(req(1, 4, 6)); // 10
+        b.submit(req(2, 3, 7)); // 10
+        assert_eq!(b.reserved_tokens(), 0);
+        b.admit();
+        assert_eq!(b.reserved_tokens(), 20);
+        b.retire(&[0]);
+        assert_eq!(b.reserved_tokens(), 10);
+        b.retire(&[0]);
+        assert_eq!(b.reserved_tokens(), 0);
     }
 
     #[test]

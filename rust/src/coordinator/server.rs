@@ -1,14 +1,20 @@
 //! The serving loop: trace-driven request arrival → continuous batching →
-//! parallel decode rounds on the worker pool → completions + metrics.
+//! fused batched decode rounds on the LUT engine → completions + metrics.
 //!
-//! Decode parallelism is *across sequences*: each active sequence owns a
-//! KV cache from the pool and decodes one token per round; rounds fan out
-//! over the thread pool with one LUT `Scratch` per worker. (Environment
-//! is offline, so "arrival" is simulated from the trace clock; everything
-//! downstream of arrival is the real engine.)
+//! Decode parallelism is *inside the kernel*: each round gathers every
+//! active sequence's next token and issues one
+//! [`TernaryModel::forward_batch`] call — one fused LUT-GEMM per layer
+//! with all sequences' activation tables resident, fanned out over
+//! output-channel tiles on the worker pool. (The previous design decoded
+//! each sequence independently on its own worker, which re-walked every
+//! packed weight plane once per sequence per layer.) Newly admitted
+//! sequences prefill their whole prompt inside their first round via
+//! ragged micro-steps that stay fused across sequences at the same prompt
+//! offset. Because batched and single-row kernels are bit-for-bit
+//! identical, a request's tokens do not depend on which sequences share
+//! its rounds. (Environment is offline, so "arrival" is simulated from
+//! the trace clock; everything downstream of arrival is the real engine.)
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 use super::{Batcher, BatcherConfig, Completion, KvPool, Metrics, Request};
@@ -90,8 +96,9 @@ impl<'m> Server<'m> {
         let mut metrics = Metrics { requests_in: trace.len() as u64, ..Default::default() };
         let mut completions = Vec::new();
         let mut states: Vec<SeqState> = Vec::new();
+        let mut scratch = Scratch::default();
         let mut next_arrival = 0usize;
-        let tokens_done = AtomicU64::new(0);
+        let mut tokens_done = 0u64;
 
         while next_arrival < trace.len() || !batcher.is_idle() {
             // Admit arrivals whose time has come on the wall clock.
@@ -109,19 +116,17 @@ impl<'m> Server<'m> {
                 continue;
             }
 
-            // Admission bounded by both the batcher and the KV pool.
+            // Admission bounded by both the batcher and the KV pool:
+            // capping admissions at the pool's free capacity guarantees
+            // every active entry owns a cache, keeping `states[i]` and
+            // `batcher.active()[i]` aligned through retire's swap_remove
+            // mirroring (a cache-less entry would starve and desync them).
             let before = batcher.active_len();
-            batcher.admit();
+            batcher.admit_up_to(kv.available());
             for _ in before..batcher.active_len() {
-                let cache = match kv.acquire() {
-                    Some(c) => c,
-                    None => {
-                        // KV pool exhausted: put the last admitted back.
-                        // (batcher max_active should be ≤ kv capacity; this
-                        // is a safety valve.)
-                        break;
-                    }
-                };
+                let cache = kv
+                    .acquire()
+                    .expect("admission is capped at kv.available(), a cache must be free");
                 let (req, _) = &batcher.active()[states.len()];
                 states.push(SeqState {
                     cache,
@@ -139,55 +144,82 @@ impl<'m> Server<'m> {
                 continue;
             }
 
-            // One decode round across active sequences, in parallel.
+            // One decode round: every sequence with a cache contributes one
+            // generated token. Micro-step 0 fuses all in-decode sequences
+            // with the first prompt token of freshly admitted ones; later
+            // micro-steps continue the (ragged) prefill until every prompt
+            // is consumed. Each micro-step is ONE forward_batch — one fused
+            // LUT-GEMM per layer across its sequences.
             {
-                let model = self.model;
-                let active: Vec<(usize, Request)> = batcher
-                    .active()
-                    .iter()
-                    .enumerate()
-                    .map(|(i, (r, _))| (i, r.clone()))
-                    .collect();
-                let states_mu: Vec<Mutex<&mut SeqState>> =
-                    states.iter_mut().map(Mutex::new).collect();
-                let td = &tokens_done;
-                self.pool.scope(|s| {
-                    for (i, req) in active {
-                        let st_mu = &states_mu[i];
-                        s.spawn(move || {
-                            let mut st = st_mu.lock().unwrap();
-                            let mut scratch = Scratch::default();
-                            if !st.prompt_done {
-                                // Prefill: feed the whole prompt.
-                                let mut logits = Vec::new();
-                                for &t in &req.prompt {
-                                    logits = model.forward_one(t, &mut st.cache, &mut scratch);
-                                }
-                                st.last_token = argmax(&logits) as u32;
-                                st.prompt_done = true;
+                let active = batcher.active();
+                let n_act = states.len();
+                let mut step = 0usize;
+                loop {
+                    // (index, token, emits-an-output-this-round)
+                    let mut plan: Vec<(usize, u32, bool)> = Vec::new();
+                    for (i, st) in states.iter().enumerate().take(n_act) {
+                        let (req, _) = &active[i];
+                        let entry = if st.prompt_done || req.prompt.is_empty() {
+                            // decode step (degenerate empty prompt decodes
+                            // straight from its placeholder token)
+                            if step == 0 {
+                                Some((st.last_token, true))
                             } else {
-                                let tok = st.last_token;
-                                let logits = model.forward_one(tok, &mut st.cache, &mut scratch);
-                                st.last_token = argmax(&logits) as u32;
+                                None
                             }
-                            let last = st.last_token;
-                            st.tokens.push(last);
-                            td.fetch_add(1, Ordering::Relaxed);
-                        });
+                        } else if step < req.prompt.len() {
+                            Some((req.prompt[step], step + 1 == req.prompt.len()))
+                        } else {
+                            None
+                        };
+                        if let Some((tok, emits)) = entry {
+                            plan.push((i, tok, emits));
+                        }
                     }
-                });
+                    if plan.is_empty() {
+                        break;
+                    }
+                    let toks: Vec<u32> = plan.iter().map(|&(_, t, _)| t).collect();
+                    // Disjoint &mut caches for the selected sequences
+                    // (plan indices are strictly ascending).
+                    let mut sel: Vec<&mut SeqState> = {
+                        let mut picked = Vec::with_capacity(plan.len());
+                        let mut it = plan.iter().map(|&(i, _, _)| i).peekable();
+                        for (i, st) in states.iter_mut().enumerate() {
+                            if it.peek() == Some(&i) {
+                                picked.push(st);
+                                it.next();
+                            }
+                        }
+                        picked
+                    };
+                    let mut caches: Vec<&mut KvCache> =
+                        sel.iter_mut().map(|st| &mut st.cache).collect();
+                    let logits =
+                        self.model.forward_batch(&toks, &mut caches, &mut scratch, Some(&self.pool));
+                    drop(caches);
+                    for (row, (st, &(_, _, emits))) in sel.iter_mut().zip(plan.iter()).enumerate() {
+                        if emits {
+                            let next = argmax(logits.row(row)) as u32;
+                            st.last_token = next;
+                            st.tokens.push(next);
+                            st.prompt_done = true;
+                            tokens_done += 1;
+                        }
+                    }
+                    step += 1;
+                }
             }
             metrics.decode_rounds += 1;
 
             // Bookkeeping: advance, record first-token times, retire.
             let now = clock(t0);
             let mut finished = Vec::new();
-            for i in 0..batcher.active_len() {
-                if states[i].first_token_at.is_none() {
-                    states[i].first_token_at = Some(now);
+            for (i, st) in states.iter_mut().enumerate() {
+                if st.first_token_at.is_none() {
+                    st.first_token_at = Some(now);
                 }
-                let done = batcher.advance(i)
-                    || states[i].cache.len + 1 >= self.model.cfg.seq_len;
+                let done = batcher.advance(i) || st.cache.len + 1 >= self.model.cfg.seq_len;
                 if done {
                     finished.push(i);
                 }
@@ -195,10 +227,7 @@ impl<'m> Server<'m> {
             // retire uses swap_remove; mirror it on `states`.
             for &i in finished.iter().rev() {
                 let st = states.swap_remove(i);
-                let (req, _gen) = (
-                    batcher.active()[i].0.clone(),
-                    batcher.active()[i].1,
-                );
+                let req = batcher.active()[i].0.clone();
                 kv.release(st.cache);
                 completions.push(Completion {
                     id: req.id,
@@ -213,7 +242,7 @@ impl<'m> Server<'m> {
         }
 
         metrics.requests_done = completions.len() as u64;
-        metrics.tokens_generated = tokens_done.load(Ordering::Relaxed);
+        metrics.tokens_generated = tokens_done;
         metrics.wall_seconds = clock(t0);
         (completions, metrics)
     }
@@ -271,6 +300,50 @@ mod tests {
         c2.sort_by_key(|c| c.id);
         for (a, b) in c1.iter().zip(&c2) {
             assert_eq!(a.tokens, b.tokens);
+        }
+    }
+
+    #[test]
+    fn batched_serving_matches_single_stream_decoding() {
+        // The fused decode rounds must produce exactly the tokens a
+        // single-stream greedy decode of each request produces — batching
+        // is a throughput optimization, never a behavior change.
+        let m = model();
+        let spec = TraceSpec { n_requests: 4, mean_interarrival_s: 0.0, prompt_len: 5, max_new_tokens: 6, seed: 11 };
+        let reqs = spec.generate(m.cfg.vocab_size);
+        let (mut served, _) = serve_trace(&m, ServerConfig::default(), spec);
+        served.sort_by_key(|c| c.id);
+        let mut scratch = Scratch::default();
+        for (req, comp) in reqs.iter().zip(&served) {
+            assert_eq!(req.id, comp.id);
+            let mut cache = KvCache::new(&m.cfg);
+            let expect = m.generate(&req.prompt, req.max_new_tokens, &mut cache, &mut scratch);
+            assert_eq!(expect, comp.tokens, "request {}", req.id);
+        }
+    }
+
+    #[test]
+    fn kv_pool_smaller_than_max_active_still_serves_everything() {
+        // Misconfigured max_active > kv_capacity must degrade to
+        // kv_capacity-way batching, not starve or mispair sequences.
+        let m = model();
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_active: 4, token_budget: 100_000 },
+            kv_capacity: 2,
+            workers: 2,
+        };
+        let spec =
+            TraceSpec { n_requests: 6, mean_interarrival_s: 0.0, prompt_len: 3, max_new_tokens: 4, seed: 5 };
+        let reqs = spec.generate(m.cfg.vocab_size);
+        let (mut completions, metrics) = serve_trace(&m, cfg, spec);
+        assert_eq!(completions.len(), 6);
+        assert_eq!(metrics.tokens_generated, 6 * 4);
+        completions.sort_by_key(|c| c.id);
+        let mut scratch = Scratch::default();
+        for (req, comp) in reqs.iter().zip(&completions) {
+            let mut cache = KvCache::new(&m.cfg);
+            let expect = m.generate(&req.prompt, req.max_new_tokens, &mut cache, &mut scratch);
+            assert_eq!(expect, comp.tokens, "request {} got another request's stream", req.id);
         }
     }
 

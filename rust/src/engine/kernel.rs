@@ -1,0 +1,475 @@
+//! The unified `TernaryKernel` trait: one dispatch surface for every
+//! weight format the engine can serve (Sherry 3:4, TL2, I2_S, dense f32).
+//!
+//! This replaces the three parallel dispatch mechanisms the engine grew up
+//! with (a `Weights` enum in the linear layer, a `Box<dyn PackedMatrix>`
+//! factory in `pack/`, and per-format free functions). A kernel exposes
+//! two entry points:
+//!
+//! * [`TernaryKernel::gemv`] — single-row y = W·x (the classic decode
+//!   path);
+//! * [`TernaryKernel::gemm_nt`] — batched Y = X·Wᵀ over `batch` activation
+//!   rows: all activation LUTs are built **up front**, then one pass over
+//!   the packed weight planes indexes every row's LUT, parallelized over
+//!   output-channel tiles on the shared [`ThreadPool`]. This is what turns
+//!   the continuous batcher's decode round into a single fused mpGEMM per
+//!   layer instead of `batch` independent GEMVs.
+//!
+//! Implementations provide three primitives — `lut_len` / `build_luts` /
+//! `gemm_tile` — and inherit both entry points, which therefore share one
+//! code path: batched and single-row execution are bit-for-bit identical
+//! per (row, channel) by construction (asserted by the parity tests
+//! below). See DESIGN.md §Kernel for the tiling scheme.
+
+use crate::engine::lut;
+use crate::pack::{Packed34, PackedI2S, PackedTl2};
+use crate::tensor::gemv_f32;
+use crate::util::ThreadPool;
+
+/// Output channels per parallel tile of [`TernaryKernel::gemm_nt`]. Small
+/// enough for load balance on wide layers, large enough that the per-tile
+/// LUT walk amortizes the spawn overhead.
+const GEMM_TILE_J: usize = 64;
+
+/// Reusable LUT scratch for the kernels (one per worker/caller context).
+///
+/// One buffer serves every format: a layer claims exactly the length it
+/// needs via [`Scratch::lut_buf`]. The returned slice is **explicitly
+/// truncated to the claim**, so a stale tail from a larger layer's claim
+/// is unreachable through the slice. *Within* the claim, correctness
+/// rests on the builder-totality contract — every builder overwrites
+/// every entry of the region it claims (`build_luts34` writes all 16
+/// entries per block; `build_luts_tl2` zeroes its padding lanes 27..32
+/// per group; pinned by `tl2_builder_fully_owns_its_region`) — because
+/// reused capacity is NOT re-zeroed per claim: claim sizes alternate
+/// between the d_model- and d_ff-shaped layers every few calls, so a
+/// per-claim memset (or any zero-on-size-change memo) would burn
+/// bandwidth in the decode hot path for lanes the kernels never read.
+/// A new format whose builder skips entries must zero them itself.
+#[derive(Default, Clone)]
+pub struct Scratch {
+    luts: Vec<f32>,
+}
+
+impl Scratch {
+    /// Claim a LUT buffer of exactly `need` floats.
+    pub fn lut_buf(&mut self, need: usize) -> &mut [f32] {
+        if self.luts.len() < need {
+            self.luts.resize(need, 0.0); // growth arrives zeroed
+        }
+        &mut self.luts[..need]
+    }
+}
+
+/// Shared mutable output pointer for the tile fan-out. Tiles write
+/// disjoint channel ranges, so handing each tile its own `&mut` sub-slice
+/// derived from this pointer is sound (same contract as `chunks_mut`,
+/// just strided per batch row).
+#[derive(Clone, Copy)]
+struct OutPtr(*mut f32);
+
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+/// A packed (or dense) weight matrix plus the kernel that multiplies it.
+///
+/// Shapes follow the engine convention: `d_out` output channels ×
+/// `d_in` inputs, activations as flat `f32` rows.
+pub trait TernaryKernel: Send + Sync {
+    /// Number of input features.
+    fn d_in(&self) -> usize;
+
+    /// Number of output channels.
+    fn d_out(&self) -> usize;
+
+    /// Bytes of the stored weight planes (size accounting for Table 4;
+    /// excludes per-channel scales).
+    fn weight_bytes(&self) -> usize;
+
+    /// f32 scratch entries one activation row's lookup tables occupy
+    /// (0 for LUT-free formats).
+    fn lut_len(&self) -> usize;
+
+    /// Build one activation row's tables into `luts`
+    /// (`luts.len() == self.lut_len()`). No-op for LUT-free formats.
+    fn build_luts(&self, x: &[f32], luts: &mut [f32]);
+
+    /// Accumulate output channels `[j0, j1)` for `batch` rows.
+    ///
+    /// `xs` is `batch × d_in`; `luts` holds the prebuilt tables at stride
+    /// `lut_len()` per row (empty for LUT-free formats, which read `xs`
+    /// directly); `out` is `batch × (j1-j0)` row-major with per-channel α
+    /// already applied.
+    fn gemm_tile(&self, xs: &[f32], luts: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]);
+
+    /// Single-row y = W·x. Same code path as [`TernaryKernel::gemm_nt`]
+    /// with `batch = 1`.
+    fn gemv(&self, x: &[f32], y: &mut [f32], scratch: &mut Scratch) {
+        assert_eq!(x.len(), self.d_in());
+        assert_eq!(y.len(), self.d_out());
+        let luts = scratch.lut_buf(self.lut_len());
+        self.build_luts(x, luts);
+        self.gemm_tile(x, luts, 1, 0, self.d_out(), y);
+    }
+
+    /// Batched Y = X·Wᵀ: `xs` is `batch × d_in` row-major, `ys` is
+    /// `batch × d_out` row-major.
+    ///
+    /// Phase 1 builds all `batch` activation LUTs up front in `scratch`;
+    /// phase 2 makes one pass over the packed weight planes with every
+    /// LUT resident, tiled over output channels and fanned out on `pool`
+    /// (`None`, or a narrow layer, runs the single full-width tile
+    /// inline). Tile boundaries never change results: channels are
+    /// independent and per-(row, channel) accumulation order is fixed by
+    /// `gemm_tile`.
+    fn gemm_nt(
+        &self,
+        xs: &[f32],
+        ys: &mut [f32],
+        batch: usize,
+        scratch: &mut Scratch,
+        pool: Option<&ThreadPool>,
+    ) {
+        let (d_in, d_out) = (self.d_in(), self.d_out());
+        assert_eq!(xs.len(), batch * d_in, "xs must be batch × d_in");
+        assert_eq!(ys.len(), batch * d_out, "ys must be batch × d_out");
+        if batch == 0 || d_out == 0 {
+            return;
+        }
+        let ll = self.lut_len();
+        let luts = scratch.lut_buf(ll * batch);
+        for bi in 0..batch {
+            self.build_luts(&xs[bi * d_in..(bi + 1) * d_in], &mut luts[bi * ll..(bi + 1) * ll]);
+        }
+        let luts: &[f32] = luts;
+        match pool {
+            Some(pool) if d_out > GEMM_TILE_J => {
+                let n_tiles = d_out.div_ceil(GEMM_TILE_J);
+                let out = OutPtr(ys.as_mut_ptr());
+                pool.par_for(n_tiles, |t| {
+                    let j0 = t * GEMM_TILE_J;
+                    let j1 = (j0 + GEMM_TILE_J).min(d_out);
+                    let w = j1 - j0;
+                    // One small alloc per tile job, amortized over the
+                    // batch × tile_width × d_in accumulate below (the
+                    // serial/B=1 paths below and in gemv are alloc-free).
+                    let mut tile = vec![0.0f32; batch * w];
+                    self.gemm_tile(xs, luts, batch, j0, j1, &mut tile);
+                    for bi in 0..batch {
+                        // SAFETY: tiles partition [0, d_out) disjointly, so
+                        // each (row, tile) destination slice is disjoint
+                        // from every other tile's writes, and the borrow of
+                        // `ys` is held (unused) across the scoped fan-out.
+                        let dst = unsafe {
+                            std::slice::from_raw_parts_mut(out.0.add(bi * d_out + j0), w)
+                        };
+                        dst.copy_from_slice(&tile[bi * w..(bi + 1) * w]);
+                    }
+                });
+            }
+            _ => {
+                // One full-width tile: `ys`'s batch-major layout is exactly
+                // the tile layout at (j0, j1) = (0, d_out).
+                self.gemm_tile(xs, luts, batch, 0, d_out, ys);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Format implementations
+// ---------------------------------------------------------------------------
+
+impl TernaryKernel for Packed34 {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn weight_bytes(&self) -> usize {
+        Packed34::weight_bytes(self)
+    }
+
+    fn lut_len(&self) -> usize {
+        (self.d_in / 4) * 16
+    }
+
+    fn build_luts(&self, x: &[f32], luts: &mut [f32]) {
+        lut::build_luts34(x, luts);
+    }
+
+    fn gemm_tile(&self, _xs: &[f32], luts: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        lut::gemm_pack34_preluts(self, luts, TernaryKernel::lut_len(self), batch, j0, j1, out);
+    }
+}
+
+impl TernaryKernel for PackedTl2 {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn weight_bytes(&self) -> usize {
+        PackedTl2::weight_bytes(self)
+    }
+
+    fn lut_len(&self) -> usize {
+        self.n_groups() * lut::TL2_LUT_STRIDE
+    }
+
+    fn build_luts(&self, x: &[f32], luts: &mut [f32]) {
+        lut::build_luts_tl2(x, luts);
+    }
+
+    fn gemm_tile(&self, _xs: &[f32], luts: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        lut::gemm_tl2_preluts(self, luts, TernaryKernel::lut_len(self), batch, j0, j1, out);
+    }
+}
+
+impl TernaryKernel for PackedI2S {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn weight_bytes(&self) -> usize {
+        PackedI2S::weight_bytes(self)
+    }
+
+    fn lut_len(&self) -> usize {
+        0 // decode-and-add: no activation preprocessing
+    }
+
+    fn build_luts(&self, _x: &[f32], _luts: &mut [f32]) {}
+
+    fn gemm_tile(&self, xs: &[f32], _luts: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        lut::gemm_i2s(self, xs, batch, j0, j1, out);
+    }
+}
+
+/// Dense f32 kernel — the BF16-stand-in baseline, behind the same trait so
+/// the engine has exactly one dispatch path.
+pub struct DenseKernel {
+    d_in: usize,
+    d_out: usize,
+    /// `d_out × d_in` row-major (GEMV iteration order).
+    w: Vec<f32>,
+}
+
+impl DenseKernel {
+    /// From a `d_out × d_in` row-major buffer.
+    pub fn from_rows(d_in: usize, d_out: usize, w: Vec<f32>) -> Self {
+        assert_eq!(w.len(), d_in * d_out);
+        Self { d_in, d_out, w }
+    }
+}
+
+impl TernaryKernel for DenseKernel {
+    fn d_in(&self) -> usize {
+        self.d_in
+    }
+
+    fn d_out(&self) -> usize {
+        self.d_out
+    }
+
+    fn weight_bytes(&self) -> usize {
+        // Accounted as bf16 (the paper's baseline precision; stored f32 —
+        // see DESIGN.md substitutions).
+        self.w.len() * 2
+    }
+
+    fn lut_len(&self) -> usize {
+        0
+    }
+
+    fn build_luts(&self, _x: &[f32], _luts: &mut [f32]) {}
+
+    fn gemm_tile(&self, xs: &[f32], _luts: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]) {
+        assert!(j0 <= j1 && j1 <= self.d_out);
+        let w = j1 - j0;
+        assert_eq!(xs.len(), batch * self.d_in);
+        assert_eq!(out.len(), batch * w);
+        // Rows j0..j1 are contiguous in the row-major weight buffer, and a
+        // batch row's tile output is the contiguous channel range — so each
+        // batch row is one literal ops::gemv_f32 call over the sub-matrix:
+        // batched and single dense paths share its accumulation order by
+        // construction (not by copy-paste).
+        let rows = &self.w[j0 * self.d_in..j1 * self.d_in];
+        for bi in 0..batch {
+            let x = &xs[bi * self.d_in..(bi + 1) * self.d_in];
+            gemv_f32(rows, w, self.d_in, x, &mut out[bi * w..(bi + 1) * w]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize, Granularity, Method};
+    use crate::tensor::Mat;
+    use crate::util::Pcg64;
+
+    #[allow(clippy::type_complexity)]
+    fn kernels(d_in: usize, d_out: usize, seed: u64) -> Vec<(&'static str, Box<dyn TernaryKernel>)> {
+        let mut rng = Pcg64::seeded(seed);
+        let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+        let qs = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+        let qd = quantize(&w, Method::AbsMean, Granularity::PerChannel);
+        vec![
+            ("sherry", Box::new(Packed34::from_ternary(&qs))),
+            ("tl2", Box::new(PackedTl2::from_ternary(&qd))),
+            ("i2_s", Box::new(PackedI2S::from_ternary(&qd))),
+            ("dense", Box::new(DenseKernel::from_rows(d_in, d_out, w.transpose().data))),
+        ]
+    }
+
+    /// Acceptance: for every format, `gemm_nt` with B=16 produces outputs
+    /// identical (bit-for-bit) to 16 independent `gemv` calls — with and
+    /// without the thread-pool fan-out.
+    #[test]
+    fn gemm_nt_matches_16_independent_gemvs_bit_for_bit() {
+        let (d_in, d_out, b) = (128usize, 96usize, 16usize);
+        let pool = ThreadPool::new(4);
+        for (name, k) in kernels(d_in, d_out, 0) {
+            let mut rng = Pcg64::seeded(1);
+            let xs = rng.normal_vec(b * d_in);
+            let mut singles = vec![0.0f32; b * d_out];
+            let mut scratch = Scratch::default();
+            for bi in 0..b {
+                let (x, y) = (
+                    &xs[bi * d_in..(bi + 1) * d_in],
+                    &mut singles[bi * d_out..(bi + 1) * d_out],
+                );
+                k.gemv(x, y, &mut scratch);
+            }
+            for pool_opt in [None, Some(&pool)] {
+                let mut batched = vec![0.0f32; b * d_out];
+                let mut scratch_b = Scratch::default();
+                k.gemm_nt(&xs, &mut batched, b, &mut scratch_b, pool_opt);
+                for (i, (a, s)) in batched.iter().zip(&singles).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        s.to_bits(),
+                        "{name} (pool={}) row {} ch {}: {a} vs {s}",
+                        pool_opt.is_some(),
+                        i / d_out,
+                        i % d_out
+                    );
+                }
+            }
+        }
+    }
+
+    /// The batched path must also hold on shapes that exercise the channel
+    /// tiling (d_out > GEMM_TILE_J), k-tiling tails (d_in % 32 != 0 for
+    /// pack34), and TL2's padded groups (d_in % 3 != 0).
+    #[test]
+    fn gemm_nt_parity_on_ragged_shapes() {
+        let pool = ThreadPool::new(3);
+        for &(d_in, d_out, b) in &[(36usize, 200usize, 5usize), (100, 70, 2), (388, 130, 4)] {
+            for (name, k) in kernels(d_in, d_out, d_in as u64) {
+                let mut rng = Pcg64::seeded(2);
+                let xs = rng.normal_vec(b * d_in);
+                let mut singles = vec![0.0f32; b * d_out];
+                let mut scratch = Scratch::default();
+                for bi in 0..b {
+                    let ys = &mut singles[bi * d_out..(bi + 1) * d_out];
+                    k.gemv(&xs[bi * d_in..(bi + 1) * d_in], ys, &mut scratch);
+                }
+                let mut batched = vec![0.0f32; b * d_out];
+                k.gemm_nt(&xs, &mut batched, b, &mut scratch, Some(&pool));
+                for (a, s) in batched.iter().zip(&singles) {
+                    assert_eq!(a.to_bits(), s.to_bits(), "{name} {d_in}x{d_out} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_dense_reference() {
+        // Correctness (not just self-consistency): batched LUT output must
+        // match the dequantized dense product.
+        let (d_in, d_out, b) = (256usize, 48usize, 4usize);
+        let mut rng = Pcg64::seeded(3);
+        let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+        let q = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+        let k = Packed34::from_ternary(&q);
+        let xs = rng.normal_vec(b * d_in);
+        let mut ys = vec![0.0f32; b * d_out];
+        let mut scratch = Scratch::default();
+        k.gemm_nt(&xs, &mut ys, b, &mut scratch, None);
+        let wt = q.dequant().transpose();
+        for bi in 0..b {
+            let mut y_ref = vec![0.0f32; d_out];
+            crate::tensor::gemv_f32(&wt.data, d_out, d_in, &xs[bi * d_in..(bi + 1) * d_in], &mut y_ref);
+            for (a, r) in ys[bi * d_out..(bi + 1) * d_out].iter().zip(&y_ref) {
+                assert!((a - r).abs() < 1e-3 * (1.0 + r.abs()), "row {bi}: {a} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_truncates_claims_and_zeroes_growth() {
+        let mut s = Scratch::default();
+        // Dirty a large claim, then shrink: the smaller claim is truncated
+        // to exactly the request — the stale tail beyond it is unreachable.
+        s.lut_buf(256).fill(7.0);
+        assert_eq!(s.lut_buf(64).len(), 64);
+        // Growth beyond the previously touched extent arrives zeroed.
+        let big = s.lut_buf(512);
+        assert_eq!(big.len(), 512);
+        assert!(big[256..].iter().all(|&v| v == 0.0), "grown region must be zeroed");
+        // Steady-state reuse at a fixed size keeps contents (builders
+        // overwrite every entry they own) — this pins the memset-free path.
+        s.lut_buf(32).fill(5.0);
+        assert!(s.lut_buf(32).iter().all(|&v| v == 5.0));
+    }
+
+    #[test]
+    fn tl2_builder_fully_owns_its_region() {
+        // The stale-tail hazard: a buffer dirtied by a previous (larger)
+        // layer must be fully overwritten by the next build — including
+        // TL2's padding lanes, the only entries a builder could miss.
+        let mut s = Scratch::default();
+        s.lut_buf(4 * lut::TL2_LUT_STRIDE).fill(f32::NAN);
+        let mut rng = Pcg64::seeded(5);
+        let x = rng.normal_vec(9); // 3 groups
+        let buf = s.lut_buf(3 * lut::TL2_LUT_STRIDE);
+        lut::build_luts_tl2(&x, buf);
+        assert!(buf.iter().all(|v| v.is_finite()), "builder left stale entries");
+    }
+
+    #[test]
+    fn dense_kernel_matches_gemv_f32() {
+        let (d_in, d_out) = (77usize, 13usize);
+        let mut rng = Pcg64::seeded(4);
+        let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+        let k = DenseKernel::from_rows(d_in, d_out, w.transpose().data);
+        let x = rng.normal_vec(d_in);
+        let mut y = vec![0.0f32; d_out];
+        let mut scratch = Scratch::default();
+        k.gemv(&x, &mut y, &mut scratch);
+        let wt = w.transpose();
+        let mut y_ref = vec![0.0f32; d_out];
+        crate::tensor::gemv_f32(&wt.data, d_out, d_in, &x, &mut y_ref);
+        assert_eq!(y, y_ref);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        for (_name, k) in kernels(64, 32, 9) {
+            let mut scratch = Scratch::default();
+            k.gemm_nt(&[], &mut [], 0, &mut scratch, None);
+        }
+    }
+}

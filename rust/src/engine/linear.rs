@@ -1,52 +1,23 @@
 //! A quantized linear layer over any packing format, plus the dense f32
 //! baseline — the unit the native transformer and the Table 4 benches are
 //! built from.
+//!
+//! Storage and dispatch live behind one [`TernaryKernel`] object: the
+//! per-format `Weights` enum this layer used to carry is gone, so adding a
+//! packing format means implementing the trait, not growing a match.
 
-use super::lut;
-use crate::pack::{Format, Packed34, PackedI2S, PackedMatrix, PackedTl2};
+use super::kernel::{DenseKernel, Scratch, TernaryKernel};
+use crate::pack::{Format, Packed34, PackedI2S, PackedTl2};
 use crate::quant::{quantize, Granularity, Method, Ternary};
-use crate::tensor::{ops::gemv_f32, Mat};
-
-/// Reusable scratch buffers for the LUT kernels (one per worker thread).
-#[derive(Default, Clone)]
-pub struct Scratch {
-    luts34: Vec<f32>,
-    luts_tl2: Vec<f32>,
-}
-
-impl Scratch {
-    fn ensure34(&mut self, d_in: usize) -> &mut [f32] {
-        let need = (d_in / 4) * 16;
-        if self.luts34.len() < need {
-            self.luts34.resize(need, 0.0);
-        }
-        &mut self.luts34[..need]
-    }
-
-    fn ensure_tl2(&mut self, d_in: usize) -> &mut [f32] {
-        let need = d_in.div_ceil(3) * lut::TL2_LUT_STRIDE;
-        if self.luts_tl2.len() < need {
-            self.luts_tl2.resize(need, 0.0);
-        }
-        &mut self.luts_tl2[..need]
-    }
-}
-
-/// Weight storage variants.
-enum Weights {
-    /// (d_out × d_in) row-major f32 — the BF16-stand-in baseline.
-    Dense(Vec<f32>),
-    Sherry(Packed34),
-    Tl2(PackedTl2),
-    I2s(PackedI2S),
-}
+use crate::tensor::Mat;
+use crate::util::ThreadPool;
 
 /// One quantized linear layer: y = Wq · x (+α scaling inside the kernel).
 pub struct QuantLinear {
     pub d_in: usize,
     pub d_out: usize,
     pub format: Format,
-    weights: Weights,
+    kernel: Box<dyn TernaryKernel>,
 }
 
 impl QuantLinear {
@@ -56,54 +27,69 @@ impl QuantLinear {
     /// paper's Table 4 setup (BitNet-style models, per-channel scales).
     pub fn from_float(w: &Mat, format: Format) -> Self {
         let (d_in, d_out) = (w.rows, w.cols);
-        let weights = match format {
-            Format::Dense => Weights::Dense(w.transpose().data),
+        let kernel: Box<dyn TernaryKernel> = match format {
+            Format::Dense => Box::new(DenseKernel::from_rows(d_in, d_out, w.transpose().data)),
             Format::Sherry => {
                 let q = quantize(w, Method::Sherry34, Granularity::PerChannel);
-                Weights::Sherry(Packed34::from_ternary(&q))
+                Box::new(Packed34::from_ternary(&q))
             }
             Format::Tl2 => {
                 let q = quantize(w, Method::AbsMean, Granularity::PerChannel);
-                Weights::Tl2(PackedTl2::from_ternary(&q))
+                Box::new(PackedTl2::from_ternary(&q))
             }
             Format::I2S => {
                 let q = quantize(w, Method::AbsMean, Granularity::PerChannel);
-                Weights::I2s(PackedI2S::from_ternary(&q))
+                Box::new(PackedI2S::from_ternary(&q))
             }
         };
-        Self { d_in, d_out, format, weights }
+        Self { d_in, d_out, format, kernel }
     }
 
     /// Pack an already-quantized matrix (QAT checkpoint path).
     pub fn from_ternary(q: &Ternary, format: Format) -> Self {
-        let weights = match format {
-            Format::Sherry => Weights::Sherry(Packed34::from_ternary(q)),
-            Format::Tl2 => Weights::Tl2(PackedTl2::from_ternary(q)),
-            Format::I2S => Weights::I2s(PackedI2S::from_ternary(q)),
-            Format::Dense => Weights::Dense(q.dequant().transpose().data),
+        let kernel: Box<dyn TernaryKernel> = match format {
+            Format::Sherry => Box::new(Packed34::from_ternary(q)),
+            Format::Tl2 => Box::new(PackedTl2::from_ternary(q)),
+            Format::I2S => Box::new(PackedI2S::from_ternary(q)),
+            Format::Dense => {
+                Box::new(DenseKernel::from_rows(q.d_in, q.d_out, q.dequant().transpose().data))
+            }
         };
-        Self { d_in: q.d_in, d_out: q.d_out, format, weights }
+        Self { d_in: q.d_in, d_out: q.d_out, format, kernel }
     }
 
     /// y = W · x. `scratch` carries the LUT buffers.
     pub fn forward(&self, x: &[f32], y: &mut [f32], scratch: &mut Scratch) {
         debug_assert_eq!(x.len(), self.d_in);
         debug_assert_eq!(y.len(), self.d_out);
-        match &self.weights {
-            Weights::Dense(w) => gemv_f32(w, self.d_out, self.d_in, x, y),
-            Weights::Sherry(p) => lut::gemv_pack34(p, x, scratch.ensure34(self.d_in), y),
-            Weights::Tl2(p) => lut::gemv_tl2(p, x, scratch.ensure_tl2(self.d_in), y),
-            Weights::I2s(p) => lut::gemv_i2s(p, x, y),
-        }
+        self.kernel.gemv(x, y, scratch);
+    }
+
+    /// Batched Y = X·Wᵀ over `batch` activation rows (`xs`: batch × d_in,
+    /// `ys`: batch × d_out). One fused LUT-GEMM pass; see
+    /// [`TernaryKernel::gemm_nt`].
+    pub fn forward_batch(
+        &self,
+        xs: &[f32],
+        ys: &mut [f32],
+        batch: usize,
+        scratch: &mut Scratch,
+        pool: Option<&ThreadPool>,
+    ) {
+        self.kernel.gemm_nt(xs, ys, batch, scratch, pool);
+    }
+
+    /// Borrow the underlying kernel (tests, size accounting).
+    pub fn kernel(&self) -> &dyn TernaryKernel {
+        &*self.kernel
     }
 
     /// Bytes of weight storage (+ per-channel scales where applicable).
     pub fn bytes(&self) -> usize {
-        match &self.weights {
-            Weights::Dense(w) => w.len() * 2, // accounted as bf16 (paper baseline)
-            Weights::Sherry(p) => p.weight_bytes() + crate::pack::scale_bytes(self.d_out),
-            Weights::Tl2(p) => p.weight_bytes() + crate::pack::scale_bytes(self.d_out),
-            Weights::I2s(p) => p.weight_bytes() + crate::pack::scale_bytes(self.d_out),
+        match self.format {
+            // Dense already accounts its planes at bf16 width, no scales.
+            Format::Dense => self.kernel.weight_bytes(),
+            _ => self.kernel.weight_bytes() + crate::pack::scale_bytes(self.d_out),
         }
     }
 }
@@ -154,6 +140,26 @@ mod tests {
     }
 
     #[test]
+    fn forward_batch_matches_forward_all_formats() {
+        let mut rng = Pcg64::seeded(3);
+        let w = Mat::randn(&mut rng, 128, 48, 1.0);
+        let b = 4usize;
+        let xs = rng.normal_vec(b * 128);
+        for format in Format::ALL {
+            let l = QuantLinear::from_float(&w, format);
+            let mut scratch = Scratch::default();
+            let mut singles = vec![0.0; b * 48];
+            for bi in 0..b {
+                let (x, y) = (&xs[bi * 128..(bi + 1) * 128], &mut singles[bi * 48..(bi + 1) * 48]);
+                l.forward(x, y, &mut scratch);
+            }
+            let mut batched = vec![0.0; b * 48];
+            l.forward_batch(&xs, &mut batched, b, &mut scratch, None);
+            assert_eq!(batched, singles, "{format:?}");
+        }
+    }
+
+    #[test]
     fn bytes_ordering() {
         let mut rng = Pcg64::seeded(2);
         let w = Mat::randn(&mut rng, 768, 768, 1.0);
@@ -162,13 +168,5 @@ mod tests {
         let i2s = QuantLinear::from_float(&w, Format::I2S).bytes();
         let dense = QuantLinear::from_float(&w, Format::Dense).bytes();
         assert!(sherry < tl2 && tl2 < i2s && i2s < dense);
-    }
-
-    #[test]
-    fn scratch_grows_monotonically() {
-        let mut s = Scratch::default();
-        assert_eq!(s.ensure34(64).len(), 16 * 16);
-        assert_eq!(s.ensure34(16).len(), 4 * 16);
-        assert!(s.luts34.len() >= 16 * 16);
     }
 }

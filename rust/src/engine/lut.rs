@@ -1,24 +1,54 @@
-//! LUT-based multiplication-free GEMV kernels (paper Fig. 9, App. A).
+//! LUT-based multiplication-free GEMV/GEMM kernels (paper Fig. 9, App. A).
 //!
 //! The engine's two phases:
 //! 1. **Activation preprocessing** — for each input segment, precompute a
 //!    local lookup table of every possible signed partial sum. The table
 //!    is shared across *all* output channels, so its cost amortizes over
-//!    d_out.
+//!    d_out — and, in the batched kernels, over the whole batch.
 //! 2. **Index-and-accumulate** — per output channel, each packed weight
 //!    code directly indexes the segment's table; partial sums accumulate
 //!    with pure additions. The only multiply per channel is the final
 //!    per-channel scale α.
 //!
-//! Three kernels, one per packing format, sharing the algorithm but not
-//! the code layout:
-//! * [`gemv_pack34`]  — Sherry: 16-entry LUT per 4-segment, nibble index,
+//! Each format has one *batched range kernel* (`gemm_*`): it accumulates
+//! output channels `[j0, j1)` for `batch` activation rows whose LUTs were
+//! all built up front, walking each channel's packed weight plane **once**
+//! with every row's LUT resident. The packed-code decode cost (the thing
+//! Table 4 measures) is thereby amortized ×batch. The single-row `gemv_*`
+//! entry points are thin `batch = 1` wrappers, which is what makes
+//! batched and single execution bit-for-bit identical: they are the same
+//! code path, so per-(row, channel) float accumulation order is equal by
+//! construction.
+//!
+//! * Sherry 1.25-bit — 16-entry LUT per 4-segment, nibble index,
 //!   bit-plane mirror sign (power-of-two everything);
-//! * [`gemv_tl2`]     — 27-entry LUT per 3-segment, 5-bit codes pulled
+//! * TL2 1.67-bit — 27-entry LUT per 3-segment, 5-bit codes pulled
 //!   from a misaligned bitstream (the decode tax the paper measures);
-//! * [`gemv_i2s`]     — 2-bit decode-and-add (no LUT, byte aligned).
+//! * I2_S 2-bit — decode-and-add (no LUT, byte aligned).
 
 use crate::pack::{Packed34, PackedI2S, PackedTl2};
+
+/// Per-row accumulator slots kept on the stack (2 per row for the
+/// dual-accumulator kernels ⇒ 32 rows inline). Only wider batches spill
+/// to one heap allocation per range call, so the `batch = 1` gemv path
+/// stays allocation-free like the pre-batching kernels.
+const ACC_INLINE: usize = 64;
+
+/// Stack-first accumulator storage: borrow `slots` inline slots from
+/// `inline`, else allocate into `heap`.
+#[inline]
+fn acc_storage<'a>(
+    inline: &'a mut [f32; ACC_INLINE],
+    heap: &'a mut Vec<f32>,
+    slots: usize,
+) -> &'a mut [f32] {
+    if slots <= ACC_INLINE {
+        &mut inline[..slots]
+    } else {
+        heap.resize(slots, 0.0);
+        &mut heap[..slots]
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Sherry 1.25-bit kernel
@@ -67,35 +97,61 @@ pub fn gemv_pack34(p: &Packed34, x: &[f32], luts: &mut [f32], y: &mut [f32]) {
     gemv_pack34_preluts(p, luts, y);
 }
 
-/// The accumulate phase only (tables already built — shared across the
-/// channels of every layer consuming the same activations).
+/// Single-row accumulate phase (tables already built). `batch = 1` case of
+/// [`gemm_pack34_preluts`].
+pub fn gemv_pack34_preluts(p: &Packed34, luts: &[f32], y: &mut [f32]) {
+    gemm_pack34_preluts(p, luts, luts.len(), 1, 0, p.d_out, y);
+}
+
+/// Batched accumulate phase over output channels `[j0, j1)`.
+///
+/// `luts` holds `batch` prebuilt tables at stride `lut_stride`
+/// (= `(d_in/4)*16` floats per row); `out` is `batch × (j1-j0)` row-major:
+/// `out[bi*(j1-j0) + (j-j0)]` receives yᵦᵢ[j]. Each channel's packed
+/// planes are decoded **once** and indexed into every row's table — the
+/// weight-plane traversal the batcher amortizes across sequences.
 ///
 /// Perf notes (EXPERIMENTS.md §Perf):
 /// * sign application is **branchless** — the mirror bit is shifted into
 ///   the f32 sign position and XORed (the scalar analogue of the
 ///   `vpsignb` the paper's AVX2 kernel would use); the naive branch
 ///   version mispredicted ~50% and ran 0.84 Gw/s;
-/// * two accumulators hide the add latency chain;
+/// * two accumulators per row hide the add latency chain;
 /// * the inner loop walks one sign byte = 8 blocks = 32 weights per
 ///   iteration, all loads byte-aligned (the point of the 5-bit split
-///   into nibble index + sign plane).
-pub fn gemv_pack34_preluts(p: &Packed34, luts: &[f32], y: &mut [f32]) {
+///   into nibble index + sign plane);
+/// * cache blocking: the k dimension is walked in tiles of 128 blocks so
+///   the active LUT slice (128×16×4 B = 8 KiB per row) stays cache-resident
+///   across all channels of the tile; the un-tiled version re-streamed the
+///   whole LUT (e.g. 51 KiB at d_in=3200) from L2 once *per channel*.
+pub fn gemm_pack34_preluts(
+    p: &Packed34,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
     let nb = p.n_blocks();
+    assert!(j0 <= j1 && j1 <= p.d_out);
+    let w = j1 - j0;
+    assert_eq!(out.len(), batch * w);
+    assert!(lut_stride >= nb * 16, "LUT stride too small for d_in");
+    assert!(luts.len() >= batch * lut_stride);
     let full = nb / 8; // complete sign bytes
-    // Cache blocking: walk the k dimension in tiles of 128 blocks so the
-    // active LUT slice (128×16×4 B = 8 KiB) stays L1-resident across all
-    // d_out channels; the un-tiled version re-streamed the whole LUT
-    // (e.g. 51 KiB at d_in=3200) from L2 once *per channel*.
     const TILE_SB: usize = 16; // sign bytes per tile = 128 blocks
-    y.fill(0.0);
+    out.fill(0.0);
+    // (acc0, acc1) per row, interleaved; stack-resident for typical widths.
+    let (mut acc_inline, mut acc_heap) = ([0.0f32; ACC_INLINE], Vec::new());
+    let acc = acc_storage(&mut acc_inline, &mut acc_heap, 2 * batch);
     let mut sb0 = 0usize;
     while sb0 < full {
         let sb1 = (sb0 + TILE_SB).min(full);
-        for (j, acc_out) in y.iter_mut().enumerate() {
+        for (jj, j) in (j0..j1).enumerate() {
             let idx_plane = p.idx_plane(j);
             let sign_plane = p.sign_plane(j);
-            let mut acc0 = 0.0f32;
-            let mut acc1 = 0.0f32;
+            acc.fill(0.0);
             for sb in sb0..sb1 {
                 let signs = sign_plane[sb] as u32;
                 let ibase = sb * 4;
@@ -105,28 +161,36 @@ pub fn gemv_pack34_preluts(p: &Packed34, luts: &[f32], y: &mut [f32]) {
                     let lo = (byte & 0x0F) as usize;
                     let hi = (byte >> 4) as usize;
                     let b0 = 2 * k;
-                    let v0 = luts[lbase + b0 * 16 + lo];
-                    let v1 = luts[lbase + (b0 + 1) * 16 + hi];
+                    let o0 = lbase + b0 * 16 + lo;
+                    let o1 = lbase + (b0 + 1) * 16 + hi;
                     // branchless mirror: shift the sign bit to f32 bit 31
                     let s0 = ((signs >> b0) & 1) << 31;
                     let s1 = ((signs >> (b0 + 1)) & 1) << 31;
-                    acc0 += f32::from_bits(v0.to_bits() ^ s0);
-                    acc1 += f32::from_bits(v1.to_bits() ^ s1);
+                    for bi in 0..batch {
+                        let row = &luts[bi * lut_stride..];
+                        acc[2 * bi] += f32::from_bits(row[o0].to_bits() ^ s0);
+                        acc[2 * bi + 1] += f32::from_bits(row[o1].to_bits() ^ s1);
+                    }
                 }
             }
-            *acc_out += acc0 + acc1;
+            for bi in 0..batch {
+                out[bi * w + jj] += acc[2 * bi] + acc[2 * bi + 1];
+            }
         }
         sb0 = sb1;
     }
     // Tail blocks + final per-channel scale.
-    for (j, acc_out) in y.iter_mut().enumerate() {
-        let mut acc = *acc_out;
-        for b in full * 8..nb {
-            let v = luts[b * 16 + p.idx_at(j, b) as usize];
-            let s = (p.sign_at(j, b) as u32) << 31;
-            acc += f32::from_bits(v.to_bits() ^ s);
+    for (jj, j) in (j0..j1).enumerate() {
+        for bi in 0..batch {
+            let mut a = out[bi * w + jj];
+            let row = &luts[bi * lut_stride..];
+            for b in full * 8..nb {
+                let v = row[b * 16 + p.idx_at(j, b) as usize];
+                let s = (p.sign_at(j, b) as u32) << 31;
+                a += f32::from_bits(v.to_bits() ^ s);
+            }
+            out[bi * w + jj] = a * p.alpha[j];
         }
-        *acc_out = acc * p.alpha[j];
     }
 }
 
@@ -138,7 +202,12 @@ pub fn gemv_pack34_preluts(p: &Packed34, luts: &[f32], y: &mut [f32]) {
 pub const TL2_LUT_STRIDE: usize = 32;
 
 /// Build the per-group 27-entry tables (stride 32) for the TL2 kernel.
-/// `x` is zero-padded conceptually to a multiple of 3.
+/// `x` is zero-padded conceptually to a multiple of 3. Entries 27..32 of
+/// each group are alignment padding: valid 5-bit codes are always < 27,
+/// so the kernel never reads them — they are still zeroed here because
+/// scratch reuse relies on builders fully owning the region they claim
+/// (see `Scratch::lut_buf`): a builder that skipped lanes would expose
+/// a previous layer's stale entries.
 pub fn build_luts_tl2(x: &[f32], luts: &mut [f32]) {
     let ng = x.len().div_ceil(3);
     debug_assert_eq!(luts.len(), ng * TL2_LUT_STRIDE);
@@ -157,6 +226,7 @@ pub fn build_luts_tl2(x: &[f32], luts: &mut [f32]) {
                 code += 3;
             }
         }
+        out[27..].fill(0.0);
     }
 }
 
@@ -168,13 +238,37 @@ pub fn gemv_tl2(p: &PackedTl2, x: &[f32], luts: &mut [f32], y: &mut [f32]) {
     gemv_tl2_preluts(p, luts, y);
 }
 
-/// TL2 accumulate phase: every code extraction is a misaligned 16-bit
-/// load + shift + mask — the bit-shuffling overhead of 3-way packing.
+/// Single-row TL2 accumulate phase; `batch = 1` case of
+/// [`gemm_tl2_preluts`].
 pub fn gemv_tl2_preluts(p: &PackedTl2, luts: &[f32], y: &mut [f32]) {
+    gemm_tl2_preluts(p, luts, luts.len(), 1, 0, p.d_out, y);
+}
+
+/// Batched TL2 accumulate over channels `[j0, j1)`: every code extraction
+/// is a misaligned 16-bit load + shift + mask — the bit-shuffling overhead
+/// of 3-way packing. Batching pays that decode cost once per code and
+/// indexes all `batch` tables with it. `out` layout as in
+/// [`gemm_pack34_preluts`].
+pub fn gemm_tl2_preluts(
+    p: &PackedTl2,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
     let ng = p.n_groups();
-    for j in 0..p.d_out {
+    assert!(j0 <= j1 && j1 <= p.d_out);
+    let w = j1 - j0;
+    assert_eq!(out.len(), batch * w);
+    assert!(lut_stride >= ng * TL2_LUT_STRIDE, "LUT stride too small for d_in");
+    assert!(luts.len() >= batch * lut_stride);
+    let (mut acc_inline, mut acc_heap) = ([0.0f32; ACC_INLINE], Vec::new());
+    let acc = acc_storage(&mut acc_inline, &mut acc_heap, batch);
+    for (jj, j) in (j0..j1).enumerate() {
         let stream = p.stream(j);
-        let mut acc = 0.0f32;
+        acc.fill(0.0);
         let mut bit_off = 0usize;
         for g in 0..ng {
             let byte = bit_off / 8;
@@ -182,10 +276,15 @@ pub fn gemv_tl2_preluts(p: &PackedTl2, luts: &[f32], y: &mut [f32]) {
             let lo = stream[byte] as u16;
             let hi = if byte + 1 < stream.len() { stream[byte + 1] as u16 } else { 0 };
             let code = (((hi << 8) | lo) >> shift) as usize & 0x1F;
-            acc += luts[g * TL2_LUT_STRIDE + code];
+            let o = g * TL2_LUT_STRIDE + code;
+            for (bi, a) in acc.iter_mut().enumerate() {
+                *a += luts[bi * lut_stride + o];
+            }
             bit_off += 5;
         }
-        y[j] = acc * p.alpha[j];
+        for (bi, &a) in acc.iter().enumerate() {
+            out[bi * w + jj] = a * p.alpha[j];
+        }
     }
 }
 
@@ -217,35 +316,56 @@ const fn build_i2s_decode() -> [[f32; 4]; 256] {
     t
 }
 
-/// y = (PackedI2S weights) · x with per-channel α.
+/// y = (PackedI2S weights) · x with per-channel α; `batch = 1` case of
+/// [`gemm_i2s`].
+pub fn gemv_i2s(p: &PackedI2S, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), p.d_in);
+    assert_eq!(y.len(), p.d_out);
+    gemm_i2s(p, x, 1, 0, p.d_out, y);
+}
+
+/// Batched I2_S decode-and-add over channels `[j0, j1)`. `xs` holds
+/// `batch` activation rows back to back (`batch × d_in`); there is no LUT
+/// phase for this format, so batching amortizes only the weight-byte
+/// decode. `out` layout as in [`gemm_pack34_preluts`].
 ///
 /// Perf notes (§Perf): the first version selected ±x with a data-dependent
 /// `match` — ~50% mispredict per weight, 0.15 Gw/s. Now each packed byte
 /// indexes a 4-KiB decode table of ternary multipliers and the inner loop
-/// is 4 FMAs per byte, which LLVM vectorizes (this mirrors the real
-/// BitNet.cpp I2_S kernel, which unpacks to SIMD multiplier lanes).
-pub fn gemv_i2s(p: &PackedI2S, x: &[f32], y: &mut [f32]) {
-    assert_eq!(x.len(), p.d_in);
-    assert_eq!(y.len(), p.d_out);
-    let full_bytes = p.d_in / 4;
-    for j in 0..p.d_out {
+/// is 4 FMAs per byte per row, which LLVM vectorizes (this mirrors the
+/// real BitNet.cpp I2_S kernel, which unpacks to SIMD multiplier lanes).
+pub fn gemm_i2s(p: &PackedI2S, xs: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]) {
+    let d_in = p.d_in;
+    assert!(j0 <= j1 && j1 <= p.d_out);
+    let w = j1 - j0;
+    assert_eq!(xs.len(), batch * d_in);
+    assert_eq!(out.len(), batch * w);
+    let full_bytes = d_in / 4;
+    let pairs = full_bytes / 2;
+    // (acc0, acc1) per row, interleaved; stack-resident for typical widths.
+    let (mut acc_inline, mut acc_heap) = ([0.0f32; ACC_INLINE], Vec::new());
+    let acc = acc_storage(&mut acc_inline, &mut acc_heap, 2 * batch);
+    for (jj, j) in (j0..j1).enumerate() {
         let ch = p.channel(j);
-        let mut acc0 = 0.0f32;
-        let mut acc1 = 0.0f32;
-        let pairs = full_bytes / 2;
-        for bi in 0..pairs {
-            let m0 = &I2S_DECODE[ch[2 * bi] as usize];
-            let m1 = &I2S_DECODE[ch[2 * bi + 1] as usize];
-            let xb = &x[bi * 8..bi * 8 + 8];
-            acc0 += m0[0] * xb[0] + m0[1] * xb[1] + m0[2] * xb[2] + m0[3] * xb[3];
-            acc1 += m1[0] * xb[4] + m1[1] * xb[5] + m1[2] * xb[6] + m1[3] * xb[7];
+        acc.fill(0.0);
+        for bp in 0..pairs {
+            let m0 = &I2S_DECODE[ch[2 * bp] as usize];
+            let m1 = &I2S_DECODE[ch[2 * bp + 1] as usize];
+            for bi in 0..batch {
+                let xb = &xs[bi * d_in + bp * 8..bi * d_in + bp * 8 + 8];
+                acc[2 * bi] += m0[0] * xb[0] + m0[1] * xb[1] + m0[2] * xb[2] + m0[3] * xb[3];
+                acc[2 * bi + 1] += m1[0] * xb[4] + m1[1] * xb[5] + m1[2] * xb[6] + m1[3] * xb[7];
+            }
         }
-        let mut acc = acc0 + acc1;
-        for i in pairs * 8..p.d_in {
-            let m = &I2S_DECODE[ch[i / 4] as usize];
-            acc += m[i % 4] * x[i];
+        for i in pairs * 8..d_in {
+            let m = I2S_DECODE[ch[i / 4] as usize][i % 4];
+            for bi in 0..batch {
+                acc[2 * bi] += m * xs[bi * d_in + i];
+            }
         }
-        y[j] = acc * p.alpha[j];
+        for bi in 0..batch {
+            out[bi * w + jj] = (acc[2 * bi] + acc[2 * bi + 1]) * p.alpha[j];
+        }
     }
 }
 
@@ -340,6 +460,37 @@ mod tests {
             let mut y = vec![0.0; 32];
             gemv_i2s(&p, &x, &mut y);
             assert_close(&y, &dense_ref(&q, &x), 1e-4, "i2s");
+        }
+    }
+
+    #[test]
+    fn batched_range_kernels_match_full_range() {
+        // Splitting the channel range must not change any output value:
+        // channels are independent, so a [0,d_out) call and two half-range
+        // calls must agree exactly.
+        let mut rng = Pcg64::seeded(7);
+        let (d_in, d_out, b) = (96usize, 40usize, 3usize);
+        let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+        let q = sherry34_quantize(&w, Granularity::PerChannel);
+        let p = Packed34::from_ternary(&q);
+        let stride = (d_in / 4) * 16;
+        let xs: Vec<f32> = rng.normal_vec(b * d_in);
+        let mut luts = vec![0.0; b * stride];
+        for bi in 0..b {
+            build_luts34(&xs[bi * d_in..(bi + 1) * d_in], &mut luts[bi * stride..(bi + 1) * stride]);
+        }
+        let mut full = vec![0.0; b * d_out];
+        gemm_pack34_preluts(&p, &luts, stride, b, 0, d_out, &mut full);
+        let mid = d_out / 2;
+        let mut lo = vec![0.0; b * mid];
+        let mut hi = vec![0.0; b * (d_out - mid)];
+        gemm_pack34_preluts(&p, &luts, stride, b, 0, mid, &mut lo);
+        gemm_pack34_preluts(&p, &luts, stride, b, mid, d_out, &mut hi);
+        for bi in 0..b {
+            for j in 0..d_out {
+                let split = if j < mid { lo[bi * mid + j] } else { hi[bi * (d_out - mid) + (j - mid)] };
+                assert_eq!(full[bi * d_out + j], split, "row {bi} ch {j}");
+            }
         }
     }
 

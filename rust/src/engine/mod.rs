@@ -1,13 +1,19 @@
-//! Native edge-inference engine: quantized linear layers over the packed
-//! formats, and a full ternary transformer with KV cache for token
-//! generation (the Table 4 / Fig. 1 measurement target).
+//! Native edge-inference engine: the unified [`TernaryKernel`] dispatch
+//! over the packed formats, quantized linear layers, and a full ternary
+//! transformer with KV cache for token generation (the Table 4 / Fig. 1
+//! measurement target).
 //!
 //! The engine is Python-free: it either quantizes weights on load (PTQ)
-//! or consumes QAT checkpoints exported by the training driver.
+//! or consumes QAT checkpoints exported by the training driver. Serving
+//! has two granularities — single-token [`TernaryModel::forward_one`] and
+//! the batched [`TernaryModel::forward_batch`] the continuous batcher
+//! drives, which issues one fused LUT-GEMM per layer per decode round.
 
+pub mod kernel;
 pub mod lut;
 mod linear;
 mod model;
 
-pub use linear::{QuantLinear, Scratch};
+pub use kernel::{DenseKernel, Scratch, TernaryKernel};
+pub use linear::QuantLinear;
 pub use model::{argmax, random_weights, KvCache, ModelWeights, NativeConfig, TernaryModel};

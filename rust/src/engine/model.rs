@@ -9,10 +9,11 @@
 
 use std::collections::BTreeMap;
 
-use super::linear::{QuantLinear, Scratch};
+use super::kernel::Scratch;
+use super::linear::QuantLinear;
 use crate::pack::Format;
 use crate::tensor::{ops, Mat};
-use crate::util::Pcg64;
+use crate::util::{Pcg64, ThreadPool};
 
 /// Architecture hyper-parameters (keep in sync with
 /// `python/compile/model.py::CONFIGS`).
@@ -218,85 +219,136 @@ impl TernaryModel {
     }
 
     /// One decode step: feed `token` at position `cache.len`, return
-    /// logits. This is the hot loop of token generation.
+    /// logits. Thin `batch = 1` wrapper over [`TernaryModel::forward_batch`]
+    /// — single-stream and batched decoding are the same code path, so a
+    /// sequence's logits do not depend on who it shares a round with.
     pub fn forward_one(&self, token: u32, cache: &mut KvCache, scratch: &mut Scratch) -> Vec<f32> {
+        self.forward_batch(&[token], &mut [cache], scratch, None).data
+    }
+
+    /// One batched decode step across `tokens.len()` sequences, each with
+    /// its own KV cache (sequences may sit at different positions — the
+    /// continuous-batching case). Appends one K/V row per sequence per
+    /// layer and returns the `batch × vocab` logits.
+    ///
+    /// Every linear goes through one fused [`kernel
+    /// gemm_nt`](crate::engine::TernaryKernel::gemm_nt): activation LUTs
+    /// for the whole batch are built once per layer input, then each
+    /// packed weight plane is walked a single time with all LUTs resident,
+    /// fanned out over output-channel tiles on `pool`. Attention, norms
+    /// and the SwiGLU are applied per sequence row (identical scalar code
+    /// to the single-stream path).
+    pub fn forward_batch(
+        &self,
+        tokens: &[u32],
+        caches: &mut [&mut KvCache],
+        scratch: &mut Scratch,
+        pool: Option<&ThreadPool>,
+    ) -> Mat {
+        let b = tokens.len();
+        assert_eq!(caches.len(), b, "one KV cache per sequence");
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let hd = cfg.head_dim();
-        let pos = cache.len;
-        assert!(pos < cfg.seq_len, "sequence overflow");
-        let mut h = self.embed.row(token as usize).to_vec();
+        // Per-sequence decode positions (continuous batching: they differ).
+        let pos: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        for &p in &pos {
+            assert!(p < cfg.seq_len, "sequence overflow");
+        }
 
-        let mut xn = vec![0.0f32; d];
-        let mut q = vec![0.0f32; d];
-        let mut k = vec![0.0f32; d];
-        let mut v = vec![0.0f32; d];
-        let mut att_out = vec![0.0f32; d];
-        let mut proj = vec![0.0f32; d];
-        let mut gate = vec![0.0f32; cfg.d_ff];
-        let mut up = vec![0.0f32; cfg.d_ff];
+        let mut h = vec![0.0f32; b * d];
+        for (bi, &tok) in tokens.iter().enumerate() {
+            h[bi * d..(bi + 1) * d].copy_from_slice(self.embed.row(tok as usize));
+        }
+
+        let mut xn = vec![0.0f32; b * d];
+        let mut q = vec![0.0f32; b * d];
+        let mut k = vec![0.0f32; b * d];
+        let mut v = vec![0.0f32; b * d];
+        let mut att_out = vec![0.0f32; b * d];
+        let mut proj = vec![0.0f32; b * d];
+        let mut gate = vec![0.0f32; b * cfg.d_ff];
+        let mut up = vec![0.0f32; b * cfg.d_ff];
+        let scale = (hd as f32).powf(-0.5);
 
         for (li, layer) in self.layers.iter().enumerate() {
             // --- attention block ---
             xn.copy_from_slice(&h);
-            ops::rmsnorm_inplace(&mut xn, &layer.norm_attn);
-            layer.wq.forward(&xn, &mut q, scratch);
-            layer.wk.forward(&xn, &mut k, scratch);
-            layer.wv.forward(&xn, &mut v, scratch);
-            // RoPE per head (matches L2: per-head half-pairing).
-            for hh in 0..cfg.n_heads {
-                ops::rope_inplace(&mut q[hh * hd..(hh + 1) * hd], pos);
-                ops::rope_inplace(&mut k[hh * hd..(hh + 1) * hd], pos);
+            for bi in 0..b {
+                ops::rmsnorm_inplace(&mut xn[bi * d..(bi + 1) * d], &layer.norm_attn);
             }
-            cache.k[li].extend_from_slice(&k);
-            cache.v[li].extend_from_slice(&v);
-
-            let kl = &cache.k[li];
-            let vl = &cache.v[li];
-            let t = pos + 1;
-            let scale = (hd as f32).powf(-0.5);
-            for hh in 0..cfg.n_heads {
-                let qh = &q[hh * hd..(hh + 1) * hd];
-                let mut att = vec![0.0f32; t];
-                for (s, a) in att.iter_mut().enumerate() {
-                    let kh = &kl[s * d + hh * hd..s * d + (hh + 1) * hd];
-                    *a = qh.iter().zip(kh).map(|(x, y)| x * y).sum::<f32>() * scale;
+            layer.wq.forward_batch(&xn, &mut q, b, scratch, pool);
+            layer.wk.forward_batch(&xn, &mut k, b, scratch, pool);
+            layer.wv.forward_batch(&xn, &mut v, b, scratch, pool);
+            for bi in 0..b {
+                // RoPE per head (matches L2: per-head half-pairing).
+                for hh in 0..cfg.n_heads {
+                    ops::rope_inplace(&mut q[bi * d + hh * hd..bi * d + (hh + 1) * hd], pos[bi]);
+                    ops::rope_inplace(&mut k[bi * d + hh * hd..bi * d + (hh + 1) * hd], pos[bi]);
                 }
-                ops::softmax_inplace(&mut att);
-                let out = &mut att_out[hh * hd..(hh + 1) * hd];
-                out.fill(0.0);
-                for (s, &a) in att.iter().enumerate() {
-                    let vh = &vl[s * d + hh * hd..s * d + (hh + 1) * hd];
-                    for (o, &vv) in out.iter_mut().zip(vh) {
-                        *o += a * vv;
+                caches[bi].k[li].extend_from_slice(&k[bi * d..(bi + 1) * d]);
+                caches[bi].v[li].extend_from_slice(&v[bi * d..(bi + 1) * d]);
+            }
+            // Per-sequence attention over each sequence's own KV history —
+            // independent across sequences, so it fans out on the pool
+            // alongside the fused linears (per-row math is identical to
+            // the serial path, preserving bit-for-bit parity).
+            {
+                let caches_ro: &[&mut KvCache] = &*caches;
+                let n_heads = cfg.n_heads;
+                match pool {
+                    Some(pool) if b > 1 => pool.scope(|s| {
+                        for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
+                            let kl: &[f32] = &caches_ro[bi].k[li];
+                            let vl: &[f32] = &caches_ro[bi].v[li];
+                            let q_row = &q[bi * d..(bi + 1) * d];
+                            let t = pos[bi] + 1;
+                            s.spawn(move || {
+                                attention_row(q_row, kl, vl, t, d, hd, n_heads, scale, out_row);
+                            });
+                        }
+                    }),
+                    _ => {
+                        for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
+                            let kl: &[f32] = &caches_ro[bi].k[li];
+                            let vl: &[f32] = &caches_ro[bi].v[li];
+                            let q_row = &q[bi * d..(bi + 1) * d];
+                            attention_row(q_row, kl, vl, pos[bi] + 1, d, hd, n_heads, scale, out_row);
+                        }
                     }
                 }
             }
-            layer.wo.forward(&att_out, &mut proj, scratch);
+            layer.wo.forward_batch(&att_out, &mut proj, b, scratch, pool);
             for (hi, &p) in h.iter_mut().zip(proj.iter()) {
                 *hi += p;
             }
 
             // --- MLP block (SwiGLU) ---
             xn.copy_from_slice(&h);
-            ops::rmsnorm_inplace(&mut xn, &layer.norm_mlp);
-            layer.w_gate.forward(&xn, &mut gate, scratch);
-            layer.w_up.forward(&xn, &mut up, scratch);
+            for bi in 0..b {
+                ops::rmsnorm_inplace(&mut xn[bi * d..(bi + 1) * d], &layer.norm_mlp);
+            }
+            layer.w_gate.forward_batch(&xn, &mut gate, b, scratch, pool);
+            layer.w_up.forward_batch(&xn, &mut up, b, scratch, pool);
             for (g, &u) in gate.iter_mut().zip(up.iter()) {
                 let s = *g;
                 *g = s / (1.0 + (-s).exp()) * u; // silu(g) * u
             }
-            layer.w_down.forward(&gate, &mut proj, scratch);
+            layer.w_down.forward_batch(&gate, &mut proj, b, scratch, pool);
             for (hi, &p) in h.iter_mut().zip(proj.iter()) {
                 *hi += p;
             }
         }
-        cache.len += 1;
+        for cache in caches.iter_mut() {
+            cache.len += 1;
+        }
 
-        ops::rmsnorm_inplace(&mut h, &self.norm_out);
-        let mut logits = vec![0.0f32; cfg.vocab_size];
-        self.lm_head.forward(&h, &mut logits, scratch);
-        logits
+        for bi in 0..b {
+            ops::rmsnorm_inplace(&mut h[bi * d..(bi + 1) * d], &self.norm_out);
+        }
+        let mut logits = vec![0.0f32; b * cfg.vocab_size];
+        self.lm_head.forward_batch(&h, &mut logits, b, scratch, pool);
+        Mat::from_vec(b, cfg.vocab_size, logits)
     }
 
     /// Greedy-generate `n_tokens` starting from `prompt`. Returns the
@@ -318,6 +370,41 @@ impl TernaryModel {
             next = argmax(&logits) as u32;
         }
         out
+    }
+}
+
+/// Causal attention for one sequence at its current decode position:
+/// scores over `t` cached timesteps, softmax, weighted-V accumulation —
+/// per head, writing the `d_model`-wide output row. One shared body for
+/// the serial and pool-fanned paths of [`TernaryModel::forward_batch`].
+#[allow(clippy::too_many_arguments)]
+fn attention_row(
+    q_row: &[f32],
+    kl: &[f32],
+    vl: &[f32],
+    t: usize,
+    d: usize,
+    hd: usize,
+    n_heads: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    for hh in 0..n_heads {
+        let qh = &q_row[hh * hd..(hh + 1) * hd];
+        let mut att = vec![0.0f32; t];
+        for (s, a) in att.iter_mut().enumerate() {
+            let kh = &kl[s * d + hh * hd..s * d + (hh + 1) * hd];
+            *a = qh.iter().zip(kh).map(|(x, y)| x * y).sum::<f32>() * scale;
+        }
+        ops::softmax_inplace(&mut att);
+        let o = &mut out[hh * hd..(hh + 1) * hd];
+        o.fill(0.0);
+        for (s, &a) in att.iter().enumerate() {
+            let vh = &vl[s * d + hh * hd..s * d + (hh + 1) * hd];
+            for (oo, &vv) in o.iter_mut().zip(vh) {
+                *oo += a * vv;
+            }
+        }
     }
 }
 
@@ -396,6 +483,60 @@ mod tests {
         assert!(sizes[0] > sizes[1], "dense > i2s");
         assert!(sizes[1] > sizes[2], "i2s > tl2");
         assert!(sizes[2] > sizes[3], "tl2 > sherry");
+    }
+
+    #[test]
+    fn forward_batch_matches_independent_streams_bit_for_bit() {
+        // Three sequences with different prompts and lengths, decoded
+        // (a) one stream at a time via forward_one and (b) fused via
+        // forward_batch — logits must be identical, which is what makes
+        // continuous batching invisible to request determinism.
+        let cfg = nano();
+        let weights = random_weights(&cfg, 9);
+        let prompts: [&[u32]; 3] = [&[1, 2, 3, 4], &[9, 8], &[5, 5, 5]];
+        let pool = crate::util::ThreadPool::new(2);
+        for format in Format::ALL {
+            let model = TernaryModel::build(cfg, &weights, format);
+            let mut scratch = Scratch::default();
+            // (a) independent streams
+            let mut solo_caches: Vec<KvCache> = prompts.iter().map(|_| KvCache::new(&cfg)).collect();
+            let mut solo_logits: Vec<Vec<f32>> = Vec::new();
+            for (p, cache) in prompts.iter().zip(&mut solo_caches) {
+                let mut logits = Vec::new();
+                for &t in *p {
+                    logits = model.forward_one(t, cache, &mut scratch);
+                }
+                solo_logits.push(logits);
+            }
+            // (b) batched: replay the same prompts position by position
+            // over the ragged active set (like the server's prefill).
+            let mut caches: Vec<KvCache> = prompts.iter().map(|_| KvCache::new(&cfg)).collect();
+            let mut last: Vec<Vec<f32>> = vec![Vec::new(); prompts.len()];
+            let max_len = prompts.iter().map(|p| p.len()).max().unwrap();
+            for step in 0..max_len {
+                let sel: Vec<usize> =
+                    (0..prompts.len()).filter(|&i| step < prompts[i].len()).collect();
+                let toks: Vec<u32> = sel.iter().map(|&i| prompts[i][step]).collect();
+                let mut refs: Vec<&mut KvCache> = Vec::new();
+                let mut rest: &mut [KvCache] = &mut caches;
+                let mut taken = 0usize;
+                for &i in &sel {
+                    let (_, tail) = rest.split_at_mut(i - taken);
+                    let (head, tail) = tail.split_at_mut(1);
+                    refs.push(&mut head[0]);
+                    rest = tail;
+                    taken = i + 1;
+                }
+                let logits = model.forward_batch(&toks, &mut refs, &mut scratch, Some(&pool));
+                for (row, &i) in sel.iter().enumerate() {
+                    last[i] = logits.row(row).to_vec();
+                }
+            }
+            for (i, (a, b)) in last.iter().zip(&solo_logits).enumerate() {
+                assert_eq!(a, b, "{format:?} seq {i}");
+                assert_eq!(caches[i].len, prompts[i].len());
+            }
+        }
     }
 
     #[test]

@@ -3,7 +3,6 @@
 //! byte. Byte-aligned and SIMD-regular but wastes 0.415 bits/weight vs the
 //! ternary entropy bound — the "bit wastage" arm of the trade-off.
 
-use super::PackedMatrix;
 use crate::quant::{Granularity, Ternary};
 
 /// Packed 2-bit weight matrix.
@@ -54,22 +53,14 @@ impl PackedI2S {
     pub fn channel(&self, j: usize) -> &[u8] {
         &self.bytes[j * self.bytes_per_ch..(j + 1) * self.bytes_per_ch]
     }
-}
 
-impl PackedMatrix for PackedI2S {
-    fn d_in(&self) -> usize {
-        self.d_in
-    }
-
-    fn d_out(&self) -> usize {
-        self.d_out
-    }
-
-    fn weight_bytes(&self) -> usize {
+    /// Total bytes of the packed planes.
+    pub fn weight_bytes(&self) -> usize {
         self.bytes.len()
     }
 
-    fn decode_channel(&self, j: usize) -> Vec<i8> {
+    /// Decode channel `j` back to a ternary column (round-trip testing).
+    pub fn decode_channel(&self, j: usize) -> Vec<i8> {
         (0..self.d_in)
             .map(|i| dec(self.channel(j)[i / 4] >> ((i % 4) * 2)))
             .collect()

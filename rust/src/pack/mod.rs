@@ -14,7 +14,11 @@
 //!
 //! All packers consume per-output-channel ternary columns from
 //! [`crate::quant::Ternary`] and store channels contiguously (the GEMV
-//! iteration order).
+//! iteration order). This module owns only the *storage*: the kernels
+//! that multiply packed matrices — and the single dispatch surface over
+//! them — live in `engine::kernel` behind the `TernaryKernel` trait
+//! (which each packed type implements). The old `PackedMatrix` object
+//! trait and `pack()` boxing factory were folded into it.
 
 mod i2s;
 mod optimality;
@@ -25,8 +29,6 @@ pub use i2s::PackedI2S;
 pub use optimality::{enumerate_nm_formats, NmFormat};
 pub use pack34::Packed34;
 pub use tl2::PackedTl2;
-
-use crate::quant::Ternary;
 
 /// Storage format tag (Table 4 rows).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -65,33 +67,9 @@ impl Format {
     }
 }
 
-/// Common trait: packed weight matrix for one linear layer,
-/// `d_out` channels × `d_in` inputs, per-channel scales.
-pub trait PackedMatrix {
-    /// Number of input features.
-    fn d_in(&self) -> usize;
-    /// Number of output channels.
-    fn d_out(&self) -> usize;
-    /// Total bytes of the weight planes (size accounting for Table 4).
-    fn weight_bytes(&self) -> usize;
-    /// Decode channel `j` back to a ternary column (round-trip testing).
-    fn decode_channel(&self, j: usize) -> Vec<i8>;
-}
-
 /// Bytes for the per-channel scale vector (f32), shared across formats.
 pub fn scale_bytes(d_out: usize) -> usize {
     d_out * 4
-}
-
-/// Pack a quantized matrix into `format`. Panics if `q` violates the
-/// format's structural requirements (Sherry needs 3:4 sparsity).
-pub fn pack(q: &Ternary, format: Format) -> Box<dyn PackedMatrix + Send + Sync> {
-    match format {
-        Format::Sherry => Box::new(Packed34::from_ternary(q)),
-        Format::Tl2 => Box::new(PackedTl2::from_ternary(q)),
-        Format::I2S => Box::new(PackedI2S::from_ternary(q)),
-        Format::Dense => panic!("dense is not a packed format"),
-    }
 }
 
 #[cfg(test)]
@@ -117,9 +95,9 @@ mod tests {
         let qs = quantize(&w, Method::Sherry34, Granularity::PerChannel);
         let qd = quantize(&w, Method::AbsMean, Granularity::PerChannel);
 
-        let p34 = pack(&qs, Format::Sherry);
-        let ptl2 = pack(&qd, Format::Tl2);
-        let pi2s = pack(&qd, Format::I2S);
+        let p34 = Packed34::from_ternary(&qs);
+        let ptl2 = PackedTl2::from_ternary(&qd);
+        let pi2s = PackedI2S::from_ternary(&qd);
 
         let n = (d_in * d_out) as f32;
         let b34 = p34.weight_bytes() as f32 * 8.0 / n;

@@ -21,7 +21,6 @@
 //! No code crosses a byte boundary, which is the property the 1.67-bit
 //! format lacks.
 
-use super::PackedMatrix;
 use crate::quant::{Granularity, Ternary};
 
 /// All 16 canonical block patterns, precomputed: `PATTERNS[idx][lane]`.
@@ -193,22 +192,14 @@ impl Packed34 {
     pub fn sign_plane(&self, j: usize) -> &[u8] {
         &self.signs[j * self.sign_bytes_per_ch..(j + 1) * self.sign_bytes_per_ch]
     }
-}
 
-impl PackedMatrix for Packed34 {
-    fn d_in(&self) -> usize {
-        self.d_in
-    }
-
-    fn d_out(&self) -> usize {
-        self.d_out
-    }
-
-    fn weight_bytes(&self) -> usize {
+    /// Total bytes of the weight planes (size accounting for Table 4).
+    pub fn weight_bytes(&self) -> usize {
         self.idx.len() + self.signs.len()
     }
 
-    fn decode_channel(&self, j: usize) -> Vec<i8> {
+    /// Decode channel `j` back to a ternary column (round-trip testing).
+    pub fn decode_channel(&self, j: usize) -> Vec<i8> {
         let mut out = Vec::with_capacity(self.d_in);
         for b in 0..self.n_blocks() {
             out.extend_from_slice(&decode_block(self.idx_at(j, b), self.sign_at(j, b)));
@@ -251,6 +242,38 @@ mod tests {
             }
         }
         assert_eq!(seen.len(), 32);
+    }
+
+    #[test]
+    fn exhaustive_roundtrip_over_all_81_ternary_blocks() {
+        // Every one of the 3⁴ = 81 ternary 4-blocks: the 32 with exactly
+        // one zero (C(4,1)·2³) must round-trip through (index, mirror) —
+        // mirror bit included on both sides of the trip — and every other
+        // block must be rejected by the encoder (the 3:4 structural
+        // contract, paper Eq. 3).
+        let mut valid = 0usize;
+        let mut mirrored = 0usize;
+        for code in 0..81usize {
+            let mut c = code;
+            let mut blk = [0i8; 4];
+            for lane in &mut blk {
+                *lane = (c % 3) as i8 - 1;
+                c /= 3;
+            }
+            let zeros = blk.iter().filter(|&&x| x == 0).count();
+            if zeros == 1 {
+                let (idx, mirror) = encode_block(&blk);
+                assert!(idx < 16, "{blk:?} -> index {idx} out of range");
+                assert_eq!(decode_block(idx, mirror), blk, "{blk:?} failed roundtrip");
+                valid += 1;
+                mirrored += mirror as usize;
+            } else {
+                let r = std::panic::catch_unwind(|| encode_block(&blk));
+                assert!(r.is_err(), "{blk:?} (zeros={zeros}) must be rejected");
+            }
+        }
+        assert_eq!(valid, 32, "exactly C(4,1)·2³ valid 3:4 blocks");
+        assert_eq!(mirrored, 16, "mirror symmetry halves the states");
     }
 
     #[test]

@@ -9,7 +9,6 @@
 //! Code: `c = (t0+1)·9 + (t1+1)·3 + (t2+1)` ∈ [0, 27). Channels whose
 //! d_in is not a multiple of 3 are zero-padded.
 
-use super::PackedMatrix;
 use crate::quant::{Granularity, Ternary};
 
 /// Packed 1.67-bit weight matrix.
@@ -101,22 +100,14 @@ impl PackedTl2 {
     pub fn stream(&self, j: usize) -> &[u8] {
         &self.bits[j * self.bytes_per_ch..(j + 1) * self.bytes_per_ch]
     }
-}
 
-impl PackedMatrix for PackedTl2 {
-    fn d_in(&self) -> usize {
-        self.d_in
-    }
-
-    fn d_out(&self) -> usize {
-        self.d_out
-    }
-
-    fn weight_bytes(&self) -> usize {
+    /// Total bytes of the packed bitstreams.
+    pub fn weight_bytes(&self) -> usize {
         self.bits.len()
     }
 
-    fn decode_channel(&self, j: usize) -> Vec<i8> {
+    /// Decode channel `j` back to a ternary column (round-trip testing).
+    pub fn decode_channel(&self, j: usize) -> Vec<i8> {
         let mut out = Vec::with_capacity(self.d_in);
         for g in 0..self.n_groups() {
             let grp = decode_group(self.code_at(j, g));

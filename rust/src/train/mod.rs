@@ -273,7 +273,13 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return None;
         }
-        Some(Runtime::cpu(&dir).unwrap())
+        match Runtime::cpu(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping: {e}");
+                None
+            }
+        }
     }
 
     #[test]
