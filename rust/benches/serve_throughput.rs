@@ -1,6 +1,15 @@
 //! Serving-loop throughput: coordinator overhead on top of the engine
-//! (batching, KV pool, scheduling). L3 must not be the bottleneck —
-//! DESIGN.md §6.
+//! (batching, paged KV leasing, prefix sharing, scheduling). L3 must not
+//! be the bottleneck — DESIGN.md §7.
+//!
+//! Two tables:
+//! 1. Serving vs raw single-stream engine (coordinator overhead).
+//! 2. Paged-vs-contiguous × shared-prefix sweep: page_size = seq_len is
+//!    the degenerate whole-cache (contiguous-equivalent) configuration,
+//!    page_size = 16 the paged one; traces with and without a common
+//!    system prompt. Emitted to `BENCH_serve_paged.json` so the perf
+//!    trajectory captures throughput, admitted concurrency and
+//!    prefix-hit rate over time.
 //!
 //! Run: `cargo bench --bench serve_throughput`
 
@@ -33,11 +42,13 @@ fn main() {
             batcher: BatcherConfig { max_active: active, token_budget: 100_000 },
             kv_capacity: active,
             workers,
+            ..Default::default()
         };
         let trace = TraceSpec {
             n_requests: 16,
             mean_interarrival_s: 0.0,
             prompt_len: 3,
+            shared_prefix_len: 0,
             max_new_tokens: 24,
             seed: 1,
         };
@@ -45,4 +56,88 @@ fn main() {
         println!("| {label} | {:.1} | {:.2}x |", m.throughput_tps(), m.throughput_tps() / single);
     }
     println!("\n(>1x at 4/8-way = batching scales; 1-way ratio shows pure coordinator overhead)");
+
+    paged_sweep(&model, single);
+}
+
+/// Paged vs contiguous-equivalent KV at a fixed byte budget, with and
+/// without a shared system prompt. `page_size = seq_len` makes every
+/// sequence reserve one whole cache — the seed's whole-cache pool as a
+/// degenerate configuration of the same subsystem — so the comparison
+/// isolates paging granularity and prefix reuse.
+fn paged_sweep(model: &TernaryModel, single: f64) {
+    let seq_len = model.cfg.seq_len;
+    // 4 whole-cache equivalents of KV memory, 16 admission slots: the
+    // contiguous configuration is capacity-bound at 4-way, the paged one
+    // admits by actual page need.
+    let kv_capacity = 4usize;
+    let trace = |shared: usize| TraceSpec {
+        n_requests: 24,
+        mean_interarrival_s: 0.0005,
+        prompt_len: 18,
+        shared_prefix_len: shared,
+        max_new_tokens: 16,
+        seed: 12,
+    };
+
+    println!(
+        "\n### Paged vs contiguous KV at fixed byte budget ({kv_capacity} cache-equivalents)\n"
+    );
+    println!(
+        "| kv layout | shared prefix | tok/s | vs single | peak active | hit-rate | block util |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    let mut records = Vec::new();
+    for (layout, page_size, sharing) in [
+        ("contiguous", seq_len, false),
+        ("paged", 16usize, false),
+        ("paged+prefix", 16usize, true),
+    ] {
+        for shared_len in [0usize, 12] {
+            let server_cfg = ServerConfig {
+                batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+                kv_capacity,
+                page_size,
+                prefix_sharing: sharing,
+                workers: 8,
+                ..Default::default()
+            };
+            let spec = trace(shared_len);
+            let (completions, m) = serve_trace(model, server_cfg, spec);
+            assert_eq!(completions.len(), spec.n_requests, "sweep must serve everything");
+            println!(
+                "| {layout} | {shared_len} | {:.1} | {:.2}x | {} | {:.0}% | {:.0}% |",
+                m.throughput_tps(),
+                m.throughput_tps() / single,
+                m.peak_active,
+                100.0 * m.prefix_hit_rate(),
+                100.0 * m.block_utilization(),
+            );
+            records.push(format!(
+                "    {{\"layout\": \"{layout}\", \"page_size\": {page_size}, \
+                 \"prefix_sharing\": {sharing}, \"shared_prefix_len\": {shared_len}, \
+                 \"tok_per_s\": {:.3}, \"peak_active\": {}, \"prefix_hit_rate\": {:.4}, \
+                 \"block_utilization\": {:.4}, \"kv_bytes\": {}, \"ttft_p50_s\": {:.5}}}",
+                m.throughput_tps(),
+                m.peak_active,
+                m.prefix_hit_rate(),
+                m.block_utilization(),
+                m.kv_bytes,
+                m.ttft_p50(),
+            ));
+        }
+    }
+    println!(
+        "\n(paged admits more than the contiguous {kv_capacity}-way cap at the same KV bytes; \
+         +prefix skips shared-span prefill)"
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"serve_paged\",\n  \"records\": [\n{}\n  ]\n}}\n",
+        records.join(",\n")
+    );
+    let path = "BENCH_serve_paged.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
 }

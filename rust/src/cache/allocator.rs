@@ -1,0 +1,266 @@
+//! Fixed-page block allocator over one preallocated per-layer K/V arena.
+//!
+//! The paper's Limitations flag the BF16 KV cache as the dominant
+//! transient memory on edge devices; the seed design leased whole
+//! `seq_len`-sized contiguous caches, so admission was capped by
+//! worst-case allocation. Here KV memory is a single arena per layer,
+//! carved into fixed pages of `page_size` positions. Sequences map
+//! logical positions onto pages through a [`BlockTable`]
+//! (`super::table`); pages are refcounted so a frozen prompt prefix can
+//! back any number of sequences at once (radix sharing, `super::prefix`).
+//!
+//! [`BlockTable`]: super::table::BlockTable
+
+use crate::engine::NativeConfig;
+
+/// Index of a page in the arena.
+pub type PageId = u32;
+
+/// Refcounted fixed-page arena for K and V, one plane per layer.
+///
+/// Layout: page `p`, slot `s` (position within the page), channel `c`
+/// live at `arena[layer][(p * page_size + s) * d_model + c]`. Pages are
+/// never zeroed on (re)allocation — a slot is always written before any
+/// read reaches it because attention reads only positions `< len`.
+pub struct BlockAllocator {
+    page_size: usize,
+    d_model: usize,
+    n_layers: usize,
+    num_pages: usize,
+    /// Per-layer K arenas: `num_pages * page_size * d_model` floats.
+    k: Vec<Vec<f32>>,
+    /// Per-layer V arenas, same shape.
+    v: Vec<Vec<f32>>,
+    /// Per-page reference counts (0 = free).
+    refs: Vec<u32>,
+    /// Free-page stack.
+    free: Vec<PageId>,
+    peak_used: usize,
+}
+
+impl BlockAllocator {
+    /// Arena with `num_pages` pages of `page_size` positions each, shaped
+    /// for `cfg` (one K and one V plane per layer).
+    pub fn new(cfg: &NativeConfig, num_pages: usize, page_size: usize) -> Self {
+        assert!(num_pages > 0 && page_size > 0, "arena must hold at least one slot");
+        assert!(num_pages <= PageId::MAX as usize, "page id space exhausted");
+        let plane = num_pages * page_size * cfg.d_model;
+        Self {
+            page_size,
+            d_model: cfg.d_model,
+            n_layers: cfg.n_layers,
+            num_pages,
+            k: (0..cfg.n_layers).map(|_| vec![0.0; plane]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0.0; plane]).collect(),
+            refs: vec![0; num_pages],
+            // Pop order is descending ids; purely cosmetic.
+            free: (0..num_pages as PageId).rev().collect(),
+            peak_used: 0,
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.num_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.num_pages - self.free.len()
+    }
+
+    /// High-water mark of pages in use (block-utilization gauge).
+    pub fn peak_used(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Current reference count of `p` (0 = free).
+    pub fn ref_count(&self, p: PageId) -> u32 {
+        self.refs[p as usize]
+    }
+
+    /// Total arena bytes (KV byte budget, at the 4 B/f32 storage width the
+    /// engine uses — see DESIGN.md substitutions for the bf16 accounting).
+    pub fn bytes(&self) -> usize {
+        2 * self.n_layers * self.num_pages * self.page_size * self.d_model * 4
+    }
+
+    /// Take a free page with refcount 1, or `None` when the arena is full.
+    pub fn alloc(&mut self) -> Option<PageId> {
+        let p = self.free.pop()?;
+        debug_assert_eq!(self.refs[p as usize], 0, "free page with live refs");
+        self.refs[p as usize] = 1;
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Some(p)
+    }
+
+    /// Add a reference to a live page (prefix sharing).
+    pub fn retain(&mut self, p: PageId) {
+        assert!(self.refs[p as usize] > 0, "retain of a free page");
+        self.refs[p as usize] += 1;
+    }
+
+    /// Drop one reference; the page returns to the free stack at zero.
+    pub fn release(&mut self, p: PageId) {
+        let r = &mut self.refs[p as usize];
+        assert!(*r > 0, "double free of page {p}");
+        *r -= 1;
+        if *r == 0 {
+            self.free.push(p);
+        }
+    }
+
+    /// Write one position's K and V rows into `(page, slot)` of `layer`.
+    #[inline]
+    pub fn write_row(
+        &mut self,
+        layer: usize,
+        p: PageId,
+        slot: usize,
+        k_row: &[f32],
+        v_row: &[f32],
+    ) {
+        debug_assert!(slot < self.page_size);
+        debug_assert!(self.refs[p as usize] > 0, "write to a free page");
+        let d = self.d_model;
+        let base = (p as usize * self.page_size + slot) * d;
+        self.k[layer][base..base + d].copy_from_slice(k_row);
+        self.v[layer][base..base + d].copy_from_slice(v_row);
+    }
+
+    /// The whole K plane of `layer` (attention reads through
+    /// [`Rows`](super::view::Rows), which indexes pages into this slab).
+    #[inline]
+    pub fn k_plane(&self, layer: usize) -> &[f32] {
+        &self.k[layer]
+    }
+
+    /// The whole V plane of `layer`.
+    #[inline]
+    pub fn v_plane(&self, layer: usize) -> &[f32] {
+        &self.v[layer]
+    }
+
+    /// Copy the first `rows` slots of `src` into `dst` across every layer
+    /// (copy-on-write: the diverging sequence gets a private copy of the
+    /// shared page's prefix; `src` itself is never written).
+    pub fn copy_rows(&mut self, src: PageId, dst: PageId, rows: usize) {
+        debug_assert!(rows <= self.page_size);
+        debug_assert_ne!(src, dst, "CoW onto the same page");
+        let d = self.d_model;
+        let n = rows * d;
+        let (s0, d0) = (src as usize * self.page_size * d, dst as usize * self.page_size * d);
+        for li in 0..self.n_layers {
+            let (k0, v0) = (&mut self.k[li], &mut self.v[li]);
+            k0.copy_within(s0..s0 + n, d0);
+            v0.copy_within(s0..s0 + n, d0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena(pages: usize) -> BlockAllocator {
+        BlockAllocator::new(&NativeConfig::named("nano").unwrap(), pages, 4)
+    }
+
+    #[test]
+    fn alloc_release_roundtrip() {
+        let mut a = arena(3);
+        assert_eq!(a.free_pages(), 3);
+        let p = a.alloc().unwrap();
+        assert_eq!(a.ref_count(p), 1);
+        assert_eq!(a.used_pages(), 1);
+        a.release(p);
+        assert_eq!(a.free_pages(), 3);
+        assert_eq!(a.ref_count(p), 0);
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut a = arena(2);
+        let _p = a.alloc().unwrap();
+        let _q = a.alloc().unwrap();
+        assert!(a.alloc().is_none());
+    }
+
+    #[test]
+    fn retain_keeps_page_alive() {
+        let mut a = arena(2);
+        let p = a.alloc().unwrap();
+        a.retain(p);
+        a.release(p);
+        assert_eq!(a.ref_count(p), 1, "still referenced");
+        assert_eq!(a.used_pages(), 1);
+        a.release(p);
+        assert_eq!(a.used_pages(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut a = arena(2);
+        let p = a.alloc().unwrap();
+        a.release(p);
+        a.release(p);
+    }
+
+    #[test]
+    fn rows_written_are_read_back() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let mut a = BlockAllocator::new(&cfg, 2, 4);
+        let p = a.alloc().unwrap();
+        let krow: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let vrow: Vec<f32> = (0..d).map(|i| -(i as f32)).collect();
+        a.write_row(1, p, 2, &krow, &vrow);
+        let base = (p as usize * 4 + 2) * d;
+        assert_eq!(&a.k_plane(1)[base..base + d], &krow[..]);
+        assert_eq!(&a.v_plane(1)[base..base + d], &vrow[..]);
+    }
+
+    #[test]
+    fn copy_rows_copies_prefix_all_layers() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let mut a = BlockAllocator::new(&cfg, 2, 4);
+        let src = a.alloc().unwrap();
+        let dst = a.alloc().unwrap();
+        for li in 0..cfg.n_layers {
+            for s in 0..4 {
+                let row = vec![(li * 10 + s) as f32; d];
+                a.write_row(li, src, s, &row, &row);
+            }
+        }
+        a.copy_rows(src, dst, 3);
+        for li in 0..cfg.n_layers {
+            for s in 0..3 {
+                let base = (dst as usize * 4 + s) * d;
+                assert_eq!(a.k_plane(li)[base], (li * 10 + s) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn peak_used_tracks_high_water() {
+        let mut a = arena(3);
+        let p = a.alloc().unwrap();
+        let q = a.alloc().unwrap();
+        a.release(p);
+        a.release(q);
+        let _r = a.alloc().unwrap();
+        assert_eq!(a.peak_used(), 2);
+    }
+}

@@ -1,0 +1,32 @@
+//! Paged KV-cache subsystem: block allocator, per-sequence block tables,
+//! radix prefix sharing, and the storage view the engine decodes through.
+//!
+//! The seed served each sequence from a whole `seq_len × d_model`
+//! contiguous cache leased from a fixed pool, so concurrency was capped
+//! by worst-case allocation and identical prompt prefixes were recomputed
+//! per request. This subsystem replaces that with vLLM-style paging:
+//!
+//! * [`BlockAllocator`] — one preallocated per-layer K/V arena carved
+//!   into fixed pages (default 16 positions), refcounted.
+//! * [`BlockTable`] — per-sequence logical-position → page map; frozen
+//!   shared pages copy-on-write at first divergence.
+//! * [`PrefixIndex`] — radix trie over registered prompt prefixes; a new
+//!   request reuses the frozen KV pages of any previously seen prefix,
+//!   skipping prefill for the shared span with token-identical results.
+//! * [`KvBatch`] / [`Rows`] — the engine-facing view; contiguous
+//!   [`KvCache`](crate::engine::KvCache)s are the degenerate
+//!   single-table case of the same code path, preserving bit-for-bit
+//!   parity between paged and contiguous decode.
+//!
+//! DESIGN.md §4 documents the page layout, the block-table indirection,
+//! the radix prefix lifecycle, and the CoW rules.
+
+mod allocator;
+mod prefix;
+mod table;
+mod view;
+
+pub use allocator::{BlockAllocator, PageId};
+pub use prefix::PrefixIndex;
+pub use table::BlockTable;
+pub use view::{KvBatch, Rows};

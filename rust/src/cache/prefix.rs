@@ -1,0 +1,219 @@
+//! Radix prefix index: maps prompt-token prefixes to frozen KV pages.
+//!
+//! A trie whose edges are full-page token chunks (`page_size` tokens).
+//! Each non-root node owns one reference to the arena page holding the
+//! KV rows of its chunk. A newly admitted request walks the trie with
+//! its prompt: every fully matched chunk contributes a whole shared
+//! page; a partial match on the last chunk shares the page's live
+//! prefix (the recipient copy-on-writes at first divergence — see
+//! `super::table`). Because K/V rows are a deterministic function of the
+//! token prefix (causal attention, absolute-position RoPE, bit-for-bit
+//! batched kernels), reusing a registered page is exact, not
+//! approximate: prefill for the shared span is skipped with
+//! token-identical results.
+//!
+//! Generated tokens are never registered — only prompt pages freeze
+//! (the standard system-prompt sharing workload). Index-held pages are
+//! released wholesale via [`PrefixIndex::clear`]; finer-grained
+//! eviction (LRU over nodes) is a ROADMAP follow-on.
+
+use super::allocator::{BlockAllocator, PageId};
+use super::table::BlockTable;
+
+struct Node {
+    /// Edges: full-page token chunk → child node index.
+    children: Vec<(Box<[u32]>, usize)>,
+    /// The frozen page holding this chunk's KV rows (one index-owned
+    /// reference). `PageId::MAX` sentinel on the root, which has no page.
+    page: PageId,
+}
+
+/// Refcounted radix index over registered prompt prefixes.
+pub struct PrefixIndex {
+    page_size: usize,
+    nodes: Vec<Node>,
+}
+
+fn common_prefix(a: &[u32], b: &[u32]) -> usize {
+    a.iter().zip(b).take_while(|(x, y)| x == y).count()
+}
+
+impl PrefixIndex {
+    pub fn new(page_size: usize) -> Self {
+        assert!(page_size > 0);
+        Self { page_size, nodes: vec![Node { children: Vec::new(), page: PageId::MAX }] }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pages the index holds references to (one per non-root node).
+    pub fn pages_held(&self) -> usize {
+        self.nodes.len() - 1
+    }
+
+    /// Longest reusable prefix of `prompt`, capped at `cap` tokens, plus
+    /// the pages covering it (`ceil(matched / page_size)` pages; the last
+    /// may be partially used). Read-only: takes no page references.
+    ///
+    /// `cap` exists because a request must always feed at least its final
+    /// prompt token to produce logits, and may never feed past the
+    /// context limit — callers pass `min(prompt_len - 1, seq_len - 1)`.
+    pub fn probe_pages(&self, prompt: &[u32], cap: usize) -> (Vec<PageId>, usize) {
+        let ps = self.page_size;
+        let mut pages = Vec::new();
+        let mut matched = 0usize;
+        let mut node = 0usize;
+        while matched < cap {
+            let remaining = &prompt[matched..];
+            let mut best: Option<(usize, usize)> = None; // (common_len, child)
+            for (edge, child) in &self.nodes[node].children {
+                let m = common_prefix(edge, remaining);
+                if m > best.map_or(0, |(b, _)| b) {
+                    best = Some((m, *child));
+                }
+            }
+            let Some((m, child)) = best else { break };
+            let use_len = m.min(cap - matched);
+            if use_len == 0 {
+                break;
+            }
+            pages.push(self.nodes[child].page);
+            matched += use_len;
+            if use_len < ps {
+                break; // partial page: divergence, prompt end, or cap
+            }
+            node = child;
+        }
+        (pages, matched)
+    }
+
+    /// Reusable-prefix length only (admission cost estimation).
+    pub fn probe_len(&self, prompt: &[u32], cap: usize) -> usize {
+        self.probe_pages(prompt, cap).1
+    }
+
+    /// Freeze the full-page chunks of `prompt` into the index, taking one
+    /// arena reference per newly inserted page. Chunks already present
+    /// are left untouched (identical tokens ⇒ identical KV rows, so the
+    /// existing page is as good as `table`'s). Call after prefill — every
+    /// prompt position must be resident in `table`.
+    pub fn register(&mut self, prompt: &[u32], table: &BlockTable, alloc: &mut BlockAllocator) {
+        let ps = self.page_size;
+        debug_assert_eq!(ps, alloc.page_size());
+        debug_assert!(table.len() >= prompt.len(), "register before prefill completed");
+        let mut node = 0usize;
+        for (i, chunk) in prompt.chunks_exact(ps).enumerate() {
+            if let Some(&(_, child)) =
+                self.nodes[node].children.iter().find(|(edge, _)| edge.as_ref() == chunk)
+            {
+                node = child;
+                continue;
+            }
+            let page = table.pages()[i];
+            alloc.retain(page);
+            let id = self.nodes.len();
+            self.nodes.push(Node { children: Vec::new(), page });
+            self.nodes[node].children.push((chunk.to_vec().into_boxed_slice(), id));
+            node = id;
+        }
+    }
+
+    /// Release every index-held page and reset to empty — the flush
+    /// "eviction policy" the coordinator falls back on when frozen pages
+    /// would otherwise starve admission.
+    pub fn clear(&mut self, alloc: &mut BlockAllocator) {
+        for node in self.nodes.drain(1..) {
+            alloc.release(node.page);
+        }
+        self.nodes[0].children.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeConfig;
+
+    fn arena(pages: usize, ps: usize) -> BlockAllocator {
+        BlockAllocator::new(&NativeConfig::named("nano").unwrap(), pages, ps)
+    }
+
+    /// Build a table holding `positions` freshly allocated positions.
+    fn filled_table(a: &mut BlockAllocator, positions: usize) -> BlockTable {
+        let mut t = BlockTable::new(a.page_size());
+        for _ in 0..positions {
+            t.prepare_append(a);
+            t.advance();
+        }
+        t
+    }
+
+    #[test]
+    fn empty_index_matches_nothing() {
+        let idx = PrefixIndex::new(4);
+        let (pages, matched) = idx.probe_pages(&[1, 2, 3, 4, 5], 4);
+        assert!(pages.is_empty());
+        assert_eq!(matched, 0);
+    }
+
+    #[test]
+    fn register_then_probe_full_and_partial() {
+        let mut a = arena(8, 4);
+        let prompt: Vec<u32> = vec![10, 11, 12, 13, 20, 21, 22, 23, 30]; // 2 full chunks + tail
+        let t = filled_table(&mut a, prompt.len());
+        let mut idx = PrefixIndex::new(4);
+        idx.register(&prompt, &t, &mut a);
+        assert_eq!(idx.pages_held(), 2, "only full-page chunks freeze");
+
+        // Identical prompt: both full chunks reusable (cap leaves ≥1 token).
+        let (pages, matched) = idx.probe_pages(&prompt, prompt.len() - 1);
+        assert_eq!(matched, 8);
+        assert_eq!(pages, &t.pages()[..2]);
+
+        // Prompt diverging inside chunk 2: partial share of page 1.
+        let other: Vec<u32> = vec![10, 11, 12, 13, 20, 21, 99, 99, 7];
+        let (pages, matched) = idx.probe_pages(&other, other.len() - 1);
+        assert_eq!(matched, 6);
+        assert_eq!(pages.len(), 2);
+
+        // Prompt diverging at token 0: no share.
+        assert_eq!(idx.probe_len(&[5, 5, 5, 5], 3), 0);
+    }
+
+    #[test]
+    fn cap_truncates_match() {
+        let mut a = arena(8, 4);
+        let prompt: Vec<u32> = (0..8).collect();
+        let t = filled_table(&mut a, prompt.len());
+        let mut idx = PrefixIndex::new(4);
+        idx.register(&prompt, &t, &mut a);
+        // cap 7 < full match 8 → last page shared partially.
+        let (pages, matched) = idx.probe_pages(&prompt, 7);
+        assert_eq!(matched, 7);
+        assert_eq!(pages.len(), 2);
+        // cap 3 → only a prefix of the first page.
+        let (pages, matched) = idx.probe_pages(&prompt, 3);
+        assert_eq!(matched, 3);
+        assert_eq!(pages.len(), 1);
+    }
+
+    #[test]
+    fn register_is_idempotent_and_refcounts_balance() {
+        let mut a = arena(8, 4);
+        let prompt: Vec<u32> = (100..108).collect();
+        let mut t = filled_table(&mut a, prompt.len());
+        let mut idx = PrefixIndex::new(4);
+        idx.register(&prompt, &t, &mut a);
+        idx.register(&prompt, &t, &mut a);
+        assert_eq!(idx.pages_held(), 2);
+        let frozen = [t.pages()[0], t.pages()[1]];
+        assert_eq!(a.ref_count(frozen[0]), 2); // table + index
+        t.release_all(&mut a);
+        assert_eq!(a.ref_count(frozen[0]), 1); // index keeps it alive
+        idx.clear(&mut a);
+        assert_eq!(a.used_pages(), 0);
+        assert_eq!(idx.pages_held(), 0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Per-sequence block table: maps logical KV positions onto arena pages.
+//!
+//! A table starts either empty or seeded with refcounted pages borrowed
+//! from the radix prefix index (`super::prefix`). Shared pages are
+//! frozen: the first append that would land inside one triggers
+//! copy-on-write, so a diverging sequence can never mutate KV rows
+//! another sequence (or the index) still reads.
+
+use super::allocator::{BlockAllocator, PageId};
+
+/// Logical-position → page mapping for one sequence.
+pub struct BlockTable {
+    page_size: usize,
+    pages: Vec<PageId>,
+    /// Positions stored (the sequence's KV length).
+    len: usize,
+    /// Pages `[0, owned_from)` are shared/frozen (prefix-index pages this
+    /// table only holds a reference to); pages from `owned_from` on are
+    /// exclusively owned and writable.
+    owned_from: usize,
+    /// Pages this table allocated itself (fresh allocs + CoW copies) —
+    /// admission accounting subtracts this from the pessimistic
+    /// reservation to get outstanding future allocations.
+    owned: usize,
+}
+
+impl BlockTable {
+    /// Empty table (no shared prefix).
+    pub fn new(page_size: usize) -> Self {
+        assert!(page_size > 0);
+        Self { page_size, pages: Vec::new(), len: 0, owned_from: 0, owned: 0 }
+    }
+
+    /// Table seeded with `shared_len` positions backed by frozen `pages`
+    /// from the prefix index. The caller has already taken one reference
+    /// per page; this table releases them via [`BlockTable::release_all`].
+    pub fn from_shared(page_size: usize, pages: Vec<PageId>, shared_len: usize) -> Self {
+        assert!(page_size > 0);
+        assert_eq!(pages.len(), shared_len.div_ceil(page_size), "pages must cover shared span");
+        let owned_from = pages.len();
+        Self { page_size, pages, len: shared_len, owned_from, owned: 0 }
+    }
+
+    /// Positions stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn pages(&self) -> &[PageId] {
+        &self.pages
+    }
+
+    /// Pages this table allocated itself (excludes shared prefix pages).
+    pub fn owned_pages(&self) -> usize {
+        self.owned
+    }
+
+    /// Number of leading positions still backed by frozen shared pages.
+    pub fn shared_prefix_pages(&self) -> usize {
+        self.owned_from
+    }
+
+    /// Make the slot for position `self.len()` writable: allocates a
+    /// fresh page at a page boundary, copy-on-writes the tail page if it
+    /// is shared, and is a no-op when the tail page is already owned.
+    /// Must be called once before the first [`BlockTable::slot_for`]
+    /// write of each appended position.
+    ///
+    /// Panics when the arena is out of pages — the coordinator's
+    /// admission control reserves pages pessimistically, so exhaustion
+    /// here is a scheduling bug, not a load condition.
+    pub fn prepare_append(&mut self, alloc: &mut BlockAllocator) {
+        debug_assert_eq!(self.page_size, alloc.page_size(), "table/arena page size mismatch");
+        let pi = self.len / self.page_size;
+        if pi == self.pages.len() {
+            let p = alloc
+                .alloc()
+                .expect("KV arena exhausted: admission must reserve pages before activation");
+            self.pages.push(p);
+            self.owned += 1;
+        } else if pi < self.owned_from {
+            // First divergence into a shared page: copy its live prefix
+            // into a private page, drop our reference to the shared one.
+            debug_assert_eq!(pi + 1, self.pages.len(), "append can only CoW the tail page");
+            let src = self.pages[pi];
+            let dst = alloc
+                .alloc()
+                .expect("KV arena exhausted: admission must reserve the CoW page");
+            alloc.copy_rows(src, dst, self.len % self.page_size);
+            alloc.release(src);
+            self.pages[pi] = dst;
+            self.owned_from = pi;
+            self.owned += 1;
+        }
+    }
+
+    /// `(page, slot)` backing logical position `pos` (`pos < len`, or
+    /// `pos == len` after [`BlockTable::prepare_append`]).
+    #[inline]
+    pub fn slot_for(&self, pos: usize) -> (PageId, usize) {
+        (self.pages[pos / self.page_size], pos % self.page_size)
+    }
+
+    /// Commit one appended position.
+    pub fn advance(&mut self) {
+        self.len += 1;
+        let cap = self.pages.len() * self.page_size;
+        debug_assert!(self.len <= cap, "advance before prepare_append");
+    }
+
+    /// Drop every page reference this table holds (sequence retirement).
+    pub fn release_all(&mut self, alloc: &mut BlockAllocator) {
+        for p in self.pages.drain(..) {
+            alloc.release(p);
+        }
+        self.len = 0;
+        self.owned_from = 0;
+        self.owned = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeConfig;
+
+    fn arena(pages: usize, ps: usize) -> BlockAllocator {
+        BlockAllocator::new(&NativeConfig::named("nano").unwrap(), pages, ps)
+    }
+
+    #[test]
+    fn grows_one_page_per_page_size_positions() {
+        let mut a = arena(4, 4);
+        let mut t = BlockTable::new(4);
+        for pos in 0..9 {
+            t.prepare_append(&mut a);
+            let (_, slot) = t.slot_for(pos);
+            assert_eq!(slot, pos % 4);
+            t.advance();
+        }
+        assert_eq!(t.len(), 9);
+        assert_eq!(t.pages().len(), 3);
+        assert_eq!(t.owned_pages(), 3);
+        assert_eq!(a.used_pages(), 3);
+        t.release_all(&mut a);
+        assert_eq!(a.used_pages(), 0);
+    }
+
+    #[test]
+    fn cow_on_first_divergence_into_partial_shared_page() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let mut a = arena(4, 4);
+        // Donor fills one full page (4 positions).
+        let shared = a.alloc().unwrap();
+        for s in 0..4 {
+            let row = vec![s as f32; d];
+            a.write_row(0, shared, s, &row, &row);
+        }
+        // Recipient shares the first 3 positions of that page.
+        a.retain(shared);
+        let mut t = BlockTable::from_shared(4, vec![shared], 3);
+        assert_eq!(t.shared_prefix_pages(), 1);
+        let snapshot: Vec<f32> = a.k_plane(0).to_vec();
+
+        // Appending position 3 diverges inside the shared page → CoW.
+        t.prepare_append(&mut a);
+        let (p, slot) = t.slot_for(3);
+        assert_ne!(p, shared, "divergence must land on a private copy");
+        assert_eq!(slot, 3);
+        assert_eq!(t.shared_prefix_pages(), 0);
+        assert_eq!(t.owned_pages(), 1);
+        let row = vec![99.0; d];
+        a.write_row(0, p, slot, &row, &row);
+        t.advance();
+
+        // The shared page is bit-identical to before the divergence …
+        let base = shared as usize * 4 * d;
+        assert_eq!(&a.k_plane(0)[base..base + 4 * d], &snapshot[base..base + 4 * d]);
+        // … and the copy carried the live prefix over.
+        let cbase = p as usize * 4 * d;
+        assert_eq!(a.k_plane(0)[cbase], 0.0);
+        assert_eq!(a.k_plane(0)[cbase + 2 * d], 2.0);
+        assert_eq!(a.k_plane(0)[cbase + 3 * d], 99.0);
+        // Our reference moved from the shared page to the copy.
+        assert_eq!(a.ref_count(shared), 1);
+
+        t.release_all(&mut a);
+        a.release(shared);
+        assert_eq!(a.used_pages(), 0);
+    }
+
+    #[test]
+    fn fully_shared_pages_never_cow() {
+        let mut a = arena(4, 4);
+        let shared = a.alloc().unwrap();
+        a.retain(shared);
+        // Shared span ends exactly at the page boundary.
+        let mut t = BlockTable::from_shared(4, vec![shared], 4);
+        t.prepare_append(&mut a);
+        let (p, slot) = t.slot_for(4);
+        assert_ne!(p, shared);
+        assert_eq!(slot, 0, "append starts a fresh page");
+        assert_eq!(t.shared_prefix_pages(), 1, "full page stays shared");
+        t.advance();
+        t.release_all(&mut a);
+        assert_eq!(a.ref_count(shared), 1);
+        a.release(shared);
+    }
+}

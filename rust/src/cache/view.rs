@@ -1,0 +1,189 @@
+//! Block-table view: the engine's one window onto KV storage.
+//!
+//! [`TernaryModel::forward_kv`](crate::engine::TernaryModel::forward_kv)
+//! appends and reads K/V exclusively through [`KvBatch`], so paged and
+//! contiguous storage run the *same* model code. [`Rows`] resolves a
+//! logical position to its `d_model`-wide row — a slice offset for a
+//! contiguous cache, a page-table lookup for the paged arena — and the
+//! attention math consumes rows in identical order either way, which is
+//! what keeps paged decode bit-for-bit equal to the contiguous baseline
+//! (the contiguous path is literally the degenerate single-table case).
+
+use super::allocator::{BlockAllocator, PageId};
+use super::table::BlockTable;
+use crate::engine::KvCache;
+
+/// Position-indexed row access into one sequence's K (or V) history at
+/// one layer. Copyable, shareable across the attention worker pool.
+#[derive(Clone, Copy)]
+pub enum Rows<'a> {
+    /// Contiguous per-sequence buffer: position `s` at `buf[s*d..]`.
+    Contig { buf: &'a [f32], d: usize },
+    /// Paged arena: position `s` lives in `pages[s / page_size]` at slot
+    /// `s % page_size`.
+    Paged { plane: &'a [f32], pages: &'a [PageId], page_size: usize, d: usize },
+}
+
+impl<'a> Rows<'a> {
+    /// The row for logical position `s`.
+    #[inline]
+    pub fn row(&self, s: usize) -> &'a [f32] {
+        match *self {
+            Rows::Contig { buf, d } => &buf[s * d..(s + 1) * d],
+            Rows::Paged { plane, pages, page_size, d } => {
+                let base = (pages[s / page_size] as usize * page_size + s % page_size) * d;
+                &plane[base..base + d]
+            }
+        }
+    }
+}
+
+/// Mutable KV backing for one decode micro-step over a batch of
+/// sequences: either each sequence's own contiguous [`KvCache`], or
+/// per-sequence [`BlockTable`]s over one shared [`BlockAllocator`].
+pub enum KvBatch<'s, 'c> {
+    Contig(&'s mut [&'c mut KvCache]),
+    Paged { alloc: &'s mut BlockAllocator, tables: &'s mut [&'c mut BlockTable] },
+}
+
+impl<'s, 'c> KvBatch<'s, 'c> {
+    /// Number of sequences in the batch.
+    pub fn batch(&self) -> usize {
+        match self {
+            KvBatch::Contig(caches) => caches.len(),
+            KvBatch::Paged { tables, .. } => tables.len(),
+        }
+    }
+
+    /// Current decode position (= stored KV length) of sequence `i`.
+    pub fn pos(&self, i: usize) -> usize {
+        match self {
+            KvBatch::Contig(caches) => caches[i].len,
+            KvBatch::Paged { tables, .. } => tables[i].len(),
+        }
+    }
+
+    /// Make every sequence's next slot writable (page allocation and
+    /// copy-on-write happen here, once per step, before any layer reads).
+    pub fn begin_step(&mut self) {
+        if let KvBatch::Paged { alloc, tables } = self {
+            for t in tables.iter_mut() {
+                t.prepare_append(alloc);
+            }
+        }
+    }
+
+    /// Append sequence `i`'s K/V rows for `layer` at its current position.
+    #[inline]
+    pub fn append(&mut self, layer: usize, i: usize, k_row: &[f32], v_row: &[f32]) {
+        match self {
+            KvBatch::Contig(caches) => {
+                caches[i].k[layer].extend_from_slice(k_row);
+                caches[i].v[layer].extend_from_slice(v_row);
+            }
+            KvBatch::Paged { alloc, tables } => {
+                let (page, slot) = tables[i].slot_for(tables[i].len());
+                alloc.write_row(layer, page, slot, k_row, v_row);
+            }
+        }
+    }
+
+    /// K rows of sequence `i` at `layer` (history including this step's
+    /// appended row).
+    #[inline]
+    pub fn k_rows(&self, layer: usize, i: usize) -> Rows<'_> {
+        match self {
+            KvBatch::Contig(caches) => {
+                Rows::Contig { buf: &caches[i].k[layer], d: caches[i].d_model }
+            }
+            KvBatch::Paged { alloc, tables } => Rows::Paged {
+                plane: alloc.k_plane(layer),
+                pages: tables[i].pages(),
+                page_size: alloc.page_size(),
+                d: alloc.d_model(),
+            },
+        }
+    }
+
+    /// V rows of sequence `i` at `layer`.
+    #[inline]
+    pub fn v_rows(&self, layer: usize, i: usize) -> Rows<'_> {
+        match self {
+            KvBatch::Contig(caches) => {
+                Rows::Contig { buf: &caches[i].v[layer], d: caches[i].d_model }
+            }
+            KvBatch::Paged { alloc, tables } => Rows::Paged {
+                plane: alloc.v_plane(layer),
+                pages: tables[i].pages(),
+                page_size: alloc.page_size(),
+                d: alloc.d_model(),
+            },
+        }
+    }
+
+    /// Commit the step: every sequence's length advances by one.
+    pub fn advance(&mut self) {
+        match self {
+            KvBatch::Contig(caches) => {
+                for c in caches.iter_mut() {
+                    c.len += 1;
+                }
+            }
+            KvBatch::Paged { tables, .. } => {
+                for t in tables.iter_mut() {
+                    t.advance();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NativeConfig;
+
+    #[test]
+    fn contig_and_paged_rows_agree() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let mut cache = KvCache::new(&cfg);
+        let mut alloc = BlockAllocator::new(&cfg, 4, 4);
+        let mut table = BlockTable::new(4);
+        // Append 6 positions of distinct rows through both backings.
+        for pos in 0..6usize {
+            let krow: Vec<f32> = (0..d).map(|c| (pos * d + c) as f32).collect();
+            let vrow: Vec<f32> = krow.iter().map(|x| -x).collect();
+            {
+                let mut caches = [&mut cache];
+                let mut kv = KvBatch::Contig(&mut caches);
+                kv.begin_step();
+                for li in 0..cfg.n_layers {
+                    kv.append(li, 0, &krow, &vrow);
+                }
+                kv.advance();
+            }
+            {
+                let mut tables = [&mut table];
+                let mut kv = KvBatch::Paged { alloc: &mut alloc, tables: &mut tables };
+                kv.begin_step();
+                for li in 0..cfg.n_layers {
+                    kv.append(li, 0, &krow, &vrow);
+                }
+                kv.advance();
+            }
+        }
+        let mut caches = [&mut cache];
+        let kv_c = KvBatch::Contig(&mut caches);
+        let mut tables = [&mut table];
+        let kv_p = KvBatch::Paged { alloc: &mut alloc, tables: &mut tables };
+        assert_eq!(kv_c.pos(0), 6);
+        assert_eq!(kv_p.pos(0), 6);
+        for li in 0..cfg.n_layers {
+            for s in 0..6 {
+                assert_eq!(kv_c.k_rows(li, 0).row(s), kv_p.k_rows(li, 0).row(s));
+                assert_eq!(kv_c.v_rows(li, 0).row(s), kv_p.v_rows(li, 0).row(s));
+            }
+        }
+    }
+}

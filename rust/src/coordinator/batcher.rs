@@ -62,23 +62,35 @@ impl Batcher {
     /// Admit as many waiting requests as fit (FIFO; head-of-line blocking
     /// by design so no request starves).
     pub fn admit(&mut self) -> usize {
-        self.admit_up_to(usize::MAX)
+        self.admit_pages(usize::MAX, |_| 0)
     }
 
-    /// [`Batcher::admit`] additionally capped at `limit` new admissions —
-    /// the server passes the KV pool's free capacity so every admitted
-    /// sequence is guaranteed a cache (an active entry without one would
-    /// starve and desynchronize the server's per-sequence state).
-    pub fn admit_up_to(&mut self, limit: usize) -> usize {
+    /// Page-counted FIFO admission for the paged KV arena: admit waiting
+    /// requests while their worst-case page need (per `page_cost`, which
+    /// the server backs with the prefix index so shared prefixes cost
+    /// nothing) fits in `free_pages`, alongside the usual `max_active`
+    /// and token-budget caps. Unlike the token budget there is no
+    /// lone-oversized exception — pages are physical memory; the server
+    /// sizes the arena to at least one worst-case sequence so the queue
+    /// head always becomes admissible once the arena drains.
+    pub fn admit_pages<F>(&mut self, mut free_pages: usize, page_cost: F) -> usize
+    where
+        F: Fn(&Request) -> usize,
+    {
         let mut admitted = 0;
-        while self.active.len() < self.cfg.max_active && admitted < limit {
+        while self.active.len() < self.cfg.max_active {
             let Some(front) = self.waiting.front() else { break };
             let need = front.prompt.len() + front.max_new_tokens;
             if self.reserved + need > self.cfg.token_budget && !self.active.is_empty() {
                 break; // wait for space; never skip the head
             }
+            let pages = page_cost(front);
+            if pages > free_pages {
+                break;
+            }
             let r = self.waiting.pop_front().unwrap();
             self.reserved += need;
+            free_pages -= pages;
             self.active.push((r, 0));
             admitted += 1;
         }
@@ -154,6 +166,32 @@ mod tests {
         let mut b = Batcher::new(BatcherConfig { max_active: 4, token_budget: 10 });
         b.submit(req(1, 50, 10));
         assert_eq!(b.admit(), 1);
+    }
+
+    #[test]
+    fn admit_pages_counts_free_pages() {
+        let mut b = Batcher::new(BatcherConfig { max_active: 8, token_budget: 10_000 });
+        for i in 0..4 {
+            b.submit(req(i, 4, 4)); // 8 positions → 2 pages at page_size 4
+        }
+        let cost = |r: &Request| (r.prompt.len() + r.max_new_tokens).div_ceil(4);
+        assert_eq!(b.admit_pages(5, cost), 2, "2 pages each, 5 free → 2 admitted");
+        assert_eq!(b.waiting_len(), 2);
+        // Freeing pages admits the FIFO head next.
+        assert_eq!(b.admit_pages(2, cost), 1);
+        assert_eq!(b.active()[2].0.id, 2);
+    }
+
+    #[test]
+    fn admit_pages_still_respects_max_active_and_token_budget() {
+        let mut b = Batcher::new(BatcherConfig { max_active: 1, token_budget: 1000 });
+        b.submit(req(1, 2, 2));
+        b.submit(req(2, 2, 2));
+        assert_eq!(b.admit_pages(100, |_| 1), 1, "max_active caps page admission");
+        let mut b = Batcher::new(BatcherConfig { max_active: 8, token_budget: 10 });
+        b.submit(req(1, 4, 4));
+        b.submit(req(2, 4, 4));
+        assert_eq!(b.admit_pages(100, |_| 1), 1, "token budget caps page admission");
     }
 
     #[test]

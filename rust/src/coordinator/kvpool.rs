@@ -1,62 +1,150 @@
-//! KV-cache pool: bounded set of reusable per-sequence caches.
+//! Allocator-backed KV leasing: the coordinator's window onto the paged
+//! cache subsystem (`crate::cache`).
 //!
-//! On edge devices the KV cache dominates transient memory (the paper's
-//! Limitations note BF16 KV). The pool caps concurrency, reuses
-//! allocations across requests, and reports resident bytes to the metrics
-//! registry.
+//! Replaces the seed's whole-cache pool (a bounded set of
+//! `seq_len × d_model` contiguous caches) with page-granular leasing:
+//! admission is counted in free *pages*, a newly admitted request leases
+//! a [`BlockTable`] seeded from the radix [`PrefixIndex`] (reusing the
+//! frozen KV pages of any previously seen prompt prefix), and retirement
+//! returns pages to the arena. On edge devices the KV cache dominates
+//! transient memory (the paper's Limitations note BF16 KV); paging turns
+//! the same byte budget into strictly more admissible concurrency
+//! whenever requests are shorter than the worst case.
 
-use crate::engine::{KvCache, NativeConfig};
+use crate::cache::{BlockAllocator, BlockTable, PrefixIndex};
+use crate::engine::NativeConfig;
 
-/// Fixed-capacity cache pool.
-pub struct KvPool {
-    cfg: NativeConfig,
-    free: Vec<KvCache>,
-    capacity: usize,
-    leased: usize,
+use super::Request;
+
+/// Paged KV lease manager: one arena + one prefix index per server run.
+pub struct PagedKv {
+    alloc: BlockAllocator,
+    index: PrefixIndex,
+    sharing: bool,
+    seq_len: usize,
 }
 
-impl KvPool {
-    pub fn new(cfg: NativeConfig, capacity: usize) -> Self {
-        Self { cfg, free: Vec::new(), capacity, leased: 0 }
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.capacity
-    }
-
-    pub fn leased(&self) -> usize {
-        self.leased
-    }
-
-    pub fn available(&self) -> usize {
-        self.capacity - self.leased
-    }
-
-    /// Take a cleared cache, or None at capacity.
-    pub fn acquire(&mut self) -> Option<KvCache> {
-        if self.leased >= self.capacity {
-            return None;
+impl PagedKv {
+    /// Arena with `num_pages` pages of `page_size` positions, sized for
+    /// `cfg`. `sharing` enables the radix prefix index. `num_pages` is
+    /// raised to at least one worst-case sequence so a lone request can
+    /// always run (head-of-line liveness).
+    pub fn new(cfg: &NativeConfig, num_pages: usize, page_size: usize, sharing: bool) -> Self {
+        let page_size = page_size.max(1);
+        let per_seq = cfg.seq_len.div_ceil(page_size);
+        let num_pages = num_pages.max(per_seq);
+        Self {
+            alloc: BlockAllocator::new(cfg, num_pages, page_size),
+            index: PrefixIndex::new(page_size),
+            sharing,
+            seq_len: cfg.seq_len,
         }
-        self.leased += 1;
-        Some(match self.free.pop() {
-            Some(mut c) => {
-                c.clear();
-                c
-            }
-            None => KvCache::new(&self.cfg),
-        })
     }
 
-    /// Return a cache to the pool.
-    pub fn release(&mut self, cache: KvCache) {
-        assert!(self.leased > 0, "release without acquire");
-        self.leased -= 1;
-        self.free.push(cache);
+    pub fn page_size(&self) -> usize {
+        self.alloc.page_size()
     }
 
-    /// Bytes resident in pooled (idle) caches.
-    pub fn idle_bytes(&self) -> usize {
-        self.free.iter().map(|c| c.bytes()).sum()
+    pub fn num_pages(&self) -> usize {
+        self.alloc.num_pages()
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.alloc.free_pages()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.alloc.used_pages()
+    }
+
+    pub fn peak_used(&self) -> usize {
+        self.alloc.peak_used()
+    }
+
+    /// Pages frozen in the prefix index.
+    pub fn index_pages(&self) -> usize {
+        self.index.pages_held()
+    }
+
+    /// Total arena bytes (the KV byte budget).
+    pub fn bytes(&self) -> usize {
+        self.alloc.bytes()
+    }
+
+    /// The arena, for the decode round's [`KvBatch`](crate::cache::KvBatch).
+    pub fn alloc_mut(&mut self) -> &mut BlockAllocator {
+        &mut self.alloc
+    }
+
+    /// Largest prefix span a lease may reuse: at least one prompt token
+    /// must always be fed (to produce logits) and the context limit is
+    /// respected. One definition shared by probe and lease so the two
+    /// walks can never disagree.
+    fn probe_cap(&self, prompt: &[u32]) -> usize {
+        prompt.len().saturating_sub(1).min(self.seq_len.saturating_sub(1))
+    }
+
+    /// Longest index-reusable prefix of `prompt`.
+    fn shared_span(&self, prompt: &[u32]) -> usize {
+        if !self.sharing {
+            return 0;
+        }
+        self.index.probe_len(prompt, self.probe_cap(prompt))
+    }
+
+    /// Worst-case pages `req` will allocate over its lifetime: every
+    /// position up to the context limit, minus fully shared prefix pages.
+    /// (A partially shared page is counted — its copy-on-write target is
+    /// a fresh allocation.) Admission reserves against this, so decode
+    /// can never hit arena exhaustion.
+    pub fn page_need(&self, req: &Request) -> usize {
+        self.pages_for(req, self.shared_span(&req.prompt))
+    }
+
+    /// [`PagedKv::page_need`] with an already-known shared span — lets the
+    /// server reuse the span [`PagedKv::lease`] returned instead of
+    /// walking the prefix trie again.
+    pub fn pages_for(&self, req: &Request, shared: usize) -> usize {
+        let total = (req.prompt.len() + req.max_new_tokens).min(self.seq_len);
+        let ps = self.page_size();
+        total.div_ceil(ps) - shared / ps
+    }
+
+    /// Lease a block table for `prompt`: seeded from the prefix index
+    /// (taking one reference per shared page) when sharing is on.
+    /// Returns the table and the shared span length — prefill starts at
+    /// that offset.
+    pub fn lease(&mut self, prompt: &[u32]) -> (BlockTable, usize) {
+        let ps = self.page_size();
+        if !self.sharing {
+            return (BlockTable::new(ps), 0);
+        }
+        let (pages, matched) = self.index.probe_pages(prompt, self.probe_cap(prompt));
+        for &p in &pages {
+            self.alloc.retain(p);
+        }
+        (BlockTable::from_shared(ps, pages, matched), matched)
+    }
+
+    /// Return a retired sequence's pages to the arena.
+    pub fn release(&mut self, table: &mut BlockTable) {
+        table.release_all(&mut self.alloc);
+    }
+
+    /// Freeze a prefilled sequence's full prompt pages into the index
+    /// (no-op with sharing off).
+    pub fn register(&mut self, prompt: &[u32], table: &BlockTable) {
+        if self.sharing {
+            self.index.register(prompt, table, &mut self.alloc);
+        }
+    }
+
+    /// Drop every index-frozen page — the coordinator's pressure valve
+    /// when frozen pages would starve admission. Returns pages freed.
+    pub fn flush_index(&mut self) -> usize {
+        let held = self.index.pages_held();
+        self.index.clear(&mut self.alloc);
+        held
     }
 }
 
@@ -64,35 +152,68 @@ impl KvPool {
 mod tests {
     use super::*;
 
-    fn pool(cap: usize) -> KvPool {
-        KvPool::new(NativeConfig::named("nano").unwrap(), cap)
+    fn kv(pages: usize, ps: usize, sharing: bool) -> PagedKv {
+        PagedKv::new(&NativeConfig::named("nano").unwrap(), pages, ps, sharing)
+    }
+
+    fn req(prompt: Vec<u32>, gen: usize) -> Request {
+        Request { id: 0, prompt, max_new_tokens: gen, arrival: 0.0 }
     }
 
     #[test]
-    fn capacity_enforced() {
-        let mut p = pool(2);
-        let a = p.acquire().unwrap();
-        let _b = p.acquire().unwrap();
-        assert!(p.acquire().is_none());
-        p.release(a);
-        assert!(p.acquire().is_some());
+    fn page_need_is_worst_case_rounded_up() {
+        let kv = kv(64, 4, true);
+        assert_eq!(kv.page_need(&req(vec![1; 3], 1)), 1); // 4 positions → 1 page
+        assert_eq!(kv.page_need(&req(vec![1; 3], 2)), 2); // 5 positions → 2 pages
+        // Capped at the context limit (nano seq_len = 64 → 16 pages).
+        assert_eq!(kv.page_need(&req(vec![1; 10], 1000)), 16);
     }
 
     #[test]
-    fn reuses_allocations() {
-        let mut p = pool(1);
-        let c = p.acquire().unwrap();
-        p.release(c);
-        let c2 = p.acquire().unwrap();
-        assert_eq!(c2.len, 0); // cleared on reuse
-        p.release(c2);
-        assert_eq!(p.leased(), 0);
+    fn lease_prefill_register_release_cycle() {
+        let mut kv = kv(64, 4, true);
+        let prompt: Vec<u32> = (0..8).collect();
+        // First request: no sharing available yet.
+        let (mut t, shared) = kv.lease(&prompt);
+        assert_eq!(shared, 0);
+        for _ in 0..prompt.len() {
+            t.prepare_append(kv.alloc_mut());
+            t.advance();
+        }
+        kv.register(&prompt, &t);
+        assert_eq!(kv.index_pages(), 2);
+        kv.release(&mut t);
+        assert_eq!(kv.used_pages(), 2, "index keeps the frozen prompt pages");
+
+        // Second request with the same prompt shares all but the last token.
+        let (mut t2, shared) = kv.lease(&prompt);
+        assert_eq!(shared, 7);
+        assert_eq!(kv.page_need(&req(prompt.clone(), 4)), 3 - 1, "one full page shared");
+        kv.release(&mut t2);
+
+        assert_eq!(kv.flush_index(), 2);
+        assert_eq!(kv.used_pages(), 0);
     }
 
     #[test]
-    #[should_panic(expected = "release without acquire")]
-    fn double_release_panics() {
-        let mut p = pool(1);
-        p.release(KvCache::new(&NativeConfig::named("nano").unwrap()));
+    fn sharing_off_is_inert() {
+        let mut kv = kv(16, 4, false);
+        let prompt: Vec<u32> = (0..8).collect();
+        let (mut t, shared) = kv.lease(&prompt);
+        assert_eq!(shared, 0);
+        for _ in 0..prompt.len() {
+            t.prepare_append(kv.alloc_mut());
+            t.advance();
+        }
+        kv.register(&prompt, &t);
+        assert_eq!(kv.index_pages(), 0);
+        kv.release(&mut t);
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn num_pages_raised_to_one_worst_case_sequence() {
+        let kv = kv(1, 16, true); // nano seq_len 64 → 4 pages minimum
+        assert_eq!(kv.num_pages(), 4);
     }
 }

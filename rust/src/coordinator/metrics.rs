@@ -16,6 +16,33 @@ pub struct Metrics {
     pub ttfts: Vec<f64>,
     /// Wall-clock of the serve loop (s).
     pub wall_seconds: f64,
+
+    // --- paged KV cache gauges ---
+    /// Pages in the arena.
+    pub kv_pages_total: u64,
+    /// High-water mark of pages in use.
+    pub kv_pages_peak: u64,
+    /// Pages frozen in the prefix index at end of run.
+    pub kv_pages_index: u64,
+    /// Pages still in use at end of run (must equal `kv_pages_index`:
+    /// every sequence reference was returned).
+    pub kv_pages_end_in_use: u64,
+    /// KV arena bytes (the byte budget the sweep holds fixed).
+    pub kv_bytes: u64,
+    /// Prefix-index flushes forced by admission pressure.
+    pub prefix_flushes: u64,
+
+    // --- prefix sharing / concurrency gauges ---
+    /// Prompt tokens across admitted requests.
+    pub prompt_tokens: u64,
+    /// Prompt tokens whose prefill was skipped via a shared prefix.
+    pub prefix_hit_tokens: u64,
+    /// Requests that reused a nonzero shared prefix.
+    pub prefix_hits: u64,
+    /// Most sequences concurrently active in any decode round.
+    pub peak_active: u64,
+    /// Requests finished by hitting the context limit (vs. max tokens).
+    pub context_limit_finishes: u64,
 }
 
 impl Metrics {
@@ -38,10 +65,28 @@ impl Metrics {
         stats::percentile(&self.ttfts, 50.0)
     }
 
+    /// Peak fraction of the KV arena in use (0 when unpaged/untracked).
+    pub fn block_utilization(&self) -> f64 {
+        if self.kv_pages_total == 0 {
+            return 0.0;
+        }
+        self.kv_pages_peak as f64 / self.kv_pages_total as f64
+    }
+
+    /// Fraction of prompt tokens served from shared prefix pages.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            return 0.0;
+        }
+        self.prefix_hit_tokens as f64 / self.prompt_tokens as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests: {}/{} done | tokens: {} | rounds: {} | wall: {:.2}s\n\
-             throughput: {:.1} tok/s | latency p50/p99: {:.3}/{:.3}s | ttft p50: {:.3}s",
+             throughput: {:.1} tok/s | latency p50/p99: {:.3}/{:.3}s | ttft p50: {:.3}s\n\
+             kv: {}/{} pages peak ({:.0}% util) | prefix hit-rate: {:.0}% ({} hits) | \
+             peak active: {} | context-limit finishes: {}",
             self.requests_done,
             self.requests_in,
             self.tokens_generated,
@@ -51,6 +96,13 @@ impl Metrics {
             self.latency_p50(),
             self.latency_p99(),
             self.ttft_p50(),
+            self.kv_pages_peak,
+            self.kv_pages_total,
+            100.0 * self.block_utilization(),
+            100.0 * self.prefix_hit_rate(),
+            self.prefix_hits,
+            self.peak_active,
+            self.context_limit_finishes,
         )
     }
 }
@@ -77,5 +129,22 @@ mod tests {
         let r = m.report();
         assert!(r.contains("5/5"));
         assert!(r.contains("42"));
+    }
+
+    #[test]
+    fn kv_gauge_math() {
+        let m = Metrics {
+            kv_pages_total: 32,
+            kv_pages_peak: 8,
+            prompt_tokens: 100,
+            prefix_hit_tokens: 25,
+            ..Default::default()
+        };
+        assert_eq!(m.block_utilization(), 0.25);
+        assert_eq!(m.prefix_hit_rate(), 0.25);
+        // Zero denominators stay finite.
+        let z = Metrics::default();
+        assert_eq!(z.block_utilization(), 0.0);
+        assert_eq!(z.prefix_hit_rate(), 0.0);
     }
 }

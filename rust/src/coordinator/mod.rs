@@ -1,20 +1,25 @@
 //! Layer-3 serving coordinator: request routing, continuous batching,
-//! KV-cache pooling and the decode scheduler over the native LUT engine.
+//! paged KV-cache leasing with radix prefix sharing, and the decode
+//! scheduler over the native LUT engine.
 //!
 //! The paper's system is an edge inference engine (BitNet.cpp-style); the
 //! coordinator wraps it the way a local serving daemon would: requests
 //! arrive (here from a synthetic trace — the environment is offline),
-//! are admitted against a KV-pool budget, batched into decode rounds, and
-//! executed on a worker pool where each worker owns its LUT scratch.
+//! are admitted against a page budget on the KV arena (`crate::cache`),
+//! batched into decode rounds, and executed on a worker pool where each
+//! worker owns its LUT scratch. Prompts whose prefix matches a
+//! previously served request skip prefill for the shared span.
 
 mod batcher;
 mod kvpool;
 mod metrics;
+mod sampler;
 mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
-pub use kvpool::KvPool;
+pub use kvpool::PagedKv;
 pub use metrics::Metrics;
+pub use sampler::{Sampler, SamplerConfig};
 pub use server::{serve_trace, Server, ServerConfig, TraceSpec};
 
 /// An inference request.
@@ -27,11 +32,22 @@ pub struct Request {
     pub arrival: f64,
 }
 
+/// Why a request stopped generating.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Reached its `max_new_tokens` allowance.
+    Length,
+    /// Hit the model's context limit (`seq_len`) — finished gracefully
+    /// with the tokens produced so far instead of overflowing the cache.
+    ContextLimit,
+}
+
 /// A finished request.
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: u64,
     pub tokens: Vec<u32>,
+    pub finish: FinishReason,
     /// Seconds from arrival to first generated token.
     pub ttft: f64,
     /// Seconds from arrival to completion.

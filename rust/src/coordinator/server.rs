@@ -3,35 +3,63 @@
 //!
 //! Decode parallelism is *inside the kernel*: each round gathers every
 //! active sequence's next token and issues one
-//! [`TernaryModel::forward_batch`] call — one fused LUT-GEMM per layer
-//! with all sequences' activation tables resident, fanned out over
-//! output-channel tiles on the worker pool. (The previous design decoded
-//! each sequence independently on its own worker, which re-walked every
-//! packed weight plane once per sequence per layer.) Newly admitted
-//! sequences prefill their whole prompt inside their first round via
-//! ragged micro-steps that stay fused across sequences at the same prompt
-//! offset. Because batched and single-row kernels are bit-for-bit
-//! identical, a request's tokens do not depend on which sequences share
-//! its rounds. (Environment is offline, so "arrival" is simulated from
-//! the trace clock; everything downstream of arrival is the real engine.)
+//! [`TernaryModel::forward_kv`] call — one fused LUT-GEMM per layer with
+//! all sequences' activation tables resident, fanned out over
+//! output-channel tiles on the worker pool. Newly admitted sequences
+//! prefill their whole prompt inside their first round via ragged
+//! micro-steps that stay fused across sequences at the same prompt
+//! offset.
+//!
+//! KV storage is the paged subsystem (`crate::cache`): sequences decode
+//! through per-sequence block tables over one refcounted arena, admission
+//! is counted in free pages (so short requests no longer reserve
+//! worst-case contiguous caches), and a prompt whose prefix was already
+//! served reuses the frozen KV pages of that prefix — prefill for the
+//! shared span is skipped entirely. Because batched and single-row
+//! kernels are bit-for-bit identical and shared KV rows are a
+//! deterministic function of the token prefix, a request's tokens do not
+//! depend on which sequences share its rounds, on paging, or on prefix
+//! hits. (Environment is offline, so "arrival" is simulated from the
+//! trace clock; everything downstream of arrival is the real engine.)
 
 use std::time::Instant;
 
-use super::{Batcher, BatcherConfig, Completion, KvPool, Metrics, Request};
-use crate::engine::{argmax, KvCache, Scratch, TernaryModel};
+use super::{
+    Batcher, BatcherConfig, Completion, FinishReason, Metrics, PagedKv, Request, Sampler,
+    SamplerConfig,
+};
+use crate::cache::{BlockTable, KvBatch};
+use crate::engine::TernaryModel;
 use crate::util::{Pcg64, ThreadPool};
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
     pub batcher: BatcherConfig,
+    /// KV byte budget in whole-cache equivalents (the seed's knob): the
+    /// paged arena gets `kv_capacity × ceil(seq_len / page_size)` pages —
+    /// the same bytes the old pool of `kv_capacity` contiguous caches
+    /// held, now admissible at page granularity.
     pub kv_capacity: usize,
+    /// Positions per KV page.
+    pub page_size: usize,
+    /// Reuse frozen KV pages across requests sharing a prompt prefix.
+    pub prefix_sharing: bool,
+    /// Decode sampling policy (greedy by default).
+    pub sampler: SamplerConfig,
     pub workers: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { batcher: BatcherConfig::default(), kv_capacity: 8, workers: ThreadPool::default_size() }
+        Self {
+            batcher: BatcherConfig::default(),
+            kv_capacity: 8,
+            page_size: 16,
+            prefix_sharing: true,
+            sampler: SamplerConfig::default(),
+            workers: ThreadPool::default_size(),
+        }
     }
 }
 
@@ -41,6 +69,9 @@ pub struct TraceSpec {
     pub n_requests: usize,
     pub mean_interarrival_s: f64,
     pub prompt_len: usize,
+    /// Leading tokens common to every prompt (a shared system prompt);
+    /// 0 = fully independent prompts.
+    pub shared_prefix_len: usize,
     pub max_new_tokens: usize,
     pub seed: u64,
 }
@@ -49,16 +80,17 @@ impl TraceSpec {
     /// Materialize the request trace.
     pub fn generate(&self, vocab: usize) -> Vec<Request> {
         let mut rng = Pcg64::new(self.seed, 31);
+        let shared: Vec<u32> = (0..self.shared_prefix_len.min(self.prompt_len))
+            .map(|_| rng.below(vocab as u64) as u32)
+            .collect();
         let mut t = 0.0f64;
         (0..self.n_requests)
             .map(|i| {
                 t += -self.mean_interarrival_s * (1.0 - rng.next_f64()).ln();
-                Request {
-                    id: i as u64,
-                    prompt: (0..self.prompt_len).map(|_| rng.below(vocab as u64) as u32).collect(),
-                    max_new_tokens: self.max_new_tokens,
-                    arrival: t,
-                }
+                let mut prompt = shared.clone();
+                let tail = (shared.len()..self.prompt_len).map(|_| rng.below(vocab as u64) as u32);
+                prompt.extend(tail);
+                Request { id: i as u64, prompt, max_new_tokens: self.max_new_tokens, arrival: t }
             })
             .collect()
     }
@@ -72,11 +104,21 @@ pub struct Server<'m> {
 }
 
 struct SeqState {
-    cache: KvCache,
+    table: BlockTable,
+    sampler: Sampler,
+    /// Worst-case pages this request may still allocate (admission
+    /// reservation; `page_need - table.owned_pages()` is outstanding).
+    page_need: usize,
     last_token: u32,
     prompt_done: bool,
+    /// Prompt pages frozen into the prefix index (once, after prefill).
+    registered: bool,
+    /// Prompt tokens consumed so far — starts at the shared-prefix span,
+    /// whose KV pages came from the index, skipping their prefill.
+    fed: usize,
     tokens: Vec<u32>,
     first_token_at: Option<f64>,
+    finish: Option<FinishReason>,
 }
 
 impl<'m> Server<'m> {
@@ -90,13 +132,21 @@ impl<'m> Server<'m> {
         trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         let t0 = Instant::now();
         let clock = |t0: Instant| t0.elapsed().as_secs_f64();
+        let seq_cap = self.model.cfg.seq_len;
 
         let mut batcher = Batcher::new(self.cfg.batcher);
-        let mut kv = KvPool::new(self.model.cfg, self.cfg.kv_capacity);
+        let num_pages =
+            self.cfg.kv_capacity.max(1) * seq_cap.div_ceil(self.cfg.page_size.max(1));
+        let mut kv = PagedKv::new(
+            &self.model.cfg,
+            num_pages,
+            self.cfg.page_size,
+            self.cfg.prefix_sharing,
+        );
         let mut metrics = Metrics { requests_in: trace.len() as u64, ..Default::default() };
         let mut completions = Vec::new();
         let mut states: Vec<SeqState> = Vec::new();
-        let mut scratch = Scratch::default();
+        let mut scratch = crate::engine::Scratch::default();
         let mut next_arrival = 0usize;
         let mut tokens_done = 0u64;
 
@@ -116,24 +166,51 @@ impl<'m> Server<'m> {
                 continue;
             }
 
-            // Admission bounded by both the batcher and the KV pool:
-            // capping admissions at the pool's free capacity guarantees
-            // every active entry owns a cache, keeping `states[i]` and
-            // `batcher.active()[i]` aligned through retire's swap_remove
-            // mirroring (a cache-less entry would starve and desync them).
+            // Page-counted admission: reserve each request's worst-case
+            // allocation (minus fully shared prefix pages) against the
+            // arena's free pages, net of what already-active sequences
+            // may still claim — so a decode step can never hit arena
+            // exhaustion mid-round.
+            let outstanding: usize = states
+                .iter()
+                .map(|st| st.page_need.saturating_sub(st.table.owned_pages()))
+                .sum();
+            let free = kv.free_pages().saturating_sub(outstanding);
             let before = batcher.active_len();
-            batcher.admit_up_to(kv.available());
-            for _ in before..batcher.active_len() {
-                let cache = kv
-                    .acquire()
-                    .expect("admission is capped at kv.available(), a cache must be free");
-                let (req, _) = &batcher.active()[states.len()];
+            let admitted = batcher.admit_pages(free, |r| kv.page_need(r));
+            if admitted == 0
+                && batcher.active_len() == 0
+                && batcher.waiting_len() > 0
+                && kv.index_pages() > 0
+            {
+                // Frozen prefix pages are starving admission: flush the
+                // index (crude eviction; LRU per node is a ROADMAP item)
+                // and retry so the queue head cannot deadlock.
+                metrics.prefix_flushes += 1;
+                kv.flush_index();
+                batcher.admit_pages(kv.free_pages(), |r| kv.page_need(r));
+            }
+            for idx in before..batcher.active_len() {
+                let req = &batcher.active()[idx].0;
+                let (table, shared) = kv.lease(&req.prompt);
+                // Only positions up to the context limit are ever
+                // prefilled; count the denominator accordingly.
+                metrics.prompt_tokens += req.prompt.len().min(seq_cap) as u64;
+                metrics.prefix_hit_tokens += shared as u64;
+                if shared > 0 {
+                    metrics.prefix_hits += 1;
+                }
                 states.push(SeqState {
-                    cache,
-                    last_token: *req.prompt.first().unwrap_or(&0),
-                    prompt_done: false,
+                    sampler: Sampler::for_request(&self.cfg.sampler, req.id),
+                    page_need: kv.pages_for(req, shared),
+                    last_token: 0,
+                    prompt_done: req.prompt.is_empty(),
+                    registered: false,
+                    fed: shared,
                     tokens: Vec::new(),
                     first_token_at: None,
+                    finish: None,
+                    table,
                 });
             }
 
@@ -144,99 +221,139 @@ impl<'m> Server<'m> {
                 continue;
             }
 
-            // One decode round: every sequence with a cache contributes one
-            // generated token. Micro-step 0 fuses all in-decode sequences
-            // with the first prompt token of freshly admitted ones; later
-            // micro-steps continue the (ragged) prefill until every prompt
-            // is consumed. Each micro-step is ONE forward_batch — one fused
-            // LUT-GEMM per layer across its sequences.
+            // One decode round: every sequence that can still feed
+            // contributes one generated token. The first micro-step fuses
+            // all in-decode sequences with the next prompt token of
+            // freshly admitted ones; later micro-steps continue the
+            // (ragged) prefill until every prompt is consumed. Each
+            // micro-step is ONE forward_kv — one fused LUT-GEMM per layer
+            // across its sequences. A sequence at the context limit is
+            // never fed (the engine's overflow contract): it finishes
+            // gracefully with FinishReason::ContextLimit below.
+            let mut emitted = vec![false; states.len()];
             {
                 let active = batcher.active();
-                let n_act = states.len();
-                let mut step = 0usize;
                 loop {
-                    // (index, token, emits-an-output-this-round)
+                    // (state index, token, emits-an-output)
                     let mut plan: Vec<(usize, u32, bool)> = Vec::new();
-                    for (i, st) in states.iter().enumerate().take(n_act) {
+                    for (i, st) in states.iter_mut().enumerate() {
+                        if st.finish.is_some() {
+                            continue;
+                        }
                         let (req, _) = &active[i];
-                        let entry = if st.prompt_done || req.prompt.is_empty() {
-                            // decode step (degenerate empty prompt decodes
-                            // straight from its placeholder token)
-                            if step == 0 {
-                                Some((st.last_token, true))
-                            } else {
-                                None
+                        if st.prompt_done {
+                            if emitted[i] {
+                                continue; // one decode feed per round
                             }
-                        } else if step < req.prompt.len() {
-                            Some((req.prompt[step], step + 1 == req.prompt.len()))
-                        } else {
-                            None
-                        };
-                        if let Some((tok, emits)) = entry {
-                            plan.push((i, tok, emits));
+                            if st.table.len() >= seq_cap {
+                                st.finish = Some(FinishReason::ContextLimit);
+                                continue;
+                            }
+                            plan.push((i, st.last_token, true));
+                        } else if st.fed < req.prompt.len() {
+                            if st.table.len() >= seq_cap {
+                                // Prompt longer than the context: finish
+                                // with whatever was produced (possibly
+                                // nothing) instead of overflowing.
+                                st.finish = Some(FinishReason::ContextLimit);
+                                continue;
+                            }
+                            let emits = st.fed + 1 == req.prompt.len();
+                            plan.push((i, req.prompt[st.fed], emits));
                         }
                     }
                     if plan.is_empty() {
                         break;
                     }
                     let toks: Vec<u32> = plan.iter().map(|&(_, t, _)| t).collect();
-                    // Disjoint &mut caches for the selected sequences
-                    // (plan indices are strictly ascending).
-                    let mut sel: Vec<&mut SeqState> = {
+                    // Disjoint &mut block tables for the selected
+                    // sequences (plan indices are strictly ascending).
+                    let mut tables: Vec<&mut BlockTable> = {
                         let mut picked = Vec::with_capacity(plan.len());
                         let mut it = plan.iter().map(|&(i, _, _)| i).peekable();
                         for (i, st) in states.iter_mut().enumerate() {
                             if it.peek() == Some(&i) {
-                                picked.push(st);
+                                picked.push(&mut st.table);
                                 it.next();
                             }
                         }
                         picked
                     };
-                    let mut caches: Vec<&mut KvCache> =
-                        sel.iter_mut().map(|st| &mut st.cache).collect();
-                    let logits =
-                        self.model.forward_batch(&toks, &mut caches, &mut scratch, Some(&self.pool));
-                    drop(caches);
-                    for (row, (st, &(_, _, emits))) in sel.iter_mut().zip(plan.iter()).enumerate() {
+                    let logits = {
+                        let mut kvb =
+                            KvBatch::Paged { alloc: kv.alloc_mut(), tables: &mut tables };
+                        self.model.forward_kv(&toks, &mut kvb, &mut scratch, Some(&self.pool))
+                    };
+                    drop(tables);
+                    for (row, &(i, _, emits)) in plan.iter().enumerate() {
+                        let st = &mut states[i];
+                        if !st.prompt_done {
+                            st.fed += 1;
+                            if st.fed == active[i].0.prompt.len() {
+                                st.prompt_done = true;
+                            }
+                        }
                         if emits {
-                            let next = argmax(logits.row(row)) as u32;
+                            let next = st.sampler.sample(logits.row(row));
                             st.last_token = next;
                             st.tokens.push(next);
-                            st.prompt_done = true;
+                            emitted[i] = true;
                             tokens_done += 1;
                         }
                     }
-                    step += 1;
                 }
             }
             metrics.decode_rounds += 1;
+            metrics.peak_active = metrics.peak_active.max(states.len() as u64);
 
-            // Bookkeeping: advance, record first-token times, retire.
+            // Bookkeeping: freeze prefilled prompts into the prefix
+            // index, record first-token times, advance, retire.
             let now = clock(t0);
             let mut finished = Vec::new();
             for (i, st) in states.iter_mut().enumerate() {
-                if st.first_token_at.is_none() {
+                if st.first_token_at.is_none() && !st.tokens.is_empty() {
                     st.first_token_at = Some(now);
                 }
-                let done = batcher.advance(i) || st.cache.len + 1 >= self.model.cfg.seq_len;
+                if st.prompt_done && !st.registered {
+                    kv.register(&batcher.active()[i].0.prompt, &st.table);
+                    st.registered = true;
+                }
+                let done = match st.finish {
+                    Some(_) => true,
+                    None => {
+                        if emitted[i] && batcher.advance(i) {
+                            st.finish = Some(FinishReason::Length);
+                            true
+                        } else {
+                            false
+                        }
+                    }
+                };
                 if done {
                     finished.push(i);
                 }
             }
             // retire uses swap_remove; mirror it on `states`.
             for &i in finished.iter().rev() {
-                let st = states.swap_remove(i);
-                let req = batcher.active()[i].0.clone();
-                kv.release(st.cache);
+                let mut st = states.swap_remove(i);
+                let (req_id, arrival) = {
+                    let r = &batcher.active()[i].0;
+                    (r.id, r.arrival)
+                };
+                kv.release(&mut st.table);
+                let finish = st.finish.unwrap_or(FinishReason::Length);
+                if finish == FinishReason::ContextLimit {
+                    metrics.context_limit_finishes += 1;
+                }
                 completions.push(Completion {
-                    id: req.id,
+                    id: req_id,
                     tokens: st.tokens,
-                    ttft: st.first_token_at.unwrap_or(now) - req.arrival,
-                    latency: now - req.arrival,
+                    finish,
+                    ttft: st.first_token_at.unwrap_or(now) - arrival,
+                    latency: now - arrival,
                 });
-                metrics.ttfts.push(st.first_token_at.unwrap_or(now) - req.arrival);
-                metrics.latencies.push(now - req.arrival);
+                metrics.ttfts.push(st.first_token_at.unwrap_or(now) - arrival);
+                metrics.latencies.push(now - arrival);
             }
             batcher.retire(&finished);
         }
@@ -244,6 +361,11 @@ impl<'m> Server<'m> {
         metrics.requests_done = completions.len() as u64;
         metrics.tokens_generated = tokens_done;
         metrics.wall_seconds = clock(t0);
+        metrics.kv_pages_total = kv.num_pages() as u64;
+        metrics.kv_pages_peak = kv.peak_used() as u64;
+        metrics.kv_pages_index = kv.index_pages() as u64;
+        metrics.kv_pages_end_in_use = kv.used_pages() as u64;
+        metrics.kv_bytes = kv.bytes() as u64;
         (completions, metrics)
     }
 }
@@ -263,7 +385,7 @@ pub fn serve_trace(model: &TernaryModel, server_cfg: ServerConfig, trace: TraceS
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::{random_weights, NativeConfig, TernaryModel};
+    use crate::engine::{random_weights, KvCache, NativeConfig, Scratch, TernaryModel};
     use crate::pack::Format;
 
     fn model() -> TernaryModel {
@@ -271,29 +393,41 @@ mod tests {
         TernaryModel::build(cfg, &random_weights(&cfg, 0), Format::Sherry)
     }
 
+    fn spec(n: usize, prompt: usize, gen: usize, seed: u64) -> TraceSpec {
+        TraceSpec {
+            n_requests: n,
+            mean_interarrival_s: 0.0,
+            prompt_len: prompt,
+            shared_prefix_len: 0,
+            max_new_tokens: gen,
+            seed,
+        }
+    }
+
     #[test]
     fn serves_all_requests() {
         let m = model();
-        let (completions, metrics) = serve_trace(
-            &m,
-            ServerConfig::default(),
-            TraceSpec { n_requests: 6, mean_interarrival_s: 0.0, prompt_len: 4, max_new_tokens: 5, seed: 1 },
-        );
+        let (completions, metrics) =
+            serve_trace(&m, ServerConfig::default(), spec(6, 4, 5, 1));
         assert_eq!(completions.len(), 6);
         assert_eq!(metrics.requests_done, 6);
         for c in &completions {
             assert_eq!(c.tokens.len(), 5);
+            assert_eq!(c.finish, super::FinishReason::Length);
             assert!(c.latency >= 0.0 && c.ttft >= 0.0);
             assert!(c.ttft <= c.latency + 1e-9);
         }
+        // All sequence page references were returned; only the prefix
+        // index still holds pages.
+        assert_eq!(metrics.kv_pages_end_in_use, metrics.kv_pages_index);
     }
 
     #[test]
     fn deterministic_tokens_per_request() {
         let m = model();
-        let spec = TraceSpec { n_requests: 3, mean_interarrival_s: 0.0, prompt_len: 3, max_new_tokens: 4, seed: 7 };
-        let (c1, _) = serve_trace(&m, ServerConfig::default(), spec);
-        let (c2, _) = serve_trace(&m, ServerConfig::default(), spec);
+        let s = spec(3, 3, 4, 7);
+        let (c1, _) = serve_trace(&m, ServerConfig::default(), s);
+        let (c2, _) = serve_trace(&m, ServerConfig::default(), s);
         let mut c1 = c1;
         let mut c2 = c2;
         c1.sort_by_key(|c| c.id);
@@ -305,13 +439,14 @@ mod tests {
 
     #[test]
     fn batched_serving_matches_single_stream_decoding() {
-        // The fused decode rounds must produce exactly the tokens a
-        // single-stream greedy decode of each request produces — batching
-        // is a throughput optimization, never a behavior change.
+        // The fused, paged decode rounds must produce exactly the tokens
+        // a single-stream greedy decode (contiguous KV) of each request
+        // produces — paging and batching are memory/throughput
+        // optimizations, never a behavior change.
         let m = model();
-        let spec = TraceSpec { n_requests: 4, mean_interarrival_s: 0.0, prompt_len: 5, max_new_tokens: 6, seed: 11 };
-        let reqs = spec.generate(m.cfg.vocab_size);
-        let (mut served, _) = serve_trace(&m, ServerConfig::default(), spec);
+        let s = spec(4, 5, 6, 11);
+        let reqs = s.generate(m.cfg.vocab_size);
+        let (mut served, _) = serve_trace(&m, ServerConfig::default(), s);
         served.sort_by_key(|c| c.id);
         let mut scratch = Scratch::default();
         for (req, comp) in reqs.iter().zip(&served) {
@@ -323,19 +458,20 @@ mod tests {
     }
 
     #[test]
-    fn kv_pool_smaller_than_max_active_still_serves_everything() {
-        // Misconfigured max_active > kv_capacity must degrade to
-        // kv_capacity-way batching, not starve or mispair sequences.
+    fn kv_budget_smaller_than_max_active_still_serves_everything() {
+        // Misconfigured max_active beyond the page budget must degrade to
+        // fewer-way batching, not starve or mispair sequences.
         let m = model();
         let cfg = ServerConfig {
             batcher: BatcherConfig { max_active: 4, token_budget: 100_000 },
-            kv_capacity: 2,
+            kv_capacity: 1,
+            page_size: 16,
             workers: 2,
+            ..Default::default()
         };
-        let spec =
-            TraceSpec { n_requests: 6, mean_interarrival_s: 0.0, prompt_len: 3, max_new_tokens: 4, seed: 5 };
-        let reqs = spec.generate(m.cfg.vocab_size);
-        let (mut completions, metrics) = serve_trace(&m, cfg, spec);
+        let s = spec(6, 3, 4, 5);
+        let reqs = s.generate(m.cfg.vocab_size);
+        let (mut completions, metrics) = serve_trace(&m, cfg, s);
         assert_eq!(completions.len(), 6);
         assert_eq!(metrics.tokens_generated, 6 * 4);
         completions.sort_by_key(|c| c.id);
@@ -354,13 +490,120 @@ mod tests {
             batcher: BatcherConfig { max_active: 2, token_budget: 100_000 },
             kv_capacity: 2,
             workers: 2,
+            ..Default::default()
         };
-        let (completions, metrics) = serve_trace(
-            &m,
-            cfg,
-            TraceSpec { n_requests: 5, mean_interarrival_s: 0.0, prompt_len: 2, max_new_tokens: 3, seed: 2 },
-        );
+        let (completions, metrics) = serve_trace(&m, cfg, spec(5, 2, 3, 2));
         assert_eq!(completions.len(), 5);
         assert!(metrics.decode_rounds >= 3, "must take multiple rounds");
+        assert!(metrics.peak_active <= 2);
+    }
+
+    #[test]
+    fn context_limit_finishes_gracefully() {
+        // A request whose allowance exceeds the context must complete
+        // with FinishReason::ContextLimit and exactly the tokens a
+        // single-stream generate (which caps at seq_len) produces —
+        // not panic the serving loop. (nano seq_len = 64.)
+        let m = model();
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_active: 2, token_budget: 100_000 },
+            ..Default::default()
+        };
+        let s = spec(2, 4, 500, 13);
+        let reqs = s.generate(m.cfg.vocab_size);
+        let (mut completions, metrics) = serve_trace(&m, cfg, s);
+        assert_eq!(completions.len(), 2);
+        completions.sort_by_key(|c| c.id);
+        let mut scratch = Scratch::default();
+        for (req, comp) in reqs.iter().zip(&completions) {
+            assert_eq!(comp.finish, super::FinishReason::ContextLimit);
+            // generate() stops at the same boundary.
+            let mut cache = KvCache::new(&m.cfg);
+            let expect = m.generate(&req.prompt, req.max_new_tokens, &mut cache, &mut scratch);
+            assert_eq!(expect, comp.tokens, "request {}", req.id);
+            assert_eq!(comp.tokens.len(), m.cfg.seq_len - req.prompt.len() + 1);
+        }
+        assert_eq!(metrics.context_limit_finishes, 2);
+    }
+
+    #[test]
+    fn oversized_prompt_finishes_without_panicking() {
+        // Prompt longer than seq_len: the seed's serving loop hit the
+        // engine's overflow assert; now it must finish gracefully with
+        // zero tokens and ContextLimit.
+        let m = model();
+        let (completions, metrics) =
+            serve_trace(&m, ServerConfig::default(), spec(1, 80, 4, 3));
+        assert_eq!(completions.len(), 1);
+        assert_eq!(completions[0].finish, super::FinishReason::ContextLimit);
+        assert!(completions[0].tokens.is_empty());
+        assert_eq!(metrics.context_limit_finishes, 1);
+    }
+
+    #[test]
+    fn shared_prefix_tokens_identical_with_sharing_on_and_off() {
+        // The acceptance bar: on a trace with a common system-prompt
+        // prefix, prefix sharing changes throughput characteristics but
+        // never tokens.
+        let m = model();
+        let s = TraceSpec {
+            n_requests: 8,
+            mean_interarrival_s: 0.0,
+            prompt_len: 24,
+            shared_prefix_len: 18,
+            max_new_tokens: 6,
+            seed: 21,
+        };
+        // max_active 2 serializes admission waves: the first wave's
+        // prompts are frozen into the index before later waves are
+        // admitted, so prefix hits are deterministic (no wall-clock
+        // dependence).
+        let base = ServerConfig {
+            batcher: BatcherConfig { max_active: 2, token_budget: 100_000 },
+            page_size: 4,
+            ..Default::default()
+        };
+        let on = ServerConfig { prefix_sharing: true, ..base };
+        let off = ServerConfig { prefix_sharing: false, ..base };
+        let (mut c_on, m_on) = serve_trace(&m, on, s);
+        let (mut c_off, m_off) = serve_trace(&m, off, s);
+        c_on.sort_by_key(|c| c.id);
+        c_off.sort_by_key(|c| c.id);
+        for (a, b) in c_on.iter().zip(&c_off) {
+            assert_eq!(a.tokens, b.tokens, "request {}", a.id);
+        }
+        assert!(m_on.prefix_hit_tokens > 0, "staggered identical prefixes must hit");
+        assert_eq!(m_off.prefix_hit_tokens, 0);
+        // And both match the single-stream contiguous baseline.
+        let reqs = s.generate(m.cfg.vocab_size);
+        let mut scratch = Scratch::default();
+        for (req, comp) in reqs.iter().zip(&c_on) {
+            let mut cache = KvCache::new(&m.cfg);
+            let expect = m.generate(&req.prompt, req.max_new_tokens, &mut cache, &mut scratch);
+            assert_eq!(expect, comp.tokens, "request {}", req.id);
+        }
+    }
+
+    #[test]
+    fn paged_admission_beats_whole_cache_leasing_at_same_byte_budget() {
+        // kv_capacity = 2 whole-cache equivalents. The seed's pool could
+        // never have more than 2 sequences in flight; page-granular
+        // admission fits more because these requests need far fewer
+        // pages than a worst-case sequence.
+        let m = model();
+        let cfg = ServerConfig {
+            batcher: BatcherConfig { max_active: 8, token_budget: 100_000 },
+            kv_capacity: 2,
+            page_size: 4,
+            ..Default::default()
+        };
+        let (completions, metrics) = serve_trace(&m, cfg, spec(8, 3, 4, 9));
+        assert_eq!(completions.len(), 8);
+        assert!(
+            metrics.peak_active > 2,
+            "paged admission must exceed whole-cache concurrency ({} ≤ 2)",
+            metrics.peak_active
+        );
+        assert_eq!(metrics.kv_pages_total, 2 * 16); // same byte budget
     }
 }

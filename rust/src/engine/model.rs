@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 
 use super::kernel::Scratch;
 use super::linear::QuantLinear;
+use crate::cache::{KvBatch, Rows};
 use crate::pack::Format;
 use crate::tensor::{ops, Mat};
 use crate::util::{Pcg64, ThreadPool};
@@ -90,11 +91,17 @@ struct Layer {
     w_down: QuantLinear,
 }
 
-/// Per-sequence KV cache.
+/// Per-sequence contiguous KV cache — the degenerate single-table case
+/// of the paged subsystem (`crate::cache`): single-stream paths (eval,
+/// [`TernaryModel::generate`]) keep this dense layout, while the serving
+/// coordinator decodes through paged [`BlockTable`]s. Both feed the same
+/// [`KvBatch`] view, so the numeric path is identical.
+///
+/// [`BlockTable`]: crate::cache::BlockTable
 pub struct KvCache {
     /// `[layer][pos * d_model + c]`
-    k: Vec<Vec<f32>>,
-    v: Vec<Vec<f32>>,
+    pub(crate) k: Vec<Vec<f32>>,
+    pub(crate) v: Vec<Vec<f32>>,
     pub len: usize,
     /// Model width (for external byte accounting).
     pub d_model: usize,
@@ -245,16 +252,37 @@ impl TernaryModel {
         scratch: &mut Scratch,
         pool: Option<&ThreadPool>,
     ) -> Mat {
+        let mut kv = KvBatch::Contig(caches);
+        self.forward_kv(tokens, &mut kv, scratch, pool)
+    }
+
+    /// One batched decode step through a [`KvBatch`] storage view —
+    /// contiguous caches and the paged block-table arena run this same
+    /// code, so paged serving is bit-for-bit identical to the contiguous
+    /// baseline (DESIGN.md §4).
+    pub fn forward_kv(
+        &self,
+        tokens: &[u32],
+        kv: &mut KvBatch<'_, '_>,
+        scratch: &mut Scratch,
+        pool: Option<&ThreadPool>,
+    ) -> Mat {
         let b = tokens.len();
-        assert_eq!(caches.len(), b, "one KV cache per sequence");
+        assert_eq!(kv.batch(), b, "one KV backing per sequence");
         let cfg = &self.cfg;
         let d = cfg.d_model;
         let hd = cfg.head_dim();
         // Per-sequence decode positions (continuous batching: they differ).
-        let pos: Vec<usize> = caches.iter().map(|c| c.len).collect();
+        let pos: Vec<usize> = (0..b).map(|i| kv.pos(i)).collect();
         for &p in &pos {
-            assert!(p < cfg.seq_len, "sequence overflow");
+            // Contract with the coordinator: a sequence at the context
+            // limit must be finished with FinishReason::ContextLimit, not
+            // fed — see coordinator/server.rs planning.
+            assert!(p < cfg.seq_len, "decode position {p} past context limit {}", cfg.seq_len);
         }
+        // Paged backing: allocate / copy-on-write each sequence's next
+        // slot once, before any layer writes or reads.
+        kv.begin_step();
 
         let mut h = vec![0.0f32; b * d];
         for (bi, &tok) in tokens.iter().enumerate() {
@@ -286,34 +314,35 @@ impl TernaryModel {
                     ops::rope_inplace(&mut q[bi * d + hh * hd..bi * d + (hh + 1) * hd], pos[bi]);
                     ops::rope_inplace(&mut k[bi * d + hh * hd..bi * d + (hh + 1) * hd], pos[bi]);
                 }
-                caches[bi].k[li].extend_from_slice(&k[bi * d..(bi + 1) * d]);
-                caches[bi].v[li].extend_from_slice(&v[bi * d..(bi + 1) * d]);
+                kv.append(li, bi, &k[bi * d..(bi + 1) * d], &v[bi * d..(bi + 1) * d]);
             }
             // Per-sequence attention over each sequence's own KV history —
             // independent across sequences, so it fans out on the pool
             // alongside the fused linears (per-row math is identical to
-            // the serial path, preserving bit-for-bit parity).
+            // the serial path, preserving bit-for-bit parity). Rows are
+            // resolved through the storage view: a slice offset for
+            // contiguous caches, a page lookup for the paged arena.
             {
-                let caches_ro: &[&mut KvCache] = &*caches;
+                let kv_ro: &KvBatch = kv;
                 let n_heads = cfg.n_heads;
                 match pool {
                     Some(pool) if b > 1 => pool.scope(|s| {
                         for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
-                            let kl: &[f32] = &caches_ro[bi].k[li];
-                            let vl: &[f32] = &caches_ro[bi].v[li];
+                            let kl = kv_ro.k_rows(li, bi);
+                            let vl = kv_ro.v_rows(li, bi);
                             let q_row = &q[bi * d..(bi + 1) * d];
                             let t = pos[bi] + 1;
                             s.spawn(move || {
-                                attention_row(q_row, kl, vl, t, d, hd, n_heads, scale, out_row);
+                                attention_row(q_row, kl, vl, t, hd, n_heads, scale, out_row);
                             });
                         }
                     }),
                     _ => {
                         for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
-                            let kl: &[f32] = &caches_ro[bi].k[li];
-                            let vl: &[f32] = &caches_ro[bi].v[li];
+                            let kl = kv_ro.k_rows(li, bi);
+                            let vl = kv_ro.v_rows(li, bi);
                             let q_row = &q[bi * d..(bi + 1) * d];
-                            attention_row(q_row, kl, vl, pos[bi] + 1, d, hd, n_heads, scale, out_row);
+                            attention_row(q_row, kl, vl, pos[bi] + 1, hd, n_heads, scale, out_row);
                         }
                     }
                 }
@@ -339,9 +368,7 @@ impl TernaryModel {
                 *hi += p;
             }
         }
-        for cache in caches.iter_mut() {
-            cache.len += 1;
-        }
+        kv.advance();
 
         for bi in 0..b {
             ops::rmsnorm_inplace(&mut h[bi * d..(bi + 1) * d], &self.norm_out);
@@ -376,14 +403,15 @@ impl TernaryModel {
 /// Causal attention for one sequence at its current decode position:
 /// scores over `t` cached timesteps, softmax, weighted-V accumulation —
 /// per head, writing the `d_model`-wide output row. One shared body for
-/// the serial and pool-fanned paths of [`TernaryModel::forward_batch`].
+/// the serial and pool-fanned paths of [`TernaryModel::forward_kv`].
+/// K/V rows arrive through [`Rows`], so contiguous and paged storage
+/// accumulate in the same order — bit-for-bit.
 #[allow(clippy::too_many_arguments)]
 fn attention_row(
     q_row: &[f32],
-    kl: &[f32],
-    vl: &[f32],
+    kl: Rows<'_>,
+    vl: Rows<'_>,
     t: usize,
-    d: usize,
     hd: usize,
     n_heads: usize,
     scale: f32,
@@ -393,15 +421,15 @@ fn attention_row(
         let qh = &q_row[hh * hd..(hh + 1) * hd];
         let mut att = vec![0.0f32; t];
         for (s, a) in att.iter_mut().enumerate() {
-            let kh = &kl[s * d + hh * hd..s * d + (hh + 1) * hd];
-            *a = qh.iter().zip(kh).map(|(x, y)| x * y).sum::<f32>() * scale;
+            let kh = &kl.row(s)[hh * hd..(hh + 1) * hd];
+            *a = qh.iter().zip(kh.iter()).map(|(x, y)| x * y).sum::<f32>() * scale;
         }
         ops::softmax_inplace(&mut att);
         let o = &mut out[hh * hd..(hh + 1) * hd];
         o.fill(0.0);
         for (s, &a) in att.iter().enumerate() {
-            let vh = &vl[s * d + hh * hd..s * d + (hh + 1) * hd];
-            for (oo, &vv) in o.iter_mut().zip(vh) {
+            let vh = &vl.row(s)[hh * hd..(hh + 1) * hd];
+            for (oo, &vv) in o.iter_mut().zip(vh.iter()) {
                 *oo += a * vv;
             }
         }

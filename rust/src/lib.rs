@@ -6,8 +6,9 @@
 //!
 //! * **Layer 3 (this crate)** — the edge-serving coordinator: the native
 //!   LUT inference engine with the paper's 5-bit 3:4 packing (plus TL2 and
-//!   I2_S baselines), request routing/batching, KV-cache management, the
-//!   QAT training driver, and the full evaluation harness.
+//!   I2_S baselines), request routing/batching, paged KV-cache management
+//!   with radix prefix sharing (`cache`), the QAT training driver, and
+//!   the full evaluation harness.
 //! * **Layer 2** — the QAT transformer in JAX (`python/compile/model.py`),
 //!   AOT-lowered to HLO text artifacts loaded here via PJRT.
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
@@ -24,6 +25,7 @@
 #![allow(clippy::needless_range_loop)]
 #![allow(clippy::too_many_arguments)]
 
+pub mod cache;
 pub mod cli;
 pub mod coordinator;
 pub mod engine;

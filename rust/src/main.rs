@@ -11,7 +11,7 @@
 use anyhow::{bail, Context, Result};
 
 use sherry::cli::{App, Command, Parsed};
-use sherry::coordinator::{serve_trace, ServerConfig, TraceSpec};
+use sherry::coordinator::{serve_trace, BatcherConfig, SamplerConfig, ServerConfig, TraceSpec};
 use sherry::engine::{random_weights, NativeConfig, TernaryModel};
 use sherry::pack::{enumerate_nm_formats, Format};
 use sherry::quant::Schedule;
@@ -47,8 +47,13 @@ fn app() -> App {
                 .flag("requests", "number of requests", Some("16"))
                 .flag("interarrival", "mean inter-arrival seconds", Some("0.01"))
                 .flag("prompt", "prompt length", Some("8"))
+                .flag("shared-prefix", "shared system-prompt tokens per prompt", Some("0"))
                 .flag("tokens", "max new tokens per request", Some("24"))
-                .flag("active", "max concurrent sequences", Some("8")),
+                .flag("active", "max concurrent sequences", Some("8"))
+                .flag("page-size", "KV page size (positions)", Some("16"))
+                .flag("prefix-sharing", "reuse frozen prefix KV pages (0|1)", Some("1"))
+                .flag("temperature", "sampling temperature (0 = greedy)", Some("0"))
+                .flag("top-k", "sample from top-k logits (0 = full vocab)", Some("0")),
         )
         .command(
             Command::new("generate", "greedy generation from a checkpoint")
@@ -160,13 +165,24 @@ fn main() -> Result<()> {
                 format.name(),
                 model.bytes() as f64 / 1e6
             );
-            let mut server_cfg = ServerConfig::default();
-            server_cfg.batcher.max_active = args.usize_or("active", 8);
-            server_cfg.kv_capacity = server_cfg.batcher.max_active;
+            let active = args.usize_or("active", 8);
+            let server_cfg = ServerConfig {
+                batcher: BatcherConfig { max_active: active, ..Default::default() },
+                kv_capacity: active,
+                page_size: args.usize_or("page-size", 16),
+                prefix_sharing: args.usize_or("prefix-sharing", 1) != 0,
+                sampler: SamplerConfig {
+                    temperature: args.f64_or("temperature", 0.0) as f32,
+                    top_k: args.usize_or("top-k", 0),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
             let trace = TraceSpec {
                 n_requests: args.usize_or("requests", 16),
                 mean_interarrival_s: args.f64_or("interarrival", 0.01),
                 prompt_len: args.usize_or("prompt", 8),
+                shared_prefix_len: args.usize_or("shared-prefix", 0),
                 max_new_tokens: args.usize_or("tokens", 24),
                 seed: 0,
             };

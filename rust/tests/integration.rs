@@ -103,6 +103,7 @@ fn train_checkpoint_serve_roundtrip() {
             n_requests: 4,
             mean_interarrival_s: 0.0,
             prompt_len: 4,
+            shared_prefix_len: 0,
             max_new_tokens: 6,
             seed: 0,
         },
@@ -156,6 +157,7 @@ fn batched_coordinator_serves_all_formats_without_artifacts() {
         n_requests: 5,
         mean_interarrival_s: 0.0,
         prompt_len: 4,
+        shared_prefix_len: 0,
         max_new_tokens: 5,
         seed: 3,
     };
