@@ -2,7 +2,7 @@
 //! (batching, paged KV leasing, prefix sharing, scheduling). L3 must not
 //! be the bottleneck — DESIGN.md §7.
 //!
-//! Two tables:
+//! Three tables:
 //! 1. Serving vs raw single-stream engine (coordinator overhead).
 //! 2. Paged-vs-contiguous × shared-prefix sweep: page_size = seq_len is
 //!    the degenerate whole-cache (contiguous-equivalent) configuration,
@@ -10,9 +10,13 @@
 //!    system prompt. Emitted to `BENCH_serve_paged.json` so the perf
 //!    trajectory captures throughput, admitted concurrency and
 //!    prefix-hit rate over time.
+//! 3. KV-dtype sweep: f32-vs-int8 × contiguous-vs-paged at one fixed
+//!    byte budget — tokens/s, peak KV bytes, bytes/token and dequant
+//!    overhead. Emitted to `BENCH_kv_quant.json`.
 //!
 //! Run: `cargo bench --bench serve_throughput`
 
+use sherry::cache::KvDtype;
 use sherry::coordinator::{serve_trace, BatcherConfig, ServerConfig, TraceSpec};
 use sherry::engine::{random_weights, KvCache, NativeConfig, Scratch, TernaryModel};
 use sherry::pack::Format;
@@ -58,6 +62,7 @@ fn main() {
     println!("\n(>1x at 4/8-way = batching scales; 1-way ratio shows pure coordinator overhead)");
 
     paged_sweep(&model, single);
+    kv_quant_sweep(&model);
 }
 
 /// Paged vs contiguous-equivalent KV at a fixed byte budget, with and
@@ -138,6 +143,91 @@ fn paged_sweep(model: &TernaryModel, single: f64) {
     let path = "BENCH_serve_paged.json";
     match std::fs::write(path, &json) {
         Ok(()) => println!("\n[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}
+
+/// f32-vs-int8 KV × contiguous-vs-paged layout at one fixed byte budget
+/// (2 f32 whole-cache equivalents). Int8 pages hold the same bytes in
+/// ~4× the positions, so the paged+int8 cell admits the most sequences;
+/// the dequant-overhead column prices what that costs on the decode
+/// path.
+fn kv_quant_sweep(model: &TernaryModel) {
+    let seq_len = model.cfg.seq_len;
+    let kv_capacity = 2usize;
+    let spec = TraceSpec {
+        n_requests: 24,
+        mean_interarrival_s: 0.0005,
+        prompt_len: 18,
+        shared_prefix_len: 0,
+        max_new_tokens: 16,
+        seed: 12,
+    };
+
+    println!(
+        "\n### KV dtype × layout at fixed byte budget ({kv_capacity} f32 cache-equivalents)\n"
+    );
+    println!(
+        "| layout | kv dtype | tok/s | peak active | peak KV MiB | B/token | dequant cpu-s/wall-s |"
+    );
+    println!("|---|---|---|---|---|---|---|");
+    let mut records = Vec::new();
+    for (layout, page_size) in [("contiguous", seq_len), ("paged", 16usize)] {
+        for dtype in [KvDtype::F32, KvDtype::Int8] {
+            let server_cfg = ServerConfig {
+                batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+                kv_capacity,
+                page_size,
+                kv_dtype: dtype,
+                prefix_sharing: false,
+                workers: 8,
+                ..Default::default()
+            };
+            let (completions, m) = serve_trace(model, server_cfg, spec);
+            assert_eq!(completions.len(), spec.n_requests, "sweep must serve everything");
+            // Peak resident KV bytes = high-water pages × bytes/page.
+            let peak_bytes = if m.kv_pages_total == 0 {
+                0
+            } else {
+                m.kv_pages_peak * (m.kv_bytes / m.kv_pages_total)
+            };
+            println!(
+                "| {layout} | {} | {:.1} | {} | {:.3} | {} | {:.3} |",
+                dtype.name(),
+                m.throughput_tps(),
+                m.peak_active,
+                peak_bytes as f64 / (1024.0 * 1024.0),
+                m.kv_bytes_per_token,
+                m.dequant_overhead(),
+            );
+            records.push(format!(
+                "    {{\"layout\": \"{layout}\", \"page_size\": {page_size}, \
+                 \"kv_dtype\": \"{}\", \"tok_per_s\": {:.3}, \"peak_active\": {}, \
+                 \"kv_bytes\": {}, \"peak_kv_bytes\": {peak_bytes}, \
+                 \"kv_bytes_per_token\": {}, \"dequant_seconds\": {:.6}, \
+                 \"dequant_overhead\": {:.5}, \"ttft_p50_s\": {:.5}}}",
+                dtype.name(),
+                m.throughput_tps(),
+                m.peak_active,
+                m.kv_bytes,
+                m.kv_bytes_per_token,
+                m.kv_dequant_seconds,
+                m.dequant_overhead(),
+                m.ttft_p50(),
+            ));
+        }
+    }
+    println!(
+        "\n(int8 halves B/token and multiplies admissible pages at the same budget; \
+         dequant overhead is the price, amortized per page block)"
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"kv_quant\",\n  \"records\": [\n{}\n  ]\n}}\n",
+        records.join(",\n")
+    );
+    let path = "BENCH_kv_quant.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[bench] wrote {path}"),
         Err(e) => eprintln!("[bench] could not write {path}: {e}"),
     }
 }

@@ -9,28 +9,26 @@
 //! (`super::table`); pages are refcounted so a frozen prompt prefix can
 //! back any number of sequences at once (radix sharing, `super::prefix`).
 //!
+//! The arena's *bytes* live behind a [`PageStore`] (`super::store`): the
+//! allocator owns page lifecycle (refcounts, free stack, high-water
+//! marks) while the store owns the storage dtype — f32 for the parity
+//! baseline, int8 with per-page-per-head scales for the quantized cache.
+//!
 //! [`BlockTable`]: super::table::BlockTable
 
+use super::store::{new_store, KvDtype, PageStore, Plane};
 use crate::engine::NativeConfig;
 
 /// Index of a page in the arena.
-pub type PageId = u32;
+pub use super::store::PageId;
 
-/// Refcounted fixed-page arena for K and V, one plane per layer.
-///
-/// Layout: page `p`, slot `s` (position within the page), channel `c`
-/// live at `arena[layer][(p * page_size + s) * d_model + c]`. Pages are
-/// never zeroed on (re)allocation — a slot is always written before any
-/// read reaches it because attention reads only positions `< len`.
+/// Refcounted fixed-page arena for K and V, one plane per layer, bytes
+/// held by a dtype-polymorphic [`PageStore`].
 pub struct BlockAllocator {
     page_size: usize,
     d_model: usize,
-    n_layers: usize,
     num_pages: usize,
-    /// Per-layer K arenas: `num_pages * page_size * d_model` floats.
-    k: Vec<Vec<f32>>,
-    /// Per-layer V arenas, same shape.
-    v: Vec<Vec<f32>>,
+    store: Box<dyn PageStore>,
     /// Per-page reference counts (0 = free).
     refs: Vec<u32>,
     /// Free-page stack.
@@ -39,19 +37,21 @@ pub struct BlockAllocator {
 }
 
 impl BlockAllocator {
-    /// Arena with `num_pages` pages of `page_size` positions each, shaped
-    /// for `cfg` (one K and one V plane per layer).
+    /// f32 arena (the parity baseline) with `num_pages` pages of
+    /// `page_size` positions each, shaped for `cfg`.
     pub fn new(cfg: &NativeConfig, num_pages: usize, page_size: usize) -> Self {
+        Self::new_with(cfg, num_pages, page_size, KvDtype::F32)
+    }
+
+    /// Arena storing pages at `dtype`.
+    pub fn new_with(cfg: &NativeConfig, num_pages: usize, page_size: usize, dtype: KvDtype) -> Self {
         assert!(num_pages > 0 && page_size > 0, "arena must hold at least one slot");
         assert!(num_pages <= PageId::MAX as usize, "page id space exhausted");
-        let plane = num_pages * page_size * cfg.d_model;
         Self {
             page_size,
             d_model: cfg.d_model,
-            n_layers: cfg.n_layers,
             num_pages,
-            k: (0..cfg.n_layers).map(|_| vec![0.0; plane]).collect(),
-            v: (0..cfg.n_layers).map(|_| vec![0.0; plane]).collect(),
+            store: new_store(cfg, num_pages, page_size, dtype),
             refs: vec![0; num_pages],
             // Pop order is descending ids; purely cosmetic.
             free: (0..num_pages as PageId).rev().collect(),
@@ -89,10 +89,26 @@ impl BlockAllocator {
         self.refs[p as usize]
     }
 
-    /// Total arena bytes (KV byte budget, at the 4 B/f32 storage width the
-    /// engine uses — see DESIGN.md substitutions for the bf16 accounting).
+    /// Storage dtype policy of this arena.
+    pub fn dtype(&self) -> KvDtype {
+        self.store.dtype()
+    }
+
+    /// The storage backend (block reads and byte accounting go through
+    /// here; see [`PageStore`]).
+    #[inline]
+    pub fn store(&self) -> &dyn PageStore {
+        self.store.as_ref()
+    }
+
+    /// Total arena bytes at the storage dtype (KV byte budget).
     pub fn bytes(&self) -> usize {
-        2 * self.n_layers * self.num_pages * self.page_size * self.d_model * 4
+        self.store.bytes()
+    }
+
+    /// Bytes one stored position costs (kv-bytes-per-token gauge).
+    pub fn bytes_per_token(&self) -> usize {
+        self.store.bytes_per_token()
     }
 
     /// Take a free page with refcount 1, or `None` when the arena is full.
@@ -100,6 +116,7 @@ impl BlockAllocator {
         let p = self.free.pop()?;
         debug_assert_eq!(self.refs[p as usize], 0, "free page with live refs");
         self.refs[p as usize] = 1;
+        self.store.reset_page(p);
         self.peak_used = self.peak_used.max(self.used_pages());
         Some(p)
     }
@@ -132,39 +149,30 @@ impl BlockAllocator {
     ) {
         debug_assert!(slot < self.page_size);
         debug_assert!(self.refs[p as usize] > 0, "write to a free page");
-        let d = self.d_model;
-        let base = (p as usize * self.page_size + slot) * d;
-        self.k[layer][base..base + d].copy_from_slice(k_row);
-        self.v[layer][base..base + d].copy_from_slice(v_row);
+        self.store.write_row(layer, p, slot, k_row, v_row);
     }
 
-    /// The whole K plane of `layer` (attention reads through
-    /// [`Rows`](super::view::Rows), which indexes pages into this slab).
+    /// The first `rows` rows of page `p` on `plane` at `layer` as f32
+    /// (borrowed for f32 storage, dequantized into `scratch` otherwise).
     #[inline]
-    pub fn k_plane(&self, layer: usize) -> &[f32] {
-        &self.k[layer]
-    }
-
-    /// The whole V plane of `layer`.
-    #[inline]
-    pub fn v_plane(&self, layer: usize) -> &[f32] {
-        &self.v[layer]
+    pub fn read_block<'a>(
+        &'a self,
+        plane: Plane,
+        layer: usize,
+        p: PageId,
+        rows: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        self.store.block(plane, layer, p, rows, scratch)
     }
 
     /// Copy the first `rows` slots of `src` into `dst` across every layer
     /// (copy-on-write: the diverging sequence gets a private copy of the
-    /// shared page's prefix; `src` itself is never written).
+    /// shared page's prefix; `src` itself is never written). Goes through
+    /// the store so quantizer state travels with the bytes.
     pub fn copy_rows(&mut self, src: PageId, dst: PageId, rows: usize) {
         debug_assert!(rows <= self.page_size);
-        debug_assert_ne!(src, dst, "CoW onto the same page");
-        let d = self.d_model;
-        let n = rows * d;
-        let (s0, d0) = (src as usize * self.page_size * d, dst as usize * self.page_size * d);
-        for li in 0..self.n_layers {
-            let (k0, v0) = (&mut self.k[li], &mut self.v[li]);
-            k0.copy_within(s0..s0 + n, d0);
-            v0.copy_within(s0..s0 + n, d0);
-        }
+        self.store.copy_rows(src, dst, rows);
     }
 }
 
@@ -226,9 +234,11 @@ mod tests {
         let krow: Vec<f32> = (0..d).map(|i| i as f32).collect();
         let vrow: Vec<f32> = (0..d).map(|i| -(i as f32)).collect();
         a.write_row(1, p, 2, &krow, &vrow);
-        let base = (p as usize * 4 + 2) * d;
-        assert_eq!(&a.k_plane(1)[base..base + d], &krow[..]);
-        assert_eq!(&a.v_plane(1)[base..base + d], &vrow[..]);
+        let mut scratch = Vec::new();
+        let blk = a.read_block(Plane::K, 1, p, 3, &mut scratch);
+        assert_eq!(&blk[2 * d..3 * d], &krow[..]);
+        let blk = a.read_block(Plane::V, 1, p, 3, &mut scratch);
+        assert_eq!(&blk[2 * d..3 * d], &vrow[..]);
     }
 
     #[test]
@@ -245,10 +255,11 @@ mod tests {
             }
         }
         a.copy_rows(src, dst, 3);
+        let mut scratch = Vec::new();
         for li in 0..cfg.n_layers {
+            let blk = a.read_block(Plane::K, li, dst, 3, &mut scratch);
             for s in 0..3 {
-                let base = (dst as usize * 4 + s) * d;
-                assert_eq!(a.k_plane(li)[base], (li * 10 + s) as f32);
+                assert_eq!(blk[s * d], (li * 10 + s) as f32);
             }
         }
     }
@@ -262,5 +273,41 @@ mod tests {
         a.release(q);
         let _r = a.alloc().unwrap();
         assert_eq!(a.peak_used(), 2);
+    }
+
+    #[test]
+    fn int8_arena_reads_back_within_quantum() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let mut a = BlockAllocator::new_with(&cfg, 2, 4, KvDtype::Int8);
+        assert_eq!(a.dtype(), KvDtype::Int8);
+        let p = a.alloc().unwrap();
+        let krow: Vec<f32> = (0..d).map(|i| (i as f32 - 60.0) * 0.01).collect();
+        a.write_row(0, p, 0, &krow, &krow);
+        let mut scratch = Vec::new();
+        let blk = a.read_block(Plane::K, 0, p, 1, &mut scratch);
+        for (x, y) in blk.iter().zip(&krow) {
+            assert!((x - y).abs() <= 0.02, "{x} vs {y}");
+        }
+        assert!(a.bytes() * 2 <= BlockAllocator::new(&cfg, 2, 4).bytes());
+    }
+
+    #[test]
+    fn realloc_resets_quantizer_state() {
+        // A page freed and re-allocated must not inherit the old scale:
+        // a small row on the fresh page gets full resolution.
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let mut a = BlockAllocator::new_with(&cfg, 1, 2, KvDtype::Int8);
+        let p = a.alloc().unwrap();
+        a.write_row(0, p, 0, &vec![1000.0; d], &vec![1000.0; d]);
+        a.release(p);
+        let p2 = a.alloc().unwrap();
+        assert_eq!(p, p2, "single-page arena reuses the page");
+        let tiny = vec![0.001; d];
+        a.write_row(0, p2, 0, &tiny, &tiny);
+        let mut scratch = Vec::new();
+        let blk = a.read_block(Plane::K, 0, p2, 1, &mut scratch);
+        assert!((blk[0] - 0.001).abs() < 1e-5, "fresh scale, not the stale 1000-range one");
     }
 }

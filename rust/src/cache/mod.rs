@@ -13,20 +13,28 @@
 //! * [`PrefixIndex`] — radix trie over registered prompt prefixes; a new
 //!   request reuses the frozen KV pages of any previously seen prefix,
 //!   skipping prefill for the shared span with token-identical results.
-//! * [`KvBatch`] / [`Rows`] — the engine-facing view; contiguous
+//! * [`PageStore`] — the storage-dtype policy behind the arena:
+//!   [`F32Store`] (parity baseline, block reads borrow the plane) and
+//!   [`Int8Store`] (int8 pages + per-page-per-head f32 scales, quantized
+//!   at page-write time, dequantized per block into scratch tiles).
+//! * [`KvBatch`] / [`Rows`] — the engine-facing view; attention walks
+//!   histories as page blocks ([`Rows::for_each_block`]), and contiguous
 //!   [`KvCache`](crate::engine::KvCache)s are the degenerate
-//!   single-table case of the same code path, preserving bit-for-bit
+//!   single-block case of the same code path, preserving bit-for-bit
 //!   parity between paged and contiguous decode.
 //!
 //! DESIGN.md §4 documents the page layout, the block-table indirection,
-//! the radix prefix lifecycle, and the CoW rules.
+//! the radix prefix lifecycle, the CoW rules, and the `PageStore` byte
+//! formats / accuracy bound.
 
 mod allocator;
 mod prefix;
+mod store;
 mod table;
 mod view;
 
 pub use allocator::{BlockAllocator, PageId};
 pub use prefix::PrefixIndex;
+pub use store::{new_store, page_bytes, F32Store, Int8Store, KvDtype, PageStore, Plane};
 pub use table::BlockTable;
 pub use view::{KvBatch, Rows};

@@ -13,9 +13,14 @@
 //! token-identical results.
 //!
 //! Generated tokens are never registered — only prompt pages freeze
-//! (the standard system-prompt sharing workload). Index-held pages are
-//! released wholesale via [`PrefixIndex::clear`]; finer-grained
-//! eviction (LRU over nodes) is a ROADMAP follow-on.
+//! (the standard system-prompt sharing workload). Under admission
+//! pressure the coordinator evicts via
+//! [`PrefixIndex::evict_unreferenced`], which frees only nodes with zero
+//! live leases: flushing a node whose page a live block table still
+//! references frees no memory (the refcount keeps the page resident) and
+//! would only destroy reuse for the sequences mid-flight on that prefix.
+//! [`PrefixIndex::clear`] remains as the wholesale reset. Finer-grained
+//! LRU over unreferenced nodes is a ROADMAP follow-on.
 
 use super::allocator::{BlockAllocator, PageId};
 use super::table::BlockTable;
@@ -120,14 +125,75 @@ impl PrefixIndex {
         }
     }
 
-    /// Release every index-held page and reset to empty — the flush
-    /// "eviction policy" the coordinator falls back on when frozen pages
-    /// would otherwise starve admission.
+    /// Release every index-held page and reset to empty (wholesale reset;
+    /// pressure eviction uses [`PrefixIndex::evict_unreferenced`]).
     pub fn clear(&mut self, alloc: &mut BlockAllocator) {
         for node in self.nodes.drain(1..) {
             alloc.release(node.page);
         }
         self.nodes[0].children.clear();
+    }
+
+    /// Evict only nodes with **zero live leases**: a node is dropped iff
+    /// its page's only remaining reference is the index's own (refcount
+    /// 1) *and* its whole subtree is likewise unreferenced — dropping an
+    /// interior node whose descendant is still leased would sever the
+    /// probe path to pages that remain resident anyway. Returns the
+    /// number of pages actually freed back to the arena.
+    ///
+    /// This is the admission-pressure valve: unlike a wholesale
+    /// [`PrefixIndex::clear`], prefixes that live block tables are
+    /// actively decoding through stay probe-able (flushing them frees no
+    /// memory — the lease refcount keeps the page resident — so clearing
+    /// them only destroyed reuse).
+    pub fn evict_unreferenced(&mut self, alloc: &mut BlockAllocator) -> usize {
+        // Post-order: keep[id] = any child kept, or the page is leased.
+        fn walk(nodes: &[Node], alloc: &BlockAllocator, id: usize, keep: &mut [bool]) -> bool {
+            let mut kept = id == 0; // the pageless root always stays
+            for &(_, child) in &nodes[id].children {
+                kept |= walk(nodes, alloc, child, keep);
+            }
+            if !kept && alloc.ref_count(nodes[id].page) > 1 {
+                kept = true;
+            }
+            keep[id] = kept;
+            kept
+        }
+        let mut keep = vec![false; self.nodes.len()];
+        walk(&self.nodes, alloc, 0, &mut keep);
+
+        // Compact: remap kept nodes, release dropped pages, drop edges to
+        // evicted children.
+        let mut remap = vec![usize::MAX; self.nodes.len()];
+        let mut next = 0usize;
+        for (id, &k) in keep.iter().enumerate() {
+            if k {
+                remap[id] = next;
+                next += 1;
+            }
+        }
+        let mut freed = 0usize;
+        let old = std::mem::take(&mut self.nodes);
+        for (id, mut node) in old.into_iter().enumerate() {
+            if keep[id] {
+                node.children.retain_mut(|(_, child)| {
+                    if keep[*child] {
+                        *child = remap[*child];
+                        true
+                    } else {
+                        false
+                    }
+                });
+                self.nodes.push(node);
+            } else {
+                // Dropped ⇒ refcount was exactly 1 (ours): rc > 1 keeps a
+                // node, and no two nodes share a page. Releasing frees it.
+                debug_assert_eq!(alloc.ref_count(node.page), 1);
+                alloc.release(node.page);
+                freed += 1;
+            }
+        }
+        freed
     }
 }
 
@@ -197,6 +263,68 @@ mod tests {
         let (pages, matched) = idx.probe_pages(&prompt, 3);
         assert_eq!(matched, 3);
         assert_eq!(pages.len(), 1);
+    }
+
+    #[test]
+    fn evict_spares_nodes_with_live_leases() {
+        // Two registered prompts; a live block table leases the pages of
+        // the first. Pressure eviction must free only the second prompt's
+        // nodes — the leased prefix stays probe-able (regression: the old
+        // wholesale flush dropped it while freeing zero bytes for it).
+        let mut a = arena(16, 4);
+        let p1: Vec<u32> = (0..8).collect();
+        let p2: Vec<u32> = (100..108).collect();
+        let mut idx = PrefixIndex::new(4);
+        let mut t1 = filled_table(&mut a, p1.len());
+        idx.register(&p1, &t1, &mut a);
+        let mut t2 = filled_table(&mut a, p2.len());
+        idx.register(&p2, &t2, &mut a);
+        assert_eq!(idx.pages_held(), 4);
+
+        // A recipient leases p1's two frozen pages; donors retire.
+        let (shared_pages, matched) = idx.probe_pages(&p1, 7);
+        assert_eq!(matched, 7);
+        for &p in &shared_pages {
+            a.retain(p);
+        }
+        let mut lease = BlockTable::from_shared(4, shared_pages, matched);
+        t1.release_all(&mut a);
+        t2.release_all(&mut a);
+
+        let freed = idx.evict_unreferenced(&mut a);
+        assert_eq!(freed, 2, "only the unleased prompt's pages free");
+        assert_eq!(idx.pages_held(), 2, "leased nodes survive");
+        assert_eq!(idx.probe_len(&p1, 7), 7, "leased prefix still probe-able");
+        assert_eq!(idx.probe_len(&p2, 7), 0, "unleased prefix evicted");
+
+        // Once the lease retires, a second eviction frees the rest.
+        lease.release_all(&mut a);
+        assert_eq!(idx.evict_unreferenced(&mut a), 2);
+        assert_eq!(idx.pages_held(), 0);
+        assert_eq!(a.used_pages(), 0);
+    }
+
+    #[test]
+    fn evict_keeps_unreferenced_ancestor_of_leased_child() {
+        // Prompt spanning 3 pages; a lease holds only the *last* page's
+        // node alive. Its ancestors must survive too (the probe path), and
+        // nothing may be freed while the leaf is leased.
+        let mut a = arena(16, 4);
+        let prompt: Vec<u32> = (0..12).collect();
+        let mut idx = PrefixIndex::new(4);
+        let mut t = filled_table(&mut a, prompt.len());
+        idx.register(&prompt, &t, &mut a);
+        let leaf_page = t.pages()[2];
+        a.retain(leaf_page); // simulate a live lease of the deepest chunk
+        t.release_all(&mut a);
+
+        assert_eq!(idx.evict_unreferenced(&mut a), 0, "leased subtree pins its path");
+        assert_eq!(idx.pages_held(), 3);
+        assert_eq!(idx.probe_len(&prompt, 11), 11);
+
+        a.release(leaf_page);
+        assert_eq!(idx.evict_unreferenced(&mut a), 3);
+        assert_eq!(a.used_pages(), 0);
     }
 
     #[test]

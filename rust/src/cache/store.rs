@@ -1,0 +1,566 @@
+//! KV page storage behind the [`PageStore`] trait: the storage *dtype*
+//! is a per-pool policy, not a global assumption.
+//!
+//! The paper's Limitations single out the BF16 KV cache as the dominant
+//! transient memory once weights are 1.25-bit; on edge CPUs the decode
+//! hot path is memory-bandwidth-bound (BitNet.cpp, TENET), so shrinking
+//! KV pages is a latency win as well as a capacity win. Two
+//! implementations share one contract:
+//!
+//! * [`F32Store`] — today's layout (`num_pages × page_size × d_model`
+//!   floats per layer per plane). Block reads *borrow* the plane, so the
+//!   f32 path stays bit-for-bit identical to the pre-trait engine.
+//! * [`Int8Store`] — int8 pages with **per-page-per-head** f32 scales,
+//!   quantized at page-write time. A page's (page, head) scale is the
+//!   running absmax of the rows written so far; a row that exceeds the
+//!   current range *requantizes* the page's head lane to the grown scale
+//!   (one extra quantum of error, bounded — see DESIGN.md §4). Block
+//!   reads dequantize the page once into a caller scratch tile.
+//!
+//! The attention kernel consumes pages as whole blocks
+//! ([`super::view::Rows::for_each_block`]), so a quantized page is
+//! dequantized once per (layer, sequence, step) and then reused for all
+//! query·key dot products and value accumulations over that page —
+//! the same amortization `gemm_nt` applies to weight planes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::engine::NativeConfig;
+
+/// Index of a page in the arena.
+pub type PageId = u32;
+
+/// KV storage dtype policy for a paged arena.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum KvDtype {
+    /// 4 B/channel float pages (parity baseline; bit-for-bit with the
+    /// contiguous engine path).
+    #[default]
+    F32,
+    /// 1 B/channel int8 pages + per-page-per-head f32 scales.
+    Int8,
+}
+
+impl KvDtype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" | "fp32" | "float" => Some(KvDtype::F32),
+            "int8" | "i8" => Some(KvDtype::Int8),
+            _ => None,
+        }
+    }
+}
+
+/// Which of the two KV planes a read addresses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Plane {
+    K,
+    V,
+}
+
+/// Storage backend for the paged KV arena: owns the per-layer K/V pages
+/// in whatever byte format, and converts to/from f32 rows at the edges.
+///
+/// Contract (shared by all implementations, property-tested in
+/// `tests/paged_kv.rs`):
+/// * a slot is written at most once between `reset_page` calls, and only
+///   read after it was written (`rows` in `block` never exceeds the
+///   written prefix);
+/// * `copy_rows` makes `dst`'s first `rows` slots dequantize to the same
+///   values `src`'s did at copy time (CoW-through-store), and carries the
+///   quantizer state so `dst` can keep appending;
+/// * `block` must not change the values a slot dequantizes to (reads are
+///   pure) — only `write_row` may (and for quantized stores only within
+///   the documented requantization bound).
+pub trait PageStore: Send + Sync {
+    fn dtype(&self) -> KvDtype;
+
+    /// Reset per-page quantizer state. Called when a page is (re)allocated;
+    /// page *data* is never zeroed (a slot is written before any read).
+    fn reset_page(&mut self, p: PageId);
+
+    /// Write one position's K and V rows into `(page, slot)` of `layer`.
+    fn write_row(&mut self, layer: usize, p: PageId, slot: usize, k_row: &[f32], v_row: &[f32]);
+
+    /// Copy the first `rows` slots of `src` into `dst` across every layer
+    /// and both planes, including quantizer state (copy-on-write).
+    fn copy_rows(&mut self, src: PageId, dst: PageId, rows: usize);
+
+    /// The first `rows` rows of page `p`'s block on `plane` at `layer`,
+    /// as a `rows × d_model` f32 slice: borrowed straight from the arena
+    /// for f32 storage, dequantized into `scratch` for quantized storage.
+    fn block<'a>(
+        &'a self,
+        plane: Plane,
+        layer: usize,
+        p: PageId,
+        rows: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32];
+
+    /// Total arena bytes at this dtype (the KV byte budget).
+    fn bytes(&self) -> usize;
+
+    /// Bytes one stored position costs across both planes and all layers
+    /// (scale bytes amortized over the page) — the kv-bytes-per-token
+    /// gauge.
+    fn bytes_per_token(&self) -> usize;
+
+    /// Cumulative nanoseconds spent dequantizing blocks (0 for f32).
+    fn dequant_nanos(&self) -> u64;
+}
+
+/// Per-page bytes a store of `dtype` costs for `cfg` — used by the
+/// coordinator to turn one fixed byte budget into a dtype-aware page
+/// count (int8 pages buy ~4× the positions of f32 pages).
+pub fn page_bytes(cfg: &NativeConfig, page_size: usize, dtype: KvDtype) -> usize {
+    let per_plane = match dtype {
+        KvDtype::F32 => page_size * cfg.d_model * 4,
+        KvDtype::Int8 => page_size * cfg.d_model + cfg.n_heads * 4,
+    };
+    2 * cfg.n_layers * per_plane
+}
+
+/// Construct the store for `dtype`.
+pub fn new_store(cfg: &NativeConfig, num_pages: usize, page_size: usize, dtype: KvDtype) -> Box<dyn PageStore> {
+    match dtype {
+        KvDtype::F32 => Box::new(F32Store::new(cfg, num_pages, page_size)),
+        KvDtype::Int8 => Box::new(Int8Store::new(cfg, num_pages, page_size)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// F32Store — the parity baseline
+// ---------------------------------------------------------------------------
+
+/// Full-precision page store: the exact pre-trait layout. Page `p`, slot
+/// `s`, channel `c` live at `plane[(p·page_size + s)·d_model + c]`.
+pub struct F32Store {
+    page_size: usize,
+    d_model: usize,
+    n_layers: usize,
+    num_pages: usize,
+    /// Per-layer K planes: `num_pages * page_size * d_model` floats.
+    k: Vec<Vec<f32>>,
+    /// Per-layer V planes, same shape.
+    v: Vec<Vec<f32>>,
+}
+
+impl F32Store {
+    pub fn new(cfg: &NativeConfig, num_pages: usize, page_size: usize) -> Self {
+        let plane = num_pages * page_size * cfg.d_model;
+        Self {
+            page_size,
+            d_model: cfg.d_model,
+            n_layers: cfg.n_layers,
+            num_pages,
+            k: (0..cfg.n_layers).map(|_| vec![0.0; plane]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0.0; plane]).collect(),
+        }
+    }
+}
+
+impl PageStore for F32Store {
+    fn dtype(&self) -> KvDtype {
+        KvDtype::F32
+    }
+
+    fn reset_page(&mut self, _p: PageId) {}
+
+    #[inline]
+    fn write_row(&mut self, layer: usize, p: PageId, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(slot < self.page_size);
+        let d = self.d_model;
+        let base = (p as usize * self.page_size + slot) * d;
+        self.k[layer][base..base + d].copy_from_slice(k_row);
+        self.v[layer][base..base + d].copy_from_slice(v_row);
+    }
+
+    fn copy_rows(&mut self, src: PageId, dst: PageId, rows: usize) {
+        debug_assert!(rows <= self.page_size);
+        debug_assert_ne!(src, dst, "CoW onto the same page");
+        let d = self.d_model;
+        let n = rows * d;
+        let (s0, d0) = (src as usize * self.page_size * d, dst as usize * self.page_size * d);
+        for li in 0..self.n_layers {
+            self.k[li].copy_within(s0..s0 + n, d0);
+            self.v[li].copy_within(s0..s0 + n, d0);
+        }
+    }
+
+    #[inline]
+    fn block<'a>(
+        &'a self,
+        plane: Plane,
+        layer: usize,
+        p: PageId,
+        rows: usize,
+        _scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        debug_assert!(rows <= self.page_size);
+        let d = self.d_model;
+        let base = p as usize * self.page_size * d;
+        let buf = match plane {
+            Plane::K => &self.k[layer],
+            Plane::V => &self.v[layer],
+        };
+        &buf[base..base + rows * d]
+    }
+
+    fn bytes(&self) -> usize {
+        2 * self.n_layers * self.num_pages * self.page_size * self.d_model * 4
+    }
+
+    fn bytes_per_token(&self) -> usize {
+        2 * self.n_layers * self.d_model * 4
+    }
+
+    fn dequant_nanos(&self) -> u64 {
+        0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Int8Store — quantized pages, per-page-per-head scales
+// ---------------------------------------------------------------------------
+
+/// Int8 page store. Data layout matches [`F32Store`] with 1-byte
+/// channels; each (layer, plane, page, head) has one f32 scale at
+/// `scales[layer][p·n_heads + h]`, the running `absmax/127` of the rows
+/// written to that page so far.
+///
+/// Quantization happens at page-write time: `q = round(x/s)` clamped to
+/// ±127. When a new row's head absmax exceeds the current range, the
+/// page's already-written lane for that head is requantized to the grown
+/// scale (`q' = round(q·s_old/s_new)`), adding ≤ `0.5·s_new` per event.
+/// Each of a page's ≤ `page_size` row writes triggers at most one
+/// rescale per head, so the per-element bound is
+/// `≤ (page_size + 1)/2 · s_final` (vs one-shot quantization's `0.5·s`);
+/// in practice scales grow geometrically when they grow at all and the
+/// observed error sits near one quantum (property-tested, both bounds).
+pub struct Int8Store {
+    page_size: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    num_pages: usize,
+    k: Vec<Vec<i8>>,
+    v: Vec<Vec<i8>>,
+    /// `[layer][p * n_heads + h]` K scales.
+    k_scales: Vec<Vec<f32>>,
+    /// `[layer][p * n_heads + h]` V scales.
+    v_scales: Vec<Vec<f32>>,
+    /// Cumulative block-dequantization time (metrics gauge).
+    dequant_ns: AtomicU64,
+}
+
+impl Int8Store {
+    pub fn new(cfg: &NativeConfig, num_pages: usize, page_size: usize) -> Self {
+        assert_eq!(cfg.d_model % cfg.n_heads, 0, "d_model must split into heads");
+        let plane = num_pages * page_size * cfg.d_model;
+        let scales = num_pages * cfg.n_heads;
+        Self {
+            page_size,
+            d_model: cfg.d_model,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            head_dim: cfg.d_model / cfg.n_heads,
+            num_pages,
+            k: (0..cfg.n_layers).map(|_| vec![0; plane]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0; plane]).collect(),
+            k_scales: (0..cfg.n_layers).map(|_| vec![0.0; scales]).collect(),
+            v_scales: (0..cfg.n_layers).map(|_| vec![0.0; scales]).collect(),
+            dequant_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Scale of (layer, page, head) on `plane` (tests / diagnostics).
+    pub fn scale(&self, plane: Plane, layer: usize, p: PageId, head: usize) -> f32 {
+        let s = match plane {
+            Plane::K => &self.k_scales[layer],
+            Plane::V => &self.v_scales[layer],
+        };
+        s[p as usize * self.n_heads + head]
+    }
+
+    /// Quantize one head-lane of `row` into `(page, slot)`, growing (and
+    /// requantizing) the page's head scale when the row exceeds its range.
+    fn write_head(
+        data: &mut [i8],
+        scales: &mut [f32],
+        row: &[f32],
+        p: usize,
+        slot: usize,
+        head: usize,
+        ps: usize,
+        d: usize,
+        hd: usize,
+        n_heads: usize,
+    ) {
+        let col0 = head * hd;
+        let absmax = row[col0..col0 + hd].iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let si = p * n_heads + head;
+        let mut s = scales[si];
+        if absmax > s * 127.0 {
+            let s_new = absmax / 127.0;
+            if s > 0.0 {
+                // Requantize the already-written lane to the grown scale.
+                // Unwritten slots hold stale bytes that only shrink in
+                // magnitude here and are overwritten before any read.
+                let ratio = s / s_new;
+                for s2 in 0..ps {
+                    let base = (p * ps + s2) * d + col0;
+                    for q in &mut data[base..base + hd] {
+                        *q = (*q as f32 * ratio).round() as i8;
+                    }
+                }
+            }
+            s = s_new;
+            scales[si] = s;
+        }
+        let base = (p * ps + slot) * d + col0;
+        if s == 0.0 {
+            data[base..base + hd].fill(0);
+        } else {
+            for (q, &x) in data[base..base + hd].iter_mut().zip(&row[col0..col0 + hd]) {
+                *q = (x / s).round().clamp(-127.0, 127.0) as i8;
+            }
+        }
+    }
+}
+
+impl PageStore for Int8Store {
+    fn dtype(&self) -> KvDtype {
+        KvDtype::Int8
+    }
+
+    fn reset_page(&mut self, p: PageId) {
+        let s0 = p as usize * self.n_heads;
+        for li in 0..self.n_layers {
+            self.k_scales[li][s0..s0 + self.n_heads].fill(0.0);
+            self.v_scales[li][s0..s0 + self.n_heads].fill(0.0);
+        }
+    }
+
+    fn write_row(&mut self, layer: usize, p: PageId, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(slot < self.page_size);
+        debug_assert_eq!(k_row.len(), self.d_model);
+        let (ps, d, hd, nh) = (self.page_size, self.d_model, self.head_dim, self.n_heads);
+        for h in 0..nh {
+            Self::write_head(&mut self.k[layer], &mut self.k_scales[layer], k_row, p as usize, slot, h, ps, d, hd, nh);
+            Self::write_head(&mut self.v[layer], &mut self.v_scales[layer], v_row, p as usize, slot, h, ps, d, hd, nh);
+        }
+    }
+
+    fn copy_rows(&mut self, src: PageId, dst: PageId, rows: usize) {
+        debug_assert!(rows <= self.page_size);
+        debug_assert_ne!(src, dst, "CoW onto the same page");
+        let d = self.d_model;
+        let n = rows * d;
+        let (s0, d0) = (src as usize * self.page_size * d, dst as usize * self.page_size * d);
+        let (ss, ds) = (src as usize * self.n_heads, dst as usize * self.n_heads);
+        for li in 0..self.n_layers {
+            self.k[li].copy_within(s0..s0 + n, d0);
+            self.v[li].copy_within(s0..s0 + n, d0);
+            // Carry the quantizer state so the copy dequantizes
+            // identically and later appends keep growing from it.
+            self.k_scales[li].copy_within(ss..ss + self.n_heads, ds);
+            self.v_scales[li].copy_within(ss..ss + self.n_heads, ds);
+        }
+    }
+
+    fn block<'a>(
+        &'a self,
+        plane: Plane,
+        layer: usize,
+        p: PageId,
+        rows: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        debug_assert!(rows <= self.page_size);
+        let t0 = Instant::now();
+        let (d, hd, nh) = (self.d_model, self.head_dim, self.n_heads);
+        let (data, scales) = match plane {
+            Plane::K => (&self.k[layer], &self.k_scales[layer]),
+            Plane::V => (&self.v[layer], &self.v_scales[layer]),
+        };
+        scratch.resize(rows * d, 0.0);
+        let pbase = p as usize * self.page_size * d;
+        let sbase = p as usize * nh;
+        for r in 0..rows {
+            let rbase = pbase + r * d;
+            for h in 0..nh {
+                let s = scales[sbase + h];
+                let col0 = h * hd;
+                for c in 0..hd {
+                    scratch[r * d + col0 + c] = data[rbase + col0 + c] as f32 * s;
+                }
+            }
+        }
+        self.dequant_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        &scratch[..rows * d]
+    }
+
+    fn bytes(&self) -> usize {
+        2 * self.n_layers * self.num_pages * (self.page_size * self.d_model + self.n_heads * 4)
+    }
+
+    fn bytes_per_token(&self) -> usize {
+        // 1 B/channel + the page's per-head scales amortized over its slots.
+        2 * self.n_layers * (self.d_model + (self.n_heads * 4).div_ceil(self.page_size))
+    }
+
+    fn dequant_nanos(&self) -> u64 {
+        self.dequant_ns.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg64;
+
+    fn cfg() -> NativeConfig {
+        NativeConfig::named("nano").unwrap()
+    }
+
+    #[test]
+    fn f32_store_roundtrips_exactly() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = F32Store::new(&cfg, 2, 4);
+        let krow: Vec<f32> = (0..d).map(|i| i as f32 * 0.25 - 3.0).collect();
+        let vrow: Vec<f32> = krow.iter().map(|x| -x).collect();
+        st.write_row(1, 0, 2, &krow, &vrow);
+        let mut scratch = Vec::new();
+        let blk = st.block(Plane::K, 1, 0, 3, &mut scratch);
+        assert_eq!(&blk[2 * d..3 * d], &krow[..]);
+        let blk = st.block(Plane::V, 1, 0, 3, &mut scratch);
+        assert_eq!(&blk[2 * d..3 * d], &vrow[..]);
+        assert_eq!(st.bytes_per_token(), 2 * cfg.n_layers * d * 4);
+        assert_eq!(st.dequant_nanos(), 0);
+    }
+
+    #[test]
+    fn int8_roundtrip_within_rescale_bound() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let hd = cfg.head_dim();
+        let mut st = Int8Store::new(&cfg, 2, 4);
+        st.reset_page(0);
+        let mut rng = Pcg64::seeded(11);
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(d)).collect();
+        for (s, row) in rows.iter().enumerate() {
+            st.write_row(0, 0, s, row, row);
+        }
+        // ≤ one rescale per row write → (rows + 1)/2 quanta worst case.
+        let bound_quanta = (rows.len() + 1) as f32 / 2.0;
+        let mut scratch = Vec::new();
+        let blk = st.block(Plane::K, 0, 0, 4, &mut scratch).to_vec();
+        for (s, row) in rows.iter().enumerate() {
+            for h in 0..cfg.n_heads {
+                let scale = st.scale(Plane::K, 0, 0, h);
+                for c in h * hd..(h + 1) * hd {
+                    let err = (blk[s * d + c] - row[c]).abs();
+                    assert!(
+                        err <= bound_quanta * scale + 1e-6,
+                        "slot {s} ch {c}: err {err} > {bound_quanta}·scale {scale}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_scale_grows_and_early_rows_stay_bounded() {
+        // Rows of sharply increasing magnitude force requantization; the
+        // earliest row must still dequantize within the documented bound
+        // of the *final* scale.
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = Int8Store::new(&cfg, 1, 4);
+        st.reset_page(0);
+        let rows: Vec<Vec<f32>> = (0..4).map(|s| vec![10f32.powi(s as i32 - 1); d]).collect();
+        for (s, row) in rows.iter().enumerate() {
+            st.write_row(0, 0, s, row, row);
+        }
+        let final_scale = st.scale(Plane::K, 0, 0, 0);
+        assert!((final_scale - 100.0 / 127.0).abs() < 1e-4, "scale follows the page absmax");
+        let mut scratch = Vec::new();
+        let blk = st.block(Plane::K, 0, 0, 4, &mut scratch);
+        for (s, row) in rows.iter().enumerate() {
+            let err = (blk[s * d] - row[0]).abs();
+            // Geometric (×10) growth keeps the rescale series convergent:
+            // well under the generic (rows+1)/2-quanta bound.
+            assert!(err <= 2.5 * final_scale + 1e-6, "slot {s}: err {err}");
+        }
+        assert!(st.dequant_nanos() > 0, "dequant gauge advanced");
+    }
+
+    #[test]
+    fn int8_reset_page_clears_quantizer_state() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = Int8Store::new(&cfg, 1, 2);
+        st.reset_page(0);
+        st.write_row(0, 0, 0, &vec![100.0; d], &vec![100.0; d]);
+        assert!(st.scale(Plane::K, 0, 0, 0) > 0.5);
+        st.reset_page(0);
+        assert_eq!(st.scale(Plane::K, 0, 0, 0), 0.0);
+        // A tiny row after reset gets a tiny scale, not the stale one.
+        st.write_row(0, 0, 0, &vec![0.01; d], &vec![0.01; d]);
+        let s = st.scale(Plane::K, 0, 0, 0);
+        assert!((s - 0.01 / 127.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn int8_copy_rows_preserves_values_and_state() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = Int8Store::new(&cfg, 2, 4);
+        st.reset_page(0);
+        st.reset_page(1);
+        let mut rng = Pcg64::seeded(5);
+        for s in 0..3 {
+            let row = rng.normal_vec(d);
+            st.write_row(0, 0, s, &row, &row);
+        }
+        st.copy_rows(0, 1, 3);
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        assert_eq!(
+            st.block(Plane::K, 0, 0, 3, &mut a).to_vec(),
+            st.block(Plane::K, 0, 1, 3, &mut b).to_vec(),
+            "copy dequantizes identically"
+        );
+        for h in 0..cfg.n_heads {
+            assert_eq!(st.scale(Plane::K, 0, 0, h), st.scale(Plane::K, 0, 1, h));
+        }
+    }
+
+    #[test]
+    fn int8_halves_bytes_per_token() {
+        let cfg = cfg();
+        let f = F32Store::new(&cfg, 1, 16);
+        let q = Int8Store::new(&cfg, 1, 16);
+        assert!(
+            q.bytes_per_token() * 2 <= f.bytes_per_token(),
+            "int8 {} vs f32 {}",
+            q.bytes_per_token(),
+            f.bytes_per_token()
+        );
+        assert!(q.bytes() * 2 <= f.bytes());
+        assert_eq!(page_bytes(&cfg, 16, KvDtype::F32), f.bytes());
+        assert_eq!(page_bytes(&cfg, 16, KvDtype::Int8), q.bytes());
+    }
+}

@@ -85,6 +85,8 @@ impl BlockTable {
         } else if pi < self.owned_from {
             // First divergence into a shared page: copy its live prefix
             // into a private page, drop our reference to the shared one.
+            // The copy goes through the PageStore, so quantized stores
+            // carry their per-page quantizer state with the bytes.
             debug_assert_eq!(pi + 1, self.pages.len(), "append can only CoW the tail page");
             let src = self.pages[pi];
             let dst = alloc
@@ -165,7 +167,9 @@ mod tests {
         a.retain(shared);
         let mut t = BlockTable::from_shared(4, vec![shared], 3);
         assert_eq!(t.shared_prefix_pages(), 1);
-        let snapshot: Vec<f32> = a.k_plane(0).to_vec();
+        let mut scratch = Vec::new();
+        let snapshot: Vec<f32> =
+            a.read_block(crate::cache::Plane::K, 0, shared, 4, &mut scratch).to_vec();
 
         // Appending position 3 diverges inside the shared page → CoW.
         t.prepare_append(&mut a);
@@ -179,13 +183,16 @@ mod tests {
         t.advance();
 
         // The shared page is bit-identical to before the divergence …
-        let base = shared as usize * 4 * d;
-        assert_eq!(&a.k_plane(0)[base..base + 4 * d], &snapshot[base..base + 4 * d]);
+        assert_eq!(
+            a.read_block(crate::cache::Plane::K, 0, shared, 4, &mut scratch),
+            &snapshot[..]
+        );
         // … and the copy carried the live prefix over.
-        let cbase = p as usize * 4 * d;
-        assert_eq!(a.k_plane(0)[cbase], 0.0);
-        assert_eq!(a.k_plane(0)[cbase + 2 * d], 2.0);
-        assert_eq!(a.k_plane(0)[cbase + 3 * d], 99.0);
+        let copy: Vec<f32> =
+            a.read_block(crate::cache::Plane::K, 0, p, 4, &mut scratch).to_vec();
+        assert_eq!(copy[0], 0.0);
+        assert_eq!(copy[2 * d], 2.0);
+        assert_eq!(copy[3 * d], 99.0);
         // Our reference moved from the shared page to the copy.
         assert_eq!(a.ref_count(shared), 1);
 

@@ -2,38 +2,77 @@
 //!
 //! [`TernaryModel::forward_kv`](crate::engine::TernaryModel::forward_kv)
 //! appends and reads K/V exclusively through [`KvBatch`], so paged and
-//! contiguous storage run the *same* model code. [`Rows`] resolves a
-//! logical position to its `d_model`-wide row — a slice offset for a
-//! contiguous cache, a page-table lookup for the paged arena — and the
-//! attention math consumes rows in identical order either way, which is
-//! what keeps paged decode bit-for-bit equal to the contiguous baseline
-//! (the contiguous path is literally the degenerate single-table case).
+//! contiguous storage run the *same* model code. [`Rows`] exposes a
+//! sequence's K (or V) history as **page blocks**: contiguous
+//! `rows × d_model` f32 tiles, one per resident page (the whole history
+//! is a single block for a contiguous cache). The attention kernel walks
+//! blocks in ascending position order and consumes rows in identical
+//! order either way, which is what keeps paged decode bit-for-bit equal
+//! to the contiguous baseline (the contiguous path is literally the
+//! degenerate single-block case). Quantized stores dequantize each block
+//! once into a caller scratch tile, amortizing the conversion over every
+//! query·key dot product and value accumulation that touches the page.
 
 use super::allocator::{BlockAllocator, PageId};
+use super::store::{PageStore, Plane};
 use super::table::BlockTable;
 use crate::engine::KvCache;
 
-/// Position-indexed row access into one sequence's K (or V) history at
+/// Position-indexed block access into one sequence's K (or V) history at
 /// one layer. Copyable, shareable across the attention worker pool.
 #[derive(Clone, Copy)]
 pub enum Rows<'a> {
     /// Contiguous per-sequence buffer: position `s` at `buf[s*d..]`.
     Contig { buf: &'a [f32], d: usize },
     /// Paged arena: position `s` lives in `pages[s / page_size]` at slot
-    /// `s % page_size`.
-    Paged { plane: &'a [f32], pages: &'a [PageId], page_size: usize, d: usize },
+    /// `s % page_size`, stored at the store's dtype.
+    Paged {
+        store: &'a dyn PageStore,
+        plane: Plane,
+        layer: usize,
+        pages: &'a [PageId],
+        page_size: usize,
+        d: usize,
+    },
 }
 
 impl<'a> Rows<'a> {
-    /// The row for logical position `s`.
+    /// Walk the first `t` positions as page blocks, in ascending position
+    /// order: `f(start, block, rows)` receives a `rows × d` f32 tile
+    /// covering positions `start .. start + rows`. For f32 storage the
+    /// tile borrows the arena (or the contiguous buffer — one block);
+    /// quantized storage dequantizes into `scratch` once per page.
     #[inline]
-    pub fn row(&self, s: usize) -> &'a [f32] {
+    pub fn for_each_block(
+        &self,
+        t: usize,
+        scratch: &mut Vec<f32>,
+        mut f: impl FnMut(usize, &[f32], usize),
+    ) {
         match *self {
-            Rows::Contig { buf, d } => &buf[s * d..(s + 1) * d],
-            Rows::Paged { plane, pages, page_size, d } => {
-                let base = (pages[s / page_size] as usize * page_size + s % page_size) * d;
-                &plane[base..base + d]
+            Rows::Contig { buf, d } => {
+                if t > 0 {
+                    f(0, &buf[..t * d], t);
+                }
             }
+            Rows::Paged { store, plane, layer, pages, page_size, .. } => {
+                let mut start = 0usize;
+                while start < t {
+                    let rows = page_size.min(t - start);
+                    let page = pages[start / page_size];
+                    let block = store.block(plane, layer, page, rows, scratch);
+                    f(start, block, rows);
+                    start += rows;
+                }
+            }
+        }
+    }
+
+    /// Model width of the rows this view yields.
+    pub fn width(&self) -> usize {
+        match *self {
+            Rows::Contig { d, .. } => d,
+            Rows::Paged { d, .. } => d,
         }
     }
 }
@@ -92,28 +131,28 @@ impl<'s, 'c> KvBatch<'s, 'c> {
     /// appended row).
     #[inline]
     pub fn k_rows(&self, layer: usize, i: usize) -> Rows<'_> {
-        match self {
-            KvBatch::Contig(caches) => {
-                Rows::Contig { buf: &caches[i].k[layer], d: caches[i].d_model }
-            }
-            KvBatch::Paged { alloc, tables } => Rows::Paged {
-                plane: alloc.k_plane(layer),
-                pages: tables[i].pages(),
-                page_size: alloc.page_size(),
-                d: alloc.d_model(),
-            },
-        }
+        self.rows(Plane::K, layer, i)
     }
 
     /// V rows of sequence `i` at `layer`.
     #[inline]
     pub fn v_rows(&self, layer: usize, i: usize) -> Rows<'_> {
+        self.rows(Plane::V, layer, i)
+    }
+
+    fn rows(&self, plane: Plane, layer: usize, i: usize) -> Rows<'_> {
         match self {
             KvBatch::Contig(caches) => {
-                Rows::Contig { buf: &caches[i].v[layer], d: caches[i].d_model }
+                let buf = match plane {
+                    Plane::K => &caches[i].k[layer],
+                    Plane::V => &caches[i].v[layer],
+                };
+                Rows::Contig { buf, d: caches[i].d_model }
             }
             KvBatch::Paged { alloc, tables } => Rows::Paged {
-                plane: alloc.v_plane(layer),
+                store: alloc.store(),
+                plane,
+                layer,
                 pages: tables[i].pages(),
                 page_size: alloc.page_size(),
                 d: alloc.d_model(),
@@ -141,10 +180,22 @@ impl<'s, 'c> KvBatch<'s, 'c> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::KvDtype;
     use crate::engine::NativeConfig;
 
+    /// Flatten the first `t` positions of a view into one `t × d` buffer.
+    fn collect(rows: &Rows<'_>, t: usize) -> Vec<f32> {
+        let d = rows.width();
+        let mut out = vec![0.0; t * d];
+        let mut scratch = Vec::new();
+        rows.for_each_block(t, &mut scratch, |start, block, n| {
+            out[start * d..(start + n) * d].copy_from_slice(&block[..n * d]);
+        });
+        out
+    }
+
     #[test]
-    fn contig_and_paged_rows_agree() {
+    fn contig_and_paged_blocks_agree() {
         let cfg = NativeConfig::named("nano").unwrap();
         let d = cfg.d_model;
         let mut cache = KvCache::new(&cfg);
@@ -180,10 +231,71 @@ mod tests {
         assert_eq!(kv_c.pos(0), 6);
         assert_eq!(kv_p.pos(0), 6);
         for li in 0..cfg.n_layers {
-            for s in 0..6 {
-                assert_eq!(kv_c.k_rows(li, 0).row(s), kv_p.k_rows(li, 0).row(s));
-                assert_eq!(kv_c.v_rows(li, 0).row(s), kv_p.v_rows(li, 0).row(s));
+            for t in [1usize, 4, 5, 6] {
+                assert_eq!(collect(&kv_c.k_rows(li, 0), t), collect(&kv_p.k_rows(li, 0), t));
+                assert_eq!(collect(&kv_c.v_rows(li, 0), t), collect(&kv_p.v_rows(li, 0), t));
             }
+        }
+    }
+
+    #[test]
+    fn block_walk_covers_positions_in_order_with_partial_tail() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let mut alloc = BlockAllocator::new(&cfg, 4, 4);
+        let mut table = BlockTable::new(4);
+        let d = cfg.d_model;
+        for pos in 0..7usize {
+            table.prepare_append(&mut alloc);
+            let (page, slot) = table.slot_for(pos);
+            alloc.write_row(0, page, slot, &vec![pos as f32; d], &vec![pos as f32; d]);
+            table.advance();
+        }
+        let mut tables = [&mut table];
+        let kv = KvBatch::Paged { alloc: &mut alloc, tables: &mut tables };
+        let rows = kv.k_rows(0, 0);
+        let mut seen = Vec::new();
+        let mut scratch = Vec::new();
+        rows.for_each_block(7, &mut scratch, |start, block, n| {
+            for r in 0..n {
+                seen.push((start + r, block[r * d]));
+            }
+        });
+        assert_eq!(seen.len(), 7);
+        for (i, &(pos, val)) in seen.iter().enumerate() {
+            assert_eq!(pos, i, "ascending positions");
+            assert_eq!(val, i as f32);
+        }
+    }
+
+    #[test]
+    fn int8_paged_blocks_approximate_f32() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let mut f32_alloc = BlockAllocator::new(&cfg, 4, 4);
+        let mut i8_alloc = BlockAllocator::new_with(&cfg, 4, 4, KvDtype::Int8);
+        let mut tf = BlockTable::new(4);
+        let mut tq = BlockTable::new(4);
+        let mut rng = crate::util::Pcg64::seeded(3);
+        for pos in 0..6usize {
+            let row = rng.normal_vec(d);
+            for (alloc, t) in [(&mut f32_alloc, &mut tf), (&mut i8_alloc, &mut tq)] {
+                t.prepare_append(alloc);
+                let (page, slot) = t.slot_for(pos);
+                alloc.write_row(0, page, slot, &row, &row);
+                t.advance();
+            }
+        }
+        let mut tables_f = [&mut tf];
+        let kv_f = KvBatch::Paged { alloc: &mut f32_alloc, tables: &mut tables_f };
+        let mut tables_q = [&mut tq];
+        let kv_q = KvBatch::Paged { alloc: &mut i8_alloc, tables: &mut tables_q };
+        let a = collect(&kv_f.k_rows(0, 0), 6);
+        let b = collect(&kv_q.k_rows(0, 0), 6);
+        let max_abs = a.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        // ≤ (page_size + 1)/2 quanta of the global absmax (page/head
+        // scales are all ≤ max_abs/127 here).
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() <= 2.5 * max_abs / 127.0 + 1e-6, "{x} vs {y}");
         }
     }
 }

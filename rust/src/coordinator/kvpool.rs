@@ -10,8 +10,14 @@
 //! transient memory (the paper's Limitations note BF16 KV); paging turns
 //! the same byte budget into strictly more admissible concurrency
 //! whenever requests are shorter than the worst case.
+//!
+//! Byte accounting is **dtype-aware**: the pool turns one fixed byte
+//! budget into a page count at the arena's [`KvDtype`]
+//! ([`PagedKv::pages_for_budget`]), so an int8 arena holds ~4× the pages
+//! of an f32 one and page-counted admission scales with it — KV
+//! quantization is a concurrency knob, not just a footprint one.
 
-use crate::cache::{BlockAllocator, BlockTable, PrefixIndex};
+use crate::cache::{page_bytes, BlockAllocator, BlockTable, KvDtype, PrefixIndex};
 use crate::engine::NativeConfig;
 
 use super::Request;
@@ -25,20 +31,50 @@ pub struct PagedKv {
 }
 
 impl PagedKv {
-    /// Arena with `num_pages` pages of `page_size` positions, sized for
-    /// `cfg`. `sharing` enables the radix prefix index. `num_pages` is
-    /// raised to at least one worst-case sequence so a lone request can
-    /// always run (head-of-line liveness).
-    pub fn new(cfg: &NativeConfig, num_pages: usize, page_size: usize, sharing: bool) -> Self {
+    /// Arena with `num_pages` pages of `page_size` positions at `dtype`,
+    /// sized for `cfg`. `sharing` enables the radix prefix index.
+    /// `num_pages` is raised to at least one worst-case sequence so a
+    /// lone request can always run (head-of-line liveness).
+    ///
+    /// Prefix sharing requires **f32 pages** and is forced off otherwise:
+    /// the sharing contract is that a reused page holds exactly the rows
+    /// the recipient would have produced itself, but an int8 page's
+    /// per-page-per-head scale is grown by *every* row the donor wrote —
+    /// including rows past the shared span — so a partially shared page
+    /// would dequantize differently than the recipient's own prefill,
+    /// making completions depend on serving order. (Scale-invariant
+    /// sharing for quantized pages is a ROADMAP item.)
+    pub fn new(
+        cfg: &NativeConfig,
+        num_pages: usize,
+        page_size: usize,
+        sharing: bool,
+        dtype: KvDtype,
+    ) -> Self {
         let page_size = page_size.max(1);
         let per_seq = cfg.seq_len.div_ceil(page_size);
         let num_pages = num_pages.max(per_seq);
         Self {
-            alloc: BlockAllocator::new(cfg, num_pages, page_size),
+            alloc: BlockAllocator::new_with(cfg, num_pages, page_size, dtype),
             index: PrefixIndex::new(page_size),
-            sharing,
+            sharing: sharing && dtype == KvDtype::F32,
             seq_len: cfg.seq_len,
         }
+    }
+
+    /// Pages a byte budget of `kv_capacity` f32 whole-cache equivalents
+    /// (the seed's knob: `kv_capacity` contiguous `seq_len × d_model`
+    /// caches) buys at `dtype` — the coordinator holds bytes fixed and
+    /// lets the dtype set the page count.
+    pub fn pages_for_budget(
+        cfg: &NativeConfig,
+        kv_capacity: usize,
+        page_size: usize,
+        dtype: KvDtype,
+    ) -> usize {
+        let page_size = page_size.max(1);
+        let budget = kv_capacity.max(1) * page_bytes(cfg, cfg.seq_len, KvDtype::F32);
+        (budget / page_bytes(cfg, page_size, dtype)).max(1)
     }
 
     pub fn page_size(&self) -> usize {
@@ -66,9 +102,25 @@ impl PagedKv {
         self.index.pages_held()
     }
 
-    /// Total arena bytes (the KV byte budget).
+    /// Total arena bytes at the storage dtype (the KV byte budget).
     pub fn bytes(&self) -> usize {
         self.alloc.bytes()
+    }
+
+    /// Storage dtype of the arena.
+    pub fn dtype(&self) -> KvDtype {
+        self.alloc.dtype()
+    }
+
+    /// Bytes one stored position costs (kv-bytes-per-token gauge).
+    pub fn bytes_per_token(&self) -> usize {
+        self.alloc.bytes_per_token()
+    }
+
+    /// Cumulative nanoseconds the store spent dequantizing page blocks
+    /// (0 for f32 — the dequant-overhead gauge).
+    pub fn dequant_nanos(&self) -> u64 {
+        self.alloc.store().dequant_nanos()
     }
 
     /// The arena, for the decode round's [`KvBatch`](crate::cache::KvBatch).
@@ -139,12 +191,13 @@ impl PagedKv {
         }
     }
 
-    /// Drop every index-frozen page — the coordinator's pressure valve
-    /// when frozen pages would starve admission. Returns pages freed.
+    /// Evict index-frozen pages with zero live leases — the coordinator's
+    /// pressure valve when frozen pages would starve admission. Prefixes
+    /// that live sequences still decode through survive (flushing them
+    /// frees no memory — their lease refcounts keep the pages resident).
+    /// Returns pages actually freed back to the arena.
     pub fn flush_index(&mut self) -> usize {
-        let held = self.index.pages_held();
-        self.index.clear(&mut self.alloc);
-        held
+        self.index.evict_unreferenced(&mut self.alloc)
     }
 }
 
@@ -153,7 +206,7 @@ mod tests {
     use super::*;
 
     fn kv(pages: usize, ps: usize, sharing: bool) -> PagedKv {
-        PagedKv::new(&NativeConfig::named("nano").unwrap(), pages, ps, sharing)
+        PagedKv::new(&NativeConfig::named("nano").unwrap(), pages, ps, sharing, KvDtype::F32)
     }
 
     fn req(prompt: Vec<u32>, gen: usize) -> Request {
@@ -215,5 +268,68 @@ mod tests {
     fn num_pages_raised_to_one_worst_case_sequence() {
         let kv = kv(1, 16, true); // nano seq_len 64 → 4 pages minimum
         assert_eq!(kv.num_pages(), 4);
+    }
+
+    #[test]
+    fn budget_buys_more_int8_pages_than_f32_at_same_bytes() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let f32_pages = PagedKv::pages_for_budget(&cfg, 2, 16, KvDtype::F32);
+        let int8_pages = PagedKv::pages_for_budget(&cfg, 2, 16, KvDtype::Int8);
+        // 2 whole caches at page_size 16 → 8 f32 pages; int8 pages cost
+        // just over a quarter of the bytes.
+        assert_eq!(f32_pages, 8);
+        assert!(int8_pages >= 2 * f32_pages, "{int8_pages} vs {f32_pages}");
+        // And the arena built at that count stays within the f32 budget.
+        let budget = PagedKv::new(&cfg, f32_pages, 16, false, KvDtype::F32).bytes();
+        let quant = PagedKv::new(&cfg, int8_pages, 16, false, KvDtype::Int8);
+        assert!(quant.bytes() <= budget);
+        assert!(quant.bytes_per_token() * 2 <= 2 * cfg.n_layers * cfg.d_model * 4);
+    }
+
+    #[test]
+    fn int8_pool_forces_prefix_sharing_off() {
+        // Sharing's exact-reuse contract only holds for f32 pages (int8
+        // page scales are contaminated by donor rows past the shared
+        // span); an int8 pool must behave as sharing-off regardless of
+        // the flag.
+        let cfg = NativeConfig::named("nano").unwrap();
+        let mut kv = PagedKv::new(&cfg, 64, 4, true, KvDtype::Int8);
+        let prompt: Vec<u32> = (0..8).collect();
+        let (mut t, shared) = kv.lease(&prompt);
+        assert_eq!(shared, 0);
+        for _ in 0..prompt.len() {
+            t.prepare_append(kv.alloc_mut());
+            t.advance();
+        }
+        kv.register(&prompt, &t);
+        assert_eq!(kv.index_pages(), 0, "nothing freezes");
+        let (mut t2, shared) = kv.lease(&prompt);
+        assert_eq!(shared, 0, "identical prompt must not share int8 pages");
+        kv.release(&mut t);
+        kv.release(&mut t2);
+        assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn flush_spares_leased_prefix_pages() {
+        // A prompt frozen into the index and actively leased by a live
+        // table must survive the pressure flush; once released it goes.
+        let mut kv = kv(64, 4, true);
+        let prompt: Vec<u32> = (0..8).collect();
+        let (mut t, _) = kv.lease(&prompt);
+        for _ in 0..prompt.len() {
+            t.prepare_append(kv.alloc_mut());
+            t.advance();
+        }
+        kv.register(&prompt, &t);
+        // Lease a second table over the shared prefix, retire the donor.
+        let (mut t2, shared) = kv.lease(&prompt);
+        assert_eq!(shared, 7);
+        kv.release(&mut t);
+        assert_eq!(kv.flush_index(), 0, "leased prefix pages are not freed");
+        assert_eq!(kv.index_pages(), 2, "nodes survive for future hits");
+        kv.release(&mut t2);
+        assert_eq!(kv.flush_index(), 2);
+        assert_eq!(kv.used_pages(), 0);
     }
 }

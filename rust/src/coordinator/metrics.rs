@@ -29,6 +29,15 @@ pub struct Metrics {
     pub kv_pages_end_in_use: u64,
     /// KV arena bytes (the byte budget the sweep holds fixed).
     pub kv_bytes: u64,
+    /// Bytes one stored KV position costs at the pool's storage dtype
+    /// (scales amortized) — the kv-bytes-per-token gauge; int8 pools
+    /// must report at most half the f32 figure.
+    pub kv_bytes_per_token: u64,
+    /// CPU-seconds the page store spent dequantizing blocks for
+    /// attention, summed across all worker threads (0 for f32 pools) —
+    /// the dequant-overhead gauge. Because workers dequantize
+    /// concurrently, this can exceed `wall_seconds`.
+    pub kv_dequant_seconds: f64,
     /// Prefix-index flushes forced by admission pressure.
     pub prefix_flushes: u64,
 
@@ -81,11 +90,22 @@ impl Metrics {
         self.prefix_hit_tokens as f64 / self.prompt_tokens as f64
     }
 
+    /// Dequantization CPU-seconds per wall second (0 for f32). Summed
+    /// across concurrent workers, so values above 1 mean more than one
+    /// core's worth of dequantization on average.
+    pub fn dequant_overhead(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.kv_dequant_seconds / self.wall_seconds
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests: {}/{} done | tokens: {} | rounds: {} | wall: {:.2}s\n\
              throughput: {:.1} tok/s | latency p50/p99: {:.3}/{:.3}s | ttft p50: {:.3}s\n\
-             kv: {}/{} pages peak ({:.0}% util) | prefix hit-rate: {:.0}% ({} hits) | \
+             kv: {}/{} pages peak ({:.0}% util) | {} B/token | dequant: {:.3} cpu-s\n\
+             prefix hit-rate: {:.0}% ({} hits) | \
              peak active: {} | context-limit finishes: {}",
             self.requests_done,
             self.requests_in,
@@ -99,6 +119,8 @@ impl Metrics {
             self.kv_pages_peak,
             self.kv_pages_total,
             100.0 * self.block_utilization(),
+            self.kv_bytes_per_token,
+            self.kv_dequant_seconds,
             100.0 * self.prefix_hit_rate(),
             self.prefix_hits,
             self.peak_active,
@@ -146,5 +168,23 @@ mod tests {
         let z = Metrics::default();
         assert_eq!(z.block_utilization(), 0.0);
         assert_eq!(z.prefix_hit_rate(), 0.0);
+        assert_eq!(z.dequant_overhead(), 0.0);
+    }
+
+    #[test]
+    fn dequant_overhead_math_and_report_gauges() {
+        let m = Metrics {
+            wall_seconds: 2.0,
+            kv_dequant_seconds: 0.5,
+            kv_bytes_per_token: 516,
+            ..Default::default()
+        };
+        assert_eq!(m.dequant_overhead(), 0.25);
+        let r = m.report();
+        assert!(r.contains("516 B/token"), "{r}");
+        assert!(r.contains("dequant: 0.500 cpu-s"), "{r}");
+        // Summed across workers: more dequant CPU than wall is legal.
+        let busy = Metrics { wall_seconds: 1.0, kv_dequant_seconds: 3.0, ..Default::default() };
+        assert_eq!(busy.dequant_overhead(), 3.0);
     }
 }

@@ -4,8 +4,12 @@
 //! small sampler keeps greedy as the default (temperature 0 — every
 //! determinism and parity test rides on it) while letting traces
 //! exercise non-greedy workloads: temperature softmax over an optional
-//! top-k cut, drawn from a per-request PCG stream so completions are
-//! reproducible per request id regardless of batching order.
+//! top-k cut and/or top-p (nucleus) cut, with a CTRL-style repetition
+//! penalty over the tokens a request has already seen (prompt +
+//! generated), all drawn from a per-request PCG stream so completions
+//! are reproducible per request id regardless of batching order.
+
+use std::collections::HashSet;
 
 use crate::engine::argmax;
 use crate::util::Pcg64;
@@ -19,17 +23,27 @@ pub struct SamplerConfig {
     /// Keep only the `top_k` highest logits before sampling; `0` = full
     /// vocabulary.
     pub top_k: usize,
+    /// Nucleus sampling: keep the smallest logit-descending prefix whose
+    /// probability mass reaches `top_p`; `≥ 1` (or `≤ 0`) = off.
+    pub top_p: f32,
+    /// CTRL-style repetition penalty over already-seen tokens (prompt +
+    /// generated): positive logits divided by, negative multiplied by the
+    /// penalty. `1` = off. Applies before the greedy/top-k/top-p cut, so
+    /// it also steers temperature-0 decoding.
+    pub repetition_penalty: f32,
     /// Base seed; request `r` samples from `Pcg64::new(seed, r)`.
     pub seed: u64,
 }
 
 impl Default for SamplerConfig {
     fn default() -> Self {
-        Self { temperature: 0.0, top_k: 0, seed: 0 }
+        Self { temperature: 0.0, top_k: 0, top_p: 1.0, repetition_penalty: 1.0, seed: 0 }
     }
 }
 
 impl SamplerConfig {
+    /// No randomness involved (the repetition penalty is deterministic,
+    /// so a penalized temperature-0 stream is still greedy).
     pub fn is_greedy(&self) -> bool {
         self.temperature <= 0.0 || self.top_k == 1
     }
@@ -39,6 +53,11 @@ impl SamplerConfig {
 pub struct Sampler {
     temperature: f32,
     top_k: usize,
+    top_p: f32,
+    repetition_penalty: f32,
+    /// Tokens this request has seen (prompt + generated); the penalty's
+    /// support set. Unused (empty) when the penalty is off.
+    seen: HashSet<u32>,
     rng: Pcg64,
 }
 
@@ -46,11 +65,58 @@ impl Sampler {
     /// Sampler for one request: an independent, reproducible PCG stream.
     pub fn for_request(cfg: &SamplerConfig, request_id: u64) -> Self {
         let rng = Pcg64::new(cfg.seed, request_id);
-        Self { temperature: cfg.temperature, top_k: cfg.top_k, rng }
+        // Penalty must be a positive finite factor: 0 would turn a
+        // penalized positive logit into +inf (the repeat wins forever)
+        // and NaN poisons the softmax. Anything unusable degrades to off.
+        let rp = cfg.repetition_penalty;
+        let repetition_penalty = if rp.is_finite() && rp > 0.0 { rp } else { 1.0 };
+        Self {
+            temperature: cfg.temperature,
+            top_k: cfg.top_k,
+            top_p: cfg.top_p,
+            repetition_penalty,
+            seen: HashSet::new(),
+            rng,
+        }
+    }
+
+    /// Record a token as part of this request's context (the server feeds
+    /// prompt tokens at admission; sampled tokens are recorded
+    /// automatically by [`Sampler::sample`]). No-op when the penalty is
+    /// off, so greedy parity paths never touch the set.
+    pub fn observe(&mut self, token: u32) {
+        if self.repetition_penalty != 1.0 {
+            self.seen.insert(token);
+        }
     }
 
     /// Draw the next token id from `logits`.
     pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        let tok = self.pick(logits);
+        self.observe(tok);
+        tok
+    }
+
+    fn pick(&mut self, logits: &[f32]) -> u32 {
+        // Repetition penalty first: it reshapes the distribution every
+        // later stage (greedy cut included) sees.
+        let penalized: Option<Vec<f32>> = if self.repetition_penalty != 1.0 && !self.seen.is_empty()
+        {
+            let mut l = logits.to_vec();
+            for &t in &self.seen {
+                let x = &mut l[t as usize];
+                if *x > 0.0 {
+                    *x /= self.repetition_penalty;
+                } else {
+                    *x *= self.repetition_penalty;
+                }
+            }
+            Some(l)
+        } else {
+            None
+        };
+        let logits = penalized.as_deref().unwrap_or(logits);
+
         if self.temperature <= 0.0 || self.top_k == 1 {
             return argmax(logits) as u32;
         }
@@ -58,23 +124,44 @@ impl Sampler {
         // total order (logit desc, index asc) makes both the partition
         // and the final candidate sequence uniquely defined, so draws
         // stay reproducible across std versions.
+        let by_logit_desc = |&a: &usize, &b: &usize| {
+            logits[b]
+                .partial_cmp(&logits[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        };
         let mut idx: Vec<usize> = (0..logits.len()).collect();
         if self.top_k > 0 && self.top_k < logits.len() {
-            let by_logit_desc = |&a: &usize, &b: &usize| {
-                logits[b]
-                    .partial_cmp(&logits[a])
-                    .unwrap_or(std::cmp::Ordering::Equal)
-                    .then(a.cmp(&b))
-            };
             idx.select_nth_unstable_by(self.top_k - 1, by_logit_desc);
             idx.truncate(self.top_k);
-            idx.sort_unstable_by(by_logit_desc);
         }
         // Temperature softmax over candidates (max-subtracted for
-        // stability), then one categorical draw.
+        // stability).
+        let nucleus = self.top_p > 0.0 && self.top_p < 1.0;
+        if nucleus || self.top_k > 0 {
+            // Nucleus truncation needs descending order; the top-k path
+            // sorts anyway to keep the candidate sequence well-defined.
+            idx.sort_unstable_by(by_logit_desc);
+        }
         let max = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
-        let weights: Vec<f32> =
+        let mut weights: Vec<f32> =
             idx.iter().map(|&i| ((logits[i] - max) / self.temperature).exp()).collect();
+        if nucleus {
+            // Keep the smallest descending prefix reaching `top_p` mass
+            // (always ≥ 1 candidate).
+            let total: f32 = weights.iter().sum();
+            let mut cum = 0.0f32;
+            let mut keep = weights.len();
+            for (j, w) in weights.iter().enumerate() {
+                cum += w / total;
+                if cum >= self.top_p {
+                    keep = j + 1;
+                    break;
+                }
+            }
+            idx.truncate(keep);
+            weights.truncate(keep);
+        }
         idx[self.rng.categorical(&weights)] as u32
     }
 }
@@ -95,7 +182,7 @@ mod tests {
     #[test]
     fn top_k_one_is_greedy_at_any_temperature() {
         let logits = vec![0.1, 2.0, -1.0, 1.9];
-        let cfg = SamplerConfig { temperature: 5.0, top_k: 1, seed: 9 };
+        let cfg = SamplerConfig { temperature: 5.0, top_k: 1, seed: 9, ..Default::default() };
         let mut s = Sampler::for_request(&cfg, 0);
         assert!(cfg.is_greedy());
         for _ in 0..8 {
@@ -106,7 +193,7 @@ mod tests {
     #[test]
     fn top_k_restricts_support() {
         let logits = vec![0.0, 5.0, 4.0, -3.0];
-        let cfg = SamplerConfig { temperature: 2.0, top_k: 2, seed: 1 };
+        let cfg = SamplerConfig { temperature: 2.0, top_k: 2, seed: 1, ..Default::default() };
         let mut s = Sampler::for_request(&cfg, 0);
         for _ in 0..200 {
             let t = s.sample(&logits);
@@ -115,9 +202,102 @@ mod tests {
     }
 
     #[test]
+    fn top_p_restricts_support_to_the_nucleus() {
+        // Probabilities at temperature 1 ≈ [0.64, 0.24, 0.09, 0.03]:
+        // top_p = 0.6 keeps {0}, 0.95 keeps {0, 1, 2}.
+        let logits = vec![3.0, 2.0, 1.0, 0.0];
+        let cfg = SamplerConfig { temperature: 1.0, top_p: 0.6, seed: 2, ..Default::default() };
+        let mut s = Sampler::for_request(&cfg, 0);
+        for _ in 0..100 {
+            assert_eq!(s.sample(&logits), 0, "0.6 nucleus is the single top token");
+        }
+        let cfg = SamplerConfig { temperature: 1.0, top_p: 0.95, seed: 2, ..Default::default() };
+        let mut s = Sampler::for_request(&cfg, 0);
+        let mut seen = [false; 4];
+        for _ in 0..500 {
+            seen[s.sample(&logits) as usize] = true;
+        }
+        assert!(!seen[3], "tail token outside the 0.95 nucleus");
+        assert!(seen[0] && seen[1], "nucleus tokens reachable");
+    }
+
+    #[test]
+    fn top_p_composes_with_top_k() {
+        let logits = vec![3.0, 2.9, 2.8, 2.7, -10.0];
+        let cfg = SamplerConfig {
+            temperature: 1.0,
+            top_k: 3,
+            top_p: 0.99,
+            seed: 4,
+            ..Default::default()
+        };
+        let mut s = Sampler::for_request(&cfg, 0);
+        for _ in 0..300 {
+            let t = s.sample(&logits);
+            assert!(t <= 2, "outside top-k∩nucleus: {t}");
+        }
+    }
+
+    #[test]
+    fn repetition_penalty_steers_greedy_off_repeats() {
+        // Deterministic (temperature 0) walk: each drawn token is
+        // penalized, handing the argmax to the next-best fresh token.
+        let logits = vec![1.0, 2.0, 1.5, 0.5];
+        let cfg = SamplerConfig { repetition_penalty: 3.0, ..Default::default() };
+        let mut s = Sampler::for_request(&cfg, 0);
+        assert_eq!(s.sample(&logits), 1);
+        assert_eq!(s.sample(&logits), 2, "penalized repeat loses the argmax");
+        assert_eq!(s.sample(&logits), 0, "next repeat penalized too");
+        assert_eq!(s.sample(&logits), 1, "all penalized: best of the penalized set");
+    }
+
+    #[test]
+    fn degenerate_repetition_penalty_degrades_to_off() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        for bad in [0.0f32, -3.0, f32::NAN, f32::INFINITY] {
+            let cfg = SamplerConfig { repetition_penalty: bad, ..Default::default() };
+            let mut s = Sampler::for_request(&cfg, 0);
+            for _ in 0..3 {
+                assert_eq!(s.sample(&logits), 1, "penalty {bad} must not corrupt sampling");
+            }
+        }
+    }
+
+    #[test]
+    fn repetition_penalty_multiplies_negative_logits() {
+        // All-negative logits: a penalized negative must be *multiplied*
+        // (pushed further down). Wrongly dividing would leave token 1 on
+        // top forever.
+        let logits = vec![-0.1, -0.05, -0.2];
+        let cfg = SamplerConfig { repetition_penalty: 4.0, ..Default::default() };
+        let mut s = Sampler::for_request(&cfg, 0);
+        assert_eq!(s.sample(&logits), 1);
+        assert_eq!(s.sample(&logits), 0, "-0.05·4 = -0.2 drops below -0.1");
+    }
+
+    #[test]
+    fn repetition_penalty_counts_prompt_tokens() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let cfg = SamplerConfig { repetition_penalty: 2.0, ..Default::default() };
+        let mut s = Sampler::for_request(&cfg, 0);
+        s.observe(1); // prompt contained the dominant token
+        assert_eq!(s.sample(&logits), 3, "prompt repeat already penalized");
+    }
+
+    #[test]
+    fn penalty_off_is_exactly_argmax_even_after_observe() {
+        let logits = vec![0.1, 2.0, -1.0, 1.9];
+        let mut s = Sampler::for_request(&SamplerConfig::default(), 0);
+        s.observe(1);
+        for _ in 0..4 {
+            assert_eq!(s.sample(&logits), 1, "penalty 1.0 must not alter greedy");
+        }
+    }
+
+    #[test]
     fn per_request_streams_are_reproducible_and_distinct() {
         let logits: Vec<f32> = (0..16).map(|i| (i % 5) as f32 * 0.3).collect();
-        let cfg = SamplerConfig { temperature: 1.0, top_k: 0, seed: 7 };
+        let cfg = SamplerConfig { temperature: 1.0, top_k: 0, seed: 7, ..Default::default() };
         let draw = |rid: u64| {
             let mut s = Sampler::for_request(&cfg, rid);
             (0..32).map(|_| s.sample(&logits)).collect::<Vec<u32>>()
@@ -129,7 +309,7 @@ mod tests {
     #[test]
     fn high_temperature_spreads_mass() {
         let logits = vec![1.0, 1.1, 0.9, 1.05];
-        let cfg = SamplerConfig { temperature: 10.0, top_k: 0, seed: 3 };
+        let cfg = SamplerConfig { temperature: 10.0, top_k: 0, seed: 3, ..Default::default() };
         let mut s = Sampler::for_request(&cfg, 0);
         let mut seen = [false; 4];
         for _ in 0..500 {

@@ -15,7 +15,11 @@
 //! is counted in free pages (so short requests no longer reserve
 //! worst-case contiguous caches), and a prompt whose prefix was already
 //! served reuses the frozen KV pages of that prefix — prefill for the
-//! shared span is skipped entirely. Because batched and single-row
+//! shared span is skipped entirely. The arena's storage dtype is the
+//! `kv_dtype` policy: f32 pages are the bit-for-bit parity baseline,
+//! int8 pages (per-page-per-head scales, `PageStore`) hold the same
+//! byte budget in ~4× the pages, so quantization buys admission
+//! concurrency as well as footprint. Because batched and single-row
 //! kernels are bit-for-bit identical and shared KV rows are a
 //! deterministic function of the token prefix, a request's tokens do not
 //! depend on which sequences share its rounds, on paging, or on prefix
@@ -28,7 +32,7 @@ use super::{
     Batcher, BatcherConfig, Completion, FinishReason, Metrics, PagedKv, Request, Sampler,
     SamplerConfig,
 };
-use crate::cache::{BlockTable, KvBatch};
+use crate::cache::{BlockTable, KvBatch, KvDtype};
 use crate::engine::TernaryModel;
 use crate::util::{Pcg64, ThreadPool};
 
@@ -36,14 +40,19 @@ use crate::util::{Pcg64, ThreadPool};
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
     pub batcher: BatcherConfig,
-    /// KV byte budget in whole-cache equivalents (the seed's knob): the
-    /// paged arena gets `kv_capacity × ceil(seq_len / page_size)` pages —
-    /// the same bytes the old pool of `kv_capacity` contiguous caches
-    /// held, now admissible at page granularity.
+    /// KV byte budget in f32 whole-cache equivalents (the seed's knob):
+    /// the paged arena gets however many `page_size` pages *at
+    /// `kv_dtype`* fit in the bytes `kv_capacity` contiguous f32 caches
+    /// held — so int8 pools admit more sequences at the same budget.
     pub kv_capacity: usize,
     /// Positions per KV page.
     pub page_size: usize,
+    /// KV page storage dtype (f32 parity baseline / int8 quantized).
+    pub kv_dtype: KvDtype,
     /// Reuse frozen KV pages across requests sharing a prompt prefix.
+    /// Requires f32 pages — forced off for quantized `kv_dtype` (an int8
+    /// page's scale depends on donor rows past the shared span, so reuse
+    /// would make completions serving-order dependent; see `PagedKv`).
     pub prefix_sharing: bool,
     /// Decode sampling policy (greedy by default).
     pub sampler: SamplerConfig,
@@ -56,6 +65,7 @@ impl Default for ServerConfig {
             batcher: BatcherConfig::default(),
             kv_capacity: 8,
             page_size: 16,
+            kv_dtype: KvDtype::F32,
             prefix_sharing: true,
             sampler: SamplerConfig::default(),
             workers: ThreadPool::default_size(),
@@ -135,13 +145,18 @@ impl<'m> Server<'m> {
         let seq_cap = self.model.cfg.seq_len;
 
         let mut batcher = Batcher::new(self.cfg.batcher);
-        let num_pages =
-            self.cfg.kv_capacity.max(1) * seq_cap.div_ceil(self.cfg.page_size.max(1));
+        let num_pages = PagedKv::pages_for_budget(
+            &self.model.cfg,
+            self.cfg.kv_capacity,
+            self.cfg.page_size,
+            self.cfg.kv_dtype,
+        );
         let mut kv = PagedKv::new(
             &self.model.cfg,
             num_pages,
             self.cfg.page_size,
             self.cfg.prefix_sharing,
+            self.cfg.kv_dtype,
         );
         let mut metrics = Metrics { requests_in: trace.len() as u64, ..Default::default() };
         let mut completions = Vec::new();
@@ -183,9 +198,11 @@ impl<'m> Server<'m> {
                 && batcher.waiting_len() > 0
                 && kv.index_pages() > 0
             {
-                // Frozen prefix pages are starving admission: flush the
-                // index (crude eviction; LRU per node is a ROADMAP item)
-                // and retry so the queue head cannot deadlock.
+                // Frozen prefix pages are starving admission: evict the
+                // index's zero-lease nodes (with the active set empty
+                // every frozen page qualifies; LRU ordering over the
+                // unreferenced set is a ROADMAP item) and retry so the
+                // queue head cannot deadlock.
                 metrics.prefix_flushes += 1;
                 kv.flush_index();
                 batcher.admit_pages(kv.free_pages(), |r| kv.page_need(r));
@@ -200,8 +217,14 @@ impl<'m> Server<'m> {
                 if shared > 0 {
                     metrics.prefix_hits += 1;
                 }
+                let mut sampler = Sampler::for_request(&self.cfg.sampler, req.id);
+                for &t in &req.prompt {
+                    // Repetition-penalty support set spans the prompt too
+                    // (no-op when the penalty is off).
+                    sampler.observe(t);
+                }
                 states.push(SeqState {
-                    sampler: Sampler::for_request(&self.cfg.sampler, req.id),
+                    sampler,
                     page_need: kv.pages_for(req, shared),
                     last_token: 0,
                     prompt_done: req.prompt.is_empty(),
@@ -366,6 +389,8 @@ impl<'m> Server<'m> {
         metrics.kv_pages_index = kv.index_pages() as u64;
         metrics.kv_pages_end_in_use = kv.used_pages() as u64;
         metrics.kv_bytes = kv.bytes() as u64;
+        metrics.kv_bytes_per_token = kv.bytes_per_token() as u64;
+        metrics.kv_dequant_seconds = kv.dequant_nanos() as f64 * 1e-9;
         (completions, metrics)
     }
 }
@@ -581,6 +606,83 @@ mod tests {
             let mut cache = KvCache::new(&m.cfg);
             let expect = m.generate(&req.prompt, req.max_new_tokens, &mut cache, &mut scratch);
             assert_eq!(expect, comp.tokens, "request {}", req.id);
+        }
+    }
+
+    #[test]
+    fn int8_kv_serves_all_requests_and_halves_bytes_per_token() {
+        let m = model();
+        let base = ServerConfig {
+            batcher: BatcherConfig { max_active: 4, token_budget: 100_000 },
+            kv_capacity: 2,
+            page_size: 16,
+            workers: 2,
+            ..Default::default()
+        };
+        let s = spec(6, 4, 5, 3);
+        let (c_f32, m_f32) = serve_trace(&m, ServerConfig { kv_dtype: KvDtype::F32, ..base }, s);
+        let (c_i8, m_i8) = serve_trace(&m, ServerConfig { kv_dtype: KvDtype::Int8, ..base }, s);
+        assert_eq!(c_f32.len(), 6);
+        assert_eq!(c_i8.len(), 6);
+        // Same byte budget, but int8 reports ≤ half the per-token bytes
+        // and at least double the pages (the acceptance gauge).
+        assert!(m_i8.kv_bytes <= m_f32.kv_bytes);
+        assert!(
+            m_i8.kv_bytes_per_token * 2 <= m_f32.kv_bytes_per_token,
+            "{} vs {}",
+            m_i8.kv_bytes_per_token,
+            m_f32.kv_bytes_per_token
+        );
+        assert!(m_i8.kv_pages_total >= 2 * m_f32.kv_pages_total);
+        // Dequant gauge moves only for the quantized pool.
+        assert_eq!(m_f32.kv_dequant_seconds, 0.0);
+        assert!(m_i8.kv_dequant_seconds > 0.0);
+        // Every request still runs to its full allowance.
+        for c in c_i8.iter().chain(&c_f32) {
+            assert_eq!(c.tokens.len(), 5);
+            assert_eq!(c.finish, super::FinishReason::Length);
+        }
+    }
+
+    #[test]
+    fn int8_kv_is_deterministic_per_trace() {
+        let m = model();
+        let cfg = ServerConfig { kv_dtype: KvDtype::Int8, ..Default::default() };
+        let s = spec(4, 3, 6, 19);
+        let (mut c1, _) = serve_trace(&m, cfg, s);
+        let (mut c2, _) = serve_trace(&m, cfg, s);
+        c1.sort_by_key(|c| c.id);
+        c2.sort_by_key(|c| c.id);
+        for (a, b) in c1.iter().zip(&c2) {
+            assert_eq!(a.tokens, b.tokens, "int8 decode must replay identically");
+        }
+    }
+
+    #[test]
+    fn sampling_knobs_serve_end_to_end() {
+        // top-p + repetition penalty through the whole serving stack:
+        // everything completes, and the per-request streams stay
+        // reproducible across runs.
+        let m = model();
+        let cfg = ServerConfig {
+            sampler: SamplerConfig {
+                temperature: 0.8,
+                top_k: 0,
+                top_p: 0.9,
+                repetition_penalty: 1.3,
+                seed: 5,
+            },
+            ..Default::default()
+        };
+        let s = spec(5, 4, 8, 23);
+        let (mut c1, _) = serve_trace(&m, cfg, s);
+        let (mut c2, _) = serve_trace(&m, cfg, s);
+        assert_eq!(c1.len(), 5);
+        c1.sort_by_key(|c| c.id);
+        c2.sort_by_key(|c| c.id);
+        for (a, b) in c1.iter().zip(&c2) {
+            assert_eq!(a.tokens.len(), 8);
+            assert_eq!(a.tokens, b.tokens, "sampled streams replay per request id");
         }
     }
 

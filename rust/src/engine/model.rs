@@ -14,7 +14,7 @@ use super::linear::QuantLinear;
 use crate::cache::{KvBatch, Rows};
 use crate::pack::Format;
 use crate::tensor::{ops, Mat};
-use crate::util::{Pcg64, ThreadPool};
+use crate::util::{BufferPool, Pcg64, ThreadPool};
 
 /// Architecture hyper-parameters (keep in sync with
 /// `python/compile/model.py::CONFIGS`).
@@ -142,6 +142,9 @@ pub struct TernaryModel {
     layers: Vec<Layer>,
     norm_out: Vec<f32>,
     lm_head: QuantLinear,
+    /// Leased scratch tiles for the page-blocked attention walk (score
+    /// rows + dequantized KV blocks), reused across decode rounds.
+    tiles: BufferPool,
 }
 
 impl TernaryModel {
@@ -172,6 +175,7 @@ impl TernaryModel {
             layers,
             norm_out: get("norm_out").data.clone(),
             lm_head: QuantLinear::from_float(get("lm_head"), Format::Dense),
+            tiles: BufferPool::new(),
         }
     }
 
@@ -318,13 +322,19 @@ impl TernaryModel {
             }
             // Per-sequence attention over each sequence's own KV history —
             // independent across sequences, so it fans out on the pool
-            // alongside the fused linears (per-row math is identical to
-            // the serial path, preserving bit-for-bit parity). Rows are
-            // resolved through the storage view: a slice offset for
-            // contiguous caches, a page lookup for the paged arena.
+            // alongside the fused linears. The walk is page-blocked: each
+            // resident page is materialized once (borrowed for f32,
+            // dequantized into a leased scratch tile for quantized
+            // stores), then every query·key dot product and value
+            // accumulation over that page runs from the tile — the same
+            // amortization gemm_nt applies to weight planes. Per-element
+            // float ops and their order are identical to the old
+            // position-at-a-time walk, preserving bit-for-bit parity for
+            // f32 storage.
             {
                 let kv_ro: &KvBatch = kv;
                 let n_heads = cfg.n_heads;
+                let tiles = &self.tiles;
                 match pool {
                     Some(pool) if b > 1 => pool.scope(|s| {
                         for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
@@ -333,17 +343,31 @@ impl TernaryModel {
                             let q_row = &q[bi * d..(bi + 1) * d];
                             let t = pos[bi] + 1;
                             s.spawn(move || {
-                                attention_row(q_row, kl, vl, t, hd, n_heads, scale, out_row);
+                                let mut scores = tiles.lease();
+                                let mut tile = tiles.lease();
+                                attention_blocked(
+                                    q_row, kl, vl, t, hd, n_heads, scale, &mut scores,
+                                    &mut tile, out_row,
+                                );
+                                tiles.give(tile);
+                                tiles.give(scores);
                             });
                         }
                     }),
                     _ => {
+                        let mut scores = tiles.lease();
+                        let mut tile = tiles.lease();
                         for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
                             let kl = kv_ro.k_rows(li, bi);
                             let vl = kv_ro.v_rows(li, bi);
                             let q_row = &q[bi * d..(bi + 1) * d];
-                            attention_row(q_row, kl, vl, pos[bi] + 1, hd, n_heads, scale, out_row);
+                            attention_blocked(
+                                q_row, kl, vl, pos[bi] + 1, hd, n_heads, scale, &mut scores,
+                                &mut tile, out_row,
+                            );
                         }
+                        tiles.give(tile);
+                        tiles.give(scores);
                     }
                 }
             }
@@ -400,14 +424,21 @@ impl TernaryModel {
     }
 }
 
-/// Causal attention for one sequence at its current decode position:
-/// scores over `t` cached timesteps, softmax, weighted-V accumulation —
-/// per head, writing the `d_model`-wide output row. One shared body for
+/// Page-blocked causal attention for one sequence at its current decode
+/// position, writing the `d_model`-wide output row. One shared body for
 /// the serial and pool-fanned paths of [`TernaryModel::forward_kv`].
-/// K/V rows arrive through [`Rows`], so contiguous and paged storage
-/// accumulate in the same order — bit-for-bit.
+///
+/// Three passes over `t` cached timesteps, each walking the history as
+/// page blocks ([`Rows::for_each_block`]): (1) every head's query·key
+/// dot products into `scores` (`n_heads × t`), (2) per-head softmax,
+/// (3) weighted-V accumulation. A page is materialized at most once per
+/// pass — borrowed for f32 storage, dequantized once into `tile` for
+/// quantized storage — instead of being re-resolved per position. Blocks
+/// arrive in ascending position order and every per-element float op
+/// matches the old position-at-a-time walk, so f32 storage (paged or
+/// contiguous) is bit-for-bit identical to the pre-blocked kernel.
 #[allow(clippy::too_many_arguments)]
-fn attention_row(
+fn attention_blocked(
     q_row: &[f32],
     kl: Rows<'_>,
     vl: Rows<'_>,
@@ -415,25 +446,41 @@ fn attention_row(
     hd: usize,
     n_heads: usize,
     scale: f32,
+    scores: &mut Vec<f32>,
+    tile: &mut Vec<f32>,
     out: &mut [f32],
 ) {
-    for hh in 0..n_heads {
-        let qh = &q_row[hh * hd..(hh + 1) * hd];
-        let mut att = vec![0.0f32; t];
-        for (s, a) in att.iter_mut().enumerate() {
-            let kh = &kl.row(s)[hh * hd..(hh + 1) * hd];
-            *a = qh.iter().zip(kh.iter()).map(|(x, y)| x * y).sum::<f32>() * scale;
-        }
-        ops::softmax_inplace(&mut att);
-        let o = &mut out[hh * hd..(hh + 1) * hd];
-        o.fill(0.0);
-        for (s, &a) in att.iter().enumerate() {
-            let vh = &vl.row(s)[hh * hd..(hh + 1) * hd];
-            for (oo, &vv) in o.iter_mut().zip(vh.iter()) {
-                *oo += a * vv;
+    let d = n_heads * hd;
+    scores.clear();
+    scores.resize(n_heads * t, 0.0);
+    kl.for_each_block(t, tile, |start, block, rows| {
+        for r in 0..rows {
+            let krow = &block[r * d..(r + 1) * d];
+            for hh in 0..n_heads {
+                let qh = &q_row[hh * hd..(hh + 1) * hd];
+                let kh = &krow[hh * hd..(hh + 1) * hd];
+                scores[hh * t + start + r] =
+                    qh.iter().zip(kh.iter()).map(|(x, y)| x * y).sum::<f32>() * scale;
             }
         }
+    });
+    for hh in 0..n_heads {
+        ops::softmax_inplace(&mut scores[hh * t..(hh + 1) * t]);
     }
+    out.fill(0.0);
+    vl.for_each_block(t, tile, |start, block, rows| {
+        for r in 0..rows {
+            let vrow = &block[r * d..(r + 1) * d];
+            for hh in 0..n_heads {
+                let a = scores[hh * t + start + r];
+                let o = &mut out[hh * hd..(hh + 1) * hd];
+                let vh = &vrow[hh * hd..(hh + 1) * hd];
+                for (oo, &vv) in o.iter_mut().zip(vh.iter()) {
+                    *oo += a * vv;
+                }
+            }
+        }
+    });
 }
 
 /// Index of the maximum logit (first on ties).

@@ -51,9 +51,12 @@ fn app() -> App {
                 .flag("tokens", "max new tokens per request", Some("24"))
                 .flag("active", "max concurrent sequences", Some("8"))
                 .flag("page-size", "KV page size (positions)", Some("16"))
+                .flag("kv-dtype", "KV page storage dtype (f32|int8)", Some("f32"))
                 .flag("prefix-sharing", "reuse frozen prefix KV pages (0|1)", Some("1"))
                 .flag("temperature", "sampling temperature (0 = greedy)", Some("0"))
-                .flag("top-k", "sample from top-k logits (0 = full vocab)", Some("0")),
+                .flag("top-k", "sample from top-k logits (0 = full vocab)", Some("0"))
+                .flag("top-p", "nucleus sampling mass (1 = off)", Some("1"))
+                .flag("rep-penalty", "repetition penalty (1 = off)", Some("1")),
         )
         .command(
             Command::new("generate", "greedy generation from a checkpoint")
@@ -166,14 +169,22 @@ fn main() -> Result<()> {
                 model.bytes() as f64 / 1e6
             );
             let active = args.usize_or("active", 8);
+            let kv_dtype = {
+                let s = args.str_or("kv-dtype", "f32");
+                sherry::cache::KvDtype::parse(&s)
+                    .with_context(|| format!("unknown kv dtype {s:?} (f32|int8)"))?
+            };
             let server_cfg = ServerConfig {
                 batcher: BatcherConfig { max_active: active, ..Default::default() },
                 kv_capacity: active,
                 page_size: args.usize_or("page-size", 16),
+                kv_dtype,
                 prefix_sharing: args.usize_or("prefix-sharing", 1) != 0,
                 sampler: SamplerConfig {
                     temperature: args.f64_or("temperature", 0.0) as f32,
                     top_k: args.usize_or("top-k", 0),
+                    top_p: args.f64_or("top-p", 1.0) as f32,
+                    repetition_penalty: args.f64_or("rep-penalty", 1.0) as f32,
                     ..Default::default()
                 },
                 ..Default::default()

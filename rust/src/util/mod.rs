@@ -10,5 +10,5 @@ pub mod rng;
 pub mod stats;
 pub mod timer;
 
-pub use pool::ThreadPool;
+pub use pool::{BufferPool, ThreadPool};
 pub use rng::Pcg64;

@@ -128,6 +128,39 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Shared lending pool of f32 scratch buffers: attention workers lease a
+/// tile (score rows, dequantized KV page blocks), use it, and return it,
+/// so steady-state decode reuses the same allocations across rounds
+/// instead of re-allocating one tile per job. Capacity converges to the
+/// peak number of concurrent leases; buffers keep their grown capacity.
+#[derive(Default)]
+pub struct BufferPool {
+    bufs: Mutex<Vec<Vec<f32>>>,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a buffer (empty, but with whatever capacity it grew to on a
+    /// previous lease).
+    pub fn lease(&self) -> Vec<f32> {
+        self.bufs.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a leased buffer for reuse.
+    pub fn give(&self, mut buf: Vec<f32>) {
+        buf.clear();
+        self.bufs.lock().unwrap().push(buf);
+    }
+
+    /// Buffers currently parked in the pool (tests / diagnostics).
+    pub fn parked(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
 /// Handle for submitting borrowed jobs inside [`ThreadPool::scope`].
 pub struct Scope<'env, 'pool> {
     pool: &'pool ThreadPool,
@@ -218,5 +251,36 @@ mod tests {
     fn par_for_empty_ok() {
         let pool = ThreadPool::new(2);
         pool.par_for(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn buffer_pool_reuses_capacity() {
+        let bp = BufferPool::new();
+        let mut a = bp.lease();
+        a.resize(1024, 1.0);
+        let cap = a.capacity();
+        bp.give(a);
+        assert_eq!(bp.parked(), 1);
+        let b = bp.lease();
+        assert!(b.is_empty(), "returned buffers come back cleared");
+        assert!(b.capacity() >= cap, "capacity survives the round trip");
+        assert_eq!(bp.parked(), 0);
+    }
+
+    #[test]
+    fn buffer_pool_shared_across_threads() {
+        let bp = BufferPool::new();
+        let pool = ThreadPool::new(4);
+        pool.scope(|s| {
+            for _ in 0..16 {
+                let bp = &bp;
+                s.spawn(move || {
+                    let mut t = bp.lease();
+                    t.resize(64, 0.5);
+                    bp.give(t);
+                });
+            }
+        });
+        assert!(bp.parked() >= 1 && bp.parked() <= 16);
     }
 }
