@@ -13,6 +13,10 @@
 //! 3. KV-dtype sweep: f32-vs-int8 × contiguous-vs-paged at one fixed
 //!    byte budget — tokens/s, peak KV bytes, bytes/token and dequant
 //!    overhead. Emitted to `BENCH_kv_quant.json`.
+//! 4. Int8-native attention sweep: int8 shared-prefix serving ×
+//!    prefix-sharing × tile-cache on/off vs the f32 sharing baseline —
+//!    tokens/s, int8 q·k dot fraction, tile-cache hit rate, prefix hit
+//!    rate and dequant overhead. Emitted to `BENCH_int8_attn.json`.
 //!
 //! Run: `cargo bench --bench serve_throughput`
 
@@ -63,6 +67,7 @@ fn main() {
 
     paged_sweep(&model, single);
     kv_quant_sweep(&model);
+    int8_attn_sweep(&model);
 }
 
 /// Paged vs contiguous-equivalent KV at a fixed byte budget, with and
@@ -226,6 +231,94 @@ fn kv_quant_sweep(model: &TernaryModel) {
         records.join(",\n")
     );
     let path = "BENCH_kv_quant.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}
+
+/// Int8-native attention on a shared-system-prompt trace: the score pass
+/// runs i32 q·k dots over raw page bytes (no K dequant), and the V pass
+/// serves registration-frozen prefix pages from the tile-cache LRU.
+/// Sweeps int8 × prefix-sharing × tile-cache against the f32 sharing
+/// baseline at the same byte budget; tokens are invariant across every
+/// cell's sharing/cache knobs by construction (asserted in tests), so
+/// the sweep isolates the speed/footprint trade.
+fn int8_attn_sweep(model: &TernaryModel) {
+    let kv_capacity = 4usize;
+    let spec = TraceSpec {
+        n_requests: 24,
+        mean_interarrival_s: 0.0005,
+        prompt_len: 18,
+        shared_prefix_len: 12,
+        max_new_tokens: 16,
+        seed: 12,
+    };
+
+    println!("\n### Int8-native attention × prefix sharing × tile cache (shared prompt)\n");
+    println!(
+        "| kv dtype | sharing | tile cache | tok/s | int8 q·k | tile hits | prefix hit-rate | dequant cpu-s/wall-s |"
+    );
+    println!("|---|---|---|---|---|---|---|---|");
+    let mut records = Vec::new();
+    for (dtype, sharing, tiles) in [
+        (KvDtype::F32, true, 0usize),
+        (KvDtype::Int8, false, 0),
+        (KvDtype::Int8, true, 0),
+        (KvDtype::Int8, true, 64),
+    ] {
+        let server_cfg = ServerConfig {
+            batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+            kv_capacity,
+            page_size: 4,
+            kv_dtype: dtype,
+            prefix_sharing: sharing,
+            tile_cache_tiles: tiles,
+            workers: 8,
+            ..Default::default()
+        };
+        let (completions, m) = serve_trace(model, server_cfg, spec);
+        assert_eq!(completions.len(), spec.n_requests, "sweep must serve everything");
+        println!(
+            "| {} | {} | {} | {:.1} | {:.0}% | {:.0}% | {:.0}% | {:.3} |",
+            dtype.name(),
+            sharing,
+            tiles,
+            m.throughput_tps(),
+            100.0 * m.int8_dot_fraction(),
+            100.0 * m.tile_cache_hit_rate(),
+            100.0 * m.prefix_hit_rate(),
+            m.dequant_overhead(),
+        );
+        records.push(format!(
+            "    {{\"kv_dtype\": \"{}\", \"prefix_sharing\": {sharing}, \
+             \"tile_cache_tiles\": {tiles}, \"tok_per_s\": {:.3}, \
+             \"int8_dot_fraction\": {:.4}, \"tile_cache_hit_rate\": {:.4}, \
+             \"tile_hits\": {}, \"tile_misses\": {}, \"prefix_hit_rate\": {:.4}, \
+             \"dequant_seconds\": {:.6}, \"dequant_overhead\": {:.5}, \
+             \"peak_active\": {}, \"ttft_p50_s\": {:.5}}}",
+            dtype.name(),
+            m.throughput_tps(),
+            m.int8_dot_fraction(),
+            m.tile_cache_hit_rate(),
+            m.kv_tile_hits,
+            m.kv_tile_misses,
+            m.prefix_hit_rate(),
+            m.kv_dequant_seconds,
+            m.dequant_overhead(),
+            m.peak_active,
+            m.ttft_p50(),
+        ));
+    }
+    println!(
+        "\n(int8 rows dot natively — dequant now prices only the V pass; \
+         the tile cache amortizes shared-prefix V tiles across sequences)"
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"int8_attn\",\n  \"records\": [\n{}\n  ]\n}}\n",
+        records.join(",\n")
+    );
+    let path = "BENCH_int8_attn.json";
     match std::fs::write(path, &json) {
         Ok(()) => println!("[bench] wrote {path}"),
         Err(e) => eprintln!("[bench] could not write {path}: {e}"),

@@ -111,12 +111,15 @@ impl BlockAllocator {
         self.store.bytes_per_token()
     }
 
-    /// Take a free page with refcount 1, or `None` when the arena is full.
+    /// Take a free page with refcount 1, or `None` when the arena is
+    /// full. Pages on the free stack are already reset: stores start
+    /// zeroed and [`BlockAllocator::release`] resets eagerly on the last
+    /// reference drop, so no per-alloc store work happens here.
     pub fn alloc(&mut self) -> Option<PageId> {
         let p = self.free.pop()?;
         debug_assert_eq!(self.refs[p as usize], 0, "free page with live refs");
         self.refs[p as usize] = 1;
-        self.store.reset_page(p);
+        debug_assert!(!self.store.is_frozen(p), "free page still frozen");
         self.peak_used = self.peak_used.max(self.used_pages());
         Some(p)
     }
@@ -127,13 +130,34 @@ impl BlockAllocator {
         self.refs[p as usize] += 1;
     }
 
+    /// Freeze a live page's bytes and quantizer state (prefix-index
+    /// registration). The page must be *full* — every slot written — so
+    /// it can be materialized whole; it thaws the moment its last
+    /// reference is released ([`BlockAllocator::release`] resets the
+    /// page and drops its cached tiles eagerly).
+    pub fn freeze_page(&mut self, p: PageId) {
+        debug_assert!(self.refs[p as usize] > 0, "freeze of a free page");
+        self.store.freeze_page(p);
+    }
+
+    /// Resize the store's frozen-tile cache (0 disables); see
+    /// [`PageStore::set_tile_cache_capacity`].
+    pub fn set_tile_cache_capacity(&mut self, tiles: usize) {
+        self.store.set_tile_cache_capacity(tiles);
+    }
+
     /// Drop one reference; the page returns to the free stack at zero.
+    /// A freed page is reset immediately (thawed, quantizer state
+    /// cleared, cached tiles invalidated) rather than lazily at
+    /// reallocation, so a dead page's tiles never occupy the bounded
+    /// tile cache or pin memory while the page sits on the free stack.
     pub fn release(&mut self, p: PageId) {
         let r = &mut self.refs[p as usize];
         assert!(*r > 0, "double free of page {p}");
         *r -= 1;
         if *r == 0 {
             self.free.push(p);
+            self.store.reset_page(p);
         }
     }
 

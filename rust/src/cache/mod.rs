@@ -16,16 +16,33 @@
 //! * [`PageStore`] — the storage-dtype policy behind the arena:
 //!   [`F32Store`] (parity baseline, block reads borrow the plane) and
 //!   [`Int8Store`] (int8 pages + per-page-per-head f32 scales, quantized
-//!   at page-write time, dequantized per block into scratch tiles).
+//!   at page-write time). Quantized pages expose three read paths,
+//!   cheapest first: int8-native raw blocks ([`PageStore::block_i8`] —
+//!   the attention score pass dots them in i32 without dequantizing),
+//!   LRU-cached f32 tiles of registration-frozen pages
+//!   ([`PageStore::frozen_tile`]), and scratch dequantization
+//!   ([`PageStore::block`]) for private, still-growing pages.
 //! * [`KvBatch`] / [`Rows`] — the engine-facing view; attention walks
-//!   histories as page blocks ([`Rows::for_each_block`]), and contiguous
-//!   [`KvCache`](crate::engine::KvCache)s are the degenerate
+//!   histories as page blocks ([`Rows::for_each_block`] for f32 tiles,
+//!   [`Rows::for_each_kblock`] for dtype-native [`KBlock`]s), and
+//!   contiguous [`KvCache`](crate::engine::KvCache)s are the degenerate
 //!   single-block case of the same code path, preserving bit-for-bit
 //!   parity between paged and contiguous decode.
 //!
+//! Invariants (property-tested in `tests/paged_kv.rs`):
+//!
+//! * f32 pages through any walk are bit-for-bit the contiguous engine;
+//! * a page registered in the [`PrefixIndex`] is **frozen** — bytes and
+//!   quantizer scales immutable until freed — making shared-prefix reads
+//!   byte-exact and completions serving-order invariant (quantized
+//!   pools share whole frozen pages only; see `coordinator::PagedKv`);
+//! * refcounts return to zero after every trace, CoW never mutates a
+//!   shared page, and no slot is read before it is written.
+//!
 //! DESIGN.md §4 documents the page layout, the block-table indirection,
-//! the radix prefix lifecycle, the CoW rules, and the `PageStore` byte
-//! formats / accuracy bound.
+//! the radix prefix lifecycle, the CoW rules, the frozen-scale
+//! registration protocol, the int8 q·k error bound, and the tile-cache
+//! lifecycle.
 
 mod allocator;
 mod prefix;
@@ -35,6 +52,9 @@ mod view;
 
 pub use allocator::{BlockAllocator, PageId};
 pub use prefix::PrefixIndex;
-pub use store::{new_store, page_bytes, F32Store, Int8Store, KvDtype, PageStore, Plane};
+pub use store::{
+    new_store, page_bytes, F32Store, Int8Store, KvDtype, PageStore, Plane,
+    DEFAULT_TILE_CACHE_TILES,
+};
 pub use table::BlockTable;
-pub use view::{KvBatch, Rows};
+pub use view::{KBlock, KvBatch, Rows};

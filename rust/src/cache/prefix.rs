@@ -6,11 +6,26 @@
 //! its prompt: every fully matched chunk contributes a whole shared
 //! page; a partial match on the last chunk shares the page's live
 //! prefix (the recipient copy-on-writes at first divergence — see
-//! `super::table`). Because K/V rows are a deterministic function of the
+//! `super::table`; quantized pools restrict sharing to whole pages — see
+//! `PagedKv`). Because K/V rows are a deterministic function of the
 //! token prefix (causal attention, absolute-position RoPE, bit-for-bit
 //! batched kernels), reusing a registered page is exact, not
 //! approximate: prefill for the shared span is skipped with
 //! token-identical results.
+//!
+//! **Frozen-scale registration.** [`PrefixIndex::register`] does two
+//! things per newly inserted chunk: it takes one arena reference on the
+//! page, and it *freezes* the page through
+//! [`BlockAllocator::freeze_page`] — from that point the page's bytes
+//! and (for quantized stores) its per-head quantizer scales are
+//! immutable until the page is freed and reallocated. Registered chunks
+//! are always full pages, every slot written during the donor's
+//! prefill, and no later append can land inside them, so freezing
+//! asserts an invariant the write path already guarantees — and it is
+//! what makes a frozen page a byte-exact artifact: the store may cache
+//! its dequantized tile, and a recipient that shares it reads exactly
+//! the bytes its own prefill would have produced, independent of
+//! serving order (DESIGN.md §4).
 //!
 //! Generated tokens are never registered — only prompt pages freeze
 //! (the standard system-prompt sharing workload). Under admission
@@ -34,6 +49,39 @@ struct Node {
 }
 
 /// Refcounted radix index over registered prompt prefixes.
+///
+/// ```
+/// use sherry::cache::{BlockAllocator, BlockTable, PrefixIndex};
+/// use sherry::engine::NativeConfig;
+///
+/// let cfg = NativeConfig::named("nano").unwrap();
+/// let mut alloc = BlockAllocator::new(&cfg, /*num_pages=*/ 8, /*page_size=*/ 4);
+/// let mut index = PrefixIndex::new(4);
+///
+/// // A donor prefills a 6-token prompt, then registers it: only the
+/// // full 4-token chunk freezes (partial tail pages never register).
+/// let prompt: Vec<u32> = vec![10, 11, 12, 13, 20, 21];
+/// let mut donor = BlockTable::new(4);
+/// for _ in 0..prompt.len() {
+///     donor.prepare_append(&mut alloc);
+///     donor.advance();
+/// }
+/// index.register(&prompt, &donor, &mut alloc);
+/// assert_eq!(index.pages_held(), 1);
+///
+/// // A second request with the same prompt can reuse that chunk's page
+/// // (capped so at least one token is always fed to produce logits).
+/// let (pages, matched) = index.probe_pages(&prompt, prompt.len() - 1);
+/// assert_eq!(matched, 4);
+/// assert_eq!(pages, &donor.pages()[..1]);
+///
+/// // Retirement: the donor returns its references; the index's own
+/// // reference keeps the frozen page resident until eviction.
+/// donor.release_all(&mut alloc);
+/// assert_eq!(alloc.used_pages(), 1);
+/// assert_eq!(index.evict_unreferenced(&mut alloc), 1);
+/// assert_eq!(alloc.used_pages(), 0);
+/// ```
 pub struct PrefixIndex {
     page_size: usize,
     nodes: Vec<Node>,
@@ -99,11 +147,15 @@ impl PrefixIndex {
         self.probe_pages(prompt, cap).1
     }
 
-    /// Freeze the full-page chunks of `prompt` into the index, taking one
-    /// arena reference per newly inserted page. Chunks already present
-    /// are left untouched (identical tokens ⇒ identical KV rows, so the
-    /// existing page is as good as `table`'s). Call after prefill — every
-    /// prompt position must be resident in `table`.
+    /// Freeze the full-page chunks of `prompt` into the index: take one
+    /// arena reference per newly inserted page and freeze its bytes and
+    /// quantizer scales ([`BlockAllocator::freeze_page`]) so the page
+    /// becomes an immutable, byte-exact artifact for every future
+    /// recipient. Chunks already present are left untouched (identical
+    /// tokens ⇒ identical KV rows and — for quantized stores — an
+    /// identical quantization trajectory, so the existing page is
+    /// byte-equal to `table`'s). Call after prefill — every prompt
+    /// position must be resident in `table`.
     pub fn register(&mut self, prompt: &[u32], table: &BlockTable, alloc: &mut BlockAllocator) {
         let ps = self.page_size;
         debug_assert_eq!(ps, alloc.page_size());
@@ -118,6 +170,7 @@ impl PrefixIndex {
             }
             let page = table.pages()[i];
             alloc.retain(page);
+            alloc.freeze_page(page);
             let id = self.nodes.len();
             self.nodes.push(Node { children: Vec::new(), page });
             self.nodes[node].children.push((chunk.to_vec().into_boxed_slice(), id));

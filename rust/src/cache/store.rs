@@ -4,26 +4,42 @@
 //! The paper's Limitations single out the BF16 KV cache as the dominant
 //! transient memory once weights are 1.25-bit; on edge CPUs the decode
 //! hot path is memory-bandwidth-bound (BitNet.cpp, TENET), so shrinking
-//! KV pages is a latency win as well as a capacity win. Two
+//! KV pages is a latency win as well as a capacity win — *and* keeping
+//! the low-bit representation through the compute kernel (not just in
+//! storage) is where the bandwidth saving actually lands. Two
 //! implementations share one contract:
 //!
-//! * [`F32Store`] — today's layout (`num_pages × page_size × d_model`
+//! * [`F32Store`] — the parity layout (`num_pages × page_size × d_model`
 //!   floats per layer per plane). Block reads *borrow* the plane, so the
 //!   f32 path stays bit-for-bit identical to the pre-trait engine.
 //! * [`Int8Store`] — int8 pages with **per-page-per-head** f32 scales,
 //!   quantized at page-write time. A page's (page, head) scale is the
 //!   running absmax of the rows written so far; a row that exceeds the
 //!   current range *requantizes* the page's head lane to the grown scale
-//!   (one extra quantum of error, bounded — see DESIGN.md §4). Block
-//!   reads dequantize the page once into a caller scratch tile.
+//!   (one extra quantum of error, bounded — see DESIGN.md §4).
 //!
-//! The attention kernel consumes pages as whole blocks
-//! ([`super::view::Rows::for_each_block`]), so a quantized page is
-//! dequantized once per (layer, sequence, step) and then reused for all
-//! query·key dot products and value accumulations over that page —
-//! the same amortization `gemm_nt` applies to weight planes.
+//! Three read paths exist, cheapest first:
+//!
+//! 1. [`PageStore::block_i8`] — the **int8-native** view: raw page bytes
+//!    plus the page's per-head scales, so attention computes q·k as an
+//!    i32 integer dot with a single `q_scale · page_head_scale` multiply
+//!    per (page, head). No dequantization at all on the score path.
+//! 2. [`PageStore::frozen_tile`] — a dequantized f32 tile of a *frozen*
+//!    (immutable, registration-frozen-scale) page served from a small
+//!    shared LRU cache, so a prefix page read by N sequences in a round
+//!    is expanded once, not N times. Used by the V-accumulation pass.
+//! 3. [`PageStore::block`] — dequantize into caller scratch: the
+//!    fallback for private (still-growing) pages.
+//!
+//! Pages become **frozen** when the prefix index registers them
+//! ([`PageStore::freeze_page`]): from that point their bytes *and*
+//! scales are immutable until the page is freed (`reset_page` thaws it
+//! on the last reference drop), which is what makes shared-prefix reads
+//! byte-exact and serving-order independent — see DESIGN.md §4.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::engine::NativeConfig;
@@ -61,7 +77,7 @@ impl KvDtype {
 }
 
 /// Which of the two KV planes a read addresses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Plane {
     K,
     V,
@@ -80,12 +96,37 @@ pub enum Plane {
 ///   quantizer state so `dst` can keep appending;
 /// * `block` must not change the values a slot dequantizes to (reads are
 ///   pure) — only `write_row` may (and for quantized stores only within
-///   the documented requantization bound).
+///   the documented requantization bound);
+/// * after `freeze_page`, neither bytes nor quantizer state of the page
+///   may change until `reset_page` thaws it — a frozen page is an
+///   immutable artifact, which is what lets `frozen_tile` cache its
+///   dequantized form and the prefix index share it byte-exactly.
+///
+/// ```
+/// use sherry::cache::{F32Store, PageStore, Plane};
+/// use sherry::engine::NativeConfig;
+///
+/// let cfg = NativeConfig::named("nano").unwrap();
+/// let mut store = F32Store::new(&cfg, /*num_pages=*/ 2, /*page_size=*/ 4);
+/// let row = vec![0.5f32; cfg.d_model];
+/// store.reset_page(0);
+/// store.write_row(/*layer=*/ 0, /*page=*/ 0, /*slot=*/ 0, &row, &row);
+///
+/// // Reads come back as `rows × d_model` f32 blocks; for the f32 store
+/// // the block borrows the arena (scratch stays untouched).
+/// let mut scratch = Vec::new();
+/// let block = store.block(Plane::K, 0, 0, /*rows=*/ 1, &mut scratch);
+/// assert_eq!(block, &row[..]);
+/// assert_eq!(store.bytes_per_token(), 2 * cfg.n_layers * cfg.d_model * 4);
+/// ```
 pub trait PageStore: Send + Sync {
     fn dtype(&self) -> KvDtype;
 
-    /// Reset per-page quantizer state. Called when a page is (re)allocated;
-    /// page *data* is never zeroed (a slot is written before any read).
+    /// Reset per-page quantizer state and thaw a frozen page. Called by
+    /// the allocator the moment a page's last reference drops (so dead
+    /// pages hold no cache entries while on the free stack); page *data*
+    /// is never zeroed (a slot is written before any read). Also
+    /// invalidates any cached [`PageStore::frozen_tile`] for the page.
     fn reset_page(&mut self, p: PageId);
 
     /// Write one position's K and V rows into `(page, slot)` of `layer`.
@@ -106,6 +147,63 @@ pub trait PageStore: Send + Sync {
         rows: usize,
         scratch: &'a mut Vec<f32>,
     ) -> &'a [f32];
+
+    /// Raw low-bit view of the first `rows` rows of page `p`: the int8
+    /// page bytes (`rows × d_model`) and the page's `n_heads` per-head
+    /// scales, or `None` for stores with no int8-native representation.
+    /// The attention score pass uses this to run q·k as an i32 integer
+    /// dot with one `q_scale · page_head_scale` multiply per (page,
+    /// head) instead of dequantizing the page.
+    fn block_i8(
+        &self,
+        _plane: Plane,
+        _layer: usize,
+        _p: PageId,
+        _rows: usize,
+    ) -> Option<(&[i8], &[f32])> {
+        None
+    }
+
+    /// Mark page `p` immutable (prefix-index registration): its bytes and
+    /// quantizer scales are now frozen until `reset_page`. Only ever
+    /// called on *full* pages (every slot written), so a frozen page can
+    /// always be materialized whole. No-op for stores whose pages carry
+    /// no mutable quantizer state (f32).
+    fn freeze_page(&mut self, _p: PageId) {}
+
+    /// Whether `p` is currently frozen (registration-scale-frozen).
+    fn is_frozen(&self, _p: PageId) -> bool {
+        false
+    }
+
+    /// Dequantized full-page f32 tile of *frozen* page `p`, served from
+    /// the store's shared LRU tile cache (a page shared by N sequences is
+    /// expanded once per cache residency, not N times per round). `None`
+    /// for non-frozen pages, for stores where block reads are free
+    /// borrows (f32), or when the cache is disabled. The tile always
+    /// holds all `page_size` rows; callers slice the prefix they need.
+    fn frozen_tile(&self, _plane: Plane, _layer: usize, _p: PageId) -> Option<Arc<[f32]>> {
+        None
+    }
+
+    /// Resize the frozen-tile LRU cache to at most `tiles` tiles
+    /// (0 disables caching). No-op for stores that never cache.
+    fn set_tile_cache_capacity(&mut self, _tiles: usize) {}
+
+    /// `(hits, misses)` of the frozen-tile cache (both 0 when absent).
+    fn tile_cache_stats(&self) -> (u64, u64) {
+        (0, 0)
+    }
+
+    /// Record attention q·k rows served from this store: `native` rows
+    /// dotted int8-natively, `dequant` rows via a dequantized f32 tile —
+    /// the `kv_int8_dot_fraction` gauge's numerator/denominator.
+    fn record_qk_rows(&self, _native: u64, _dequant: u64) {}
+
+    /// Cumulative `(native, dequant)` q·k row counts recorded so far.
+    fn qk_rows(&self) -> (u64, u64) {
+        (0, 0)
+    }
 
     /// Total arena bytes at this dtype (the KV byte budget).
     fn bytes(&self) -> usize;
@@ -153,6 +251,9 @@ pub struct F32Store {
     k: Vec<Vec<f32>>,
     /// Per-layer V planes, same shape.
     v: Vec<Vec<f32>>,
+    /// q·k rows recorded against this store (always the dequant/borrow
+    /// side — there is no int8-native path for f32 pages).
+    qk_f32: AtomicU64,
 }
 
 impl F32Store {
@@ -165,6 +266,7 @@ impl F32Store {
             num_pages,
             k: (0..cfg.n_layers).map(|_| vec![0.0; plane]).collect(),
             v: (0..cfg.n_layers).map(|_| vec![0.0; plane]).collect(),
+            qk_f32: AtomicU64::new(0),
         }
     }
 }
@@ -216,6 +318,14 @@ impl PageStore for F32Store {
         &buf[base..base + rows * d]
     }
 
+    fn record_qk_rows(&self, _native: u64, dequant: u64) {
+        self.qk_f32.fetch_add(dequant, Ordering::Relaxed);
+    }
+
+    fn qk_rows(&self) -> (u64, u64) {
+        (0, self.qk_f32.load(Ordering::Relaxed))
+    }
+
     fn bytes(&self) -> usize {
         2 * self.n_layers * self.num_pages * self.page_size * self.d_model * 4
     }
@@ -232,6 +342,77 @@ impl PageStore for F32Store {
 // ---------------------------------------------------------------------------
 // Int8Store — quantized pages, per-page-per-head scales
 // ---------------------------------------------------------------------------
+
+/// Default frozen-tile cache capacity (tiles). One tile is
+/// `page_size × d_model` floats, so at the default page size this stays
+/// a few MiB even at bench3b shapes. 0 disables the cache.
+pub const DEFAULT_TILE_CACHE_TILES: usize = 64;
+
+/// Shared LRU cache of dequantized full-page f32 tiles for *frozen*
+/// pages. Frozen pages are immutable (bytes and scales), so a cached
+/// tile stays valid until the page is freed — `reset_page` invalidates.
+/// Concurrent misses on the same page may dequantize twice; both produce
+/// identical tiles (frozen bytes, deterministic dequant), so the race is
+/// benign and the build runs outside the lock.
+struct TileCache {
+    /// Max resident tiles; 0 = disabled.
+    cap: usize,
+    /// Monotone use-clock for LRU ordering.
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// (plane, layer, page) → (last-use tick, full-page tile).
+    map: Mutex<HashMap<(Plane, u32, PageId), (u64, Arc<[f32]>)>>,
+}
+
+impl TileCache {
+    fn new(cap: usize) -> Self {
+        Self {
+            cap,
+            tick: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            map: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn get(&self, key: (Plane, u32, PageId)) -> Option<Arc<[f32]>> {
+        let mut map = self.map.lock().unwrap();
+        if let Some((last, tile)) = map.get_mut(&key) {
+            *last = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Some(Arc::clone(tile));
+        }
+        None
+    }
+
+    fn insert(&self, key: (Plane, u32, PageId), tile: Arc<[f32]>) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.map.lock().unwrap();
+        let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        map.insert(key, (now, tile));
+        while map.len() > self.cap {
+            // cap is small (tens); a linear min-scan beats a heap here.
+            let lru = map.iter().min_by_key(|(_, (last, _))| *last).map(|(k, _)| *k);
+            match lru {
+                Some(k) => map.remove(&k),
+                None => break,
+            };
+        }
+    }
+
+    /// Drop every cached tile of page `p` (page freed / reallocated).
+    fn invalidate_page(&self, p: PageId) {
+        if self.cap == 0 {
+            return;
+        }
+        self.map.lock().unwrap().retain(|&(_, _, page), _| page != p);
+    }
+
+    fn stats(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
 
 /// Int8 page store. Data layout matches [`F32Store`] with 1-byte
 /// channels; each (layer, plane, page, head) has one f32 scale at
@@ -260,8 +441,17 @@ pub struct Int8Store {
     k_scales: Vec<Vec<f32>>,
     /// `[layer][p * n_heads + h]` V scales.
     v_scales: Vec<Vec<f32>>,
+    /// Registration-frozen pages: bytes and scales immutable until the
+    /// page is freed (`reset_page` thaws). One flag per page, covering
+    /// every layer and both planes.
+    frozen: Vec<bool>,
+    /// LRU of dequantized full-page tiles for frozen pages.
+    tiles: TileCache,
     /// Cumulative block-dequantization time (metrics gauge).
     dequant_ns: AtomicU64,
+    /// Attention q·k rows served int8-natively / via dequantized tiles.
+    qk_native: AtomicU64,
+    qk_dequant: AtomicU64,
 }
 
 impl Int8Store {
@@ -280,7 +470,35 @@ impl Int8Store {
             v: (0..cfg.n_layers).map(|_| vec![0; plane]).collect(),
             k_scales: (0..cfg.n_layers).map(|_| vec![0.0; scales]).collect(),
             v_scales: (0..cfg.n_layers).map(|_| vec![0.0; scales]).collect(),
+            frozen: vec![false; num_pages],
+            tiles: TileCache::new(DEFAULT_TILE_CACHE_TILES),
             dequant_ns: AtomicU64::new(0),
+            qk_native: AtomicU64::new(0),
+            qk_dequant: AtomicU64::new(0),
+        }
+    }
+
+    /// Dequantize the first `rows` rows of `(plane, layer, p)` into `out`
+    /// (resized to `rows × d_model`). One shared body for scratch-block
+    /// reads and frozen-tile builds so both produce identical floats.
+    fn dequant_into(&self, plane: Plane, layer: usize, p: PageId, rows: usize, out: &mut Vec<f32>) {
+        let (d, hd, nh) = (self.d_model, self.head_dim, self.n_heads);
+        let (data, scales) = match plane {
+            Plane::K => (&self.k[layer], &self.k_scales[layer]),
+            Plane::V => (&self.v[layer], &self.v_scales[layer]),
+        };
+        out.resize(rows * d, 0.0);
+        let pbase = p as usize * self.page_size * d;
+        let sbase = p as usize * nh;
+        for r in 0..rows {
+            let rbase = pbase + r * d;
+            for h in 0..nh {
+                let s = scales[sbase + h];
+                let col0 = h * hd;
+                for c in 0..hd {
+                    out[r * d + col0 + c] = data[rbase + col0 + c] as f32 * s;
+                }
+            }
         }
     }
 
@@ -345,6 +563,8 @@ impl PageStore for Int8Store {
     }
 
     fn reset_page(&mut self, p: PageId) {
+        self.frozen[p as usize] = false;
+        self.tiles.invalidate_page(p);
         let s0 = p as usize * self.n_heads;
         for li in 0..self.n_layers {
             self.k_scales[li][s0..s0 + self.n_heads].fill(0.0);
@@ -355,6 +575,7 @@ impl PageStore for Int8Store {
     fn write_row(&mut self, layer: usize, p: PageId, slot: usize, k_row: &[f32], v_row: &[f32]) {
         debug_assert!(slot < self.page_size);
         debug_assert_eq!(k_row.len(), self.d_model);
+        debug_assert!(!self.frozen[p as usize], "write to a registration-frozen page");
         let (ps, d, hd, nh) = (self.page_size, self.d_model, self.head_dim, self.n_heads);
         for h in 0..nh {
             Self::write_head(&mut self.k[layer], &mut self.k_scales[layer], k_row, p as usize, slot, h, ps, d, hd, nh);
@@ -365,6 +586,7 @@ impl PageStore for Int8Store {
     fn copy_rows(&mut self, src: PageId, dst: PageId, rows: usize) {
         debug_assert!(rows <= self.page_size);
         debug_assert_ne!(src, dst, "CoW onto the same page");
+        debug_assert!(!self.frozen[dst as usize], "CoW target must be a fresh page");
         let d = self.d_model;
         let n = rows * d;
         let (s0, d0) = (src as usize * self.page_size * d, dst as usize * self.page_size * d);
@@ -389,26 +611,71 @@ impl PageStore for Int8Store {
     ) -> &'a [f32] {
         debug_assert!(rows <= self.page_size);
         let t0 = Instant::now();
-        let (d, hd, nh) = (self.d_model, self.head_dim, self.n_heads);
+        self.dequant_into(plane, layer, p, rows, scratch);
+        self.dequant_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        &scratch[..rows * self.d_model]
+    }
+
+    fn block_i8(
+        &self,
+        plane: Plane,
+        layer: usize,
+        p: PageId,
+        rows: usize,
+    ) -> Option<(&[i8], &[f32])> {
+        debug_assert!(rows <= self.page_size);
         let (data, scales) = match plane {
             Plane::K => (&self.k[layer], &self.k_scales[layer]),
             Plane::V => (&self.v[layer], &self.v_scales[layer]),
         };
-        scratch.resize(rows * d, 0.0);
-        let pbase = p as usize * self.page_size * d;
-        let sbase = p as usize * nh;
-        for r in 0..rows {
-            let rbase = pbase + r * d;
-            for h in 0..nh {
-                let s = scales[sbase + h];
-                let col0 = h * hd;
-                for c in 0..hd {
-                    scratch[r * d + col0 + c] = data[rbase + col0 + c] as f32 * s;
-                }
-            }
+        let pbase = p as usize * self.page_size * self.d_model;
+        let sbase = p as usize * self.n_heads;
+        Some((&data[pbase..pbase + rows * self.d_model], &scales[sbase..sbase + self.n_heads]))
+    }
+
+    fn freeze_page(&mut self, p: PageId) {
+        self.frozen[p as usize] = true;
+    }
+
+    fn is_frozen(&self, p: PageId) -> bool {
+        self.frozen[p as usize]
+    }
+
+    fn frozen_tile(&self, plane: Plane, layer: usize, p: PageId) -> Option<Arc<[f32]>> {
+        if self.tiles.cap == 0 || !self.frozen[p as usize] {
+            return None;
         }
+        let key = (plane, layer as u32, p);
+        if let Some(tile) = self.tiles.get(key) {
+            return Some(tile);
+        }
+        // Miss: build the full-page tile outside the lock (frozen pages
+        // are fully written and immutable, so a racing duplicate build
+        // produces identical bytes).
+        let t0 = Instant::now();
+        let mut buf = Vec::new();
+        self.dequant_into(plane, layer, p, self.page_size, &mut buf);
         self.dequant_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        &scratch[..rows * d]
+        let tile: Arc<[f32]> = Arc::from(buf);
+        self.tiles.insert(key, Arc::clone(&tile));
+        Some(tile)
+    }
+
+    fn set_tile_cache_capacity(&mut self, tiles: usize) {
+        self.tiles = TileCache::new(tiles);
+    }
+
+    fn tile_cache_stats(&self) -> (u64, u64) {
+        self.tiles.stats()
+    }
+
+    fn record_qk_rows(&self, native: u64, dequant: u64) {
+        self.qk_native.fetch_add(native, Ordering::Relaxed);
+        self.qk_dequant.fetch_add(dequant, Ordering::Relaxed);
+    }
+
+    fn qk_rows(&self) -> (u64, u64) {
+        (self.qk_native.load(Ordering::Relaxed), self.qk_dequant.load(Ordering::Relaxed))
     }
 
     fn bytes(&self) -> usize {
@@ -546,6 +813,116 @@ mod tests {
         for h in 0..cfg.n_heads {
             assert_eq!(st.scale(Plane::K, 0, 0, h), st.scale(Plane::K, 0, 1, h));
         }
+    }
+
+    #[test]
+    fn int8_block_i8_matches_dequantized_block() {
+        // The int8-native view must be exactly the bytes/scales the f32
+        // dequant path uses: data[i]·scale == block()[i] for every
+        // element, so the fused q·k dot differs from the dequant path
+        // only by query-quantization error.
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let hd = cfg.head_dim();
+        let mut st = Int8Store::new(&cfg, 2, 4);
+        st.reset_page(1);
+        let mut rng = Pcg64::seeded(7);
+        for s in 0..3 {
+            let row = rng.normal_vec(d);
+            st.write_row(1, 1, s, &row, &row);
+        }
+        let (data, scales) = st.block_i8(Plane::K, 1, 1, 3).expect("int8 store is int8-native");
+        assert_eq!(data.len(), 3 * d);
+        assert_eq!(scales.len(), cfg.n_heads);
+        let mut scratch = Vec::new();
+        let blk = st.block(Plane::K, 1, 1, 3, &mut scratch);
+        for r in 0..3 {
+            for h in 0..cfg.n_heads {
+                for c in h * hd..(h + 1) * hd {
+                    assert_eq!(data[r * d + c] as f32 * scales[h], blk[r * d + c]);
+                }
+            }
+        }
+        // The f32 store has no int8-native view.
+        let f = F32Store::new(&cfg, 1, 4);
+        assert!(f.block_i8(Plane::K, 0, 0, 1).is_none());
+    }
+
+    #[test]
+    fn frozen_tile_serves_cache_and_reset_thaws() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = Int8Store::new(&cfg, 2, 4);
+        st.reset_page(0);
+        let mut rng = Pcg64::seeded(13);
+        for s in 0..4 {
+            let row = rng.normal_vec(d);
+            st.write_row(0, 0, s, &row, &row);
+        }
+        // Unfrozen pages never serve tiles (they may still requantize).
+        assert!(st.frozen_tile(Plane::V, 0, 0).is_none());
+        st.freeze_page(0);
+        assert!(st.is_frozen(0));
+
+        let tile = st.frozen_tile(Plane::V, 0, 0).expect("frozen page serves a tile");
+        assert_eq!(tile.len(), 4 * d, "tile holds the full page");
+        let mut scratch = Vec::new();
+        assert_eq!(
+            &tile[..],
+            st.block(Plane::V, 0, 0, 4, &mut scratch),
+            "cached tile is bitwise the scratch dequant"
+        );
+        // Second read hits the cache.
+        let again = st.frozen_tile(Plane::V, 0, 0).unwrap();
+        assert_eq!(&tile[..], &again[..]);
+        let (hits, misses) = st.tile_cache_stats();
+        assert_eq!((hits, misses), (1, 1));
+
+        // Reallocation thaws the page and drops its tiles.
+        st.reset_page(0);
+        assert!(!st.is_frozen(0));
+        assert!(st.frozen_tile(Plane::V, 0, 0).is_none());
+    }
+
+    #[test]
+    fn tile_cache_capacity_bounds_residency() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = Int8Store::new(&cfg, 3, 2);
+        st.set_tile_cache_capacity(1);
+        for p in 0..3u32 {
+            st.reset_page(p);
+            for s in 0..2 {
+                st.write_row(0, p, s, &vec![p as f32 + 1.0; d], &vec![p as f32 + 1.0; d]);
+            }
+            st.freeze_page(p);
+        }
+        // Touch three pages through a 1-tile cache: every access misses.
+        for p in 0..3u32 {
+            assert!(st.frozen_tile(Plane::K, 0, p).is_some());
+        }
+        let (hits, misses) = st.tile_cache_stats();
+        assert_eq!((hits, misses), (0, 3));
+        // Re-touching the most recent page hits; the evicted one misses.
+        assert!(st.frozen_tile(Plane::K, 0, 2).is_some());
+        assert!(st.frozen_tile(Plane::K, 0, 0).is_some());
+        let (hits, misses) = st.tile_cache_stats();
+        assert_eq!((hits, misses), (1, 4));
+        // Capacity 0 disables caching entirely.
+        st.set_tile_cache_capacity(0);
+        assert!(st.frozen_tile(Plane::K, 0, 2).is_none());
+    }
+
+    #[test]
+    fn qk_row_counters_accumulate_per_store() {
+        let cfg = cfg();
+        let q = Int8Store::new(&cfg, 1, 4);
+        q.record_qk_rows(10, 2);
+        q.record_qk_rows(5, 0);
+        assert_eq!(q.qk_rows(), (15, 2));
+        let f = F32Store::new(&cfg, 1, 4);
+        f.record_qk_rows(0, 7);
+        assert_eq!(f.qk_rows(), (0, 7), "f32 stores only ever count dequant rows");
     }
 
     #[test]

@@ -3,20 +3,39 @@
 //! [`TernaryModel::forward_kv`](crate::engine::TernaryModel::forward_kv)
 //! appends and reads K/V exclusively through [`KvBatch`], so paged and
 //! contiguous storage run the *same* model code. [`Rows`] exposes a
-//! sequence's K (or V) history as **page blocks**: contiguous
-//! `rows × d_model` f32 tiles, one per resident page (the whole history
-//! is a single block for a contiguous cache). The attention kernel walks
-//! blocks in ascending position order and consumes rows in identical
-//! order either way, which is what keeps paged decode bit-for-bit equal
-//! to the contiguous baseline (the contiguous path is literally the
-//! degenerate single-block case). Quantized stores dequantize each block
-//! once into a caller scratch tile, amortizing the conversion over every
-//! query·key dot product and value accumulation that touches the page.
+//! sequence's K (or V) history as **page blocks**, one per resident page
+//! (the whole history is a single block for a contiguous cache), walked
+//! in ascending position order, which is what keeps paged decode
+//! bit-for-bit equal to the contiguous baseline (the contiguous path is
+//! literally the degenerate single-block case). Two walks exist:
+//!
+//! * [`Rows::for_each_block`] — f32 tiles (`rows × d_model`): borrowed
+//!   from the arena for f32 storage, served from the store's frozen-tile
+//!   LRU for registration-frozen quantized pages, dequantized into
+//!   caller scratch otherwise. The attention V-accumulation pass (and
+//!   the whole f32 score pass) runs on this.
+//! * [`Rows::for_each_kblock`] — the score-pass walk: yields
+//!   [`KBlock::I8`] (raw int8 page bytes + per-head scales) whenever the
+//!   store has an int8-native representation, so q·k runs as an i32
+//!   integer dot with one scale multiply per (page, head) and the K
+//!   plane is never dequantized at all; falls back to [`KBlock::F32`]
+//!   tiles for f32 storage and contiguous caches.
 
 use super::allocator::{BlockAllocator, PageId};
 use super::store::{PageStore, Plane};
 use super::table::BlockTable;
 use crate::engine::KvCache;
+
+/// One page block of a sequence's K history, at the cheapest
+/// representation its store supports (see [`Rows::for_each_kblock`]).
+pub enum KBlock<'a> {
+    /// Dequantized (or natively-f32) `rows × d_model` tile.
+    F32(&'a [f32]),
+    /// Int8-native page block: `rows × d_model` raw bytes plus the
+    /// page's `n_heads` per-head scales. Element `(r, h·head_dim + c)`
+    /// dequantizes as `data[r·d + h·head_dim + c] as f32 * scales[h]`.
+    I8 { data: &'a [i8], scales: &'a [f32] },
+}
 
 /// Position-indexed block access into one sequence's K (or V) history at
 /// one layer. Copyable, shareable across the attention worker pool.
@@ -40,8 +59,12 @@ impl<'a> Rows<'a> {
     /// Walk the first `t` positions as page blocks, in ascending position
     /// order: `f(start, block, rows)` receives a `rows × d` f32 tile
     /// covering positions `start .. start + rows`. For f32 storage the
-    /// tile borrows the arena (or the contiguous buffer — one block);
-    /// quantized storage dequantizes into `scratch` once per page.
+    /// tile borrows the arena (or the contiguous buffer — one block).
+    /// Quantized storage serves registration-frozen pages from the
+    /// store's shared tile cache (one dequant per cache residency, no
+    /// matter how many sequences share the page) and dequantizes private
+    /// pages into `scratch` once per page. Cached and scratch dequants
+    /// run the same arithmetic, so the cache never changes values.
     #[inline]
     pub fn for_each_block(
         &self,
@@ -55,16 +78,70 @@ impl<'a> Rows<'a> {
                     f(0, &buf[..t * d], t);
                 }
             }
-            Rows::Paged { store, plane, layer, pages, page_size, .. } => {
+            Rows::Paged { store, plane, layer, pages, page_size, d } => {
                 let mut start = 0usize;
                 while start < t {
                     let rows = page_size.min(t - start);
                     let page = pages[start / page_size];
-                    let block = store.block(plane, layer, page, rows, scratch);
-                    f(start, block, rows);
+                    if let Some(tile) = store.frozen_tile(plane, layer, page) {
+                        // Frozen pages are always fully written; a
+                        // partial read is a prefix of the full tile.
+                        f(start, &tile[..rows * d], rows);
+                    } else {
+                        let block = store.block(plane, layer, page, rows, scratch);
+                        f(start, block, rows);
+                    }
                     start += rows;
                 }
             }
+        }
+    }
+
+    /// Score-pass walk: like [`Rows::for_each_block`], but yields each
+    /// page at the cheapest representation its store supports —
+    /// [`KBlock::I8`] raw bytes for int8-native stores (no
+    /// dequantization on the q·k path at all), [`KBlock::F32`] tiles
+    /// otherwise.
+    #[inline]
+    pub fn for_each_kblock(
+        &self,
+        t: usize,
+        scratch: &mut Vec<f32>,
+        mut f: impl FnMut(usize, KBlock<'_>, usize),
+    ) {
+        match *self {
+            Rows::Contig { buf, d } => {
+                if t > 0 {
+                    f(0, KBlock::F32(&buf[..t * d]), t);
+                }
+            }
+            Rows::Paged { store, plane, layer, pages, page_size, d } => {
+                let mut start = 0usize;
+                while start < t {
+                    let rows = page_size.min(t - start);
+                    let page = pages[start / page_size];
+                    // Every current quantized store is int8-native, so a
+                    // page either dots raw (I8) or borrows/dequants (F32)
+                    // — the tile cache only ever serves the V-pass walk.
+                    if let Some((data, scales)) = store.block_i8(plane, layer, page, rows) {
+                        f(start, KBlock::I8 { data, scales }, rows);
+                    } else {
+                        let block = store.block(plane, layer, page, rows, scratch);
+                        f(start, KBlock::F32(block), rows);
+                    }
+                    start += rows;
+                }
+            }
+        }
+    }
+
+    /// Record attention q·k row counts against the backing store (the
+    /// `kv_int8_dot_fraction` gauge). No-op for contiguous caches — the
+    /// single-stream paths are not metered.
+    #[inline]
+    pub fn record_qk(&self, native_rows: u64, dequant_rows: u64) {
+        if let Rows::Paged { store, .. } = *self {
+            store.record_qk_rows(native_rows, dequant_rows);
         }
     }
 
@@ -265,6 +342,64 @@ mod tests {
             assert_eq!(pos, i, "ascending positions");
             assert_eq!(val, i as f32);
         }
+    }
+
+    #[test]
+    fn kblock_walk_yields_int8_native_blocks_that_dequantize_identically() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let hd = cfg.head_dim();
+        let mut alloc = BlockAllocator::new_with(&cfg, 4, 4, KvDtype::Int8);
+        let mut table = BlockTable::new(4);
+        let mut rng = crate::util::Pcg64::seeded(9);
+        for pos in 0..6usize {
+            table.prepare_append(&mut alloc);
+            let (page, slot) = table.slot_for(pos);
+            let row = rng.normal_vec(d);
+            alloc.write_row(0, page, slot, &row, &row);
+            table.advance();
+        }
+        let mut tables = [&mut table];
+        let kv = KvBatch::Paged { alloc: &mut alloc, tables: &mut tables };
+        let rows = kv.k_rows(0, 0);
+        // Reference: the f32 walk.
+        let reference = collect(&rows, 6);
+        // The kblock walk must yield I8 blocks (int8 store) that
+        // dequantize to exactly the f32 walk's tiles.
+        let mut scratch = Vec::new();
+        let mut covered = 0usize;
+        rows.for_each_kblock(6, &mut scratch, |start, block, n| {
+            match block {
+                super::KBlock::I8 { data, scales } => {
+                    for r in 0..n {
+                        for h in 0..cfg.n_heads {
+                            for c in h * hd..(h + 1) * hd {
+                                assert_eq!(
+                                    data[r * d + c] as f32 * scales[h],
+                                    reference[(start + r) * d + c],
+                                    "pos {} ch {c}",
+                                    start + r
+                                );
+                            }
+                        }
+                    }
+                }
+                super::KBlock::F32(_) => panic!("int8 store must yield int8-native blocks"),
+            }
+            covered += n;
+        });
+        assert_eq!(covered, 6);
+
+        // Contiguous caches (and f32 arenas) yield F32 blocks.
+        let mut cache = KvCache::new(&cfg);
+        cache.k[0].extend_from_slice(&vec![1.0; d]);
+        cache.v[0].extend_from_slice(&vec![1.0; d]);
+        cache.len = 1;
+        let mut caches = [&mut cache];
+        let kv = KvBatch::Contig(&mut caches);
+        kv.k_rows(0, 0).for_each_kblock(1, &mut scratch, |_, block, _| {
+            assert!(matches!(block, super::KBlock::F32(_)));
+        });
     }
 
     #[test]

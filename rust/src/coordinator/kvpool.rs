@@ -16,6 +16,14 @@
 //! ([`PagedKv::pages_for_budget`]), so an int8 arena holds ~4× the pages
 //! of an f32 one and page-counted admission scales with it — KV
 //! quantization is a concurrency knob, not just a footprint one.
+//!
+//! Prefix sharing works for **both** dtypes. f32 pools share down to a
+//! page's live prefix; quantized pools share at whole-page granularity
+//! only (`page_exact`), because a frozen page's bytes are a
+//! deterministic function of its full chunk while a *partial* read of
+//! them is quantized at a scale the donor's later rows grew — see
+//! [`PagedKv::new`] and DESIGN.md §4 for the serving-order-invariance
+//! argument.
 
 use crate::cache::{page_bytes, BlockAllocator, BlockTable, KvDtype, PrefixIndex};
 use crate::engine::NativeConfig;
@@ -27,6 +35,9 @@ pub struct PagedKv {
     alloc: BlockAllocator,
     index: PrefixIndex,
     sharing: bool,
+    /// Quantized pools share whole frozen pages only (see
+    /// [`PagedKv::new`]); f32 pools may also share a page's live prefix.
+    page_exact: bool,
     seq_len: usize,
 }
 
@@ -36,14 +47,22 @@ impl PagedKv {
     /// `num_pages` is raised to at least one worst-case sequence so a
     /// lone request can always run (head-of-line liveness).
     ///
-    /// Prefix sharing requires **f32 pages** and is forced off otherwise:
-    /// the sharing contract is that a reused page holds exactly the rows
-    /// the recipient would have produced itself, but an int8 page's
-    /// per-page-per-head scale is grown by *every* row the donor wrote —
-    /// including rows past the shared span — so a partially shared page
-    /// would dequantize differently than the recipient's own prefill,
-    /// making completions depend on serving order. (Scale-invariant
-    /// sharing for quantized pages is a ROADMAP item.)
+    /// Sharing's contract is that a reused page holds exactly the rows
+    /// the recipient's own prefill would have produced. For **f32**
+    /// pages that holds row-by-row, so a partially matched tail page is
+    /// shared up to its live prefix (the recipient copy-on-writes at
+    /// first divergence). For **quantized** pages it holds only at
+    /// whole-page granularity: a page's bytes are a deterministic
+    /// function of its full chunk's tokens (same rows ⇒ same
+    /// quantization trajectory ⇒ same bytes and frozen registration
+    /// scales), but a *prefix* of those bytes is quantized at a scale
+    /// the donor's later rows in that page grew — not the scale the
+    /// recipient's own prefill would have used — which would make
+    /// completions depend on serving order. Quantized pools therefore
+    /// truncate every shared span to a whole-page multiple
+    /// (`page_exact`): reuse stays byte-exact and serving-order
+    /// invariant, at the cost of re-prefilling at most
+    /// `page_size − 1` matched tail tokens.
     pub fn new(
         cfg: &NativeConfig,
         num_pages: usize,
@@ -57,7 +76,8 @@ impl PagedKv {
         Self {
             alloc: BlockAllocator::new_with(cfg, num_pages, page_size, dtype),
             index: PrefixIndex::new(page_size),
-            sharing: sharing && dtype == KvDtype::F32,
+            sharing,
+            page_exact: dtype != KvDtype::F32,
             seq_len: cfg.seq_len,
         }
     }
@@ -123,6 +143,23 @@ impl PagedKv {
         self.alloc.store().dequant_nanos()
     }
 
+    /// `(int8-native, dequant/borrow)` attention q·k row counts — the
+    /// `kv_int8_dot_fraction` gauge's inputs.
+    pub fn qk_rows(&self) -> (u64, u64) {
+        self.alloc.store().qk_rows()
+    }
+
+    /// `(hits, misses)` of the store's frozen-tile cache.
+    pub fn tile_cache_stats(&self) -> (u64, u64) {
+        self.alloc.store().tile_cache_stats()
+    }
+
+    /// Resize the store's frozen-tile LRU (0 disables caching; no-op for
+    /// f32 pools, whose block reads are free borrows).
+    pub fn set_tile_cache_capacity(&mut self, tiles: usize) {
+        self.alloc.set_tile_cache_capacity(tiles);
+    }
+
     /// The arena, for the decode round's [`KvBatch`](crate::cache::KvBatch).
     pub fn alloc_mut(&mut self) -> &mut BlockAllocator {
         &mut self.alloc
@@ -136,12 +173,24 @@ impl PagedKv {
         prompt.len().saturating_sub(1).min(self.seq_len.saturating_sub(1))
     }
 
+    /// Shared spans a quantized pool may reuse are whole-page multiples
+    /// (see [`PagedKv::new`]); f32 pools reuse the full matched span.
+    /// One definition shared by probe and lease so the two can never
+    /// disagree.
+    fn effective_span(&self, matched: usize) -> usize {
+        if self.page_exact {
+            matched - matched % self.page_size()
+        } else {
+            matched
+        }
+    }
+
     /// Longest index-reusable prefix of `prompt`.
     fn shared_span(&self, prompt: &[u32]) -> usize {
         if !self.sharing {
             return 0;
         }
-        self.index.probe_len(prompt, self.probe_cap(prompt))
+        self.effective_span(self.index.probe_len(prompt, self.probe_cap(prompt)))
     }
 
     /// Worst-case pages `req` will allocate over its lifetime: every
@@ -165,13 +214,17 @@ impl PagedKv {
     /// Lease a block table for `prompt`: seeded from the prefix index
     /// (taking one reference per shared page) when sharing is on.
     /// Returns the table and the shared span length — prefill starts at
-    /// that offset.
+    /// that offset. Quantized pools drop a partially matched tail page
+    /// here (`effective_span`), so their leases hold whole frozen pages
+    /// only and never copy-on-write out of one.
     pub fn lease(&mut self, prompt: &[u32]) -> (BlockTable, usize) {
         let ps = self.page_size();
         if !self.sharing {
             return (BlockTable::new(ps), 0);
         }
-        let (pages, matched) = self.index.probe_pages(prompt, self.probe_cap(prompt));
+        let (mut pages, probed) = self.index.probe_pages(prompt, self.probe_cap(prompt));
+        let matched = self.effective_span(probed);
+        pages.truncate(matched.div_ceil(ps));
         for &p in &pages {
             self.alloc.retain(p);
         }
@@ -287,11 +340,12 @@ mod tests {
     }
 
     #[test]
-    fn int8_pool_forces_prefix_sharing_off() {
-        // Sharing's exact-reuse contract only holds for f32 pages (int8
-        // page scales are contaminated by donor rows past the shared
-        // span); an int8 pool must behave as sharing-off regardless of
-        // the flag.
+    fn int8_pool_shares_whole_frozen_pages_only() {
+        // Quantized pools share at page granularity: a probe that
+        // matches 7 of 8 tokens (cap always drops the last) reuses only
+        // the first full page — the partially matched tail page is
+        // re-prefilled by the recipient so its quantization trajectory
+        // is its own, keeping completions serving-order invariant.
         let cfg = NativeConfig::named("nano").unwrap();
         let mut kv = PagedKv::new(&cfg, 64, 4, true, KvDtype::Int8);
         let prompt: Vec<u32> = (0..8).collect();
@@ -302,12 +356,55 @@ mod tests {
             t.advance();
         }
         kv.register(&prompt, &t);
-        assert_eq!(kv.index_pages(), 0, "nothing freezes");
+        assert_eq!(kv.index_pages(), 2, "full prompt chunks freeze for int8 pools too");
+
+        // f32 pools would share 7 tokens here; int8 rounds down to 4.
         let (mut t2, shared) = kv.lease(&prompt);
-        assert_eq!(shared, 0, "identical prompt must not share int8 pages");
+        assert_eq!(shared, 4, "shared span truncates to a whole-page multiple");
+        assert_eq!(t2.pages().len(), 1);
+        assert_eq!(t2.shared_prefix_pages(), 1);
+        // Admission accounting sees the same span (probe == lease).
+        assert_eq!(kv.page_need(&req(prompt.clone(), 4)), 3 - 1);
+
+        // A prompt diverging mid-chunk-2 also shares exactly one page.
+        let other: Vec<u32> = vec![0, 1, 2, 3, 4, 5, 99, 99];
+        let (mut t3, shared) = kv.lease(&other);
+        assert_eq!(shared, 4);
+
         kv.release(&mut t);
         kv.release(&mut t2);
+        kv.release(&mut t3);
+        assert_eq!(kv.flush_index(), 2);
         assert_eq!(kv.used_pages(), 0);
+    }
+
+    #[test]
+    fn registration_freezes_int8_pages() {
+        // Registered pages are frozen artifacts: the store reports them
+        // frozen (enabling tile caching + byte-exact sharing), and a
+        // fresh reallocation after eviction thaws them.
+        let cfg = NativeConfig::named("nano").unwrap();
+        let mut kv = PagedKv::new(&cfg, 64, 4, true, KvDtype::Int8);
+        let prompt: Vec<u32> = (10..18).collect();
+        let (mut t, _) = kv.lease(&prompt);
+        for _ in 0..prompt.len() {
+            t.prepare_append(kv.alloc_mut());
+            t.advance();
+        }
+        let frozen_pages: Vec<_> = t.pages()[..2].to_vec();
+        for &p in &frozen_pages {
+            assert!(!kv.alloc_mut().store().is_frozen(p), "not frozen before registration");
+        }
+        kv.register(&prompt, &t);
+        for &p in &frozen_pages {
+            assert!(kv.alloc_mut().store().is_frozen(p), "registration freezes the page");
+        }
+        kv.release(&mut t);
+        assert_eq!(kv.flush_index(), 2);
+        // Reallocate: the page comes back thawed.
+        let p = kv.alloc_mut().alloc().unwrap();
+        assert!(!kv.alloc_mut().store().is_frozen(p));
+        kv.alloc_mut().release(p);
     }
 
     #[test]

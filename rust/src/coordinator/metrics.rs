@@ -38,6 +38,18 @@ pub struct Metrics {
     /// the dequant-overhead gauge. Because workers dequantize
     /// concurrently, this can exceed `wall_seconds`.
     pub kv_dequant_seconds: f64,
+    /// Attention q·k rows computed int8-natively (i32 dot over raw page
+    /// bytes, one scale multiply per page-head) — numerator of
+    /// [`Metrics::int8_dot_fraction`].
+    pub kv_qk_rows_int8: u64,
+    /// Attention q·k rows computed from f32 tiles (borrowed f32 pages or
+    /// dequantized quantized pages) — the fraction's other leg.
+    pub kv_qk_rows_f32: u64,
+    /// Frozen-tile cache hits: V-pass reads of a shared prefix page
+    /// served from the store's LRU instead of re-dequantizing.
+    pub kv_tile_hits: u64,
+    /// Frozen-tile cache misses (tile built and inserted).
+    pub kv_tile_misses: u64,
     /// Prefix-index flushes forced by admission pressure.
     pub prefix_flushes: u64,
 
@@ -100,11 +112,33 @@ impl Metrics {
         self.kv_dequant_seconds / self.wall_seconds
     }
 
+    /// Fraction of attention q·k rows computed at the storage dtype
+    /// (int8-native i32 dots): ~1 for int8 pools, 0 for f32 pools, 0
+    /// when nothing was recorded.
+    pub fn int8_dot_fraction(&self) -> f64 {
+        let total = self.kv_qk_rows_int8 + self.kv_qk_rows_f32;
+        if total == 0 {
+            return 0.0;
+        }
+        self.kv_qk_rows_int8 as f64 / total as f64
+    }
+
+    /// Hit rate of the frozen-tile LRU (0 when the cache never ran —
+    /// f32 pools, sharing off, or capacity 0).
+    pub fn tile_cache_hit_rate(&self) -> f64 {
+        let total = self.kv_tile_hits + self.kv_tile_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.kv_tile_hits as f64 / total as f64
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests: {}/{} done | tokens: {} | rounds: {} | wall: {:.2}s\n\
              throughput: {:.1} tok/s | latency p50/p99: {:.3}/{:.3}s | ttft p50: {:.3}s\n\
              kv: {}/{} pages peak ({:.0}% util) | {} B/token | dequant: {:.3} cpu-s\n\
+             int8 q·k: {:.0}% of dot rows | tile cache: {:.0}% hits ({}/{})\n\
              prefix hit-rate: {:.0}% ({} hits) | \
              peak active: {} | context-limit finishes: {}",
             self.requests_done,
@@ -121,6 +155,10 @@ impl Metrics {
             100.0 * self.block_utilization(),
             self.kv_bytes_per_token,
             self.kv_dequant_seconds,
+            100.0 * self.int8_dot_fraction(),
+            100.0 * self.tile_cache_hit_rate(),
+            self.kv_tile_hits,
+            self.kv_tile_hits + self.kv_tile_misses,
             100.0 * self.prefix_hit_rate(),
             self.prefix_hits,
             self.peak_active,
@@ -169,6 +207,24 @@ mod tests {
         assert_eq!(z.block_utilization(), 0.0);
         assert_eq!(z.prefix_hit_rate(), 0.0);
         assert_eq!(z.dequant_overhead(), 0.0);
+        assert_eq!(z.int8_dot_fraction(), 0.0);
+        assert_eq!(z.tile_cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn int8_attention_gauge_math_and_report() {
+        let m = Metrics {
+            kv_qk_rows_int8: 300,
+            kv_qk_rows_f32: 100,
+            kv_tile_hits: 30,
+            kv_tile_misses: 10,
+            ..Default::default()
+        };
+        assert_eq!(m.int8_dot_fraction(), 0.75);
+        assert_eq!(m.tile_cache_hit_rate(), 0.75);
+        let r = m.report();
+        assert!(r.contains("int8 q·k: 75% of dot rows"), "{r}");
+        assert!(r.contains("tile cache: 75% hits (30/40)"), "{r}");
     }
 
     #[test]

@@ -9,6 +9,20 @@
 //! batched into decode rounds, and executed on a worker pool where each
 //! worker owns its LUT scratch. Prompts whose prefix matches a
 //! previously served request skip prefill for the shared span.
+//!
+//! Invariants the whole layer is tested against:
+//!
+//! * a request's tokens are a function of the request alone — never of
+//!   batching, paging, KV dtype knobs (tile cache, sharing), or arrival
+//!   order (greedy sampling; non-greedy draws are reproducible per
+//!   request id);
+//! * admission reserves worst-case pages, so decode can never exhaust
+//!   the arena mid-round, and FIFO order is preserved (no starvation);
+//! * every page reference a sequence takes is returned at retirement —
+//!   at trace end only the prefix index holds pages;
+//! * a sequence at the context limit finishes with
+//!   [`FinishReason::ContextLimit`] instead of feeding the engine past
+//!   `seq_len`.
 
 mod batcher;
 mod kvpool;

@@ -50,6 +50,22 @@ impl SamplerConfig {
 }
 
 /// Per-sequence sampler state (one per active request).
+///
+/// ```
+/// use sherry::coordinator::{Sampler, SamplerConfig};
+///
+/// // Greedy default: temperature 0 picks the argmax deterministically.
+/// let mut sampler = Sampler::for_request(&SamplerConfig::default(), /*request_id=*/ 7);
+/// assert_eq!(sampler.sample(&[0.1, 2.0, -0.3]), 1);
+///
+/// // Non-greedy draws come from a per-request PCG stream: the same
+/// // request id replays the same tokens regardless of batching order.
+/// let cfg = SamplerConfig { temperature: 0.8, top_p: 0.9, ..SamplerConfig::default() };
+/// let logits = [0.5, 1.5, 0.2, 3.0];
+/// let mut a = Sampler::for_request(&cfg, 7);
+/// let mut b = Sampler::for_request(&cfg, 7);
+/// assert_eq!(a.sample(&logits), b.sample(&logits));
+/// ```
 pub struct Sampler {
     temperature: f32,
     top_k: usize,

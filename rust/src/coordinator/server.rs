@@ -16,15 +16,19 @@
 //! worst-case contiguous caches), and a prompt whose prefix was already
 //! served reuses the frozen KV pages of that prefix — prefill for the
 //! shared span is skipped entirely. The arena's storage dtype is the
-//! `kv_dtype` policy: f32 pages are the bit-for-bit parity baseline,
+//! `kv_dtype` policy: f32 pages are the bit-for-bit parity baseline;
 //! int8 pages (per-page-per-head scales, `PageStore`) hold the same
-//! byte budget in ~4× the pages, so quantization buys admission
-//! concurrency as well as footprint. Because batched and single-row
-//! kernels are bit-for-bit identical and shared KV rows are a
-//! deterministic function of the token prefix, a request's tokens do not
-//! depend on which sequences share its rounds, on paging, or on prefix
-//! hits. (Environment is offline, so "arrival" is simulated from the
-//! trace clock; everything downstream of arrival is the real engine.)
+//! byte budget in ~4× the pages, run the attention score pass
+//! int8-natively (i32 q·k dots over raw page bytes — the
+//! `kv_int8_dot_fraction` gauge), and share prefixes at whole-page
+//! granularity with registration-frozen scales, so quantization buys
+//! admission concurrency as well as footprint. Because batched and
+//! single-row kernels are bit-for-bit identical and shared KV pages are
+//! a deterministic function of the token prefix (byte-exact for frozen
+//! int8 pages), a request's tokens do not depend on which sequences
+//! share its rounds, on paging, on prefix hits, or on arrival order.
+//! (Environment is offline, so "arrival" is simulated from the trace
+//! clock; everything downstream of arrival is the real engine.)
 
 use std::time::Instant;
 
@@ -50,10 +54,16 @@ pub struct ServerConfig {
     /// KV page storage dtype (f32 parity baseline / int8 quantized).
     pub kv_dtype: KvDtype,
     /// Reuse frozen KV pages across requests sharing a prompt prefix.
-    /// Requires f32 pages — forced off for quantized `kv_dtype` (an int8
-    /// page's scale depends on donor rows past the shared span, so reuse
-    /// would make completions serving-order dependent; see `PagedKv`).
+    /// Works for both dtypes: f32 pools share down to a page's live
+    /// prefix; quantized pools share whole registration-frozen pages
+    /// only, which keeps reuse byte-exact and completions independent of
+    /// serving order (see `PagedKv::new`).
     pub prefix_sharing: bool,
+    /// Frozen-tile LRU capacity (tiles) for quantized pools: a shared
+    /// prefix page read by N sequences is dequantized once per cache
+    /// residency instead of N times per round. 0 disables; ignored by
+    /// f32 pools (their block reads are borrows).
+    pub tile_cache_tiles: usize,
     /// Decode sampling policy (greedy by default).
     pub sampler: SamplerConfig,
     pub workers: usize,
@@ -67,6 +77,7 @@ impl Default for ServerConfig {
             page_size: 16,
             kv_dtype: KvDtype::F32,
             prefix_sharing: true,
+            tile_cache_tiles: crate::cache::DEFAULT_TILE_CACHE_TILES,
             sampler: SamplerConfig::default(),
             workers: ThreadPool::default_size(),
         }
@@ -158,6 +169,7 @@ impl<'m> Server<'m> {
             self.cfg.prefix_sharing,
             self.cfg.kv_dtype,
         );
+        kv.set_tile_cache_capacity(self.cfg.tile_cache_tiles);
         let mut metrics = Metrics { requests_in: trace.len() as u64, ..Default::default() };
         let mut completions = Vec::new();
         let mut states: Vec<SeqState> = Vec::new();
@@ -391,6 +403,12 @@ impl<'m> Server<'m> {
         metrics.kv_bytes = kv.bytes() as u64;
         metrics.kv_bytes_per_token = kv.bytes_per_token() as u64;
         metrics.kv_dequant_seconds = kv.dequant_nanos() as f64 * 1e-9;
+        let (qk_i8, qk_f32) = kv.qk_rows();
+        metrics.kv_qk_rows_int8 = qk_i8;
+        metrics.kv_qk_rows_f32 = qk_f32;
+        let (tile_hits, tile_misses) = kv.tile_cache_stats();
+        metrics.kv_tile_hits = tile_hits;
+        metrics.kv_tile_misses = tile_misses;
         (completions, metrics)
     }
 }
@@ -637,11 +655,62 @@ mod tests {
         // Dequant gauge moves only for the quantized pool.
         assert_eq!(m_f32.kv_dequant_seconds, 0.0);
         assert!(m_i8.kv_dequant_seconds > 0.0);
+        // The score pass runs at the storage dtype: every int8 q·k row is
+        // an i32 dot over raw page bytes; f32 pools never take that path.
+        assert_eq!(m_i8.int8_dot_fraction(), 1.0, "int8 pool must dot int8-natively");
+        assert_eq!(m_f32.int8_dot_fraction(), 0.0);
+        assert!(m_f32.kv_qk_rows_f32 > 0, "f32 rows are still metered");
         // Every request still runs to its full allowance.
         for c in c_i8.iter().chain(&c_f32) {
             assert_eq!(c.tokens.len(), 5);
             assert_eq!(c.finish, super::FinishReason::Length);
         }
+    }
+
+    #[test]
+    fn int8_prefix_sharing_serves_hits_and_tile_cache_works() {
+        // Int8 pools now share prefixes (whole frozen pages): a trace
+        // with a common system prompt must record prefix hits, serve the
+        // V pass of shared pages through the frozen-tile cache, and —
+        // the exactness claim — produce the same tokens with sharing on,
+        // sharing off, and the tile cache off.
+        let m = model();
+        let s = TraceSpec {
+            n_requests: 8,
+            mean_interarrival_s: 0.0,
+            prompt_len: 24,
+            shared_prefix_len: 18,
+            max_new_tokens: 6,
+            seed: 21,
+        };
+        // max_active 2 serializes admission waves (deterministic hits).
+        let base = ServerConfig {
+            batcher: BatcherConfig { max_active: 2, token_budget: 100_000 },
+            page_size: 4,
+            kv_dtype: KvDtype::Int8,
+            ..Default::default()
+        };
+        let on = ServerConfig { prefix_sharing: true, ..base };
+        let off = ServerConfig { prefix_sharing: false, ..base };
+        let no_cache = ServerConfig { prefix_sharing: true, tile_cache_tiles: 0, ..base };
+        let (mut c_on, m_on) = serve_trace(&m, on, s);
+        let (mut c_off, m_off) = serve_trace(&m, off, s);
+        let (mut c_nc, m_nc) = serve_trace(&m, no_cache, s);
+        c_on.sort_by_key(|c| c.id);
+        c_off.sort_by_key(|c| c.id);
+        c_nc.sort_by_key(|c| c.id);
+        for ((a, b), c) in c_on.iter().zip(&c_off).zip(&c_nc) {
+            assert_eq!(a.tokens, b.tokens, "sharing changed int8 tokens for request {}", a.id);
+            assert_eq!(a.tokens, c.tokens, "tile cache changed tokens for request {}", a.id);
+        }
+        // 18 shared tokens at page_size 4 → 4 whole pages reusable.
+        assert!(m_on.prefix_hit_tokens > 0, "int8 pools must record prefix hits now");
+        assert_eq!(m_on.prefix_hit_tokens % 4, 0, "int8 spans are whole-page multiples");
+        assert_eq!(m_off.prefix_hit_tokens, 0);
+        // Shared V tiles came from the cache; disabling it works too.
+        assert!(m_on.kv_tile_hits > 0, "shared prefix pages must hit the tile cache");
+        assert_eq!(m_nc.kv_tile_hits + m_nc.kv_tile_misses, 0);
+        let _ = m_nc.tile_cache_hit_rate();
     }
 
     #[test]

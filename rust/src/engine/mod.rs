@@ -8,6 +8,16 @@
 //! has two granularities — single-token [`TernaryModel::forward_one`] and
 //! the batched [`TernaryModel::forward_batch`] the continuous batcher
 //! drives, which issues one fused LUT-GEMM per layer per decode round.
+//! Attention reads KV history through the `cache` subsystem's block
+//! views at the storage dtype: int8 pages contribute q·k scores as i32
+//! integer dots over raw page bytes, f32 pages as borrowed tiles —
+//! bit-for-bit with the contiguous pre-paging engine (DESIGN.md §4).
+//!
+//! Invariants: batched vs single-row kernels are bit-for-bit per format
+//! (`gemv` *is* `gemm_nt` at `B = 1`); decode never feeds a position at
+//! or past `seq_len` (the coordinator finishes such sequences with
+//! `ContextLimit`); and no kernel mutates weights after construction —
+//! models are `Send + Sync` and shared read-only across the pool.
 
 pub mod kernel;
 pub mod lut;

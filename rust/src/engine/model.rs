@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 
 use super::kernel::Scratch;
 use super::linear::QuantLinear;
-use crate::cache::{KvBatch, Rows};
+use crate::cache::{KBlock, KvBatch, Rows};
 use crate::pack::Format;
 use crate::tensor::{ops, Mat};
 use crate::util::{BufferPool, Pcg64, ThreadPool};
@@ -142,9 +142,12 @@ pub struct TernaryModel {
     layers: Vec<Layer>,
     norm_out: Vec<f32>,
     lm_head: QuantLinear,
-    /// Leased scratch tiles for the page-blocked attention walk (score
-    /// rows + dequantized KV blocks), reused across decode rounds.
+    /// Leased f32 scratch for the page-blocked attention walk (score
+    /// rows, dequantized KV blocks, query scales), reused across rounds.
     tiles: BufferPool,
+    /// Leased int8 scratch for per-(head, call) query quantization on
+    /// the int8-native score path — no per-call heap allocation.
+    qcodes: BufferPool<i8>,
 }
 
 impl TernaryModel {
@@ -176,6 +179,7 @@ impl TernaryModel {
             norm_out: get("norm_out").data.clone(),
             lm_head: QuantLinear::from_float(get("lm_head"), Format::Dense),
             tiles: BufferPool::new(),
+            qcodes: BufferPool::new(),
         }
     }
 
@@ -322,19 +326,20 @@ impl TernaryModel {
             }
             // Per-sequence attention over each sequence's own KV history —
             // independent across sequences, so it fans out on the pool
-            // alongside the fused linears. The walk is page-blocked: each
-            // resident page is materialized once (borrowed for f32,
-            // dequantized into a leased scratch tile for quantized
-            // stores), then every query·key dot product and value
-            // accumulation over that page runs from the tile — the same
-            // amortization gemm_nt applies to weight planes. Per-element
-            // float ops and their order are identical to the old
-            // position-at-a-time walk, preserving bit-for-bit parity for
-            // f32 storage.
+            // alongside the fused linears. The walk is page-blocked and
+            // dtype-native: the score pass consumes int8 pages as raw
+            // bytes (i32 q·k dots, one scale multiply per page-head) and
+            // f32 pages as borrowed tiles; the V pass materializes each
+            // page at most once as f32 (frozen prefix pages via the
+            // store's shared tile cache, private pages into a leased
+            // scratch tile). Per-element float ops and their order on the
+            // f32 arm are identical to the old position-at-a-time walk,
+            // preserving bit-for-bit parity for f32 storage.
             {
                 let kv_ro: &KvBatch = kv;
                 let n_heads = cfg.n_heads;
                 let tiles = &self.tiles;
+                let qpool = &self.qcodes;
                 match pool {
                     Some(pool) if b > 1 => pool.scope(|s| {
                         for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
@@ -345,10 +350,14 @@ impl TernaryModel {
                             s.spawn(move || {
                                 let mut scores = tiles.lease();
                                 let mut tile = tiles.lease();
+                                let mut q_scales = tiles.lease();
+                                let mut q_codes = qpool.lease();
                                 attention_blocked(
                                     q_row, kl, vl, t, hd, n_heads, scale, &mut scores,
-                                    &mut tile, out_row,
+                                    &mut tile, &mut q_codes, &mut q_scales, out_row,
                                 );
+                                qpool.give(q_codes);
+                                tiles.give(q_scales);
                                 tiles.give(tile);
                                 tiles.give(scores);
                             });
@@ -357,15 +366,19 @@ impl TernaryModel {
                     _ => {
                         let mut scores = tiles.lease();
                         let mut tile = tiles.lease();
+                        let mut q_scales = tiles.lease();
+                        let mut q_codes = qpool.lease();
                         for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
                             let kl = kv_ro.k_rows(li, bi);
                             let vl = kv_ro.v_rows(li, bi);
                             let q_row = &q[bi * d..(bi + 1) * d];
                             attention_blocked(
                                 q_row, kl, vl, pos[bi] + 1, hd, n_heads, scale, &mut scores,
-                                &mut tile, out_row,
+                                &mut tile, &mut q_codes, &mut q_scales, out_row,
                             );
                         }
+                        qpool.give(q_codes);
+                        tiles.give(q_scales);
                         tiles.give(tile);
                         tiles.give(scores);
                     }
@@ -424,19 +437,61 @@ impl TernaryModel {
     }
 }
 
+/// Int8-quantize one query row per head into caller buffers (leased
+/// from the model's pools — no per-call heap allocation): `codes` gets
+/// `n_heads × head_dim` symmetric round-to-nearest codes in ±127,
+/// `scales[h] = absmax(q_h) / 127` (an all-zero head keeps scale 0 and
+/// zero codes). Done once per [`attention_blocked`] call — "once per
+/// (head, round)" — and only when the K history is int8-native, so the
+/// f32 path never pays for it.
+fn quantize_query(
+    q_row: &[f32],
+    n_heads: usize,
+    hd: usize,
+    codes: &mut Vec<i8>,
+    scales: &mut Vec<f32>,
+) {
+    codes.clear();
+    codes.resize(n_heads * hd, 0);
+    scales.clear();
+    scales.resize(n_heads, 0.0);
+    for hh in 0..n_heads {
+        let h0 = hh * hd;
+        let absmax = q_row[h0..h0 + hd].iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        if absmax == 0.0 {
+            continue;
+        }
+        let s = absmax / 127.0;
+        scales[hh] = s;
+        for c in 0..hd {
+            codes[h0 + c] = (q_row[h0 + c] / s).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+}
+
 /// Page-blocked causal attention for one sequence at its current decode
 /// position, writing the `d_model`-wide output row. One shared body for
 /// the serial and pool-fanned paths of [`TernaryModel::forward_kv`].
 ///
-/// Three passes over `t` cached timesteps, each walking the history as
-/// page blocks ([`Rows::for_each_block`]): (1) every head's query·key
+/// Three passes over `t` cached timesteps: (1) every head's query·key
 /// dot products into `scores` (`n_heads × t`), (2) per-head softmax,
-/// (3) weighted-V accumulation. A page is materialized at most once per
-/// pass — borrowed for f32 storage, dequantized once into `tile` for
-/// quantized storage — instead of being re-resolved per position. Blocks
-/// arrive in ascending position order and every per-element float op
-/// matches the old position-at-a-time walk, so f32 storage (paged or
-/// contiguous) is bit-for-bit identical to the pre-blocked kernel.
+/// (3) weighted-V accumulation. The score pass walks the K history via
+/// [`Rows::for_each_kblock`], so int8 pages are consumed **at their
+/// storage dtype**: the query is quantized once per (head, call)
+/// ([`quantize_query`]) and each page contributes i32 integer dots
+/// scaled by one `q_scale · page_head_scale` product per (page, head) —
+/// the K plane is never dequantized. The V pass walks
+/// [`Rows::for_each_block`] f32 tiles (registration-frozen pages served
+/// from the store's shared LRU tile cache, private pages dequantized
+/// once into `tile`). A page is materialized at most once per pass and
+/// reused for every dot product / accumulation that touches it — the
+/// same amortization `gemm_nt` applies to weight planes.
+///
+/// f32 storage takes the [`KBlock::F32`] arm whose per-element float ops
+/// and ordering match the old position-at-a-time walk exactly, so f32
+/// pages (paged or contiguous) remain **bit-for-bit identical** to the
+/// pre-blocked kernel; the int8 fused dot is deterministic and within
+/// the error bound derived in DESIGN.md §4.
 #[allow(clippy::too_many_arguments)]
 fn attention_blocked(
     q_row: &[f32],
@@ -448,22 +503,52 @@ fn attention_blocked(
     scale: f32,
     scores: &mut Vec<f32>,
     tile: &mut Vec<f32>,
+    q_codes: &mut Vec<i8>,
+    q_scales: &mut Vec<f32>,
     out: &mut [f32],
 ) {
     let d = n_heads * hd;
     scores.clear();
     scores.resize(n_heads * t, 0.0);
-    kl.for_each_block(t, tile, |start, block, rows| {
-        for r in 0..rows {
-            let krow = &block[r * d..(r + 1) * d];
-            for hh in 0..n_heads {
-                let qh = &q_row[hh * hd..(hh + 1) * hd];
-                let kh = &krow[hh * hd..(hh + 1) * hd];
-                scores[hh * t + start + r] =
-                    qh.iter().zip(kh.iter()).map(|(x, y)| x * y).sum::<f32>() * scale;
+    // Leased query-quantization buffers; emptied here, filled lazily on
+    // the first int8 block (the f32 path never quantizes q).
+    q_codes.clear();
+    q_scales.clear();
+    let (mut native_rows, mut dequant_rows) = (0u64, 0u64);
+    kl.for_each_kblock(t, tile, |start, block, rows| match block {
+        KBlock::F32(block) => {
+            for r in 0..rows {
+                let krow = &block[r * d..(r + 1) * d];
+                for hh in 0..n_heads {
+                    let qh = &q_row[hh * hd..(hh + 1) * hd];
+                    let kh = &krow[hh * hd..(hh + 1) * hd];
+                    scores[hh * t + start + r] =
+                        qh.iter().zip(kh.iter()).map(|(x, y)| x * y).sum::<f32>() * scale;
+                }
             }
+            dequant_rows += rows as u64;
+        }
+        KBlock::I8 { data, scales } => {
+            if q_codes.is_empty() {
+                quantize_query(q_row, n_heads, hd, q_codes, q_scales);
+            }
+            for r in 0..rows {
+                let krow = &data[r * d..(r + 1) * d];
+                for hh in 0..n_heads {
+                    let qh = &q_codes[hh * hd..(hh + 1) * hd];
+                    let kh = &krow[hh * hd..(hh + 1) * hd];
+                    // |acc| ≤ 127² · head_dim ≪ i32::MAX for any real
+                    // head width; one f32 multiply per (page, head, row)
+                    // folds both scales back in.
+                    let acc: i32 =
+                        qh.iter().zip(kh.iter()).map(|(&x, &y)| x as i32 * y as i32).sum();
+                    scores[hh * t + start + r] = acc as f32 * (q_scales[hh] * scales[hh]) * scale;
+                }
+            }
+            native_rows += rows as u64;
         }
     });
+    kl.record_qk(native_rows, dequant_rows);
     for hh in 0..n_heads {
         ops::softmax_inplace(&mut scores[hh * t..(hh + 1) * t]);
     }
@@ -528,6 +613,102 @@ mod tests {
         let g2 = model.generate(&[1, 2, 3], 16, &mut c2, &mut scratch);
         assert_eq!(g1, g2);
         assert_eq!(g1.len(), 16);
+    }
+
+    #[test]
+    fn quantize_query_roundtrips_within_half_quantum() {
+        let cfg = nano();
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let mut rng = crate::util::Pcg64::seeded(41);
+        let q = rng.normal_vec(cfg.d_model);
+        let (mut codes, mut scales) = (Vec::new(), Vec::new());
+        super::quantize_query(&q, nh, hd, &mut codes, &mut scales);
+        for hh in 0..nh {
+            let s = scales[hh];
+            assert!(s > 0.0);
+            let mut saw_full_range = false;
+            for c in hh * hd..(hh + 1) * hd {
+                let back = codes[c] as f32 * s;
+                assert!(
+                    (back - q[c]).abs() <= 0.5 * s + 1e-7,
+                    "head {hh} ch {c}: {back} vs {} at scale {s}",
+                    q[c]
+                );
+                saw_full_range |= codes[c].unsigned_abs() == 127;
+            }
+            assert!(saw_full_range, "the absmax element must map to ±127");
+        }
+        // All-zero heads keep scale 0 / zero codes (dot contributes 0),
+        // and reused (leased) buffers are refilled from scratch.
+        super::quantize_query(&vec![0.0; cfg.d_model], nh, hd, &mut codes, &mut scales);
+        assert!(scales.iter().all(|&s| s == 0.0));
+        assert!(codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn int8_fused_qk_matches_dequant_scores_closely() {
+        // The fused i32 dot over raw page bytes must agree with the
+        // dequantize-then-f32 score path to within the query-quantization
+        // error: ≤ hd · 0.5·q_scale · k_absmax per dot (DESIGN.md §4) —
+        // the page bytes and scales are shared by both paths, so K-side
+        // quantization error cancels entirely.
+        let cfg = nano();
+        let d = cfg.d_model;
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let mut rng = crate::util::Pcg64::seeded(43);
+        let mut alloc =
+            crate::cache::BlockAllocator::new_with(&cfg, 4, 4, crate::cache::KvDtype::Int8);
+        let mut table = crate::cache::BlockTable::new(4);
+        for pos in 0..6usize {
+            table.prepare_append(&mut alloc);
+            let (page, slot) = table.slot_for(pos);
+            let row = rng.normal_vec(d);
+            alloc.write_row(0, page, slot, &row, &row);
+            table.advance();
+        }
+        let q = rng.normal_vec(d);
+        let (mut codes, mut q_scales) = (Vec::new(), Vec::new());
+        super::quantize_query(&q, nh, hd, &mut codes, &mut q_scales);
+        let mut tables = [&mut table];
+        let kv = KvBatch::Paged { alloc: &mut alloc, tables: &mut tables };
+        let rows = kv.k_rows(0, 0);
+        let mut scratch = Vec::new();
+        // Reference: dequantized page bytes dotted in f32.
+        let mut dequant = vec![0.0f32; nh * 6];
+        rows.for_each_block(6, &mut scratch, |start, block, n| {
+            for r in 0..n {
+                for hh in 0..nh {
+                    dequant[hh * 6 + start + r] = q[hh * hd..(hh + 1) * hd]
+                        .iter()
+                        .zip(&block[r * d + hh * hd..r * d + (hh + 1) * hd])
+                        .map(|(x, y)| x * y)
+                        .sum();
+                }
+            }
+        });
+        // Fused: i32 dots over the same bytes.
+        rows.for_each_kblock(6, &mut scratch, |start, block, n| {
+            let KBlock::I8 { data, scales } = block else { panic!("int8 store") };
+            for r in 0..n {
+                for hh in 0..nh {
+                    let acc: i32 = codes[hh * hd..(hh + 1) * hd]
+                        .iter()
+                        .zip(&data[r * d + hh * hd..r * d + (hh + 1) * hd])
+                        .map(|(&x, &y)| x as i32 * y as i32)
+                        .sum();
+                    let fused = acc as f32 * (q_scales[hh] * scales[hh]);
+                    let reference = dequant[hh * 6 + start + r];
+                    // k̂ head absmax is ≤ 127·scales[hh] by construction.
+                    let bound = hd as f32 * 0.5 * q_scales[hh] * 127.0 * scales[hh] + 1e-5;
+                    assert!(
+                        (fused - reference).abs() <= bound,
+                        "pos {} head {hh}: fused {fused} vs dequant {reference}",
+                        start + r
+                    );
+                }
+            }
+        });
+        table.release_all(&mut alloc);
     }
 
     #[test]

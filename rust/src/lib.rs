@@ -14,9 +14,25 @@
 //! * **Layer 1** — Pallas kernels (`python/compile/kernels/`) for the
 //!   quantize/matmul hot spots, checked against pure-jnp oracles.
 //!
+//! ## Module map
+//!
+//! | Module | Role |
+//! |---|---|
+//! | [`quant`] | Ternarization methods (Sherry 3:4 + baselines), λ schedules, error metrics |
+//! | [`pack`] | Weight storage formats: Sherry 1.25-bit, TL2, I2_S byte planes |
+//! | [`engine`] | `TernaryKernel` LUT-GEMM dispatch, quantized linears, the native transformer |
+//! | [`cache`] | Paged KV arena: `PageStore` dtypes, block tables, radix prefix sharing |
+//! | [`coordinator`] | Continuous batching, paged-KV leasing, sampling, serving metrics |
+//! | [`train`] / [`runtime`] | QAT driver over the AOT PJRT train-step (stubbed without `pjrt`) |
+//! | [`eval`] / [`exp`] | Task harness and paper table/figure drivers |
+//! | [`tensor`] / [`linalg`] / [`util`] | Mat/ops, thread pool, PCG RNG, property testing, bench clock |
+//! | [`cli`] | Offline `clap` stand-in for the `sherry` binary |
+//!
 //! See DESIGN.md (repository root) for the complete system inventory —
-//! including the `TernaryKernel` trait and batched LUT-GEMM tiling scheme
-//! — and the experiment index.
+//! including the `TernaryKernel` trait, the batched LUT-GEMM tiling
+//! scheme, and the paged-KV/int8-attention design (§4) — and
+//! `rust/README.md` for the build/run/bench quickstart and the metrics
+//! glossary.
 
 // The kernel/packing code deliberately uses explicit index loops: the
 // iteration order IS the numeric contract (bit-for-bit batched/single

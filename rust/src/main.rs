@@ -53,6 +53,7 @@ fn app() -> App {
                 .flag("page-size", "KV page size (positions)", Some("16"))
                 .flag("kv-dtype", "KV page storage dtype (f32|int8)", Some("f32"))
                 .flag("prefix-sharing", "reuse frozen prefix KV pages (0|1)", Some("1"))
+                .flag("tile-cache", "frozen-tile LRU tiles for int8 pools (0 = off)", Some("64"))
                 .flag("temperature", "sampling temperature (0 = greedy)", Some("0"))
                 .flag("top-k", "sample from top-k logits (0 = full vocab)", Some("0"))
                 .flag("top-p", "nucleus sampling mass (1 = off)", Some("1"))
@@ -180,6 +181,8 @@ fn main() -> Result<()> {
                 page_size: args.usize_or("page-size", 16),
                 kv_dtype,
                 prefix_sharing: args.usize_or("prefix-sharing", 1) != 0,
+                tile_cache_tiles: args
+                    .usize_or("tile-cache", sherry::cache::DEFAULT_TILE_CACHE_TILES),
                 sampler: SamplerConfig {
                     temperature: args.f64_or("temperature", 0.0) as f32,
                     top_k: args.usize_or("top-k", 0),

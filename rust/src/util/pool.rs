@@ -128,29 +128,35 @@ impl Drop for ThreadPool {
     }
 }
 
-/// Shared lending pool of f32 scratch buffers: attention workers lease a
-/// tile (score rows, dequantized KV page blocks), use it, and return it,
-/// so steady-state decode reuses the same allocations across rounds
-/// instead of re-allocating one tile per job. Capacity converges to the
-/// peak number of concurrent leases; buffers keep their grown capacity.
-#[derive(Default)]
-pub struct BufferPool {
-    bufs: Mutex<Vec<Vec<f32>>>,
+/// Shared lending pool of scratch buffers (f32 by default): attention
+/// workers lease a tile (score rows, dequantized KV page blocks,
+/// quantized-query codes), use it, and return it, so steady-state decode
+/// reuses the same allocations across rounds instead of re-allocating
+/// one buffer per job. Capacity converges to the peak number of
+/// concurrent leases; buffers keep their grown capacity.
+pub struct BufferPool<T = f32> {
+    bufs: Mutex<Vec<Vec<T>>>,
 }
 
-impl BufferPool {
+impl<T> Default for BufferPool<T> {
+    fn default() -> Self {
+        Self { bufs: Mutex::new(Vec::new()) }
+    }
+}
+
+impl<T> BufferPool<T> {
     pub fn new() -> Self {
         Self::default()
     }
 
     /// Take a buffer (empty, but with whatever capacity it grew to on a
     /// previous lease).
-    pub fn lease(&self) -> Vec<f32> {
+    pub fn lease(&self) -> Vec<T> {
         self.bufs.lock().unwrap().pop().unwrap_or_default()
     }
 
     /// Return a leased buffer for reuse.
-    pub fn give(&self, mut buf: Vec<f32>) {
+    pub fn give(&self, mut buf: Vec<T>) {
         buf.clear();
         self.bufs.lock().unwrap().push(buf);
     }

@@ -6,7 +6,9 @@
 //!    after a full trace, copy-on-write never mutates a shared page.
 
 use sherry::cache::{BlockAllocator, BlockTable, KvBatch, KvDtype, Plane, PrefixIndex};
-use sherry::coordinator::{serve_trace, BatcherConfig, ServerConfig, TraceSpec};
+use sherry::coordinator::{
+    serve_trace, BatcherConfig, Request, Server, ServerConfig, TraceSpec,
+};
 use sherry::engine::{random_weights, KvCache, NativeConfig, Scratch, TernaryModel};
 use sherry::pack::Format;
 use sherry::util::{prop, Pcg64};
@@ -499,6 +501,73 @@ fn prop_int8_roundtrip_bounded_by_page_head_scale() {
             Ok(())
         },
     );
+}
+
+/// Serving-order invariance for int8 prefix sharing (the acceptance
+/// regression): the same shared-prefix request set served in two
+/// different arrival orders must produce identical completions per
+/// request id, *with sharing engaged in both orders*.
+///
+/// Why this is the hard case: whichever request arrives first becomes
+/// the donor whose quantization trajectory freezes into the prefix
+/// index. Whole-page sharing with registration-frozen scales makes a
+/// frozen page's bytes a deterministic function of its chunk's tokens —
+/// identical no matter which request wrote it — so donor/recipient
+/// roles must not be observable in the tokens. (Partial-page sharing
+/// would break this: a prefix of a donor page is quantized at a scale
+/// grown by the donor's later rows; that is exactly what `PagedKv`
+/// forbids for quantized pools.)
+#[test]
+fn int8_prefix_sharing_is_serving_order_invariant() {
+    let m = nano_model(37, Format::Sherry);
+    let shared: Vec<u32> = (40..48).collect(); // two full pages at page_size 4
+    let mk = |id: u64, tail: &[u32]| Request {
+        id,
+        prompt: shared.iter().copied().chain(tail.iter().copied()).collect(),
+        max_new_tokens: 6,
+        arrival: 0.0,
+    };
+    let reqs =
+        [mk(0, &[1, 2, 3]), mk(1, &[7, 8, 9]), mk(2, &[1, 9, 2]), mk(3, &[5])];
+    // max_active 1 strictly serializes: arrival order IS serving order,
+    // so the two runs exercise different donor/recipient assignments.
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_active: 1, token_budget: 100_000 },
+        page_size: 4,
+        kv_dtype: KvDtype::Int8,
+        prefix_sharing: true,
+        ..Default::default()
+    };
+    let order_a: Vec<Request> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request { arrival: i as f64 * 1e-4, ..r.clone() })
+        .collect();
+    let order_b: Vec<Request> = reqs
+        .iter()
+        .rev()
+        .enumerate()
+        .map(|(i, r)| Request { arrival: i as f64 * 1e-4, ..r.clone() })
+        .collect();
+    let (mut c_a, m_a) = Server::new(&m, cfg).run(order_a);
+    let (mut c_b, m_b) = Server::new(&m, cfg).run(order_b);
+    assert_eq!(c_a.len(), reqs.len());
+    assert_eq!(c_b.len(), reqs.len());
+    c_a.sort_by_key(|c| c.id);
+    c_b.sort_by_key(|c| c.id);
+    for (a, b) in c_a.iter().zip(&c_b) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.tokens, b.tokens,
+            "request {}: completion depends on serving order",
+            a.id
+        );
+    }
+    // The invariance must not be vacuous: both orders reused the shared
+    // prefix (8 tokens, page-aligned) for every non-first request.
+    assert_eq!(m_a.prefix_hit_tokens, 3 * 8, "order A must share the frozen prefix");
+    assert_eq!(m_b.prefix_hit_tokens, 3 * 8, "order B must share the frozen prefix");
+    assert_eq!(m_a.int8_dot_fraction(), 1.0);
 }
 
 /// Full-trace refcount hygiene at the serving layer: after heavy mixed
