@@ -1,4 +1,4 @@
-//! End-to-end driver (DESIGN.md §5): proves every layer composes.
+//! End-to-end driver (DESIGN.md §6): proves every layer composes.
 //!
 //! 1. Loads the AOT train-step for the `e2e` config (6-layer, d=384
 //!    LLaMA-style QAT transformer with Sherry 3:4 + Arenas) and trains it

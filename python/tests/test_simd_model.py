@@ -1,0 +1,445 @@
+"""Behavioral model of the Rust SIMD dispatch layer's lane/tail semantics.
+
+Replays `rust/src/simd/walk.rs` (the generic vector tile walks) and the
+arch dots (`simd/avx2.rs`, `simd/neon.rs`) in numpy, against a replay of
+the scalar ground-truth kernels (`rust/src/engine/lut.rs`), and asserts
+**bit-for-bit** f32 equality — the same hard-parity contract
+`rust/tests/simd_parity.rs` enforces on the real code (DESIGN.md §5).
+
+Why this works as a model: the vector walks chunk the *batch* dimension,
+so a "register" is just the same f32 value per lane that scalar row `i`
+holds, and numpy elementwise float32 ops are per-lane IEEE-754 single
+ops — exactly what the AVX2/NEON lanes compute. Lane width is a
+parameter here (W=4 models NEON, W=8 models AVX2), and rows past the
+last full chunk fall through to the scalar replay, mirroring
+`walk::gemm_*`'s tail handling.
+
+numpy-only (no jax/hypothesis): runnable as a plain script in toolchain-
+less environments, and pytest-collectible in CI.
+"""
+
+import numpy as np
+
+F = np.float32
+
+TL2_LUT_STRIDE = 32
+TILE_SB = 16  # pack34: sign bytes per cache tile = 128 blocks
+
+
+def bits(a):
+    return np.asarray(a, dtype=F).view(np.uint32)
+
+
+def assert_bits_eq(got, want, what):
+    got, want = np.asarray(got, F), np.asarray(want, F)
+    assert got.shape == want.shape, f"{what}: shape {got.shape} vs {want.shape}"
+    if not np.array_equal(bits(got), bits(want)):
+        i = int(np.flatnonzero(bits(got).ravel() != bits(want).ravel())[0])
+        raise AssertionError(
+            f"{what}[{i}]: {got.ravel()[i]!r} vs {want.ravel()[i]!r}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# i8×i8 dot — scalar fold vs the two vector widening/fold shapes
+# ---------------------------------------------------------------------------
+
+
+def dot_scalar(a, b):
+    """Left-fold i32 sum (`simd::dot_i8_scalar`)."""
+    t = np.int32(0)
+    for x, y in zip(a, b):
+        t = np.int32(t + np.int32(x) * np.int32(y))
+    return int(t)
+
+
+def dot_avx2_model(a, b):
+    """`avx2::dot_i8`: 16 i8/iter → i16 lanes → `vpmaddwd` pairs → 8×i32
+    accumulator, horizontal sum, scalar tail."""
+    n = len(a)
+    acc = np.zeros(8, np.int32)
+    i = 0
+    while i + 16 <= n:
+        wa = a[i : i + 16].astype(np.int32)  # vpmovsxbw widening
+        wb = b[i : i + 16].astype(np.int32)
+        prod = wa * wb  # each fits i16? no — but vpmaddwd sums pairs in i32
+        madd = prod[0::2] + prod[1::2]  # 8 i32 lanes
+        acc = acc + madd.astype(np.int32)
+        i += 16
+    total = np.int32(acc.sum(dtype=np.int32))
+    while i < n:
+        total = np.int32(total + np.int32(a[i]) * np.int32(b[i]))
+        i += 1
+    return int(total)
+
+
+def dot_neon_model(a, b):
+    """`neon::dot_i8`: 16 i8/iter → two `smull` i16 halves → `sadalp`
+    pairwise-accumulate into 4×i32, `vaddvq` horizontal sum, scalar tail."""
+    n = len(a)
+    acc = np.zeros(4, np.int32)
+    i = 0
+    while i + 16 <= n:
+        prod = a[i : i + 16].astype(np.int16) * b[i : i + 16].astype(np.int16)
+        lo, hi = prod[:8].astype(np.int32), prod[8:].astype(np.int32)
+        acc = acc + (lo[0::2] + lo[1::2])  # sadalp(acc, lo)
+        acc = acc + (hi[0::2] + hi[1::2])  # sadalp(acc, hi)
+        i += 16
+    total = np.int32(acc.sum(dtype=np.int32))
+    while i < n:
+        total = np.int32(total + np.int32(a[i]) * np.int32(b[i]))
+        i += 1
+    return int(total)
+
+
+def test_dot_models_match_scalar_on_every_tail_shape():
+    rng = np.random.default_rng(7)
+    for n in [0, 1, 2, 3, 7, 8, 15, 16, 17, 31, 32, 33, 63, 64, 100, 128, 257]:
+        a = rng.integers(-128, 128, n).astype(np.int8)
+        b = rng.integers(-128, 128, n).astype(np.int8)
+        if n >= 2:  # pin the extremes into every shape
+            a[0], b[0] = -128, -128
+            a[1], b[1] = 127, -128
+        want = dot_scalar(a, b)
+        assert dot_avx2_model(a, b) == want, f"avx2 n={n}"
+        assert dot_neon_model(a, b) == want, f"neon n={n}"
+
+
+def test_dot_extreme_saturation_candidates():
+    # All-(-128)² is the max-magnitude i16 product; vpmaddwd pair sums
+    # (2·16384) and sadalp pair sums must be formed in i32, not i16 —
+    # the model would catch an i16-accumulate mistake here.
+    a = np.full(96, -128, np.int8)
+    want = dot_scalar(a, a)
+    assert want == 96 * 16384
+    assert dot_avx2_model(a, a) == want
+    assert dot_neon_model(a, a) == want
+
+
+# ---------------------------------------------------------------------------
+# Fixtures: random packed planes (kernel semantics need planes + LUTs,
+# not a faithful quantizer)
+# ---------------------------------------------------------------------------
+
+
+def pack34_planes(rng, d_in, d_out):
+    nb = d_in // 4
+    idx = rng.integers(0, 16, (d_out, nb))  # 4-bit pattern index
+    sign = rng.integers(0, 2, (d_out, nb))  # mirror bit
+    alpha = rng.normal(size=d_out).astype(F)
+    return idx, sign, alpha
+
+
+def pack34_luts(rng, d_in, batch, stride=None):
+    nb = d_in // 4
+    stride = stride or nb * 16
+    luts = rng.normal(size=(batch, stride)).astype(F)
+    return luts, stride
+
+
+def tl2_planes(rng, d_in, d_out):
+    ng = -(-d_in // 3)
+    codes = rng.integers(0, 27, (d_out, ng))  # valid 5-bit codes < 27
+    alpha = rng.normal(size=d_out).astype(F)
+    return codes, alpha
+
+
+def tl2_luts(rng, d_in, batch):
+    ng = -(-d_in // 3)
+    stride = ng * TL2_LUT_STRIDE
+    luts = rng.normal(size=(batch, stride)).astype(F)
+    # The builder zeroes padding entries 27..32 per group; model that so
+    # a walk gathering a padding lane would be caught by the zero read.
+    for g in range(ng):
+        luts[:, g * TL2_LUT_STRIDE + 27 : (g + 1) * TL2_LUT_STRIDE] = 0.0
+    return luts, stride
+
+
+def i2s_planes(rng, d_in, d_out):
+    mult = rng.integers(-1, 2, (d_out, d_in)).astype(F)  # ternary decode
+    alpha = rng.normal(size=d_out).astype(F)
+    return mult, alpha
+
+
+# ---------------------------------------------------------------------------
+# Scalar replays (`engine::lut`, statement for statement)
+# ---------------------------------------------------------------------------
+
+
+def scalar_pack34(idx, sign, alpha, luts, stride, batch, j0, j1):
+    nb = idx.shape[1]
+    w = j1 - j0
+    full = nb // 8
+    out = np.zeros((batch, w), F)
+    sb0 = 0
+    while sb0 < full:  # cache tiles of TILE_SB sign bytes
+        sb1 = min(sb0 + TILE_SB, full)
+        for jj, j in enumerate(range(j0, j1)):
+            acc0 = np.zeros(batch, F)
+            acc1 = np.zeros(batch, F)
+            for sb in range(sb0, sb1):
+                for k in range(4):
+                    b0 = sb * 8 + 2 * k
+                    o0 = b0 * 16 + idx[j, b0]
+                    o1 = (b0 + 1) * 16 + idx[j, b0 + 1]
+                    v0 = np.where(sign[j, b0], -luts[:, o0], luts[:, o0])
+                    v1 = np.where(sign[j, b0 + 1], -luts[:, o1], luts[:, o1])
+                    acc0 = acc0 + v0.astype(F)  # two interleaved accumulators
+                    acc1 = acc1 + v1.astype(F)
+            out[:, jj] = out[:, jj] + (acc0 + acc1)
+        sb0 = sb1
+    for jj, j in enumerate(range(j0, j1)):  # tail blocks + α
+        a = out[:, jj]
+        for b in range(full * 8, nb):
+            v = luts[:, b * 16 + idx[j, b]]
+            a = a + np.where(sign[j, b], -v, v).astype(F)
+        out[:, jj] = a * alpha[j]
+    return out
+
+
+def scalar_tl2(codes, alpha, luts, stride, batch, j0, j1):
+    ng = codes.shape[1]
+    w = j1 - j0
+    out = np.zeros((batch, w), F)
+    for jj, j in enumerate(range(j0, j1)):
+        acc = np.zeros(batch, F)
+        for g in range(ng):
+            acc = acc + luts[:, g * TL2_LUT_STRIDE + codes[j, g]]
+        out[:, jj] = acc * alpha[j]
+    return out
+
+
+def scalar_i2s(mult, alpha, xs, batch, j0, j1):
+    d_in = mult.shape[1]
+    w = j1 - j0
+    pairs = (d_in // 4) // 2
+    out = np.zeros((batch, w), F)
+    for jj, j in enumerate(range(j0, j1)):
+        acc0 = np.zeros(batch, F)
+        acc1 = np.zeros(batch, F)
+        for bp in range(pairs):
+            xo = bp * 8
+            # left-to-right chain: ((m0x0 + m1x1) + m2x2) + m3x3
+            t0 = mult[j, xo] * xs[:, xo]
+            t0 = (t0 + mult[j, xo + 1] * xs[:, xo + 1]).astype(F)
+            t0 = (t0 + mult[j, xo + 2] * xs[:, xo + 2]).astype(F)
+            t0 = (t0 + mult[j, xo + 3] * xs[:, xo + 3]).astype(F)
+            t1 = mult[j, xo + 4] * xs[:, xo + 4]
+            t1 = (t1 + mult[j, xo + 5] * xs[:, xo + 5]).astype(F)
+            t1 = (t1 + mult[j, xo + 6] * xs[:, xo + 6]).astype(F)
+            t1 = (t1 + mult[j, xo + 7] * xs[:, xo + 7]).astype(F)
+            acc0 = acc0 + t0
+            acc1 = acc1 + t1
+        for i in range(pairs * 8, d_in):  # element tail into acc0 only
+            acc0 = acc0 + (mult[j, i] * xs[:, i]).astype(F)
+        out[:, jj] = (acc0 + acc1) * alpha[j]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Vector walk replays (`simd::walk`): W-row chunks + scalar row tail.
+# A lane vector is a shape-(W,) float32 array; elementwise numpy ops are
+# the per-lane IEEE single ops the intrinsics perform.
+# ---------------------------------------------------------------------------
+
+
+def walk_pack34(W, idx, sign, alpha, luts, stride, batch, j0, j1):
+    w = j1 - j0
+    out = np.zeros((batch, w), F)
+    r0 = 0
+    while r0 + W <= batch:
+        rows = luts[r0 : r0 + W]
+        chunk = out[r0 : r0 + W]
+        nb = idx.shape[1]
+        full = nb // 8
+        sb0 = 0
+        while sb0 < full:
+            sb1 = min(sb0 + TILE_SB, full)
+            for jj, j in enumerate(range(j0, j1)):
+                acc0 = np.zeros(W, F)  # L::zero()
+                acc1 = np.zeros(W, F)
+                for sb in range(sb0, sb1):
+                    for k in range(4):
+                        b0 = sb * 8 + 2 * k
+                        o0 = b0 * 16 + idx[j, b0]
+                        o1 = (b0 + 1) * 16 + idx[j, b0 + 1]
+                        g0 = rows[:, o0]  # L::gather(base, stride, o0)
+                        g1 = rows[:, o1]
+                        if sign[j, b0]:  # L::xor_sign
+                            g0 = -g0
+                        if sign[j, b0 + 1]:
+                            g1 = -g1
+                        acc0 = acc0 + g0  # L::add
+                        acc1 = acc1 + g1
+                # store + the same two scalar adds per lane
+                chunk[:, jj] = chunk[:, jj] + (acc0 + acc1)
+            sb0 = sb1
+        for jj, j in enumerate(range(j0, j1)):  # exact scalar tail replica
+            a = chunk[:, jj]
+            for b in range(full * 8, nb):
+                v = rows[:, b * 16 + idx[j, b]]
+                a = a + np.where(sign[j, b], -v, v).astype(F)
+            chunk[:, jj] = a * alpha[j]
+        r0 += W
+    if r0 < batch:  # row tail → scalar kernel on the sliced region
+        out[r0:] = scalar_pack34(idx, sign, alpha, luts[r0:], stride, batch - r0, j0, j1)
+    return out
+
+
+def walk_tl2(W, codes, alpha, luts, stride, batch, j0, j1):
+    w = j1 - j0
+    ng = codes.shape[1]
+    out = np.zeros((batch, w), F)
+    r0 = 0
+    while r0 + W <= batch:
+        rows = luts[r0 : r0 + W]
+        for jj, j in enumerate(range(j0, j1)):
+            acc = np.zeros(W, F)
+            for g in range(ng):  # code extracted once, shared across lanes
+                acc = acc + rows[:, g * TL2_LUT_STRIDE + codes[j, g]]
+            out[r0 : r0 + W, jj] = acc * alpha[j]
+        r0 += W
+    if r0 < batch:
+        out[r0:] = scalar_tl2(codes, alpha, luts[r0:], stride, batch - r0, j0, j1)
+    return out
+
+
+def walk_i2s(W, mult, alpha, xs, batch, j0, j1):
+    d_in = mult.shape[1]
+    w = j1 - j0
+    pairs = (d_in // 4) // 2
+    out = np.zeros((batch, w), F)
+    r0 = 0
+    while r0 + W <= batch:
+        rows = xs[r0 : r0 + W]
+        for jj, j in enumerate(range(j0, j1)):
+            acc0 = np.zeros(W, F)
+            acc1 = np.zeros(W, F)
+            for bp in range(pairs):
+                xo = bp * 8
+                # splat(m)·gather(x) in the same nested-add chain as walk.rs
+                t0 = (F(mult[j, xo]) * rows[:, xo]).astype(F)
+                t0 = (t0 + F(mult[j, xo + 1]) * rows[:, xo + 1]).astype(F)
+                t0 = (t0 + F(mult[j, xo + 2]) * rows[:, xo + 2]).astype(F)
+                t0 = (t0 + F(mult[j, xo + 3]) * rows[:, xo + 3]).astype(F)
+                t1 = (F(mult[j, xo + 4]) * rows[:, xo + 4]).astype(F)
+                t1 = (t1 + F(mult[j, xo + 5]) * rows[:, xo + 5]).astype(F)
+                t1 = (t1 + F(mult[j, xo + 6]) * rows[:, xo + 6]).astype(F)
+                t1 = (t1 + F(mult[j, xo + 7]) * rows[:, xo + 7]).astype(F)
+                acc0 = acc0 + t0
+                acc1 = acc1 + t1
+            for i in range(pairs * 8, d_in):
+                acc0 = acc0 + (F(mult[j, i]) * rows[:, i]).astype(F)
+            out[r0 : r0 + W, jj] = (acc0 + acc1) * alpha[j]
+        r0 += W
+    if r0 < batch:
+        out[r0:] = scalar_i2s(mult, alpha, xs[r0:], batch - r0, j0, j1)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Parity sweeps: both lane widths × odd tails × batch shapes × windows
+# ---------------------------------------------------------------------------
+
+BATCHES = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 16, 17]
+
+
+def test_pack34_walk_parity():
+    rng = np.random.default_rng(11)
+    # nb ∈ {1, 5, 8, 9, 33}: sub-sign-byte, odd, exact, one-off, >TILE_SB·2
+    for d_in in [4, 20, 32, 36, 132]:
+        idx, sign, alpha = pack34_planes(rng, d_in, 7)
+        for batch in BATCHES:
+            luts, stride = pack34_luts(rng, d_in, batch)
+            want = scalar_pack34(idx, sign, alpha, luts, stride, batch, 0, 7)
+            for W in (4, 8):
+                got = walk_pack34(W, idx, sign, alpha, luts, stride, batch, 0, 7)
+                assert_bits_eq(got, want, f"pack34 d_in={d_in} b={batch} W={W}")
+
+
+def test_tl2_walk_parity():
+    rng = np.random.default_rng(13)
+    for d_in in [3, 5, 7, 96, 97, 98]:  # every d_in % 3 residue
+        codes, alpha = tl2_planes(rng, d_in, 5)
+        for batch in BATCHES:
+            luts, stride = tl2_luts(rng, d_in, batch)
+            want = scalar_tl2(codes, alpha, luts, stride, batch, 0, 5)
+            for W in (4, 8):
+                got = walk_tl2(W, codes, alpha, luts, stride, batch, 0, 5)
+                assert_bits_eq(got, want, f"tl2 d_in={d_in} b={batch} W={W}")
+
+
+def test_i2s_walk_parity():
+    rng = np.random.default_rng(17)
+    for d_in in [4, 7, 8, 9, 11, 100, 101]:  # every d_in % 4 residue ± pair tails
+        mult, alpha = i2s_planes(rng, d_in, 6)
+        for batch in BATCHES:
+            xs = rng.normal(size=(batch, d_in)).astype(F)
+            want = scalar_i2s(mult, alpha, xs, batch, 0, 6)
+            for W in (4, 8):
+                got = walk_i2s(W, mult, alpha, xs, batch, 0, 6)
+                assert_bits_eq(got, want, f"i2s d_in={d_in} b={batch} W={W}")
+
+
+def test_column_window_parity():
+    rng = np.random.default_rng(19)
+    d_in, d_out, batch = 32, 11, 9
+    idx, sign, alpha = pack34_planes(rng, d_in, d_out)
+    luts, stride = pack34_luts(rng, d_in, batch)
+    codes, alpha_t = tl2_planes(rng, d_in, d_out)
+    luts_t, stride_t = tl2_luts(rng, d_in, batch)
+    mult, alpha_i = i2s_planes(rng, d_in, d_out)
+    xs = rng.normal(size=(batch, d_in)).astype(F)
+    for j0, j1 in [(0, 11), (0, 1), (3, 8), (10, 11), (5, 5)]:
+        for W in (4, 8):
+            assert_bits_eq(
+                walk_pack34(W, idx, sign, alpha, luts, stride, batch, j0, j1),
+                scalar_pack34(idx, sign, alpha, luts, stride, batch, j0, j1),
+                f"pack34 window [{j0},{j1}) W={W}",
+            )
+            assert_bits_eq(
+                walk_tl2(W, codes, alpha_t, luts_t, stride_t, batch, j0, j1),
+                scalar_tl2(codes, alpha_t, luts_t, stride_t, batch, j0, j1),
+                f"tl2 window [{j0},{j1}) W={W}",
+            )
+            assert_bits_eq(
+                walk_i2s(W, mult, alpha_i, xs, batch, j0, j1),
+                scalar_i2s(mult, alpha_i, xs, batch, j0, j1),
+                f"i2s window [{j0},{j1}) W={W}",
+            )
+
+
+def test_reassociation_would_be_caught():
+    # Sanity check that bitwise assertions have teeth: summing a LUT walk
+    # in a different association order must NOT be bit-identical for some
+    # fixture (f32 addition is not associative). If this ever passes for
+    # all fixtures, the harness itself is broken.
+    rng = np.random.default_rng(23)
+    d_in, d_out, batch = 96, 5, 8
+    codes, alpha = tl2_planes(rng, d_in, d_out)
+    luts, stride = tl2_luts(rng, d_in, batch)
+    want = scalar_tl2(codes, alpha, luts, stride, batch, 0, d_out)
+    ng = codes.shape[1]
+    reassoc = np.zeros((batch, d_out), F)
+    for jj in range(d_out):
+        # pairwise tree-sum instead of scalar's left fold
+        terms = np.stack(
+            [luts[:, g * TL2_LUT_STRIDE + codes[jj, g]] for g in range(ng)]
+        )
+        while terms.shape[0] > 1:
+            if terms.shape[0] % 2:
+                terms = np.concatenate([terms, np.zeros((1, batch), F)])
+            terms = (terms[0::2] + terms[1::2]).astype(F)
+        reassoc[:, jj] = terms[0] * alpha[jj]
+    assert not np.array_equal(bits(reassoc), bits(want)), (
+        "tree-sum was bit-identical to the left fold — the parity "
+        "assertions would not detect reassociation"
+    )
+
+
+if __name__ == "__main__":
+    fns = [v for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for fn in fns:
+        fn()
+        print(f"ok {fn.__name__}")
+    print(f"{len(fns)} behavioral checks passed")

@@ -1,7 +1,10 @@
 //! Kernel microbench: per-format LUT GEMV across layer widths — the §Perf
 //! workhorse (EXPERIMENTS.md §Perf before/after numbers come from here) —
 //! plus the batched LUT-GEMM sweep over B ∈ {1, 4, 16, 64} that tracks
-//! the continuous-batching win (written to `BENCH_batched_gemm.json`).
+//! the continuous-batching win (written to `BENCH_batched_gemm.json`),
+//! plus the scalar-vs-vector kernel sweep (`BENCH_simd_kernels.json`)
+//! comparing the runtime-dispatched SIMD walks against forced scalar.
+//! Every JSON record carries the ISA the measurement dispatched through.
 //!
 //! Run: `cargo bench --bench gemv_kernels`
 
@@ -9,12 +12,15 @@ use sherry::engine::lut::{self, TL2_LUT_STRIDE};
 use sherry::engine::{Scratch, TernaryKernel};
 use sherry::pack::{Packed34, PackedI2S, PackedTl2};
 use sherry::quant::{quantize, Granularity, Method};
+use sherry::simd::{self, Isa};
 use sherry::tensor::{gemv_f32, Mat};
 use sherry::util::{bench::bench, Pcg64, ThreadPool};
 
 fn main() {
+    println!("[bench] kernel isa: {}", simd::active().name());
     gemv_table();
     batched_gemm_sweep();
+    simd_kernel_sweep();
 }
 
 fn gemv_table() {
@@ -95,7 +101,8 @@ fn batched_gemm_sweep() {
         ("i2_s", Box::new(PackedI2S::from_ternary(&qd))),
     ];
 
-    println!("\n### Batched LUT-GEMM ({d_in}x{d_out}, {} workers)\n", pool.size());
+    let isa = simd::active().name();
+    println!("\n### Batched LUT-GEMM ({d_in}x{d_out}, {} workers, isa {isa})\n", pool.size());
     println!("| kernel | B | fused µs/tok | B×gemv µs/tok | speedup | Gweights/s |");
     println!("|---|---|---|---|---|---|");
     let n = (d_in * d_out) as f64;
@@ -127,7 +134,8 @@ fn batched_gemm_sweep() {
                 n / fused_tok / 1e9,
             );
             records.push(format!(
-                "    {{\"kernel\": \"{name}\", \"batch\": {b}, \"d_in\": {d_in}, \"d_out\": {d_out}, \
+                "    {{\"kernel\": \"{name}\", \"isa\": \"{isa}\", \"batch\": {b}, \
+                 \"d_in\": {d_in}, \"d_out\": {d_out}, \
                  \"fused_us_per_tok\": {:.3}, \"gemv_us_per_tok\": {:.3}, \"speedup\": {:.4}, \
                  \"gweights_per_s\": {:.4}}}",
                 fused_tok * 1e6,
@@ -139,6 +147,118 @@ fn batched_gemm_sweep() {
     }
     let json = format!("{{\n  \"bench\": \"batched_gemm\",\n  \"records\": [\n{}\n  ]\n}}\n", records.join(",\n"));
     let path = "BENCH_batched_gemm.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("\n[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}
+
+/// Scalar vs vector, same work: the three LUT-GEMM walks through
+/// `simd::gemm_*_with` at forced-scalar and at the auto-detected ISA,
+/// plus the i8×i8 attention dot, over B ∈ {1, 4, 16, 64}. Emits
+/// `BENCH_simd_kernels.json` — the scalar-vs-vector baseline the
+/// dispatch layer is accountable to. On a scalar-only host both arms run
+/// the same code and the speedup column reads ~1.0.
+fn simd_kernel_sweep() {
+    let (d_in, d_out) = (3200usize, 3200usize);
+    let batches = [1usize, 4, 16, 64];
+    let vec_isa = Isa::detect();
+    let mut rng = Pcg64::seeded(17);
+    let w = Mat::randn(&mut rng, d_in, d_out, 0.02);
+    let qs = quantize(&w, Method::Sherry34, Granularity::PerChannel);
+    let qd = quantize(&w, Method::AbsMean, Granularity::PerChannel);
+    let p34 = Packed34::from_ternary(&qs);
+    let ptl2 = PackedTl2::from_ternary(&qd);
+    let pi2s = PackedI2S::from_ternary(&qd);
+    let stride34 = (d_in / 4) * 16;
+    let stride_tl2 = d_in.div_ceil(3) * TL2_LUT_STRIDE;
+
+    println!("\n### SIMD kernel sweep ({d_in}x{d_out}, scalar vs {})\n", vec_isa.name());
+    println!("| kernel | B | scalar µs/tok | {} µs/tok | speedup |", vec_isa.name());
+    println!("|---|---|---|---|---|");
+    let mut records = Vec::new();
+    let mut push = |kernel: &str, b: usize, scalar_s: f64, vec_s: f64| {
+        let (sc_tok, v_tok) = (scalar_s / b as f64, vec_s / b as f64);
+        println!(
+            "| {kernel} | {b} | {:.1} | {:.1} | {:.2}x |",
+            sc_tok * 1e6,
+            v_tok * 1e6,
+            sc_tok / v_tok
+        );
+        records.push(format!(
+            "    {{\"kernel\": \"{kernel}\", \"isa\": \"{}\", \"batch\": {b}, \
+             \"scalar_us_per_tok\": {:.3}, \"vector_us_per_tok\": {:.3}, \"speedup\": {:.4}}}",
+            vec_isa.name(),
+            sc_tok * 1e6,
+            v_tok * 1e6,
+            sc_tok / v_tok,
+        ));
+    };
+    for &b in &batches {
+        let xs = rng.normal_vec(b * d_in);
+        let mut ys = vec![0.0f32; b * d_out];
+
+        let mut luts = vec![0.0f32; b * stride34];
+        for bi in 0..b {
+            lut::build_luts34(&xs[bi * d_in..(bi + 1) * d_in], &mut luts[bi * stride34..(bi + 1) * stride34]);
+        }
+        let sc = bench("p34-scalar", 1, 7, || {
+            simd::gemm_pack34_preluts_with(Isa::Scalar, &p34, &luts, stride34, b, 0, d_out, &mut ys);
+            std::hint::black_box(&ys);
+        });
+        let vc = bench("p34-vec", 1, 7, || {
+            simd::gemm_pack34_preluts_with(vec_isa, &p34, &luts, stride34, b, 0, d_out, &mut ys);
+            std::hint::black_box(&ys);
+        });
+        push("sherry", b, sc.median_s, vc.median_s);
+
+        let mut luts = vec![0.0f32; b * stride_tl2];
+        for bi in 0..b {
+            lut::build_luts_tl2(&xs[bi * d_in..(bi + 1) * d_in], &mut luts[bi * stride_tl2..(bi + 1) * stride_tl2]);
+        }
+        let sc = bench("tl2-scalar", 1, 7, || {
+            simd::gemm_tl2_preluts_with(Isa::Scalar, &ptl2, &luts, stride_tl2, b, 0, d_out, &mut ys);
+            std::hint::black_box(&ys);
+        });
+        let vc = bench("tl2-vec", 1, 7, || {
+            simd::gemm_tl2_preluts_with(vec_isa, &ptl2, &luts, stride_tl2, b, 0, d_out, &mut ys);
+            std::hint::black_box(&ys);
+        });
+        push("tl2", b, sc.median_s, vc.median_s);
+
+        let sc = bench("i2s-scalar", 1, 7, || {
+            simd::gemm_i2s_with(Isa::Scalar, &pi2s, &xs, b, 0, d_out, &mut ys);
+            std::hint::black_box(&ys);
+        });
+        let vc = bench("i2s-vec", 1, 7, || {
+            simd::gemm_i2s_with(vec_isa, &pi2s, &xs, b, 0, d_out, &mut ys);
+            std::hint::black_box(&ys);
+        });
+        push("i2_s", b, sc.median_s, vc.median_s);
+    }
+    // The attention-side i8×i8 dot (per-row granularity, hd=100 as in
+    // bench3b heads), amortized over a simulated 4096-row score pass.
+    let hd = 100usize;
+    let rows = 4096usize;
+    let qc: Vec<i8> = (0..hd).map(|i| ((i * 37 + 11) % 255) as i8).collect();
+    let kc: Vec<i8> = (0..rows * hd).map(|i| ((i * 91 + 3) % 255) as i8).collect();
+    let mut acc = 0i64;
+    let sc = bench("dot-scalar", 1, 7, || {
+        for r in 0..rows {
+            acc += simd::dot_i8_with(Isa::Scalar, &qc, &kc[r * hd..(r + 1) * hd]) as i64;
+        }
+        std::hint::black_box(acc);
+    });
+    let vc = bench("dot-vec", 1, 7, || {
+        for r in 0..rows {
+            acc += simd::dot_i8_with(vec_isa, &qc, &kc[r * hd..(r + 1) * hd]) as i64;
+        }
+        std::hint::black_box(acc);
+    });
+    push("dot_i8", rows, sc.median_s, vc.median_s);
+
+    let json = format!("{{\n  \"bench\": \"simd_kernels\",\n  \"records\": [\n{}\n  ]\n}}\n", records.join(",\n"));
+    let path = "BENCH_simd_kernels.json";
     match std::fs::write(path, &json) {
         Ok(()) => println!("\n[bench] wrote {path}"),
         Err(e) => eprintln!("[bench] could not write {path}: {e}"),

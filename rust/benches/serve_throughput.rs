@@ -1,6 +1,6 @@
 //! Serving-loop throughput: coordinator overhead on top of the engine
 //! (batching, paged KV leasing, prefix sharing, scheduling). L3 must not
-//! be the bottleneck — DESIGN.md §7.
+//! be the bottleneck — DESIGN.md §8.
 //!
 //! Three tables:
 //! 1. Serving vs raw single-stream engine (coordinator overhead).
@@ -296,7 +296,7 @@ fn int8_attn_sweep(model: &TernaryModel) {
              \"int8_dot_fraction\": {:.4}, \"tile_cache_hit_rate\": {:.4}, \
              \"tile_hits\": {}, \"tile_misses\": {}, \"prefix_hit_rate\": {:.4}, \
              \"dequant_seconds\": {:.6}, \"dequant_overhead\": {:.5}, \
-             \"peak_active\": {}, \"ttft_p50_s\": {:.5}}}",
+             \"peak_active\": {}, \"ttft_p50_s\": {:.5}, \"isa\": \"{}\"}}",
             dtype.name(),
             m.throughput_tps(),
             m.int8_dot_fraction(),
@@ -308,6 +308,7 @@ fn int8_attn_sweep(model: &TernaryModel) {
             m.dequant_overhead(),
             m.peak_active,
             m.ttft_p50(),
+            m.kernel_isa,
         ));
     }
     println!(

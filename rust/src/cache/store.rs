@@ -38,8 +38,8 @@
 //! byte-exact and serving-order independent — see DESIGN.md §4.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, RwLock};
 use std::time::Instant;
 
 use crate::engine::NativeConfig;
@@ -348,21 +348,55 @@ impl PageStore for F32Store {
 /// a few MiB even at bench3b shapes. 0 disables the cache.
 pub const DEFAULT_TILE_CACHE_TILES: usize = 64;
 
+/// Lock shards in the frozen-tile cache. Shared prefix pages are the hot
+/// case — every sequence in a round hits the same few tiles — so the
+/// point is less spreading *keys* than making hits lock-free-ish: a hit
+/// takes a shard **read** lock plus one atomic tick store, so concurrent
+/// attention workers hammering one hot page no longer serialize the way
+/// they did on the old global `Mutex<HashMap>`.
+const TILE_SHARDS: usize = 8;
+
+/// One resident tile: the dequantized page plus its last-use tick. The
+/// tick is atomic so `get` can refresh it under a shard *read* lock.
+struct TileEntry {
+    last: AtomicU64,
+    tile: Arc<[f32]>,
+}
+
 /// Shared LRU cache of dequantized full-page f32 tiles for *frozen*
 /// pages. Frozen pages are immutable (bytes and scales), so a cached
 /// tile stays valid until the page is freed — `reset_page` invalidates.
 /// Concurrent misses on the same page may dequantize twice; both produce
 /// identical tiles (frozen bytes, deterministic dequant), so the race is
-/// benign and the build runs outside the lock.
+/// benign and the build runs outside any lock.
+///
+/// The map is sharded by key ([`TILE_SHARDS`]); hits only ever take one
+/// shard's read lock. Eviction preserves **exact global LRU** (the same
+/// victim the single-map scan picked): residency is tracked in a global
+/// `len` counter and the evictor min-scans every shard for the oldest
+/// tick — cap is tens of tiles, so the scan stays cheap, and it only
+/// runs on inserts (misses), never on the hit path.
 struct TileCache {
     /// Max resident tiles; 0 = disabled.
     cap: usize,
-    /// Monotone use-clock for LRU ordering.
+    /// Monotone use-clock for LRU ordering (global across shards).
     tick: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
-    /// (plane, layer, page) → (last-use tick, full-page tile).
-    map: Mutex<HashMap<(Plane, u32, PageId), (u64, Arc<[f32]>)>>,
+    /// Resident tiles across all shards.
+    len: AtomicUsize,
+    /// (plane, layer, page) → entry, sharded by [`shard_of`].
+    shards: [RwLock<HashMap<(Plane, u32, PageId), TileEntry>>; TILE_SHARDS],
+}
+
+/// Deterministic key → shard mix (page dominates: distinct hot pages land
+/// on distinct locks; plane/layer separate a page's K/V and layer tiles).
+fn shard_of(key: &(Plane, u32, PageId)) -> usize {
+    let plane = matches!(key.0, Plane::V) as usize;
+    (key.2 as usize)
+        .wrapping_add((key.1 as usize).wrapping_mul(31))
+        .wrapping_add(plane.wrapping_mul(17))
+        % TILE_SHARDS
 }
 
 impl TileCache {
@@ -372,32 +406,57 @@ impl TileCache {
             tick: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
-            map: Mutex::new(HashMap::new()),
+            len: AtomicUsize::new(0),
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
         }
     }
 
     fn get(&self, key: (Plane, u32, PageId)) -> Option<Arc<[f32]>> {
-        let mut map = self.map.lock().unwrap();
-        if let Some((last, tile)) = map.get_mut(&key) {
-            *last = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
+        let shard = self.shards[shard_of(&key)].read().unwrap();
+        if let Some(e) = shard.get(&key) {
+            e.last.store(self.tick.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Some(Arc::clone(tile));
+            return Some(Arc::clone(&e.tile));
         }
         None
     }
 
     fn insert(&self, key: (Plane, u32, PageId), tile: Arc<[f32]>) {
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let mut map = self.map.lock().unwrap();
         let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
-        map.insert(key, (now, tile));
-        while map.len() > self.cap {
-            // cap is small (tens); a linear min-scan beats a heap here.
-            let lru = map.iter().min_by_key(|(_, (last, _))| *last).map(|(k, _)| *k);
-            match lru {
-                Some(k) => map.remove(&k),
-                None => break,
-            };
+        {
+            let mut shard = self.shards[shard_of(&key)].write().unwrap();
+            if shard.insert(key, TileEntry { last: AtomicU64::new(now), tile }).is_none() {
+                self.len.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        // Evict past capacity: global min-tick scan across shards (exact
+        // LRU, same victim as the pre-sharding single-map scan).
+        while self.len.load(Ordering::Relaxed) > self.cap {
+            let mut victim: Option<((Plane, u32, PageId), u64)> = None;
+            for s in &self.shards {
+                let shard = s.read().unwrap();
+                for (k, e) in shard.iter() {
+                    let last = e.last.load(Ordering::Relaxed);
+                    let older = match victim {
+                        None => true,
+                        Some((_, vt)) => last < vt,
+                    };
+                    if older {
+                        victim = Some((*k, last));
+                    }
+                }
+            }
+            let Some((vk, vt)) = victim else { break };
+            let mut shard = self.shards[shard_of(&vk)].write().unwrap();
+            // Re-check under the write lock: a concurrent hit may have
+            // refreshed the victim since the scan — skip it and rescan.
+            if let Some(e) = shard.get(&vk) {
+                if e.last.load(Ordering::Relaxed) == vt {
+                    shard.remove(&vk);
+                    self.len.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
         }
     }
 
@@ -406,7 +465,12 @@ impl TileCache {
         if self.cap == 0 {
             return;
         }
-        self.map.lock().unwrap().retain(|&(_, _, page), _| page != p);
+        for s in &self.shards {
+            let mut shard = s.write().unwrap();
+            let before = shard.len();
+            shard.retain(|&(_, _, page), _| page != p);
+            self.len.fetch_sub(before - shard.len(), Ordering::Relaxed);
+        }
     }
 
     fn stats(&self) -> (u64, u64) {
@@ -911,6 +975,52 @@ mod tests {
         // Capacity 0 disables caching entirely.
         st.set_tile_cache_capacity(0);
         assert!(st.frozen_tile(Plane::K, 0, 2).is_none());
+    }
+
+    #[test]
+    fn tile_cache_concurrent_hits_on_hot_page_stay_coherent() {
+        // The sharded-lock regression test: many workers hammering the
+        // same hot frozen page (the shared-prefix serving pattern) must
+        // all see the identical tile, and the hit/miss accounting must
+        // balance the access count exactly.
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = Int8Store::new(&cfg, 4, 2);
+        let mut rng = Pcg64::seeded(29);
+        for p in 0..4u32 {
+            st.reset_page(p);
+            for s in 0..2 {
+                let row = rng.normal_vec(d);
+                st.write_row(0, p, s, &row, &row);
+            }
+            st.freeze_page(p);
+        }
+        let reference: Vec<Arc<[f32]>> =
+            (0..4u32).map(|p| st.frozen_tile(Plane::K, 0, p).unwrap()).collect();
+        let (hits0, misses0) = st.tile_cache_stats();
+        assert_eq!(misses0, 4);
+
+        let pool = crate::util::ThreadPool::new(8);
+        const ACCESSES: usize = 64;
+        pool.scope(|s| {
+            for i in 0..ACCESSES {
+                let st = &st;
+                let reference = &reference;
+                s.spawn(move || {
+                    // Page 0 is the hot one; a few accesses spread out.
+                    let p = if i % 8 == 0 { (i / 8) as u32 % 4 } else { 0 };
+                    let tile = st.frozen_tile(Plane::K, 0, p).unwrap();
+                    assert_eq!(&tile[..], &reference[p as usize][..]);
+                });
+            }
+        });
+        let (hits, misses) = st.tile_cache_stats();
+        assert_eq!(
+            hits + misses,
+            hits0 + misses0 + ACCESSES as u64,
+            "every access is counted exactly once"
+        );
+        assert_eq!(misses, 4, "all four tiles fit the default capacity: hammering never misses");
     }
 
     #[test]

@@ -52,6 +52,10 @@ pub struct Metrics {
     pub kv_tile_misses: u64,
     /// Prefix-index flushes forced by admission pressure.
     pub prefix_flushes: u64,
+    /// Kernel ISA the run dispatched through (`simd::active().name()`:
+    /// "scalar" | "avx2" | "neon"; empty when never recorded) — lets
+    /// benches and reports attribute numbers to the vector path that ran.
+    pub kernel_isa: String,
 
     // --- prefix sharing / concurrency gauges ---
     /// Prompt tokens across admitted requests.
@@ -138,7 +142,7 @@ impl Metrics {
             "requests: {}/{} done | tokens: {} | rounds: {} | wall: {:.2}s\n\
              throughput: {:.1} tok/s | latency p50/p99: {:.3}/{:.3}s | ttft p50: {:.3}s\n\
              kv: {}/{} pages peak ({:.0}% util) | {} B/token | dequant: {:.3} cpu-s\n\
-             int8 q·k: {:.0}% of dot rows | tile cache: {:.0}% hits ({}/{})\n\
+             int8 q·k: {:.0}% of dot rows | tile cache: {:.0}% hits ({}/{}) | kernel isa: {}\n\
              prefix hit-rate: {:.0}% ({} hits) | \
              peak active: {} | context-limit finishes: {}",
             self.requests_done,
@@ -159,6 +163,7 @@ impl Metrics {
             100.0 * self.tile_cache_hit_rate(),
             self.kv_tile_hits,
             self.kv_tile_hits + self.kv_tile_misses,
+            if self.kernel_isa.is_empty() { "unrecorded" } else { &self.kernel_isa },
             100.0 * self.prefix_hit_rate(),
             self.prefix_hits,
             self.peak_active,
@@ -225,6 +230,20 @@ mod tests {
         let r = m.report();
         assert!(r.contains("int8 q·k: 75% of dot rows"), "{r}");
         assert!(r.contains("tile cache: 75% hits (30/40)"), "{r}");
+    }
+
+    #[test]
+    fn kernel_isa_surfaces_in_report() {
+        let m = Metrics { kernel_isa: "avx2".to_string(), ..Default::default() };
+        assert!(m.report().contains("kernel isa: avx2"), "{}", m.report());
+        let unset = Metrics::default();
+        assert!(unset.report().contains("kernel isa: unrecorded"), "{}", unset.report());
+        // The serving loop records whatever the process pinned.
+        let live = Metrics {
+            kernel_isa: crate::simd::active().name().to_string(),
+            ..Default::default()
+        };
+        assert!(live.report().contains("kernel isa: "), "{}", live.report());
     }
 
     #[test]

@@ -409,6 +409,7 @@ impl<'m> Server<'m> {
         let (tile_hits, tile_misses) = kv.tile_cache_stats();
         metrics.kv_tile_hits = tile_hits;
         metrics.kv_tile_misses = tile_misses;
+        metrics.kernel_isa = crate::simd::active().name().to_string();
         (completions, metrics)
     }
 }

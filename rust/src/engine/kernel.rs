@@ -202,7 +202,7 @@ impl TernaryKernel for Packed34 {
     }
 
     fn gemm_tile(&self, _xs: &[f32], luts: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]) {
-        lut::gemm_pack34_preluts(self, luts, TernaryKernel::lut_len(self), batch, j0, j1, out);
+        crate::simd::gemm_pack34_preluts(self, luts, TernaryKernel::lut_len(self), batch, j0, j1, out);
     }
 }
 
@@ -228,7 +228,7 @@ impl TernaryKernel for PackedTl2 {
     }
 
     fn gemm_tile(&self, _xs: &[f32], luts: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]) {
-        lut::gemm_tl2_preluts(self, luts, TernaryKernel::lut_len(self), batch, j0, j1, out);
+        crate::simd::gemm_tl2_preluts(self, luts, TernaryKernel::lut_len(self), batch, j0, j1, out);
     }
 }
 
@@ -252,7 +252,7 @@ impl TernaryKernel for PackedI2S {
     fn build_luts(&self, _x: &[f32], _luts: &mut [f32]) {}
 
     fn gemm_tile(&self, xs: &[f32], _luts: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]) {
-        lut::gemm_i2s(self, xs, batch, j0, j1, out);
+        crate::simd::gemm_i2s(self, xs, batch, j0, j1, out);
     }
 }
 

@@ -316,6 +316,14 @@ const fn build_i2s_decode() -> [[f32; 4]; 256] {
     t
 }
 
+/// Borrow the decode-table row for one packed byte (the `simd` walks
+/// share the scalar kernel's table so their multiplier values are
+/// identical by construction).
+#[inline(always)]
+pub(crate) fn i2s_multipliers(byte: u8) -> &'static [f32; 4] {
+    &I2S_DECODE[byte as usize]
+}
+
 /// y = (PackedI2S weights) · x with per-channel α; `batch = 1` case of
 /// [`gemm_i2s`].
 pub fn gemv_i2s(p: &PackedI2S, x: &[f32], y: &mut [f32]) {

@@ -145,8 +145,10 @@ pub struct TernaryModel {
     /// Leased f32 scratch for the page-blocked attention walk (score
     /// rows, dequantized KV blocks, query scales), reused across rounds.
     tiles: BufferPool,
-    /// Leased int8 scratch for per-(head, call) query quantization on
-    /// the int8-native score path — no per-call heap allocation.
+    /// Leased int8 scratch for query quantization on the int8-native
+    /// score path — leased once per (sequence, decode round) and reused
+    /// by every layer's attention pass, so there is no per-call heap
+    /// allocation *or* per-layer pool round-trip.
     qcodes: BufferPool<i8>,
 }
 
@@ -307,6 +309,21 @@ impl TernaryModel {
         let mut up = vec![0.0f32; b * cfg.d_ff];
         let scale = (hd as f32).powf(-0.5);
 
+        // Attention scratch: one lease set per sequence slot for the whole
+        // decode round, re-borrowed by every layer's attention pass
+        // (`attention_blocked` clears and refills per call). Previously
+        // each (layer, sequence) attention call leased and returned four
+        // buffers — n_layers× more pool lock traffic, and the
+        // query-quantization buffers churned per call.
+        let mut attn_scratch: Vec<AttnScratch> = (0..b)
+            .map(|_| AttnScratch {
+                scores: self.tiles.lease(),
+                tile: self.tiles.lease(),
+                q_scales: self.tiles.lease(),
+                q_codes: self.qcodes.lease(),
+            })
+            .collect();
+
         for (li, layer) in self.layers.iter().enumerate() {
             // --- attention block ---
             xn.copy_from_slice(&h);
@@ -338,49 +355,35 @@ impl TernaryModel {
             {
                 let kv_ro: &KvBatch = kv;
                 let n_heads = cfg.n_heads;
-                let tiles = &self.tiles;
-                let qpool = &self.qcodes;
                 match pool {
                     Some(pool) if b > 1 => pool.scope(|s| {
-                        for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
+                        for ((bi, out_row), scr) in
+                            att_out.chunks_mut(d).enumerate().zip(attn_scratch.iter_mut())
+                        {
                             let kl = kv_ro.k_rows(li, bi);
                             let vl = kv_ro.v_rows(li, bi);
                             let q_row = &q[bi * d..(bi + 1) * d];
                             let t = pos[bi] + 1;
                             s.spawn(move || {
-                                let mut scores = tiles.lease();
-                                let mut tile = tiles.lease();
-                                let mut q_scales = tiles.lease();
-                                let mut q_codes = qpool.lease();
                                 attention_blocked(
-                                    q_row, kl, vl, t, hd, n_heads, scale, &mut scores,
-                                    &mut tile, &mut q_codes, &mut q_scales, out_row,
+                                    q_row, kl, vl, t, hd, n_heads, scale, &mut scr.scores,
+                                    &mut scr.tile, &mut scr.q_codes, &mut scr.q_scales, out_row,
                                 );
-                                qpool.give(q_codes);
-                                tiles.give(q_scales);
-                                tiles.give(tile);
-                                tiles.give(scores);
                             });
                         }
                     }),
                     _ => {
-                        let mut scores = tiles.lease();
-                        let mut tile = tiles.lease();
-                        let mut q_scales = tiles.lease();
-                        let mut q_codes = qpool.lease();
-                        for (bi, out_row) in att_out.chunks_mut(d).enumerate() {
+                        for ((bi, out_row), scr) in
+                            att_out.chunks_mut(d).enumerate().zip(attn_scratch.iter_mut())
+                        {
                             let kl = kv_ro.k_rows(li, bi);
                             let vl = kv_ro.v_rows(li, bi);
                             let q_row = &q[bi * d..(bi + 1) * d];
                             attention_blocked(
-                                q_row, kl, vl, pos[bi] + 1, hd, n_heads, scale, &mut scores,
-                                &mut tile, &mut q_codes, &mut q_scales, out_row,
+                                q_row, kl, vl, pos[bi] + 1, hd, n_heads, scale, &mut scr.scores,
+                                &mut scr.tile, &mut scr.q_codes, &mut scr.q_scales, out_row,
                             );
                         }
-                        qpool.give(q_codes);
-                        tiles.give(q_scales);
-                        tiles.give(tile);
-                        tiles.give(scores);
                     }
                 }
             }
@@ -406,6 +409,12 @@ impl TernaryModel {
             }
         }
         kv.advance();
+        for scr in attn_scratch.drain(..) {
+            self.qcodes.give(scr.q_codes);
+            self.tiles.give(scr.q_scales);
+            self.tiles.give(scr.tile);
+            self.tiles.give(scr.scores);
+        }
 
         for bi in 0..b {
             ops::rmsnorm_inplace(&mut h[bi * d..(bi + 1) * d], &self.norm_out);
@@ -435,6 +444,16 @@ impl TernaryModel {
         }
         out
     }
+}
+
+/// One sequence slot's attention scratch, leased from the model's pools
+/// once per decode round (see [`TernaryModel::forward_kv`]) and
+/// re-borrowed by every layer's [`attention_blocked`] call.
+struct AttnScratch {
+    scores: Vec<f32>,
+    tile: Vec<f32>,
+    q_scales: Vec<f32>,
+    q_codes: Vec<i8>,
 }
 
 /// Int8-quantize one query row per head into caller buffers (leased
@@ -508,6 +527,9 @@ fn attention_blocked(
     out: &mut [f32],
 ) {
     let d = n_heads * hd;
+    // Pin the kernel ISA once per call; the per-(row, head) dot below
+    // dispatches without re-reading the process-global selection.
+    let isa = crate::simd::active();
     scores.clear();
     scores.resize(n_heads * t, 0.0);
     // Leased query-quantization buffers; emptied here, filled lazily on
@@ -539,9 +561,9 @@ fn attention_blocked(
                     let kh = &krow[hh * hd..(hh + 1) * hd];
                     // |acc| ≤ 127² · head_dim ≪ i32::MAX for any real
                     // head width; one f32 multiply per (page, head, row)
-                    // folds both scales back in.
-                    let acc: i32 =
-                        qh.iter().zip(kh.iter()).map(|(&x, &y)| x as i32 * y as i32).sum();
+                    // folds both scales back in. i32 accumulation is
+                    // associative, so the vector paths are bit-exact.
+                    let acc: i32 = crate::simd::dot_i8_with(isa, qh, kh);
                     scores[hh * t + start + r] = acc as f32 * (q_scales[hh] * scales[hh]) * scale;
                 }
             }

@@ -24,6 +24,7 @@
 //! | [`cache`] | Paged KV arena: `PageStore` dtypes, block tables, radix prefix sharing |
 //! | [`coordinator`] | Continuous batching, paged-KV leasing, sampling, serving metrics |
 //! | [`train`] / [`runtime`] | QAT driver over the AOT PJRT train-step (stubbed without `pjrt`) |
+//! | [`simd`] | Runtime-dispatched AVX2/NEON/scalar kernel capability layer |
 //! | [`eval`] / [`exp`] | Task harness and paper table/figure drivers |
 //! | [`tensor`] / [`linalg`] / [`util`] | Mat/ops, thread pool, PCG RNG, property testing, bench clock |
 //! | [`cli`] | Offline `clap` stand-in for the `sherry` binary |
@@ -51,6 +52,7 @@ pub mod linalg;
 pub mod pack;
 pub mod quant;
 pub mod runtime;
+pub mod simd;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -57,7 +57,8 @@ fn app() -> App {
                 .flag("temperature", "sampling temperature (0 = greedy)", Some("0"))
                 .flag("top-k", "sample from top-k logits (0 = full vocab)", Some("0"))
                 .flag("top-p", "nucleus sampling mass (1 = off)", Some("1"))
-                .flag("rep-penalty", "repetition penalty (1 = off)", Some("1")),
+                .flag("rep-penalty", "repetition penalty (1 = off)", Some("1"))
+                .flag("kernel-isa", "kernel ISA (auto|scalar|avx2|neon)", Some("auto")),
         )
         .command(
             Command::new("generate", "greedy generation from a checkpoint")
@@ -65,7 +66,8 @@ fn app() -> App {
                 .flag("ckpt", "checkpoint path (omit = random init)", None)
                 .flag("format", "bf16|i2_s|tl2|sherry", Some("sherry"))
                 .flag("prompt", "comma-separated token ids", Some("1,2,3"))
-                .flag("tokens", "tokens to generate", Some("32")),
+                .flag("tokens", "tokens to generate", Some("32"))
+                .flag("kernel-isa", "kernel ISA (auto|scalar|avx2|neon)", Some("auto")),
         )
         .command(
             Command::new("exp", "regenerate a paper table/figure")
@@ -162,12 +164,14 @@ fn main() -> Result<()> {
                 None => random_weights(&native, 0),
             };
             let format = parse_format(&args.str_or("format", "sherry"))?;
+            let isa = select_kernel_isa(&args.str_or("kernel-isa", "auto"))?;
             let model = TernaryModel::build(native, &params, format);
             println!(
-                "[serve] {} model, format {} ({:.2} MB)",
+                "[serve] {} model, format {} ({:.2} MB), kernel isa {}",
                 cfg_name,
                 format.name(),
-                model.bytes() as f64 / 1e6
+                model.bytes() as f64 / 1e6,
+                isa.name()
             );
             let active = args.usize_or("active", 8);
             let kv_dtype = {
@@ -211,6 +215,7 @@ fn main() -> Result<()> {
                 None => random_weights(&native, 0),
             };
             let format = parse_format(&args.str_or("format", "sherry"))?;
+            let isa = select_kernel_isa(&args.str_or("kernel-isa", "auto"))?;
             let model = TernaryModel::build(native, &params, format);
             let prompt: Vec<u32> = args
                 .str_or("prompt", "1,2,3")
@@ -225,11 +230,12 @@ fn main() -> Result<()> {
             println!("prompt: {prompt:?}");
             println!("output: {out:?}");
             println!(
-                "[generate] {} tokens in {:.3}s → {:.1} tok/s ({})",
+                "[generate] {} tokens in {:.3}s → {:.1} tok/s ({}, {})",
                 out.len(),
                 dt,
                 out.len() as f64 / dt,
-                format.name()
+                format.name(),
+                isa.name()
             );
         }
         "exp" => {
@@ -299,6 +305,15 @@ fn main() -> Result<()> {
         other => bail!("unhandled command {other}"),
     }
     Ok(())
+}
+
+/// Pin the process kernel ISA from `--kernel-isa` (must run before the
+/// first forward pass, which would otherwise auto-detect).
+fn select_kernel_isa(name: &str) -> Result<sherry::simd::Isa> {
+    match sherry::simd::select(name) {
+        Ok(isa) => Ok(isa),
+        Err(e) => bail!("{e}"),
+    }
 }
 
 fn parse_format(s: &str) -> Result<Format> {

@@ -1,0 +1,151 @@
+//! AVX2 leaf kernels (x86-64). Eight f32 lanes; LUT/activation rows are
+//! gathered with `vgatherdps` (i32 indices scaled ×4), the mirror sign is
+//! a `vpxor` on the f32 bit patterns, and the i8 dot widens 16 bytes at a
+//! time through `vpmovsxbw` + `vpmaddwd`.
+//!
+//! Safety contract for every `unsafe fn` here: the host supports AVX2
+//! (runtime-checked by the dispatch layer), the matching scalar kernel's
+//! slice bounds hold (asserted by the dispatch layer), and
+//! `7 * stride <= i32::MAX` for the strided gathers (the
+//! `gather_stride_ok` guard). No alignment requirements — all loads are
+//! unaligned forms.
+
+use std::arch::x86_64::*;
+
+use super::walk::{self, Lanes};
+use crate::pack::{Packed34, PackedI2S, PackedTl2};
+
+#[derive(Clone, Copy)]
+pub(crate) struct Avx2;
+
+impl Lanes for Avx2 {
+    const W: usize = 8;
+    type V = __m256;
+
+    #[inline(always)]
+    unsafe fn zero() -> __m256 {
+        _mm256_setzero_ps()
+    }
+
+    #[inline(always)]
+    unsafe fn splat(x: f32) -> __m256 {
+        _mm256_set1_ps(x)
+    }
+
+    #[inline(always)]
+    unsafe fn gather(base: *const f32, stride: usize, off: usize) -> __m256 {
+        // Lane i reads base[i*stride + off]. The caller guarantees
+        // 7*stride fits i32; the index vector is loop-invariant, so LLVM
+        // hoists it out of the walk.
+        let s = stride as i32;
+        let idx = _mm256_setr_epi32(0, s, 2 * s, 3 * s, 4 * s, 5 * s, 6 * s, 7 * s);
+        _mm256_i32gather_ps::<4>(base.add(off), idx)
+    }
+
+    #[inline(always)]
+    unsafe fn xor_sign(v: __m256, sign_bit: u32) -> __m256 {
+        let m = _mm256_set1_epi32(sign_bit as i32);
+        _mm256_castsi256_ps(_mm256_xor_si256(_mm256_castps_si256(v), m))
+    }
+
+    #[inline(always)]
+    unsafe fn add(a: __m256, b: __m256) -> __m256 {
+        _mm256_add_ps(a, b)
+    }
+
+    #[inline(always)]
+    unsafe fn mul(a: __m256, b: __m256) -> __m256 {
+        _mm256_mul_ps(a, b)
+    }
+
+    #[inline(always)]
+    unsafe fn store(v: __m256, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= 8);
+        _mm256_storeu_ps(dst.as_mut_ptr(), v);
+    }
+}
+
+/// i8×i8 dot, i32-accumulated: 16 bytes/iter sign-extended to i16 lanes,
+/// `vpmaddwd` pairs into i32, tail scalar. Integer addition is
+/// associative, so the lane arrangement is exactly equal to the scalar
+/// iterator sum (including two's-complement wrap-around).
+///
+/// # Safety
+///
+/// AVX2 available; `a.len() == b.len()`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = _mm256_setzero_si256();
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let va = _mm_loadu_si128(a.as_ptr().add(i) as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr().add(i) as *const __m128i);
+        let wa = _mm256_cvtepi8_epi16(va);
+        let wb = _mm256_cvtepi8_epi16(vb);
+        acc = _mm256_add_epi32(acc, _mm256_madd_epi16(wa, wb));
+        i += 16;
+    }
+    // Horizontal i32 sum of the 8 lanes.
+    let lo = _mm256_castsi256_si128(acc);
+    let hi = _mm256_extracti128_si256::<1>(acc);
+    let s = _mm_add_epi32(lo, hi);
+    let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+    let s = _mm_add_epi32(s, _mm_shuffle_epi32::<0x55>(s));
+    let mut total = _mm_cvtsi128_si32(s);
+    while i < n {
+        total = total.wrapping_add(a[i] as i32 * b[i] as i32);
+        i += 1;
+    }
+    total
+}
+
+/// # Safety
+///
+/// AVX2 available; `lut::gemm_pack34_preluts` bounds; `7*lut_stride <=
+/// i32::MAX` (all asserted/guarded by the dispatch layer).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_pack34(
+    p: &Packed34,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    walk::gemm_pack34::<Avx2>(p, luts, lut_stride, batch, j0, j1, out)
+}
+
+/// # Safety
+///
+/// AVX2 available; `lut::gemm_tl2_preluts` bounds; `7*lut_stride <=
+/// i32::MAX`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_tl2(
+    p: &PackedTl2,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    walk::gemm_tl2::<Avx2>(p, luts, lut_stride, batch, j0, j1, out)
+}
+
+/// # Safety
+///
+/// AVX2 available; `lut::gemm_i2s` bounds; `7*d_in <= i32::MAX`.
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn gemm_i2s(
+    p: &PackedI2S,
+    xs: &[f32],
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    walk::gemm_i2s::<Avx2>(p, xs, batch, j0, j1, out)
+}

@@ -1,0 +1,419 @@
+//! Runtime-dispatched SIMD kernels for the two hottest inner loops:
+//!
+//! 1. the fused **i8×i8 q·k dot** in the page-blocked attention walk
+//!    (`engine::model::attention_blocked`) — an i32-accumulated dot over
+//!    raw int8 page bytes, one scale multiply per page-head;
+//! 2. the **LUT-GEMM tile walk** (`engine::lut`) — LUT gather + f32
+//!    accumulate over packed weight planes, for all three pack formats
+//!    (Sherry 3:4, TL2, I2_S).
+//!
+//! ## Dispatch model
+//!
+//! An [`Isa`] is picked **once** per process: the `SHERRY_KERNEL_ISA`
+//! environment variable (used by the CI matrix, where tests cannot take
+//! CLI flags) or the `--kernel-isa` binary flag pins it; otherwise
+//! [`Isa::detect`] probes the host via
+//! `std::arch::is_x86_feature_detected!` / `is_aarch64_feature_detected!`.
+//! The chosen ISA is cached in a `OnceLock` ([`active`]) and surfaced in
+//! the serving metrics report and bench JSON so every measurement records
+//! which path ran.
+//!
+//! Scalar code (the `engine::lut` kernels and a plain iterator dot) is the
+//! always-available fallback and the **ground truth**: every vector path
+//! is bit-for-bit identical to it (hard equality, not a tolerance — see
+//! DESIGN.md §5 for why). The `*_with` entry points take an explicit
+//! [`Isa`] so parity tests can compare paths without touching the
+//! process-global selection.
+//!
+//! ## Safety architecture
+//!
+//! `unsafe` is confined to the leaf kernels in [`avx2`] / [`neon`]: a safe
+//! generic walk ([`walk`]) is written once against the [`walk::Lanes`]
+//! trait, and each arch module provides `#[target_feature]` wrappers that
+//! monomorphize it. Dispatch arms are guarded by *both* a
+//! `#[cfg(target_arch)]` gate and a runtime [`Isa::available`] check, so
+//! calling any public function here with any `Isa` value on any host is
+//! sound — an unavailable ISA silently degrades to scalar (which is
+//! bit-identical anyway).
+
+use crate::engine::lut;
+use crate::pack::{Packed34, PackedI2S, PackedTl2};
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+pub(crate) mod walk;
+
+/// Widest lane count of any vector path (AVX2: 8 × f32). Row chunking in
+/// [`walk`] and scratch sizing use this as the compile-time upper bound.
+pub const MAX_LANES: usize = 8;
+
+/// A kernel instruction-set path. `Scalar` is always available; the
+/// vector variants exist on every build (so `--kernel-isa avx2` parses
+/// everywhere and fails with a clear message) but are only *selectable*
+/// where [`Isa::available`] says so.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar kernels (`engine::lut` + iterator dot) — the
+    /// bit-exact ground truth.
+    Scalar,
+    /// x86-64 AVX2: 8×f32 LUT gathers (`vgatherdps`), `vpmaddwd` i8 dot.
+    Avx2,
+    /// AArch64 NEON: 4×f32 lanes, `smull`/`sadalp` widening i8 dot.
+    Neon,
+}
+
+impl Isa {
+    /// Every variant, in detection-preference order (widest first).
+    pub const ALL: [Isa; 3] = [Isa::Avx2, Isa::Neon, Isa::Scalar];
+
+    /// Stable lowercase name (CLI values, metrics report, bench JSON).
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse a fixed ISA name (`auto` is handled by [`select`]).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s {
+            "scalar" => Some(Isa::Scalar),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+
+    /// Can this path actually execute on the running host? Compile-time
+    /// arch gate + runtime feature probe (the probe result is cached by
+    /// std, so this is cheap enough for per-call dispatch guards).
+    pub fn available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            Isa::Avx2 => avx2_available(),
+            Isa::Neon => neon_available(),
+        }
+    }
+
+    /// Best available path on this host: AVX2 > NEON > scalar.
+    pub fn detect() -> Isa {
+        *Isa::ALL.iter().find(|isa| isa.available()).expect("Scalar is always available")
+    }
+}
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+fn neon_available() -> bool {
+    #[cfg(target_arch = "aarch64")]
+    {
+        std::arch::is_aarch64_feature_detected!("neon")
+    }
+    #[cfg(not(target_arch = "aarch64"))]
+    {
+        false
+    }
+}
+
+/// The process-wide ISA, pinned on first use.
+static ACTIVE: OnceLock<Isa> = OnceLock::new();
+
+/// Resolve an ISA request string: `auto` detects; a fixed name must name
+/// a path the host can run.
+fn resolve_request(s: &str) -> Result<Isa, String> {
+    if s == "auto" {
+        return Ok(Isa::detect());
+    }
+    let isa = Isa::parse(s)
+        .ok_or_else(|| format!("unknown kernel ISA {s:?} (expected auto|scalar|avx2|neon)"))?;
+    if !isa.available() {
+        return Err(format!("kernel ISA {s:?} is not available on this host"));
+    }
+    Ok(isa)
+}
+
+fn resolve_default() -> Isa {
+    match std::env::var("SHERRY_KERNEL_ISA") {
+        Ok(s) => match resolve_request(&s) {
+            Ok(isa) => isa,
+            Err(e) => {
+                eprintln!("[simd] SHERRY_KERNEL_ISA ignored: {e}; detecting");
+                Isa::detect()
+            }
+        },
+        Err(_) => Isa::detect(),
+    }
+}
+
+/// The process-wide kernel ISA. First call pins it: `SHERRY_KERNEL_ISA`
+/// if set (invalid values warn and fall back to detection), else
+/// [`Isa::detect`]. Hot paths hoist this out of their inner loops.
+pub fn active() -> Isa {
+    *ACTIVE.get_or_init(resolve_default)
+}
+
+/// Pin the process ISA from a CLI request (`--kernel-isa`). Errors if the
+/// name is unknown, the path is unavailable on this host, or a
+/// *different* ISA was already pinned (selection happens once at
+/// startup; re-selecting the same one is fine).
+pub fn select(name: &str) -> Result<Isa, String> {
+    let want = resolve_request(name)?;
+    let got = *ACTIVE.get_or_init(|| want);
+    if got != want {
+        return Err(format!(
+            "kernel ISA already pinned to {} (selection happens once at startup)",
+            got.name()
+        ));
+    }
+    Ok(got)
+}
+
+// ---------------------------------------------------------------------------
+// i8×i8 dot
+// ---------------------------------------------------------------------------
+
+/// Scalar i8×i8 dot with i32 accumulation — the ground-truth loop the
+/// attention score pass ran before dispatch existed.
+#[inline]
+pub fn dot_i8_scalar(a: &[i8], b: &[i8]) -> i32 {
+    a.iter().zip(b.iter()).map(|(&x, &y)| x as i32 * y as i32).sum()
+}
+
+/// i8×i8 dot through the pinned process ISA.
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    dot_i8_with(active(), a, b)
+}
+
+/// i8×i8 dot through an explicit ISA (parity tests; hot loops that hoist
+/// [`active`]). i32 addition is associative, so any lane arrangement is
+/// *exactly* equal to scalar. Only `min(a.len(), b.len())` elements
+/// contribute (the scalar zip contract).
+#[inline]
+pub fn dot_i8_with(isa: Isa, a: &[i8], b: &[i8]) -> i32 {
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: the arm only runs when the host reports AVX2.
+        Isa::Avx2 if avx2_available() => unsafe { avx2::dot_i8(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: the arm only runs when the host reports NEON.
+        Isa::Neon if neon_available() => unsafe { neon::dot_i8(a, b) },
+        _ => dot_i8_scalar(a, b),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// LUT-GEMM tile walks
+// ---------------------------------------------------------------------------
+
+/// AVX2 gathers index with i32 lanes (`lane·stride` must fit); absurdly
+/// wide strides fall back to scalar rather than overflow. (Referenced
+/// only by x86 dispatch arms outside of tests, hence the allow.)
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+fn gather_stride_ok(stride: usize) -> bool {
+    stride.checked_mul(MAX_LANES - 1).is_some_and(|v| v <= i32::MAX as usize)
+}
+
+/// Batched Sherry 3:4 accumulate phase through the pinned process ISA.
+/// Drop-in for [`lut::gemm_pack34_preluts`] (same layout contract).
+#[inline]
+pub fn gemm_pack34_preluts(
+    p: &Packed34,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    gemm_pack34_preluts_with(active(), p, luts, lut_stride, batch, j0, j1, out);
+}
+
+/// [`gemm_pack34_preluts`] through an explicit ISA (parity tests).
+pub fn gemm_pack34_preluts_with(
+    isa: Isa,
+    p: &Packed34,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    // Mirror the scalar kernel's contract up front: the unsafe gathers
+    // below rely on exactly these bounds.
+    let nb = p.n_blocks();
+    assert!(j0 <= j1 && j1 <= p.d_out);
+    assert_eq!(out.len(), batch * (j1 - j0));
+    assert!(lut_stride >= nb * 16, "LUT stride too small for d_in");
+    assert!(luts.len() >= batch * lut_stride);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: host reports AVX2; bounds asserted above; stride fits
+        // the gather's i32 index lanes.
+        Isa::Avx2 if avx2_available() && gather_stride_ok(lut_stride) => unsafe {
+            avx2::gemm_pack34(p, luts, lut_stride, batch, j0, j1, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: host reports NEON; bounds asserted above.
+        Isa::Neon if neon_available() => unsafe {
+            neon::gemm_pack34(p, luts, lut_stride, batch, j0, j1, out)
+        },
+        _ => lut::gemm_pack34_preluts(p, luts, lut_stride, batch, j0, j1, out),
+    }
+}
+
+/// Batched TL2 accumulate phase through the pinned process ISA.
+/// Drop-in for [`lut::gemm_tl2_preluts`].
+#[inline]
+pub fn gemm_tl2_preluts(
+    p: &PackedTl2,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    gemm_tl2_preluts_with(active(), p, luts, lut_stride, batch, j0, j1, out);
+}
+
+/// [`gemm_tl2_preluts`] through an explicit ISA (parity tests).
+pub fn gemm_tl2_preluts_with(
+    isa: Isa,
+    p: &PackedTl2,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let ng = p.n_groups();
+    assert!(j0 <= j1 && j1 <= p.d_out);
+    assert_eq!(out.len(), batch * (j1 - j0));
+    assert!(lut_stride >= ng * lut::TL2_LUT_STRIDE, "LUT stride too small for d_in");
+    assert!(luts.len() >= batch * lut_stride);
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: host reports AVX2; bounds asserted above; stride fits
+        // the gather's i32 index lanes.
+        Isa::Avx2 if avx2_available() && gather_stride_ok(lut_stride) => unsafe {
+            avx2::gemm_tl2(p, luts, lut_stride, batch, j0, j1, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: host reports NEON; bounds asserted above.
+        Isa::Neon if neon_available() => unsafe {
+            neon::gemm_tl2(p, luts, lut_stride, batch, j0, j1, out)
+        },
+        _ => lut::gemm_tl2_preluts(p, luts, lut_stride, batch, j0, j1, out),
+    }
+}
+
+/// Batched I2_S decode-and-add through the pinned process ISA. Drop-in
+/// for [`lut::gemm_i2s`].
+#[inline]
+pub fn gemm_i2s(p: &PackedI2S, xs: &[f32], batch: usize, j0: usize, j1: usize, out: &mut [f32]) {
+    gemm_i2s_with(active(), p, xs, batch, j0, j1, out);
+}
+
+/// [`gemm_i2s`] through an explicit ISA (parity tests).
+pub fn gemm_i2s_with(
+    isa: Isa,
+    p: &PackedI2S,
+    xs: &[f32],
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let d_in = p.d_in;
+    assert!(j0 <= j1 && j1 <= p.d_out);
+    assert_eq!(xs.len(), batch * d_in);
+    assert_eq!(out.len(), batch * (j1 - j0));
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: host reports AVX2; bounds asserted above; activation
+        // rows are gathered at stride d_in, which must fit i32 lanes.
+        Isa::Avx2 if avx2_available() && gather_stride_ok(d_in) => unsafe {
+            avx2::gemm_i2s(p, xs, batch, j0, j1, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: host reports NEON; bounds asserted above.
+        Isa::Neon if neon_available() => unsafe { neon::gemm_i2s(p, xs, batch, j0, j1, out) },
+        _ => lut::gemm_i2s(p, xs, batch, j0, j1, out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_always_available_and_detect_returns_available() {
+        assert!(Isa::Scalar.available());
+        assert!(Isa::detect().available());
+    }
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(isa.name()), Some(isa));
+        }
+        assert_eq!(Isa::parse("auto"), None, "auto is a select() concept, not an Isa");
+        assert_eq!(Isa::parse("sse9"), None);
+    }
+
+    #[test]
+    fn resolve_rejects_unknown_and_auto_detects() {
+        assert!(resolve_request("wombat").is_err());
+        assert_eq!(resolve_request("auto").unwrap(), Isa::detect());
+        // Scalar is resolvable on every host.
+        assert_eq!(resolve_request("scalar").unwrap(), Isa::Scalar);
+    }
+
+    #[test]
+    fn active_is_stable_and_select_agrees_with_it() {
+        // Other tests in the process may already have pinned the ISA;
+        // only invariants that hold regardless are asserted here.
+        let a = active();
+        assert!(a.available());
+        assert_eq!(active(), a, "OnceLock pins the first selection");
+        assert_eq!(select(a.name()).unwrap(), a, "re-selecting the pinned ISA is fine");
+        assert!(select("not-an-isa").is_err());
+    }
+
+    #[test]
+    fn dot_dispatch_matches_scalar_on_every_available_isa() {
+        let a: Vec<i8> = (0..133).map(|i| ((i * 37 + 11) % 255 - 127) as i8).collect();
+        let b: Vec<i8> = (0..133).map(|i| ((i * 91 + 3) % 255 - 127) as i8).collect();
+        for isa in Isa::ALL.into_iter().filter(|i| i.available()) {
+            assert_eq!(dot_i8_with(isa, &a, &b), dot_i8_scalar(&a, &b), "{}", isa.name());
+        }
+        // Unavailable ISAs degrade to scalar rather than faulting.
+        for isa in Isa::ALL.into_iter().filter(|i| !i.available()) {
+            assert_eq!(dot_i8_with(isa, &a, &b), dot_i8_scalar(&a, &b), "{}", isa.name());
+        }
+    }
+
+    #[test]
+    fn gather_stride_guard() {
+        assert!(gather_stride_ok(0));
+        assert!(gather_stride_ok(51_200)); // d=3200 pack34 LUT stride
+        assert!(!gather_stride_ok(usize::MAX / 2));
+    }
+}

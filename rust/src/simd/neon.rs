@@ -1,0 +1,145 @@
+//! NEON leaf kernels (AArch64). Four f32 lanes; NEON has no hardware
+//! gather, so the strided row gather is four scalar loads assembled into
+//! a register (still profitable: the walk's decode work and sign flips
+//! amortize ×4, and the accumulate chain runs in vector registers). The
+//! i8 dot widens 16 bytes per iteration via `smull`/`smull2` + `sadalp`.
+//!
+//! Safety contract for every `unsafe fn` here: the host supports NEON
+//! (runtime-checked by the dispatch layer) and the matching scalar
+//! kernel's slice bounds hold (asserted by the dispatch layer). No
+//! alignment requirements; no i32 index limits (gathers use usize
+//! pointer arithmetic).
+//!
+//! Note `vmulq_f32` + `vaddq_f32` are used separately — never `vfmaq` —
+//! because the scalar ground truth rounds after the multiply and after
+//! the add; a fused multiply-add would break bit parity.
+
+use std::arch::aarch64::*;
+
+use super::walk::{self, Lanes};
+use crate::pack::{Packed34, PackedI2S, PackedTl2};
+
+#[derive(Clone, Copy)]
+pub(crate) struct Neon;
+
+impl Lanes for Neon {
+    const W: usize = 4;
+    type V = float32x4_t;
+
+    #[inline(always)]
+    unsafe fn zero() -> float32x4_t {
+        vdupq_n_f32(0.0)
+    }
+
+    #[inline(always)]
+    unsafe fn splat(x: f32) -> float32x4_t {
+        vdupq_n_f32(x)
+    }
+
+    #[inline(always)]
+    unsafe fn gather(base: *const f32, stride: usize, off: usize) -> float32x4_t {
+        let p = base.add(off);
+        let t = [*p, *p.add(stride), *p.add(2 * stride), *p.add(3 * stride)];
+        vld1q_f32(t.as_ptr())
+    }
+
+    #[inline(always)]
+    unsafe fn xor_sign(v: float32x4_t, sign_bit: u32) -> float32x4_t {
+        vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), vdupq_n_u32(sign_bit)))
+    }
+
+    #[inline(always)]
+    unsafe fn add(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vaddq_f32(a, b)
+    }
+
+    #[inline(always)]
+    unsafe fn mul(a: float32x4_t, b: float32x4_t) -> float32x4_t {
+        vmulq_f32(a, b)
+    }
+
+    #[inline(always)]
+    unsafe fn store(v: float32x4_t, dst: &mut [f32]) {
+        debug_assert!(dst.len() >= 4);
+        vst1q_f32(dst.as_mut_ptr(), v);
+    }
+}
+
+/// i8×i8 dot, i32-accumulated: 16 bytes/iter widened through i16 products
+/// (`smull`/`smull2`) then pairwise-accumulated into i32 (`sadalp`), tail
+/// scalar. Exactly equal to the scalar iterator sum — integer addition is
+/// associative.
+///
+/// # Safety
+///
+/// NEON available; `a.len() == b.len()`.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = vdupq_n_s32(0);
+    let mut i = 0usize;
+    while i + 16 <= n {
+        let va = vld1q_s8(a.as_ptr().add(i));
+        let vb = vld1q_s8(b.as_ptr().add(i));
+        let lo = vmull_s8(vget_low_s8(va), vget_low_s8(vb));
+        let hi = vmull_high_s8(va, vb);
+        acc = vpadalq_s16(acc, lo);
+        acc = vpadalq_s16(acc, hi);
+        i += 16;
+    }
+    let mut total = vaddvq_s32(acc);
+    while i < n {
+        total = total.wrapping_add(a[i] as i32 * b[i] as i32);
+        i += 1;
+    }
+    total
+}
+
+/// # Safety
+///
+/// NEON available; `lut::gemm_pack34_preluts` bounds (asserted by the
+/// dispatch layer).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gemm_pack34(
+    p: &Packed34,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    walk::gemm_pack34::<Neon>(p, luts, lut_stride, batch, j0, j1, out)
+}
+
+/// # Safety
+///
+/// NEON available; `lut::gemm_tl2_preluts` bounds.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gemm_tl2(
+    p: &PackedTl2,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    walk::gemm_tl2::<Neon>(p, luts, lut_stride, batch, j0, j1, out)
+}
+
+/// # Safety
+///
+/// NEON available; `lut::gemm_i2s` bounds.
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn gemm_i2s(
+    p: &PackedI2S,
+    xs: &[f32],
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    walk::gemm_i2s::<Neon>(p, xs, batch, j0, j1, out)
+}

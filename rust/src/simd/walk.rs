@@ -1,0 +1,351 @@
+//! The vectorized LUT-GEMM tile walks, written **once** as generic code
+//! over the [`Lanes`] trait and monomorphized per arch by the leaf
+//! wrappers in `simd::avx2` / `simd::neon`.
+//!
+//! ## Why parity with scalar is exact
+//!
+//! The scalar kernels (`engine::lut`) accumulate f32, and f32 addition is
+//! **not** associative — so these walks never reassociate. They vectorize
+//! across the **batch dimension** instead: a chunk of exactly `Lanes::W`
+//! activation rows advances through the packed weight plane in the same
+//! order as scalar, with lane `i` receiving exactly the operands scalar
+//! row `i` receives, in the same sequence. IEEE arithmetic is performed
+//! per lane, so every lane's result is bit-identical to its scalar row.
+//! Rows past the last full chunk (`batch % W`) are handled by *calling
+//! the scalar kernel* on the remaining region — parity there is
+//! tautological. The scalar kernels stay untouched as ground truth.
+//!
+//! ## Safety contract (shared by every `unsafe fn` here)
+//!
+//! Callers (the dispatch layer in `simd::mod`) must ensure:
+//! * the target feature backing `L` is available on the host (the walks
+//!   are only reachable through `#[target_feature]` wrappers guarded by
+//!   runtime detection);
+//! * the slice-length preconditions of the matching scalar kernel hold
+//!   (asserted by the dispatch layer before entry);
+//! * for gather-by-i32-index implementations ([`Lanes::gather`]),
+//!   `(W-1) * stride` fits in `i32` (the `gather_stride_ok` guard).
+//!
+//! No alignment is required: all vector loads/stores are unaligned, and
+//! gathers address individual f32s.
+
+use crate::engine::lut;
+use crate::pack::{Packed34, PackedI2S, PackedTl2};
+
+use super::MAX_LANES;
+
+/// One SIMD register of `W` f32 lanes plus the operations the tile walks
+/// need. Implementations are thin intrinsic wrappers, `#[inline(always)]`
+/// so they fuse into the `#[target_feature]` leaf that monomorphizes the
+/// walk.
+///
+/// # Safety
+///
+/// Every method may only be called when the backing target feature is
+/// available (see module docs); `gather` additionally requires
+/// `base[i * stride + off]` in bounds for all `i < W`, and `store`
+/// requires `dst.len() >= W`.
+pub(crate) trait Lanes: Copy {
+    /// Lane count (8 for AVX2, 4 for NEON). Must be ≤ [`MAX_LANES`].
+    const W: usize;
+    /// The register type.
+    type V: Copy;
+
+    unsafe fn zero() -> Self::V;
+    unsafe fn splat(x: f32) -> Self::V;
+    /// Strided gather: lane `i` loads `base[i * stride + off]` — one f32
+    /// from each of `W` consecutive LUT/activation rows.
+    unsafe fn gather(base: *const f32, stride: usize, off: usize) -> Self::V;
+    /// XOR `sign_bit` (0 or `1 << 31`) into every lane's bit pattern —
+    /// the branchless mirror-sign flip, applied to all rows at once.
+    unsafe fn xor_sign(v: Self::V, sign_bit: u32) -> Self::V;
+    unsafe fn add(a: Self::V, b: Self::V) -> Self::V;
+    unsafe fn mul(a: Self::V, b: Self::V) -> Self::V;
+    /// Write the `W` lanes to `dst[..W]` (unaligned).
+    unsafe fn store(v: Self::V, dst: &mut [f32]);
+}
+
+/// Sherry 3:4 walk for one chunk of exactly `L::W` rows. `luts` starts at
+/// the chunk's first row; `out` is the chunk's `W × w` output region.
+/// Mirrors `lut::gemm_pack34_preluts` statement for statement — lane `bi`
+/// computes scalar's `acc[2*bi]` / `acc[2*bi+1]` pair.
+///
+/// # Safety
+///
+/// Module safety contract; additionally `luts.len() >= W * lut_stride`
+/// and `out.len() == W * (j1 - j0)`.
+#[inline(always)]
+pub(crate) unsafe fn pack34_chunk<L: Lanes>(
+    p: &Packed34,
+    luts: &[f32],
+    lut_stride: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let nb = p.n_blocks();
+    let w = j1 - j0;
+    debug_assert!(luts.len() >= L::W * lut_stride);
+    debug_assert_eq!(out.len(), L::W * w);
+    let full = nb / 8; // complete sign bytes
+    const TILE_SB: usize = 16; // sign bytes per tile = 128 blocks
+    out.fill(0.0);
+    let base = luts.as_ptr();
+    let mut sb0 = 0usize;
+    while sb0 < full {
+        let sb1 = (sb0 + TILE_SB).min(full);
+        for (jj, j) in (j0..j1).enumerate() {
+            let idx_plane = p.idx_plane(j);
+            let sign_plane = p.sign_plane(j);
+            let mut acc0 = L::zero();
+            let mut acc1 = L::zero();
+            for sb in sb0..sb1 {
+                let signs = sign_plane[sb] as u32;
+                let ibase = sb * 4;
+                let lbase = sb * 8 * 16;
+                for k in 0..4 {
+                    let byte = idx_plane[ibase + k];
+                    let lo = (byte & 0x0F) as usize;
+                    let hi = (byte >> 4) as usize;
+                    let b0 = 2 * k;
+                    let o0 = lbase + b0 * 16 + lo;
+                    let o1 = lbase + (b0 + 1) * 16 + hi;
+                    let s0 = ((signs >> b0) & 1) << 31;
+                    let s1 = ((signs >> (b0 + 1)) & 1) << 31;
+                    acc0 = L::add(acc0, L::xor_sign(L::gather(base, lut_stride, o0), s0));
+                    acc1 = L::add(acc1, L::xor_sign(L::gather(base, lut_stride, o1), s1));
+                }
+            }
+            let (mut t0, mut t1) = ([0.0f32; MAX_LANES], [0.0f32; MAX_LANES]);
+            L::store(acc0, &mut t0);
+            L::store(acc1, &mut t1);
+            for bi in 0..L::W {
+                // Same two adds as scalar: (acc0 + acc1), then += out.
+                out[bi * w + jj] += t0[bi] + t1[bi];
+            }
+        }
+        sb0 = sb1;
+    }
+    // Tail blocks + final per-channel scale: exact scalar replica.
+    for (jj, j) in (j0..j1).enumerate() {
+        for bi in 0..L::W {
+            let mut a = out[bi * w + jj];
+            let row = &luts[bi * lut_stride..];
+            for b in full * 8..nb {
+                let v = row[b * 16 + p.idx_at(j, b) as usize];
+                let s = (p.sign_at(j, b) as u32) << 31;
+                a += f32::from_bits(v.to_bits() ^ s);
+            }
+            out[bi * w + jj] = a * p.alpha[j];
+        }
+    }
+}
+
+/// Full batched Sherry 3:4 walk: full `W`-row chunks through
+/// [`pack34_chunk`], remaining rows through the scalar kernel.
+///
+/// # Safety
+///
+/// Module safety contract; scalar-kernel preconditions asserted by the
+/// dispatch layer.
+#[inline(always)]
+pub(crate) unsafe fn gemm_pack34<L: Lanes>(
+    p: &Packed34,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let w = j1 - j0;
+    let mut r0 = 0usize;
+    while r0 + L::W <= batch {
+        pack34_chunk::<L>(
+            p,
+            &luts[r0 * lut_stride..],
+            lut_stride,
+            j0,
+            j1,
+            &mut out[r0 * w..(r0 + L::W) * w],
+        );
+        r0 += L::W;
+    }
+    if r0 < batch {
+        lut::gemm_pack34_preluts(p, &luts[r0 * lut_stride..], lut_stride, batch - r0, j0, j1, &mut out[r0 * w..]);
+    }
+}
+
+/// TL2 walk for one chunk of exactly `L::W` rows: the misaligned 5-bit
+/// code extraction is done once (shared across lanes, exactly as scalar
+/// shares it across the batch), then one gather + add per group.
+///
+/// # Safety
+///
+/// Module safety contract; `luts.len() >= W * lut_stride`,
+/// `out.len() == W * (j1 - j0)`.
+#[inline(always)]
+pub(crate) unsafe fn tl2_chunk<L: Lanes>(
+    p: &PackedTl2,
+    luts: &[f32],
+    lut_stride: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let ng = p.n_groups();
+    let w = j1 - j0;
+    debug_assert!(luts.len() >= L::W * lut_stride);
+    debug_assert_eq!(out.len(), L::W * w);
+    let base = luts.as_ptr();
+    for (jj, j) in (j0..j1).enumerate() {
+        let stream = p.stream(j);
+        let mut acc = L::zero();
+        let mut bit_off = 0usize;
+        for g in 0..ng {
+            let byte = bit_off / 8;
+            let shift = bit_off % 8;
+            let lo = stream[byte] as u16;
+            let hi = if byte + 1 < stream.len() { stream[byte + 1] as u16 } else { 0 };
+            let code = (((hi << 8) | lo) >> shift) as usize & 0x1F;
+            let o = g * lut::TL2_LUT_STRIDE + code;
+            acc = L::add(acc, L::gather(base, lut_stride, o));
+            bit_off += 5;
+        }
+        let mut t = [0.0f32; MAX_LANES];
+        L::store(acc, &mut t);
+        for bi in 0..L::W {
+            out[bi * w + jj] = t[bi] * p.alpha[j];
+        }
+    }
+}
+
+/// Full batched TL2 walk (chunks + scalar row tail).
+///
+/// # Safety
+///
+/// Module safety contract; scalar-kernel preconditions asserted by the
+/// dispatch layer.
+#[inline(always)]
+pub(crate) unsafe fn gemm_tl2<L: Lanes>(
+    p: &PackedTl2,
+    luts: &[f32],
+    lut_stride: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let w = j1 - j0;
+    let mut r0 = 0usize;
+    while r0 + L::W <= batch {
+        tl2_chunk::<L>(
+            p,
+            &luts[r0 * lut_stride..],
+            lut_stride,
+            j0,
+            j1,
+            &mut out[r0 * w..(r0 + L::W) * w],
+        );
+        r0 += L::W;
+    }
+    if r0 < batch {
+        lut::gemm_tl2_preluts(p, &luts[r0 * lut_stride..], lut_stride, batch - r0, j0, j1, &mut out[r0 * w..]);
+    }
+}
+
+/// I2_S decode-and-add for one chunk of exactly `L::W` rows. The packed
+/// byte is decoded to 4 ternary multipliers once (scalar table lookup,
+/// shared across lanes); activations are gathered at stride `d_in`.
+/// Product/sum order replicates scalar's
+/// `m[0]*x[0] + m[1]*x[1] + m[2]*x[2] + m[3]*x[3]` left-to-right chain.
+///
+/// # Safety
+///
+/// Module safety contract; `xs.len() >= W * d_in`,
+/// `out.len() == W * (j1 - j0)`.
+#[inline(always)]
+pub(crate) unsafe fn i2s_chunk<L: Lanes>(
+    p: &PackedI2S,
+    xs: &[f32],
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let d_in = p.d_in;
+    let w = j1 - j0;
+    debug_assert!(xs.len() >= L::W * d_in);
+    debug_assert_eq!(out.len(), L::W * w);
+    let full_bytes = d_in / 4;
+    let pairs = full_bytes / 2;
+    let base = xs.as_ptr();
+    for (jj, j) in (j0..j1).enumerate() {
+        let ch = p.channel(j);
+        let mut acc0 = L::zero();
+        let mut acc1 = L::zero();
+        for bp in 0..pairs {
+            let m0 = lut::i2s_multipliers(ch[2 * bp]);
+            let m1 = lut::i2s_multipliers(ch[2 * bp + 1]);
+            let xo = bp * 8;
+            let t0 = L::add(
+                L::add(
+                    L::add(
+                        L::mul(L::splat(m0[0]), L::gather(base, d_in, xo)),
+                        L::mul(L::splat(m0[1]), L::gather(base, d_in, xo + 1)),
+                    ),
+                    L::mul(L::splat(m0[2]), L::gather(base, d_in, xo + 2)),
+                ),
+                L::mul(L::splat(m0[3]), L::gather(base, d_in, xo + 3)),
+            );
+            let t1 = L::add(
+                L::add(
+                    L::add(
+                        L::mul(L::splat(m1[0]), L::gather(base, d_in, xo + 4)),
+                        L::mul(L::splat(m1[1]), L::gather(base, d_in, xo + 5)),
+                    ),
+                    L::mul(L::splat(m1[2]), L::gather(base, d_in, xo + 6)),
+                ),
+                L::mul(L::splat(m1[3]), L::gather(base, d_in, xo + 7)),
+            );
+            acc0 = L::add(acc0, t0);
+            acc1 = L::add(acc1, t1);
+        }
+        for i in pairs * 8..d_in {
+            let m = lut::i2s_multipliers(ch[i / 4])[i % 4];
+            acc0 = L::add(acc0, L::mul(L::splat(m), L::gather(base, d_in, i)));
+        }
+        let (mut t0, mut t1) = ([0.0f32; MAX_LANES], [0.0f32; MAX_LANES]);
+        L::store(acc0, &mut t0);
+        L::store(acc1, &mut t1);
+        for bi in 0..L::W {
+            out[bi * w + jj] = (t0[bi] + t1[bi]) * p.alpha[j];
+        }
+    }
+}
+
+/// Full batched I2_S walk (chunks + scalar row tail).
+///
+/// # Safety
+///
+/// Module safety contract; scalar-kernel preconditions asserted by the
+/// dispatch layer.
+#[inline(always)]
+pub(crate) unsafe fn gemm_i2s<L: Lanes>(
+    p: &PackedI2S,
+    xs: &[f32],
+    batch: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+) {
+    let d_in = p.d_in;
+    let w = j1 - j0;
+    let mut r0 = 0usize;
+    while r0 + L::W <= batch {
+        i2s_chunk::<L>(p, &xs[r0 * d_in..], j0, j1, &mut out[r0 * w..(r0 + L::W) * w]);
+        r0 += L::W;
+    }
+    if r0 < batch {
+        lut::gemm_i2s(p, &xs[r0 * d_in..], batch - r0, j0, j1, &mut out[r0 * w..]);
+    }
+}

@@ -1,0 +1,386 @@
+//! Scalar-vs-SIMD bit-for-bit parity suite for the two dispatched hot
+//! loops (satellite of the kernel-dispatch PR; DESIGN.md §5):
+//!
+//! 1. the i8×i8 attention dot (`simd::dot_i8_with`), and
+//! 2. the LUT-GEMM tile walks for all three pack formats
+//!    (`simd::gemm_{pack34,tl2}_preluts_with`, `simd::gemm_i2s_with`).
+//!
+//! Equality is **hard** (`f32::to_bits`), never a tolerance: the vector
+//! walks chunk the *batch* dimension so each lane replays the scalar
+//! kernel's operand order exactly, and the i8 dot accumulates in i32
+//! where addition is associative. Every test iterates all `Isa` variants
+//! — available ones exercise the real vector leaf, unavailable ones
+//! exercise the silent scalar degrade — plus a forced-`Isa::Scalar`
+//! control pinned against the raw `engine::lut` kernels. Nothing here
+//! calls `simd::select`, so the suite never pins the process-global ISA
+//! and stays order-independent with other tests.
+
+use sherry::cache::{F32Store, Int8Store, PageStore, Plane};
+use sherry::engine::{lut, NativeConfig};
+use sherry::pack::{Packed34, PackedI2S, PackedTl2};
+use sherry::quant::{absmean_quantize, sherry34_quantize, Granularity};
+use sherry::simd::{self, Isa};
+use sherry::tensor::Mat;
+use sherry::util::{prop, Pcg64};
+
+/// Assert two f32 buffers are bitwise identical (NaN-safe, -0.0 ≠ 0.0).
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            g.to_bits(),
+            w.to_bits(),
+            "{what}[{i}]: {g:?} ({:#010x}) vs {w:?} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}
+
+/// Deterministic i8 fill that covers the full range, including ±127 and
+/// -128 (so any widening/saturating trick in a vector path would show).
+fn i8_pattern(n: usize, salt: u64) -> Vec<i8> {
+    let mut rng = Pcg64::seeded(salt);
+    let mut v: Vec<i8> = (0..n).map(|_| (rng.next_u64() & 0xff) as u8 as i8).collect();
+    if n >= 3 {
+        v[0] = i8::MIN;
+        v[1] = i8::MAX;
+        v[2] = -127;
+    }
+    v
+}
+
+// ---------------------------------------------------------------------------
+// i8×i8 dot
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dot_parity_every_isa_every_tail_length() {
+    // Lengths straddle every chunk boundary of both vector widths (AVX2
+    // eats 16 i8 at a time, NEON 16): empty, sub-chunk, exact multiples,
+    // one-off tails, and a head-dim-like odd size.
+    for n in [0usize, 1, 2, 3, 7, 8, 15, 16, 17, 31, 32, 33, 63, 64, 100, 128, 257] {
+        let a = i8_pattern(n, 11 + n as u64);
+        let b = i8_pattern(n, 97 + n as u64);
+        let want = simd::dot_i8_scalar(&a, &b);
+        for isa in Isa::ALL {
+            assert_eq!(
+                simd::dot_i8_with(isa, &a, &b),
+                want,
+                "n={n} isa={} (available={})",
+                isa.name(),
+                isa.available()
+            );
+        }
+    }
+}
+
+#[test]
+fn dot_parity_extreme_values_and_mismatched_lengths() {
+    // All-(-128)² rows: the largest magnitude any i16 product path sees.
+    let a = vec![i8::MIN; 96];
+    let b = vec![i8::MIN; 96];
+    let want = 96 * 16_384;
+    for isa in Isa::ALL {
+        assert_eq!(simd::dot_i8_with(isa, &a, &b), want, "{}", isa.name());
+    }
+    // Mismatched lengths follow the scalar zip contract: min(len) terms.
+    let long = i8_pattern(40, 5);
+    let short = i8_pattern(25, 6);
+    let want = simd::dot_i8_scalar(&long, &short);
+    for isa in Isa::ALL {
+        assert_eq!(simd::dot_i8_with(isa, &long, &short), want, "{}", isa.name());
+        assert_eq!(simd::dot_i8_with(isa, &short, &long), want, "{}", isa.name());
+    }
+}
+
+#[test]
+fn prop_dot_parity_random_lengths() {
+    prop::check(
+        "dot_i8 simd == scalar",
+        64,
+        |rng| (prop::gens::usize_in(rng, 0, 300), rng.next_u64()),
+        |&(n, seed)| {
+            let a = i8_pattern(n, seed);
+            let b = i8_pattern(n, seed ^ 0x9e37_79b9);
+            let want = simd::dot_i8_scalar(&a, &b);
+            for isa in Isa::ALL {
+                let got = simd::dot_i8_with(isa, &a, &b);
+                if got != want {
+                    return Err(format!("n={n} isa={}: {got} vs {want}", isa.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The dot exactly as attention uses it: per-head slices of raw int8 page
+/// bytes from an `Int8Store`, including a *partial* page (3 of 4 slots
+/// written) and an *empty* prefix (0 rows).
+#[test]
+fn dot_parity_on_partial_and_empty_pages() {
+    let cfg = NativeConfig::named("nano").unwrap();
+    let d = cfg.d_model;
+    let hd = cfg.head_dim();
+    let mut st = Int8Store::new(&cfg, 2, 4);
+    st.reset_page(0);
+    let mut rng = Pcg64::seeded(31);
+    for s in 0..3 {
+        let row = rng.normal_vec(d);
+        st.write_row(0, 0, s, &row, &row);
+    }
+    let q = i8_pattern(d, 77);
+    for rows in [0usize, 1, 3] {
+        let (data, scales) = st.block_i8(Plane::K, 0, 0, rows).expect("int8-native view");
+        assert_eq!(data.len(), rows * d);
+        assert_eq!(scales.len(), cfg.n_heads);
+        for r in 0..rows {
+            for h in 0..cfg.n_heads {
+                let kh = &data[r * d + h * hd..r * d + (h + 1) * hd];
+                let qh = &q[h * hd..(h + 1) * hd];
+                let want = simd::dot_i8_scalar(qh, kh);
+                for isa in Isa::ALL {
+                    assert_eq!(
+                        simd::dot_i8_with(isa, qh, kh),
+                        want,
+                        "rows={rows} r={r} h={h} isa={}",
+                        isa.name()
+                    );
+                }
+            }
+        }
+    }
+    // rows = 0 yields an empty dot on every path.
+    for isa in Isa::ALL {
+        assert_eq!(simd::dot_i8_with(isa, &[], &[]), 0, "{}", isa.name());
+    }
+    // Control: the f32 store has no int8 view — attention would take the
+    // dequant path and never reach the dispatched dot.
+    let f = F32Store::new(&cfg, 1, 4);
+    assert!(f.block_i8(Plane::K, 0, 0, 1).is_none());
+}
+
+// ---------------------------------------------------------------------------
+// LUT-GEMM walks — shared fixture plumbing
+// ---------------------------------------------------------------------------
+
+struct Packs {
+    p34: Packed34,
+    tl2: PackedTl2,
+    i2s: PackedI2S,
+}
+
+/// Quantize one random weight matrix per family. `d_in` must be a
+/// multiple of 4 (pack34's layout contract); tl2/i2s take it as-is.
+fn packs(rng: &mut Pcg64, d_in: usize, d_out: usize) -> Packs {
+    let w = Mat::randn(rng, d_in, d_out, 1.0);
+    let qs = sherry34_quantize(&w, Granularity::PerChannel);
+    let qd = absmean_quantize(&w, Granularity::PerChannel);
+    Packs {
+        p34: Packed34::from_ternary(&qs),
+        tl2: PackedTl2::from_ternary(&qd),
+        i2s: PackedI2S::from_ternary(&qd),
+    }
+}
+
+/// Per-row pack34 LUTs for a `batch × d_in` activation block.
+fn luts34(xs: &[f32], d_in: usize, batch: usize) -> (Vec<f32>, usize) {
+    let stride = (d_in / 4) * 16;
+    let mut luts = vec![0.0f32; batch * stride];
+    for bi in 0..batch {
+        lut::build_luts34(&xs[bi * d_in..(bi + 1) * d_in], &mut luts[bi * stride..(bi + 1) * stride]);
+    }
+    (luts, stride)
+}
+
+/// Per-row TL2 LUTs for a `batch × d_in` activation block.
+fn luts_tl2(xs: &[f32], d_in: usize, batch: usize) -> (Vec<f32>, usize) {
+    let stride = d_in.div_ceil(3) * lut::TL2_LUT_STRIDE;
+    let mut luts = vec![0.0f32; batch * stride];
+    for bi in 0..batch {
+        lut::build_luts_tl2(&xs[bi * d_in..(bi + 1) * d_in], &mut luts[bi * stride..(bi + 1) * stride]);
+    }
+    (luts, stride)
+}
+
+/// Run every ISA (and the scalar control) over one (shape, batch, window)
+/// case for all three formats, asserting bit equality against the raw
+/// scalar kernels.
+fn check_gemm_case(
+    packs: &Packs,
+    xs: &[f32],
+    d_in: usize,
+    batch: usize,
+    j0: usize,
+    j1: usize,
+) -> Result<(), String> {
+    let w = j1 - j0;
+    let (l34, s34) = luts34(xs, d_in, batch);
+    let (ltl2, stl2) = luts_tl2(xs, d_in, batch);
+
+    let mut want34 = vec![0.0f32; batch * w];
+    let mut want_tl2 = vec![0.0f32; batch * w];
+    let mut want_i2s = vec![0.0f32; batch * w];
+    lut::gemm_pack34_preluts(&packs.p34, &l34, s34, batch, j0, j1, &mut want34);
+    lut::gemm_tl2_preluts(&packs.tl2, &ltl2, stl2, batch, j0, j1, &mut want_tl2);
+    lut::gemm_i2s(&packs.i2s, xs, batch, j0, j1, &mut want_i2s);
+
+    for isa in Isa::ALL {
+        let tag = format!(
+            "d_in={d_in} batch={batch} j0={j0} j1={j1} isa={} (available={})",
+            isa.name(),
+            isa.available()
+        );
+        let mut got = vec![f32::NAN; batch * w];
+        simd::gemm_pack34_preluts_with(isa, &packs.p34, &l34, s34, batch, j0, j1, &mut got);
+        for (i, (g, w)) in got.iter().zip(&want34).enumerate() {
+            if g.to_bits() != w.to_bits() {
+                return Err(format!("pack34 {tag} [{i}]: {g:?} vs {w:?}"));
+            }
+        }
+        let mut got = vec![f32::NAN; batch * w];
+        simd::gemm_tl2_preluts_with(isa, &packs.tl2, &ltl2, stl2, batch, j0, j1, &mut got);
+        for (i, (g, w)) in got.iter().zip(&want_tl2).enumerate() {
+            if g.to_bits() != w.to_bits() {
+                return Err(format!("tl2 {tag} [{i}]: {g:?} vs {w:?}"));
+            }
+        }
+        let mut got = vec![f32::NAN; batch * w];
+        simd::gemm_i2s_with(isa, &packs.i2s, xs, batch, j0, j1, &mut got);
+        for (i, (g, w)) in got.iter().zip(&want_i2s).enumerate() {
+            if g.to_bits() != w.to_bits() {
+                return Err(format!("i2s {tag} [{i}]: {g:?} vs {w:?}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// LUT-GEMM walks — exhaustive deterministic cases
+// ---------------------------------------------------------------------------
+
+/// Batches 1..=10 straddle both lane widths (NEON chunks 4 rows, AVX2 8)
+/// plus their one-off tails; 16 and 17 hit multi-chunk and
+/// multi-chunk-plus-tail.
+const BATCHES: [usize; 12] = [1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 16, 17];
+
+#[test]
+fn gemm_parity_across_batches_and_formats() {
+    // d_in = 64: pack34's sb-tile loop runs full 16-block tiles; d_out
+    // deliberately not a "nice" width.
+    let mut rng = Pcg64::seeded(101);
+    let (d_in, d_out) = (64usize, 13usize);
+    let packs = packs(&mut rng, d_in, d_out);
+    for batch in BATCHES {
+        let xs = rng.normal_vec(batch * d_in);
+        check_gemm_case(&packs, &xs, d_in, batch, 0, d_out).unwrap();
+    }
+}
+
+#[test]
+fn gemm_parity_odd_tail_d_in() {
+    // Shapes chosen so every format's *element* tail path runs:
+    //   pack34: nb = d_in/4 not a multiple of 8 → partial sb tile;
+    //   tl2:    d_in % 3 ∈ {1, 2} → padded final group;
+    //   i2s:    d_in % 4 ∈ {1, 2, 3} → partial final byte.
+    // pack34 requires d_in % 4 == 0, so tl2/i2s odd tails get their own
+    // fixtures below.
+    let mut rng = Pcg64::seeded(202);
+    for d_in in [4usize, 12, 20, 36, 100] {
+        let d_out = 7;
+        let packs = packs(&mut rng, d_in, d_out);
+        for batch in [1usize, 4, 5, 8, 9] {
+            let xs = rng.normal_vec(batch * d_in);
+            check_gemm_case(&packs, &xs, d_in, batch, 0, d_out).unwrap();
+        }
+    }
+    // tl2 / i2s only (d_in not a multiple of 4): drive their dispatched
+    // walks directly over every residue class.
+    for d_in in [3usize, 5, 7, 9, 97, 98] {
+        let d_out = 5;
+        let w = Mat::randn(&mut rng, d_in, d_out, 1.0);
+        let qd = absmean_quantize(&w, Granularity::PerChannel);
+        let tl2 = PackedTl2::from_ternary(&qd);
+        let i2s = PackedI2S::from_ternary(&qd);
+        for batch in [1usize, 3, 4, 5, 8, 9] {
+            let xs = rng.normal_vec(batch * d_in);
+            let (ltl2, stl2) = luts_tl2(&xs, d_in, batch);
+            let mut want = vec![0.0f32; batch * d_out];
+            lut::gemm_tl2_preluts(&tl2, &ltl2, stl2, batch, 0, d_out, &mut want);
+            let mut want_i = vec![0.0f32; batch * d_out];
+            lut::gemm_i2s(&i2s, &xs, batch, 0, d_out, &mut want_i);
+            for isa in Isa::ALL {
+                let mut got = vec![f32::NAN; batch * d_out];
+                simd::gemm_tl2_preluts_with(isa, &tl2, &ltl2, stl2, batch, 0, d_out, &mut got);
+                assert_bits_eq(&got, &want, &format!("tl2 d_in={d_in} b={batch} {}", isa.name()));
+                let mut got = vec![f32::NAN; batch * d_out];
+                simd::gemm_i2s_with(isa, &i2s, &xs, batch, 0, d_out, &mut got);
+                assert_bits_eq(&got, &want_i, &format!("i2s d_in={d_in} b={batch} {}", isa.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_parity_on_column_windows() {
+    // The engine tiles output columns (gemm_tile), so dispatched walks
+    // must honor partial [j0, j1) windows, including single-column and
+    // empty windows.
+    let mut rng = Pcg64::seeded(303);
+    let (d_in, d_out) = (32usize, 11usize);
+    let packs = packs(&mut rng, d_in, d_out);
+    let xs = rng.normal_vec(9 * d_in);
+    for (j0, j1) in [(0usize, 11usize), (0, 1), (3, 8), (10, 11), (5, 5)] {
+        check_gemm_case(&packs, &xs, d_in, 9, j0, j1).unwrap();
+    }
+}
+
+#[test]
+fn prop_gemm_parity_random_shapes() {
+    prop::check(
+        "gemm walks simd == scalar (all formats)",
+        40,
+        |rng| {
+            let d_in = 4 * prop::gens::usize_in(rng, 1, 40);
+            let d_out = prop::gens::usize_in(rng, 1, 24);
+            let batch = prop::gens::usize_in(rng, 1, 18);
+            (d_in, d_out, batch, rng.next_u64())
+        },
+        |&(d_in, d_out, batch, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let packs = packs(&mut rng, d_in, d_out);
+            let xs = rng.normal_vec(batch * d_in);
+            // Random sub-window half the time.
+            let (j0, j1) = if seed % 2 == 0 {
+                (0, d_out)
+            } else {
+                let j0 = (seed as usize / 2) % d_out;
+                (j0, j0 + 1 + (seed as usize / 7) % (d_out - j0))
+            };
+            check_gemm_case(&packs, &xs, d_in, batch, j0, j1)
+        },
+    );
+}
+
+/// Dispatching through `Isa::Scalar` must be the *identical* code path as
+/// calling `engine::lut` directly — outputs are compared bit-for-bit
+/// above, but this control also pins the zero-batch edge and proves the
+/// `_with` wrappers add no observable behavior of their own.
+#[test]
+fn forced_scalar_control_matches_direct_lut_calls() {
+    let mut rng = Pcg64::seeded(404);
+    let (d_in, d_out) = (24usize, 6usize);
+    let packs = packs(&mut rng, d_in, d_out);
+    for batch in [0usize, 1, 5] {
+        let xs = rng.normal_vec(batch * d_in);
+        check_gemm_case(&packs, &xs, d_in, batch, 0, d_out).unwrap();
+    }
+    // The process-global selection (whatever this test binary pinned —
+    // SHERRY_KERNEL_ISA in the CI matrix) agrees with itself and is one
+    // of the variants the loops above already proved bit-exact.
+    let active = simd::active();
+    assert!(active.available());
+    assert!(Isa::ALL.contains(&active));
+}
