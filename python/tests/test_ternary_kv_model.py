@@ -1,0 +1,518 @@
+"""Behavioral model of the 1.25-bit ternary KV subsystem (PR 7).
+
+Replays, in numpy, the Rust pieces that make `TernaryStore` + the
+LUT-routed attention score pass correct, and asserts the same contracts
+the Rust tests assert (`rust/src/cache/ternary.rs`,
+`rust/src/engine/lut.rs`, `rust/src/simd/walk.rs`,
+`rust/tests/{paged_kv,simd_parity}.rs`, DESIGN.md §4):
+
+1. the streaming b1.58 absmean quantizer (`quant::absmean`): stable
+   argmin 3:4 drop, `sign(0) = +1`, scale-independent codes, running
+   absmean == batch absmean;
+2. the pack34 codec (`pack::pack34`): 16 canonical patterns × mirror
+   bit, exhaustive encode/decode round-trip over every 3:4 block;
+3. the K page model: packed bytes + per-(page, head) scale are a pure
+   function of the row sequence (frozen-byte determinism; no
+   requantization cascade), dequant == codes × final running scale;
+4. the per-query 32-entry q·k LUTs: integer-valued entries (exact in
+   f32), mirror half an exact negation, the LUT row walk equal to
+   decode-then-dot *bit-for-bit*, and the W-lane vector walk (W=4
+   models NEON, W=8 AVX2 `gather_at`) bit-identical to the scalar walk
+   across batch/tail shapes;
+5. the DESIGN.md §4 error bounds: the fused score vs the dequantized-K
+   reference stays within the query-rounding bound (and a constructed
+   worst case saturates most of it), and vs the *exact* f32 K within
+   the dropped-mass + scale-spread + rounding bound.
+
+numpy-only (no jax/hypothesis): runnable as a plain script in
+toolchain-less environments, and pytest-collectible in CI.
+"""
+
+import numpy as np
+
+F = np.float32
+
+
+def bits(a):
+    return np.asarray(a, dtype=F).view(np.uint32)
+
+
+def assert_bits_eq(got, want, what):
+    got, want = np.asarray(got, F), np.asarray(want, F)
+    assert got.shape == want.shape, f"{what}: shape {got.shape} vs {want.shape}"
+    if not np.array_equal(bits(got), bits(want)):
+        i = int(np.flatnonzero(bits(got).ravel() != bits(want).ravel())[0])
+        raise AssertionError(f"{what}[{i}]: {got.ravel()[i]!r} vs {want.ravel()[i]!r}")
+
+
+# ---------------------------------------------------------------------------
+# quant::absmean — streaming 3:4 sparsifier + running absmean scale
+# ---------------------------------------------------------------------------
+
+
+def sparsify34_codes(x):
+    """`sparsify34_codes`: per 4-block drop the smallest-|x| lane
+    (strictly-less scan => lowest index wins ties), sign(x) elsewhere
+    with sign(0) = +1."""
+    x = np.asarray(x, F)
+    assert x.size % 4 == 0
+    codes = np.zeros(x.size, np.int8)
+    for b0 in range(0, x.size, 4):
+        xb = x[b0 : b0 + 4]
+        drop = 0
+        for lane in range(1, 4):
+            if abs(xb[lane]) < abs(xb[drop]):
+                drop = lane
+        for lane in range(4):
+            if lane == drop:
+                codes[b0 + lane] = 0
+            else:
+                codes[b0 + lane] = -1 if xb[lane] < 0.0 else 1
+    return codes
+
+
+def kept_abs_sum(x, codes):
+    """f32 left-fold of |x| over kept lanes, matching the Rust iterator
+    sum's association order."""
+    t = F(0.0)
+    for v, c in zip(np.asarray(x, F), codes):
+        if c != 0:
+            t = F(t + F(abs(v)))
+    return t
+
+
+def absmean_scale(sum_abs, count):
+    return F(0.0) if count == 0 else F(F(sum_abs) / F(count))
+
+
+def test_codes_drop_argmin_stable_and_sign_zero_positive():
+    assert list(sparsify34_codes([3.0, -1.0, 0.5, -2.0])) == [1, -1, 0, -1]
+    # A strictly-smallest |x| is dropped wherever it sits.
+    assert list(sparsify34_codes([1.0, 0.0, -1.0, 2.0])) == [1, 0, -1, 1]
+    # |x| tie between lanes 0 and 1 -> lane 0 dropped (lowest index); the
+    # kept exact-zero lane codes +1 so the block still holds one zero.
+    assert list(sparsify34_codes([0.0, 0.0, -1.0, 2.0])) == [0, 1, -1, 1]
+    rng = np.random.default_rng(3)
+    for _ in range(50):
+        c = sparsify34_codes(rng.normal(size=32).astype(F))
+        for b0 in range(0, 32, 4):
+            blk = c[b0 : b0 + 4]
+            assert np.count_nonzero(blk == 0) == 1, blk
+
+
+def test_running_absmean_is_a_pure_fold_equal_to_batch():
+    rng = np.random.default_rng(5)
+    rows = [rng.normal(size=16).astype(F) for _ in range(6)]
+    s, n = F(0.0), 0
+    kept = []
+    for r in rows:
+        c = sparsify34_codes(r)
+        s = F(s + kept_abs_sum(r, c))
+        n += 12  # 3/4 of 16
+        kept.extend(abs(v) for v, cc in zip(r, c) if cc != 0)
+    assert abs(absmean_scale(s, n) - np.mean(kept, dtype=np.float64)) < 1e-5
+    assert absmean_scale(0.0, 0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# pack::pack34 — canonical patterns, encode/decode
+# ---------------------------------------------------------------------------
+
+
+def build_patterns():
+    out = np.zeros((16, 4), np.int8)
+    for z in range(4):
+        for sb in range(2):
+            for sc in range(2):
+                idx = z * 4 + (sb << 1 | sc)
+                active = 0
+                for lane in range(4):
+                    if lane == z:
+                        continue
+                    if active == 0:
+                        out[idx, lane] = 1
+                    elif active == 1:
+                        out[idx, lane] = -1 if sb else 1
+                    else:
+                        out[idx, lane] = -1 if sc else 1
+                    active += 1
+    return out
+
+
+PATTERNS = build_patterns()
+
+
+def encode_block(block):
+    zeros = [i for i, v in enumerate(block) if v == 0]
+    assert len(zeros) == 1, "pack34 requires exactly one zero per block"
+    z = zeros[0]
+    active = [v for v in block if v != 0]
+    mirror = active[0] == -1
+    m = -1 if mirror else 1
+    sb = int(active[1] * m == -1)
+    sc = int(active[2] * m == -1)
+    return z * 4 + (sb << 1 | sc), mirror
+
+
+def decode_block(idx, mirror):
+    p = PATTERNS[idx].copy()
+    return -p if mirror else p
+
+
+def test_pack34_roundtrip_every_34_block():
+    # All 32 legal 3:4 blocks: 4 zero positions x 8 sign patterns.
+    seen = set()
+    for z in range(4):
+        for signs in range(8):
+            blk = np.zeros(4, np.int8)
+            s, lanes = signs, [l for l in range(4) if l != z]
+            for i, lane in enumerate(lanes):
+                blk[lane] = -1 if (s >> (2 - i)) & 1 else 1
+            idx, mirror = encode_block(blk)
+            assert 0 <= idx < 16
+            assert np.array_equal(decode_block(idx, mirror), blk), blk
+            seen.add((idx, mirror))
+    assert len(seen) == 32, "every (idx, mirror) state must be reachable"
+
+
+# ---------------------------------------------------------------------------
+# TernaryStore K page model — packed planes + running per-head scale
+# ---------------------------------------------------------------------------
+
+
+class KPageModel:
+    """One (layer, page) of `TernaryStore`'s K plane at nano-like shape:
+    per-(slot, head) nibble/sign lanes, one running absmean scale per
+    head. Mirrors write_row / dequant_k_into."""
+
+    def __init__(self, page_size, n_heads, hd):
+        assert hd % 4 == 0
+        self.ps, self.nh, self.hd = page_size, n_heads, hd
+        self.nb = hd // 4
+        self.idx = np.zeros((page_size, n_heads, self.nb), np.uint8)
+        self.mirror = np.zeros((page_size, n_heads, self.nb), np.uint8)
+        self.sum_abs = np.zeros(n_heads, F)
+        self.count = np.zeros(n_heads, np.uint32)
+
+    def write_row(self, slot, k_row):
+        codes = sparsify34_codes(k_row)
+        for h in range(self.nh):
+            c0 = h * self.hd
+            self.sum_abs[h] = F(
+                self.sum_abs[h] + kept_abs_sum(k_row[c0 : c0 + self.hd], codes[c0 : c0 + self.hd])
+            )
+            self.count[h] += 3 * self.hd // 4
+            for b in range(self.nb):
+                i, m = encode_block(codes[c0 + 4 * b : c0 + 4 * b + 4])
+                self.idx[slot, h, b] = i
+                self.mirror[slot, h, b] = m
+
+    def scale(self, h):
+        return absmean_scale(self.sum_abs[h], self.count[h])
+
+    def dequant(self, rows):
+        out = np.zeros((rows, self.nh * self.hd), F)
+        for r in range(rows):
+            for h in range(self.nh):
+                s = self.scale(h)
+                for b in range(self.nb):
+                    pat = decode_block(self.idx[r, h, b], self.mirror[r, h, b])
+                    out[r, h * self.hd + 4 * b : h * self.hd + 4 * b + 4] = pat.astype(F) * s
+        return out
+
+    def packed_bytes(self):
+        """The frozen artifact: packed planes + materialized scales."""
+        scales = np.array([self.scale(h) for h in range(self.nh)], F)
+        return self.idx.tobytes() + self.mirror.tobytes() + scales.tobytes()
+
+
+def test_frozen_page_bytes_are_a_pure_function_of_the_rows():
+    # Two pages fed the identical row sequence — one of them inside a
+    # "busy server" with other pages interleaved — must freeze to
+    # byte-identical artifacts. This is what makes ternary prefix
+    # sharing serving-order invariant.
+    rng = np.random.default_rng(11)
+    rows = [rng.normal(size=4 * 8).astype(F) for _ in range(4)]
+    a = KPageModel(4, 2, 16)
+    b = KPageModel(4, 2, 16)
+    noise = KPageModel(4, 2, 16)
+    for s, r in enumerate(rows):
+        a.write_row(s, r)
+        noise.write_row(s, rng.normal(size=32).astype(F))  # unrelated traffic
+        b.write_row(s, r)
+    assert a.packed_bytes() == b.packed_bytes()
+    assert a.packed_bytes() != noise.packed_bytes()
+
+
+def test_dequant_is_codes_times_final_scale_no_requantization():
+    # Codes never move after their write; only the scale (a pure fold)
+    # evolves. So every row dequantizes to its own codes x the final
+    # scale — there is no int8-style requantization cascade to model.
+    rng = np.random.default_rng(13)
+    pg = KPageModel(4, 2, 16)
+    rows = [rng.normal(size=32).astype(F) * (10.0**i) for i in range(4)]
+    snap_codes = []
+    for s, r in enumerate(rows):
+        pg.write_row(s, r)
+        snap_codes.append(sparsify34_codes(r))
+        # Earlier rows' packed bytes are untouched by later writes.
+        for t in range(s + 1):
+            c = snap_codes[t]
+            for h in range(2):
+                for b in range(pg.nb):
+                    pat = decode_block(pg.idx[t, h, b], pg.mirror[t, h, b])
+                    assert np.array_equal(pat, c[h * 16 + 4 * b : h * 16 + 4 * b + 4])
+    dq = pg.dequant(4)
+    for t, c in enumerate(snap_codes):
+        for h in range(2):
+            want = c[h * 16 : (h + 1) * 16].astype(F) * pg.scale(h)
+            assert_bits_eq(dq[t, h * 16 : (h + 1) * 16], want, f"slot {t} head {h}")
+
+
+# ---------------------------------------------------------------------------
+# engine::lut — per-query 32-entry q·k LUTs + row walks
+# ---------------------------------------------------------------------------
+
+
+def quantize_query(q_row, n_heads, hd):
+    """`model::quantize_query`: symmetric round-to-nearest int8 per head,
+    scale = absmax/127 (zero head keeps scale 0 / zero codes)."""
+    q_row = np.asarray(q_row, F)
+    codes = np.zeros(n_heads * hd, np.int32)
+    scales = np.zeros(n_heads, F)
+    for h in range(n_heads):
+        seg = q_row[h * hd : (h + 1) * hd]
+        absmax = F(np.max(np.abs(seg), initial=0.0))
+        if absmax == 0.0:
+            continue
+        s = F(absmax / F(127.0))
+        scales[h] = s
+        codes[h * hd : (h + 1) * hd] = np.clip(
+            np.round(seg.astype(np.float64) / s), -127, 127
+        ).astype(np.int32)
+    return codes, scales
+
+
+def build_qk_luts34(q_codes, hd, n_heads):
+    """`lut::build_qk_luts34`: luts[(h*nb+b)*32 + mirror*16 + idx] =
+    sum_lane decode(idx, mirror)[lane] * q[h*hd + 4b + lane], exact in
+    f32 (integer-valued, |.| <= 3*127 << 2^24)."""
+    nb = hd // 4
+    luts = np.zeros(n_heads * nb * 32, F)
+    for h in range(n_heads):
+        for b in range(nb):
+            q = q_codes[h * hd + 4 * b : h * hd + 4 * b + 4]
+            base = (h * nb + b) * 32
+            for idx in range(16):
+                s = int(np.dot(PATTERNS[idx].astype(np.int64), q))
+                luts[base + idx] = F(s)
+                luts[base + 16 + idx] = F(-float(s))
+    return luts
+
+
+def qk_lut34_rows_scalar(page, h, luts, rows):
+    """`lut::qk_lut34_rows`: per row, left-fold of one gathered entry per
+    block — raw integer sums, scales applied by the caller."""
+    nb = page.nb
+    out = np.zeros(rows, F)
+    for r in range(rows):
+        acc = F(0.0)
+        for b in range(nb):
+            off = (h * nb + b) * 32 + int(page.mirror[r, h, b]) * 16 + int(page.idx[r, h, b])
+            acc = F(acc + luts[off])
+        out[r] = acc
+    return out
+
+
+def qk_lut34_rows_walk(W, page, h, luts, rows):
+    """`walk::qk_lut34_rows::<L>`: W-row chunks, per-block `gather_at`
+    (per-lane offsets into the head's LUT base), scalar row tail."""
+    nb = page.nb
+    out = np.zeros(rows, F)
+    r0 = 0
+    base = h * nb * 32
+    while r0 + W <= rows:
+        acc = np.zeros(W, F)
+        for b in range(nb):
+            off = np.array(
+                [
+                    b * 32 + int(page.mirror[r0 + i, h, b]) * 16 + int(page.idx[r0 + i, h, b])
+                    for i in range(W)
+                ]
+            )
+            acc = acc + luts[base + off]  # L::add(acc, L::gather_at(base, off))
+        out[r0 : r0 + W] = acc
+        r0 += W
+    if r0 < rows:
+        out[r0:] = qk_lut34_rows_scalar_from(page, h, luts, r0, rows)
+    return out
+
+
+def qk_lut34_rows_scalar_from(page, h, luts, r0, rows):
+    nb = page.nb
+    out = np.zeros(rows - r0, F)
+    for i, r in enumerate(range(r0, rows)):
+        acc = F(0.0)
+        for b in range(nb):
+            off = (h * nb + b) * 32 + int(page.mirror[r, h, b]) * 16 + int(page.idx[r, h, b])
+            acc = F(acc + luts[off])
+        out[i] = acc
+    return out
+
+
+def filled_page(rng, ps, nh, hd):
+    pg = KPageModel(ps, nh, hd)
+    krows = [rng.normal(size=nh * hd).astype(F) for _ in range(ps)]
+    for s, r in enumerate(krows):
+        pg.write_row(s, r)
+    return pg, krows
+
+
+def test_luts_are_integer_exact_with_mirror_negation():
+    rng = np.random.default_rng(17)
+    nh, hd = 2, 16
+    q_codes, _ = quantize_query(rng.normal(size=nh * hd).astype(F), nh, hd)
+    luts = build_qk_luts34(q_codes, hd, nh)
+    assert np.array_equal(luts, np.round(luts)), "entries must sit on the integer lattice"
+    assert np.max(np.abs(luts)) <= 3 * 127
+    half = luts.reshape(-1, 32)
+    assert np.array_equal(half[:, 16:], -half[:, :16]), "mirror half = exact negation"
+
+
+def test_lut_walk_equals_decode_then_dot_bitwise():
+    # Integer lattice => f32 accumulation is exact in any order, so the
+    # LUT walk must equal the decode-then-integer-dot reference exactly,
+    # not approximately — the Rust side asserts the same.
+    rng = np.random.default_rng(19)
+    nh, hd, ps = 2, 16, 5
+    pg, _ = filled_page(rng, ps, nh, hd)
+    q_codes, _ = quantize_query(rng.normal(size=nh * hd).astype(F), nh, hd)
+    luts = build_qk_luts34(q_codes, hd, nh)
+    for h in range(nh):
+        got = qk_lut34_rows_scalar(pg, h, luts, ps)
+        for r in range(ps):
+            kdec = np.concatenate(
+                [decode_block(pg.idx[r, h, b], pg.mirror[r, h, b]) for b in range(pg.nb)]
+            ).astype(np.int64)
+            want = int(np.dot(kdec, q_codes[h * hd : (h + 1) * hd]))
+            assert got[r] == F(want), f"h={h} r={r}: {got[r]} vs {want}"
+
+
+def test_qk_walk_parity_scalar_vs_lanes_every_tail():
+    rng = np.random.default_rng(23)
+    nh, hd = 3, 24
+    for rows in [0, 1, 2, 3, 4, 5, 7, 8, 9, 13, 16, 17]:
+        pg, _ = filled_page(rng, max(rows, 1), nh, hd)
+        q_codes, _ = quantize_query(rng.normal(size=nh * hd).astype(F), nh, hd)
+        luts = build_qk_luts34(q_codes, hd, nh)
+        for h in range(nh):
+            want = qk_lut34_rows_scalar(pg, h, luts, rows)
+            for W in (4, 8):
+                got = qk_lut34_rows_walk(W, pg, h, luts, rows)
+                assert_bits_eq(got, want, f"qk rows={rows} h={h} W={W}")
+
+
+# ---------------------------------------------------------------------------
+# DESIGN.md §4 — fused-score error bounds
+# ---------------------------------------------------------------------------
+
+
+def fused_scores(pg, q_row, nh, hd, rows):
+    """The KBlock::Ternary arm: quantize q once, LUT-walk raw sums, then
+    one multiply by q_scale[h] * k_scale[h] (softmax 1/sqrt(hd) omitted —
+    it scales both sides of every bound identically)."""
+    q_codes, q_scales = quantize_query(q_row, nh, hd)
+    luts = build_qk_luts34(q_codes, hd, nh)
+    out = np.zeros((nh, rows), F)
+    for h in range(nh):
+        raw = qk_lut34_rows_scalar(pg, h, luts, rows)
+        out[h] = raw * F(q_scales[h] * pg.scale(h))
+    return out, q_scales
+
+
+def test_bound1_fused_vs_dequantized_k():
+    # Bound 1: |fused - q_f32 . k_dequant| <= (3/4) hd * (s_q/2) * s_k —
+    # only query rounding separates them; K contributes the same
+    # codes x scale to both sides.
+    rng = np.random.default_rng(29)
+    nh, hd, ps = 2, 32, 6
+    pg, _ = filled_page(rng, ps, nh, hd)
+    q_row = rng.normal(size=nh * hd).astype(F)
+    fused, q_scales = fused_scores(pg, q_row, nh, hd, ps)
+    dq = pg.dequant(ps)
+    for h in range(nh):
+        s_k = pg.scale(h)
+        bound = 0.75 * hd * 0.5 * float(q_scales[h]) * float(s_k)
+        for r in range(ps):
+            ref = float(
+                np.dot(
+                    q_row[h * hd : (h + 1) * hd].astype(np.float64),
+                    dq[r, h * hd : (h + 1) * hd].astype(np.float64),
+                )
+            )
+            err = abs(float(fused[h, r]) - ref)
+            assert err <= bound + 1e-4, f"h={h} r={r}: {err} > {bound}"
+
+
+def test_bound1_worst_case_nearly_saturates():
+    # Constructed adversary: every query channel sits 0.47 of a quantum
+    # above its code (decisively rounding down, so every channel's error
+    # is +0.47 s_q — exactly half a quantum would hit round-half-to-even
+    # and the errors would cancel pairwise) and every kept k lane is
+    # +s_k, so each of the (3/4) hd surviving lanes pushes the same way.
+    # Measured error = 0.94x Bound 1, proving the bound is tight up to
+    # the rounding-breaking offset.
+    nh, hd = 1, 32
+    pg = KPageModel(1, nh, hd)
+    k_row = np.tile([1.0, 1.0, 1.0, 1e-6], hd // 4).astype(F)  # drop lane 3
+    pg.write_row(0, k_row)
+    s_k = float(pg.scale(0))
+    assert abs(s_k - 1.0) < 1e-5
+    # Codes 0..95 scaled so absmax/127 = s_q, then shifted 0.47 quanta.
+    # Keep signs positive so every error pushes the same way.
+    s_q = 1.0 / 127.0
+    q_row = ((np.arange(hd) % 96 + 0.47) * s_q).astype(F)
+    q_row[-1] = F(127.0 * s_q)  # pin absmax so the scale is exactly s_q
+    fused, q_scales = fused_scores(pg, q_row, nh, hd, 1)
+    assert abs(float(q_scales[0]) - s_q) < 1e-9
+    dq = pg.dequant(1)
+    ref = float(np.dot(q_row.astype(np.float64), dq[0].astype(np.float64)))
+    err = abs(float(fused[0, 0]) - ref)
+    bound = 0.75 * hd * 0.5 * s_q * s_k
+    assert err <= bound + 1e-6
+    assert err >= 0.9 * bound, f"worst case should nearly saturate: {err} vs {bound}"
+
+
+def test_bound2_fused_vs_exact_f32_k():
+    # Bound 2 (vs the exact f32 K row): dropped mass + kept magnitude
+    # spread + query rounding:
+    #   sum_dropped |q_c||k_c| + sum_kept |q_c| ||k_c| - s_k|
+    #     + (s_q/2) s_k (3/4) hd.
+    rng = np.random.default_rng(31)
+    nh, hd, ps = 2, 32, 6
+    krows = [rng.normal(size=nh * hd).astype(F) for _ in range(ps)]
+    pg = KPageModel(ps, nh, hd)
+    for s, r in enumerate(krows):
+        pg.write_row(s, r)
+    q_row = rng.normal(size=nh * hd).astype(F)
+    fused, q_scales = fused_scores(pg, q_row, nh, hd, ps)
+    for h in range(nh):
+        s_k = float(pg.scale(h))
+        for r in range(ps):
+            k = krows[r][h * hd : (h + 1) * hd].astype(np.float64)
+            q = q_row[h * hd : (h + 1) * hd].astype(np.float64)
+            codes = sparsify34_codes(krows[r])[h * hd : (h + 1) * hd]
+            exact = float(np.dot(q, k))
+            dropped = float(np.sum(np.abs(q[codes == 0]) * np.abs(k[codes == 0])))
+            spread = float(np.sum(np.abs(q[codes != 0]) * np.abs(np.abs(k[codes != 0]) - s_k)))
+            bound = dropped + spread + 0.5 * float(q_scales[h]) * s_k * 0.75 * hd
+            err = abs(float(fused[h, r]) - exact)
+            assert err <= bound + 1e-4, f"h={h} r={r}: {err} > {bound}"
+
+
+if __name__ == "__main__":
+    fns = [v for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for fn in fns:
+        fn()
+        print(f"ok {fn.__name__}")
+    print(f"{len(fns)} behavioral checks passed")

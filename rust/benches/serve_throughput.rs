@@ -17,6 +17,11 @@
 //!    prefix-sharing × tile-cache on/off vs the f32 sharing baseline —
 //!    tokens/s, int8 q·k dot fraction, tile-cache hit rate, prefix hit
 //!    rate and dequant overhead. Emitted to `BENCH_int8_attn.json`.
+//! 5. Ternary-KV sweep: f32 vs int8 vs 1.25-bit ternary × shared-prefix
+//!    on/off at one fixed byte budget — tokens/s, per-dtype K/V
+//!    bytes-per-token breakdown, q·k routing fractions (int8 dot vs
+//!    ternary LUT walk) and dequant overhead. Emitted to
+//!    `BENCH_kv_ternary.json`.
 //!
 //! Run: `cargo bench --bench serve_throughput`
 
@@ -68,6 +73,7 @@ fn main() {
     paged_sweep(&model, single);
     kv_quant_sweep(&model);
     int8_attn_sweep(&model);
+    ternary_kv_sweep(&model);
 }
 
 /// Paged vs contiguous-equivalent KV at a fixed byte budget, with and
@@ -320,6 +326,99 @@ fn int8_attn_sweep(model: &TernaryModel) {
         records.join(",\n")
     );
     let path = "BENCH_int8_attn.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}
+
+/// All three KV dtypes head-to-head at one fixed byte budget (2 f32
+/// whole-cache equivalents), with and without a shared system prompt.
+/// Ternary packs K at 1.25 bits/channel (V stays int8), so the same
+/// budget buys the most pages; the score pass routes per storage dtype —
+/// i32 dots for int8, per-query LUT walks for ternary — and the K/V
+/// bytes-per-token breakdown shows exactly where the footprint went.
+fn ternary_kv_sweep(model: &TernaryModel) {
+    let kv_capacity = 2usize;
+    let trace = |shared: usize| TraceSpec {
+        n_requests: 24,
+        mean_interarrival_s: 0.0005,
+        prompt_len: 18,
+        shared_prefix_len: shared,
+        max_new_tokens: 16,
+        seed: 12,
+    };
+
+    println!(
+        "\n### KV dtype sweep incl. 1.25-bit ternary ({kv_capacity} f32 cache-equivalents)\n"
+    );
+    println!(
+        "| kv dtype | shared prefix | tok/s | peak active | B/token (K+V) | int8 q·k | ternary q·k | prefix hit-rate | dequant cpu-s/wall-s |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+    let mut records = Vec::new();
+    for dtype in KvDtype::ALL {
+        for shared_len in [0usize, 12] {
+            let server_cfg = ServerConfig {
+                batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+                kv_capacity,
+                page_size: 4,
+                kv_dtype: dtype,
+                prefix_sharing: shared_len > 0,
+                workers: 8,
+                ..Default::default()
+            };
+            let spec = trace(shared_len);
+            let (completions, m) = serve_trace(model, server_cfg, spec);
+            assert_eq!(completions.len(), spec.n_requests, "sweep must serve everything");
+            println!(
+                "| {} | {shared_len} | {:.1} | {} | {} ({}+{}) | {:.0}% | {:.0}% | {:.0}% | {:.3} |",
+                dtype.name(),
+                m.throughput_tps(),
+                m.peak_active,
+                m.kv_bytes_per_token,
+                m.kv_bytes_per_token_k,
+                m.kv_bytes_per_token_v,
+                100.0 * m.int8_dot_fraction(),
+                100.0 * m.ternary_dot_fraction(),
+                100.0 * m.prefix_hit_rate(),
+                m.dequant_overhead(),
+            );
+            records.push(format!(
+                "    {{\"kv_dtype\": \"{}\", \"shared_prefix_len\": {shared_len}, \
+                 \"tok_per_s\": {:.3}, \"peak_active\": {}, \"kv_bytes\": {}, \
+                 \"kv_bytes_per_token\": {}, \"kv_bytes_per_token_k\": {}, \
+                 \"kv_bytes_per_token_v\": {}, \"kv_pages_total\": {}, \
+                 \"int8_dot_fraction\": {:.4}, \"ternary_dot_fraction\": {:.4}, \
+                 \"prefix_hit_rate\": {:.4}, \"dequant_seconds\": {:.6}, \
+                 \"dequant_overhead\": {:.5}, \"ttft_p50_s\": {:.5}, \"isa\": \"{}\"}}",
+                dtype.name(),
+                m.throughput_tps(),
+                m.peak_active,
+                m.kv_bytes,
+                m.kv_bytes_per_token,
+                m.kv_bytes_per_token_k,
+                m.kv_bytes_per_token_v,
+                m.kv_pages_total,
+                m.int8_dot_fraction(),
+                m.ternary_dot_fraction(),
+                m.prefix_hit_rate(),
+                m.kv_dequant_seconds,
+                m.dequant_overhead(),
+                m.ttft_p50(),
+                m.kernel_isa,
+            ));
+        }
+    }
+    println!(
+        "\n(ternary K is 1.25 bits/channel — the budget buys the most pages; \
+         its q·k rows never dequantize K, they walk per-query LUTs over packed codes)"
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"kv_ternary\",\n  \"records\": [\n{}\n  ]\n}}\n",
+        records.join(",\n")
+    );
+    let path = "BENCH_kv_ternary.json";
     match std::fs::write(path, &json) {
         Ok(()) => println!("[bench] wrote {path}"),
         Err(e) => eprintln!("[bench] could not write {path}: {e}"),

@@ -14,14 +14,18 @@
 //!   request reuses the frozen KV pages of any previously seen prefix,
 //!   skipping prefill for the shared span with token-identical results.
 //! * [`PageStore`] — the storage-dtype policy behind the arena:
-//!   [`F32Store`] (parity baseline, block reads borrow the plane) and
+//!   [`F32Store`] (parity baseline, block reads borrow the plane),
 //!   [`Int8Store`] (int8 pages + per-page-per-head f32 scales, quantized
-//!   at page-write time). Quantized pages expose three read paths,
-//!   cheapest first: int8-native raw blocks ([`PageStore::block_i8`] —
-//!   the attention score pass dots them in i32 without dequantizing),
-//!   LRU-cached f32 tiles of registration-frozen pages
-//!   ([`PageStore::frozen_tile`]), and scratch dequantization
-//!   ([`PageStore::block`]) for private, still-growing pages.
+//!   at page-write time), and [`TernaryStore`] (1.25-bit 3:4-sparse
+//!   pack34 K pages + per-page-per-head absmean scales, int8 V pages).
+//!   Quantized pages expose four read paths, cheapest first:
+//!   packed-ternary raw blocks ([`PageStore::block_ternary`] — the score
+//!   pass walks them through per-query LUTs without dequantizing K),
+//!   int8-native raw blocks ([`PageStore::block_i8`] — the score pass
+//!   dots them in i32 without dequantizing), LRU-cached f32 tiles of
+//!   registration-frozen pages ([`PageStore::frozen_tile`]), and scratch
+//!   dequantization ([`PageStore::block`]) for private, still-growing
+//!   pages.
 //! * [`KvBatch`] / [`Rows`] — the engine-facing view; attention walks
 //!   histories as page blocks ([`Rows::for_each_block`] for f32 tiles,
 //!   [`Rows::for_each_kblock`] for dtype-native [`KBlock`]s), and
@@ -48,13 +52,15 @@ mod allocator;
 mod prefix;
 mod store;
 mod table;
+mod ternary;
 mod view;
 
 pub use allocator::{BlockAllocator, PageId};
 pub use prefix::PrefixIndex;
 pub use store::{
-    new_store, page_bytes, F32Store, Int8Store, KvDtype, PageStore, Plane,
+    new_store, page_bytes, F32Store, Int8Store, KvDtype, PageStore, Plane, TernaryBlock,
     DEFAULT_TILE_CACHE_TILES,
 };
+pub use ternary::TernaryStore;
 pub use table::BlockTable;
 pub use view::{KBlock, KvBatch, Rows};

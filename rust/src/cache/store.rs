@@ -6,7 +6,7 @@
 //! hot path is memory-bandwidth-bound (BitNet.cpp, TENET), so shrinking
 //! KV pages is a latency win as well as a capacity win — *and* keeping
 //! the low-bit representation through the compute kernel (not just in
-//! storage) is where the bandwidth saving actually lands. Two
+//! storage) is where the bandwidth saving actually lands. Three
 //! implementations share one contract:
 //!
 //! * [`F32Store`] — the parity layout (`num_pages × page_size × d_model`
@@ -17,18 +17,26 @@
 //!   running absmax of the rows written so far; a row that exceeds the
 //!   current range *requantizes* the page's head lane to the grown scale
 //!   (one extra quantum of error, bounded — see DESIGN.md §4).
+//! * [`TernaryStore`] (`super::ternary`) — 1.25-bit 3:4-sparse ternary
+//!   K pages (`pack34` 5-bit blocks + per-(page, head) absmean scales),
+//!   int8 V pages. The score pass consumes the packed K bytes through
+//!   per-query LUTs ([`PageStore::block_ternary`]) — K is never
+//!   dequantized on the attention path.
 //!
-//! Three read paths exist, cheapest first:
+//! Four read paths exist, cheapest first:
 //!
-//! 1. [`PageStore::block_i8`] — the **int8-native** view: raw page bytes
+//! 1. [`PageStore::block_ternary`] — the **packed-ternary** view: raw
+//!    pack34 index/sign planes plus per-head absmean scales; attention
+//!    walks them through 32-entry per-query LUTs (`simd::qk_lut34_rows`).
+//! 2. [`PageStore::block_i8`] — the **int8-native** view: raw page bytes
 //!    plus the page's per-head scales, so attention computes q·k as an
 //!    i32 integer dot with a single `q_scale · page_head_scale` multiply
 //!    per (page, head). No dequantization at all on the score path.
-//! 2. [`PageStore::frozen_tile`] — a dequantized f32 tile of a *frozen*
+//! 3. [`PageStore::frozen_tile`] — a dequantized f32 tile of a *frozen*
 //!    (immutable, registration-frozen-scale) page served from a small
 //!    shared LRU cache, so a prefix page read by N sequences in a round
 //!    is expanded once, not N times. Used by the V-accumulation pass.
-//! 3. [`PageStore::block`] — dequantize into caller scratch: the
+//! 4. [`PageStore::block`] — dequantize into caller scratch: the
 //!    fallback for private (still-growing) pages.
 //!
 //! Pages become **frozen** when the prefix index registers them
@@ -56,13 +64,21 @@ pub enum KvDtype {
     F32,
     /// 1 B/channel int8 pages + per-page-per-head f32 scales.
     Int8,
+    /// 1.25-bit 3:4-sparse ternary K pages (pack34 5-bit blocks +
+    /// per-page-per-head absmean scales); V pages stay int8.
+    Ternary,
 }
 
 impl KvDtype {
+    /// Every dtype, in CLI-listing order — the single source of truth
+    /// the parser, its error message, and the sweeps iterate.
+    pub const ALL: [KvDtype; 3] = [KvDtype::F32, KvDtype::Int8, KvDtype::Ternary];
+
     pub fn name(&self) -> &'static str {
         match self {
             KvDtype::F32 => "f32",
             KvDtype::Int8 => "int8",
+            KvDtype::Ternary => "ternary",
         }
     }
 
@@ -71,8 +87,21 @@ impl KvDtype {
         match s {
             "f32" | "fp32" | "float" => Some(KvDtype::F32),
             "int8" | "i8" => Some(KvDtype::Int8),
+            "ternary" | "t34" => Some(KvDtype::Ternary),
             _ => None,
         }
+    }
+
+    /// The canonical names, `|`-joined, for help text and errors.
+    pub fn valid_names() -> String {
+        Self::ALL.iter().map(|d| d.name()).collect::<Vec<_>>().join("|")
+    }
+
+    /// Parse, rejecting unknown spellings with an error that lists the
+    /// valid set (a typo must never fall through to a default).
+    pub fn from_name(s: &str) -> Result<Self, String> {
+        Self::parse(s)
+            .ok_or_else(|| format!("unknown kv dtype {s:?} (expected one of: {})", Self::valid_names()))
     }
 }
 
@@ -164,6 +193,15 @@ pub trait PageStore: Send + Sync {
         None
     }
 
+    /// Packed-ternary view of the first `rows` K rows of page `p`: raw
+    /// pack34 index/sign planes plus per-head absmean scales, or `None`
+    /// for stores whose K plane is not ternary. K-plane only (V never
+    /// ternarizes); the score pass walks this through per-query LUTs
+    /// without ever materializing a dequantized K tile.
+    fn block_ternary(&self, _layer: usize, _p: PageId, _rows: usize) -> Option<TernaryBlock<'_>> {
+        None
+    }
+
     /// Mark page `p` immutable (prefix-index registration): its bytes and
     /// quantizer scales are now frozen until `reset_page`. Only ever
     /// called on *full* pages (every slot written), so a frozen page can
@@ -196,13 +234,15 @@ pub trait PageStore: Send + Sync {
     }
 
     /// Record attention q·k rows served from this store: `native` rows
-    /// dotted int8-natively, `dequant` rows via a dequantized f32 tile —
-    /// the `kv_int8_dot_fraction` gauge's numerator/denominator.
-    fn record_qk_rows(&self, _native: u64, _dequant: u64) {}
+    /// dotted int8-natively, `dequant` rows via a dequantized f32 tile,
+    /// `ternary` rows walked through pack34 LUTs — the per-dtype dot
+    /// gauges' numerators/denominator.
+    fn record_qk_rows(&self, _native: u64, _dequant: u64, _ternary: u64) {}
 
-    /// Cumulative `(native, dequant)` q·k row counts recorded so far.
-    fn qk_rows(&self) -> (u64, u64) {
-        (0, 0)
+    /// Cumulative `(native, dequant, ternary)` q·k row counts recorded
+    /// so far.
+    fn qk_rows(&self) -> (u64, u64, u64) {
+        (0, 0, 0)
     }
 
     /// Total arena bytes at this dtype (the KV byte budget).
@@ -213,19 +253,65 @@ pub trait PageStore: Send + Sync {
     /// gauge.
     fn bytes_per_token(&self) -> usize;
 
+    /// K-plane share of [`PageStore::bytes_per_token`]. Symmetric stores
+    /// (f32, int8) split evenly; K/V-asymmetric stores override.
+    fn k_bytes_per_token(&self) -> usize {
+        self.bytes_per_token() / 2
+    }
+
+    /// V-plane share of [`PageStore::bytes_per_token`].
+    fn v_bytes_per_token(&self) -> usize {
+        self.bytes_per_token() - self.k_bytes_per_token()
+    }
+
     /// Cumulative nanoseconds spent dequantizing blocks (0 for f32).
     fn dequant_nanos(&self) -> u64;
 }
 
+/// Packed-ternary view of one K page: `rows × n_heads` per-(slot, head)
+/// lanes of pack34 bytes plus the page's per-head absmean scales.
+///
+/// Per (slot, head) lane the layout is byte-aligned: `idx_bh` bytes of
+/// 4-bit pattern indices (one nibble per 4-channel block, low nibble
+/// first) and `sign_bh` bytes of mirror bits (bit `b % 8` of byte
+/// `b / 8` for block `b`). `idx`/`sign` are row-major over
+/// `(slot, head)`, so row `r`, head `h` starts at
+/// `(r·n_heads + h)·idx_bh` (resp. `·sign_bh`).
+pub struct TernaryBlock<'a> {
+    /// Pattern-index nibbles, `rows · n_heads · idx_bh` bytes.
+    pub idx: &'a [u8],
+    /// Mirror bits, `rows · n_heads · sign_bh` bytes.
+    pub sign: &'a [u8],
+    /// Per-head absmean scales, `n_heads` entries.
+    pub scales: &'a [f32],
+    /// Index bytes per (slot, head) lane: `(head_dim/4).div_ceil(2)`.
+    pub idx_bh: usize,
+    /// Sign bytes per (slot, head) lane: `(head_dim/4).div_ceil(8)`.
+    pub sign_bh: usize,
+}
+
 /// Per-page bytes a store of `dtype` costs for `cfg` — used by the
 /// coordinator to turn one fixed byte budget into a dtype-aware page
-/// count (int8 pages buy ~4× the positions of f32 pages).
+/// count (int8 pages buy ~4× the positions of f32 pages, ternary ~7×).
+/// K and V planes price separately: ternary K packs 4 channels into
+/// 5 bits while its V stays int8.
 pub fn page_bytes(cfg: &NativeConfig, page_size: usize, dtype: KvDtype) -> usize {
-    let per_plane = match dtype {
-        KvDtype::F32 => page_size * cfg.d_model * 4,
-        KvDtype::Int8 => page_size * cfg.d_model + cfg.n_heads * 4,
+    let (k_plane, v_plane) = match dtype {
+        KvDtype::F32 => (page_size * cfg.d_model * 4, page_size * cfg.d_model * 4),
+        KvDtype::Int8 => {
+            let plane = page_size * cfg.d_model + cfg.n_heads * 4;
+            (plane, plane)
+        }
+        KvDtype::Ternary => {
+            let nb = cfg.head_dim() / 4;
+            let lane = nb.div_ceil(2) + nb.div_ceil(8);
+            (
+                page_size * cfg.n_heads * lane + cfg.n_heads * 4,
+                page_size * cfg.d_model + cfg.n_heads * 4,
+            )
+        }
     };
-    2 * cfg.n_layers * per_plane
+    cfg.n_layers * (k_plane + v_plane)
 }
 
 /// Construct the store for `dtype`.
@@ -233,6 +319,7 @@ pub fn new_store(cfg: &NativeConfig, num_pages: usize, page_size: usize, dtype: 
     match dtype {
         KvDtype::F32 => Box::new(F32Store::new(cfg, num_pages, page_size)),
         KvDtype::Int8 => Box::new(Int8Store::new(cfg, num_pages, page_size)),
+        KvDtype::Ternary => Box::new(super::ternary::TernaryStore::new(cfg, num_pages, page_size)),
     }
 }
 
@@ -318,12 +405,12 @@ impl PageStore for F32Store {
         &buf[base..base + rows * d]
     }
 
-    fn record_qk_rows(&self, _native: u64, dequant: u64) {
+    fn record_qk_rows(&self, _native: u64, dequant: u64, _ternary: u64) {
         self.qk_f32.fetch_add(dequant, Ordering::Relaxed);
     }
 
-    fn qk_rows(&self) -> (u64, u64) {
-        (0, self.qk_f32.load(Ordering::Relaxed))
+    fn qk_rows(&self) -> (u64, u64, u64) {
+        (0, self.qk_f32.load(Ordering::Relaxed), 0)
     }
 
     fn bytes(&self) -> usize {
@@ -358,7 +445,7 @@ const TILE_SHARDS: usize = 8;
 
 /// One resident tile: the dequantized page plus its last-use tick. The
 /// tick is atomic so `get` can refresh it under a shard *read* lock.
-struct TileEntry {
+pub(crate) struct TileEntry {
     last: AtomicU64,
     tile: Arc<[f32]>,
 }
@@ -376,9 +463,9 @@ struct TileEntry {
 /// `len` counter and the evictor min-scans every shard for the oldest
 /// tick — cap is tens of tiles, so the scan stays cheap, and it only
 /// runs on inserts (misses), never on the hit path.
-struct TileCache {
+pub(crate) struct TileCache {
     /// Max resident tiles; 0 = disabled.
-    cap: usize,
+    pub(crate) cap: usize,
     /// Monotone use-clock for LRU ordering (global across shards).
     tick: AtomicU64,
     hits: AtomicU64,
@@ -400,7 +487,7 @@ fn shard_of(key: &(Plane, u32, PageId)) -> usize {
 }
 
 impl TileCache {
-    fn new(cap: usize) -> Self {
+    pub(crate) fn new(cap: usize) -> Self {
         Self {
             cap,
             tick: AtomicU64::new(0),
@@ -411,7 +498,7 @@ impl TileCache {
         }
     }
 
-    fn get(&self, key: (Plane, u32, PageId)) -> Option<Arc<[f32]>> {
+    pub(crate) fn get(&self, key: (Plane, u32, PageId)) -> Option<Arc<[f32]>> {
         let shard = self.shards[shard_of(&key)].read().unwrap();
         if let Some(e) = shard.get(&key) {
             e.last.store(self.tick.fetch_add(1, Ordering::Relaxed) + 1, Ordering::Relaxed);
@@ -421,7 +508,7 @@ impl TileCache {
         None
     }
 
-    fn insert(&self, key: (Plane, u32, PageId), tile: Arc<[f32]>) {
+    pub(crate) fn insert(&self, key: (Plane, u32, PageId), tile: Arc<[f32]>) {
         self.misses.fetch_add(1, Ordering::Relaxed);
         let now = self.tick.fetch_add(1, Ordering::Relaxed) + 1;
         {
@@ -461,7 +548,7 @@ impl TileCache {
     }
 
     /// Drop every cached tile of page `p` (page freed / reallocated).
-    fn invalidate_page(&self, p: PageId) {
+    pub(crate) fn invalidate_page(&self, p: PageId) {
         if self.cap == 0 {
             return;
         }
@@ -473,8 +560,40 @@ impl TileCache {
         }
     }
 
-    fn stats(&self) -> (u64, u64) {
+    pub(crate) fn stats(&self) -> (u64, u64) {
         (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+}
+
+/// Dequantize the first `rows` rows of an int8 plane laid out like
+/// [`Int8Store`]'s (page-major data, `p·n_heads + h` scales) into `out`
+/// (resized to `rows × d`). Shared by [`Int8Store`] for both planes and
+/// by `TernaryStore` for its int8 V plane, so every int8 read path
+/// produces identical floats.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dequant_i8_rows(
+    data: &[i8],
+    scales: &[f32],
+    p: usize,
+    page_size: usize,
+    rows: usize,
+    d: usize,
+    hd: usize,
+    n_heads: usize,
+    out: &mut Vec<f32>,
+) {
+    out.resize(rows * d, 0.0);
+    let pbase = p * page_size * d;
+    let sbase = p * n_heads;
+    for r in 0..rows {
+        let rbase = pbase + r * d;
+        for h in 0..n_heads {
+            let s = scales[sbase + h];
+            let col0 = h * hd;
+            for c in 0..hd {
+                out[r * d + col0 + c] = data[rbase + col0 + c] as f32 * s;
+            }
+        }
     }
 }
 
@@ -546,24 +665,21 @@ impl Int8Store {
     /// (resized to `rows × d_model`). One shared body for scratch-block
     /// reads and frozen-tile builds so both produce identical floats.
     fn dequant_into(&self, plane: Plane, layer: usize, p: PageId, rows: usize, out: &mut Vec<f32>) {
-        let (d, hd, nh) = (self.d_model, self.head_dim, self.n_heads);
         let (data, scales) = match plane {
             Plane::K => (&self.k[layer], &self.k_scales[layer]),
             Plane::V => (&self.v[layer], &self.v_scales[layer]),
         };
-        out.resize(rows * d, 0.0);
-        let pbase = p as usize * self.page_size * d;
-        let sbase = p as usize * nh;
-        for r in 0..rows {
-            let rbase = pbase + r * d;
-            for h in 0..nh {
-                let s = scales[sbase + h];
-                let col0 = h * hd;
-                for c in 0..hd {
-                    out[r * d + col0 + c] = data[rbase + col0 + c] as f32 * s;
-                }
-            }
-        }
+        dequant_i8_rows(
+            data,
+            scales,
+            p as usize,
+            self.page_size,
+            rows,
+            self.d_model,
+            self.head_dim,
+            self.n_heads,
+            out,
+        );
     }
 
     /// Scale of (layer, page, head) on `plane` (tests / diagnostics).
@@ -577,7 +693,10 @@ impl Int8Store {
 
     /// Quantize one head-lane of `row` into `(page, slot)`, growing (and
     /// requantizing) the page's head scale when the row exceeds its range.
-    fn write_head(
+    /// `pub(crate)`: `TernaryStore` reuses it verbatim for its int8 V
+    /// plane so both stores' V bytes are identical for identical writes.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn write_head(
         data: &mut [i8],
         scales: &mut [f32],
         row: &[f32],
@@ -733,13 +852,13 @@ impl PageStore for Int8Store {
         self.tiles.stats()
     }
 
-    fn record_qk_rows(&self, native: u64, dequant: u64) {
+    fn record_qk_rows(&self, native: u64, dequant: u64, _ternary: u64) {
         self.qk_native.fetch_add(native, Ordering::Relaxed);
         self.qk_dequant.fetch_add(dequant, Ordering::Relaxed);
     }
 
-    fn qk_rows(&self) -> (u64, u64) {
-        (self.qk_native.load(Ordering::Relaxed), self.qk_dequant.load(Ordering::Relaxed))
+    fn qk_rows(&self) -> (u64, u64, u64) {
+        (self.qk_native.load(Ordering::Relaxed), self.qk_dequant.load(Ordering::Relaxed), 0)
     }
 
     fn bytes(&self) -> usize {
@@ -1027,12 +1146,38 @@ mod tests {
     fn qk_row_counters_accumulate_per_store() {
         let cfg = cfg();
         let q = Int8Store::new(&cfg, 1, 4);
-        q.record_qk_rows(10, 2);
-        q.record_qk_rows(5, 0);
-        assert_eq!(q.qk_rows(), (15, 2));
+        q.record_qk_rows(10, 2, 0);
+        q.record_qk_rows(5, 0, 0);
+        assert_eq!(q.qk_rows(), (15, 2, 0));
         let f = F32Store::new(&cfg, 1, 4);
-        f.record_qk_rows(0, 7);
-        assert_eq!(f.qk_rows(), (0, 7), "f32 stores only ever count dequant rows");
+        f.record_qk_rows(0, 7, 0);
+        assert_eq!(f.qk_rows(), (0, 7, 0), "f32 stores only ever count dequant rows");
+    }
+
+    #[test]
+    fn kv_dtype_from_name_rejects_unknowns_with_the_valid_set() {
+        for d in KvDtype::ALL {
+            assert_eq!(KvDtype::from_name(d.name()), Ok(d), "canonical name roundtrips");
+        }
+        assert_eq!(KvDtype::from_name("i8"), Ok(KvDtype::Int8), "aliases still parse");
+        let err = KvDtype::from_name("bf16").unwrap_err();
+        assert!(err.contains("\"bf16\""), "error names the offending input: {err}");
+        for d in KvDtype::ALL {
+            assert!(err.contains(d.name()), "error lists {}: {err}", d.name());
+        }
+        assert_eq!(KvDtype::valid_names(), "f32|int8|ternary");
+    }
+
+    #[test]
+    fn symmetric_stores_split_bytes_per_token_evenly() {
+        let cfg = cfg();
+        for st in [
+            Box::new(F32Store::new(&cfg, 1, 16)) as Box<dyn PageStore>,
+            Box::new(Int8Store::new(&cfg, 1, 16)),
+        ] {
+            assert_eq!(st.k_bytes_per_token() + st.v_bytes_per_token(), st.bytes_per_token());
+            assert_eq!(st.k_bytes_per_token(), st.v_bytes_per_token(), "{:?}", st.dtype());
+        }
     }
 
     #[test]

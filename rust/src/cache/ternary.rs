@@ -1,0 +1,619 @@
+//! [`TernaryStore`] — 1.25-bit 3:4-sparse ternary K pages with int8 V
+//! pages: the paper's weight format (§3.1, App. A) applied to the live
+//! KV cache, which the Limitations section singles out as the dominant
+//! transient memory once weights are 1.25-bit.
+//!
+//! **K plane.** Each written K row is ternarized per head with the
+//! streaming b1.58 absmean rule ([`crate::quant::absmean`]): per
+//! 4-channel block the smallest-|x| lane is zeroed (stable argmin) and
+//! the kept lanes store `sign(x)` with `sign(0) = +1` — so every block
+//! holds exactly one zero and packs through the weight path's `pack34`
+//! codec: a 4-bit pattern index + 1 mirror bit = 5 bits per 4 channels
+//! = **1.25 bits/channel**. Codes are scale-independent; the one f32
+//! scale per (layer, page, head) is the running absmean of the kept
+//! lanes of the rows written so far, updated as a pure fold in write
+//! order (no requantization cascade can ever touch written bytes —
+//! unlike int8 absmax growth).
+//!
+//! **Per-(slot, head) lane layout** (byte-aligned, row-major over
+//! `(slot, head)`): `idx_bh = (hd/4).div_ceil(2)` nibble bytes (low
+//! nibble = even block) then `sign_bh = (hd/4).div_ceil(8)` mirror-bit
+//! bytes (bit `b % 8` of byte `b / 8`). At nano (hd = 32): 4 + 1 = 5
+//! bytes per head, 20 B per slot of K vs 128 B int8 / 512 B f32.
+//!
+//! **V plane** stays int8 — V rows feed the attention-weighted *sum*
+//! where ternary's 1-bit mantissa is too coarse — reusing
+//! [`Int8Store`]'s exact write path so identical writes produce
+//! identical V bytes in both stores.
+//!
+//! **Frozen-byte invariants** (the PR 5 registration protocol, verbatim):
+//! after [`PageStore::freeze_page`] the page's packed K nibbles, mirror
+//! bits, absmean scales *and accumulator state*, int8 V bytes, and V
+//! scales are all immutable until `reset_page` thaws it. A frozen page
+//! is therefore a byte-exact artifact: shared-prefix reads are
+//! serving-order invariant, [`PageStore::frozen_tile`] may cache its
+//! dequantized form, and [`PageStore::block_ternary`] views can be
+//! LUT-walked concurrently with no synchronization. `copy_rows` (CoW)
+//! carries packed bytes, scales, and the `(sum_abs, count)` accumulator,
+//! so a divergent copy dequantizes identically at copy time and keeps
+//! appending on the donor's absmean trajectory.
+//!
+//! The attention score pass never dequantizes K: it consumes
+//! [`PageStore::block_ternary`] through per-query 32-entry LUTs
+//! (`simd::qk_lut34_rows`; bound derived in DESIGN.md §4).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::engine::NativeConfig;
+use crate::pack::pack34::{decode_block, encode_block};
+use crate::quant::absmean::{absmean_scale, kept_abs_sum, sparsify34_codes};
+
+use super::store::{
+    dequant_i8_rows, Int8Store, KvDtype, PageId, PageStore, Plane, TernaryBlock, TileCache,
+    DEFAULT_TILE_CACHE_TILES,
+};
+
+/// 1.25-bit ternary-K / int8-V page store. See the module docs for the
+/// layout and invariants; `tests/paged_kv.rs` property-tests the
+/// lifecycle end-to-end.
+pub struct TernaryStore {
+    page_size: usize,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    num_pages: usize,
+    /// pack34 blocks per head lane: `head_dim / 4`.
+    nb: usize,
+    /// Index bytes per (slot, head) lane: `nb.div_ceil(2)`.
+    idx_bh: usize,
+    /// Sign bytes per (slot, head) lane: `nb.div_ceil(8)`.
+    sign_bh: usize,
+    /// Per-layer K index planes: `num_pages·page_size·n_heads·idx_bh` bytes.
+    k_idx: Vec<Vec<u8>>,
+    /// Per-layer K mirror planes: `num_pages·page_size·n_heads·sign_bh` bytes.
+    k_sign: Vec<Vec<u8>>,
+    /// `[layer][p·n_heads + h]` K absmean scales (materialized from the
+    /// accumulator after every write so block reads are pure loads).
+    k_scales: Vec<Vec<f32>>,
+    /// `[layer][p·n_heads + h]` running Σ|x| over kept lanes.
+    k_sum_abs: Vec<Vec<f32>>,
+    /// `[layer][p·n_heads + h]` kept-lane count behind `k_sum_abs`.
+    k_count: Vec<Vec<u32>>,
+    /// Int8 V planes + scales, laid out exactly like [`Int8Store`]'s.
+    v: Vec<Vec<i8>>,
+    v_scales: Vec<Vec<f32>>,
+    /// Registration-frozen pages (one flag per page, all layers/planes).
+    frozen: Vec<bool>,
+    /// LRU of dequantized full-page tiles for frozen pages (V pass).
+    tiles: TileCache,
+    /// Reusable per-write codes scratch (`d_model` lanes).
+    codes: Vec<i8>,
+    dequant_ns: AtomicU64,
+    qk_native: AtomicU64,
+    qk_dequant: AtomicU64,
+    qk_ternary: AtomicU64,
+}
+
+impl TernaryStore {
+    pub fn new(cfg: &NativeConfig, num_pages: usize, page_size: usize) -> Self {
+        assert_eq!(cfg.d_model % cfg.n_heads, 0, "d_model must split into heads");
+        let hd = cfg.head_dim();
+        assert_eq!(hd % 4, 0, "ternary KV needs head_dim % 4 == 0 (3:4 blocks)");
+        let nb = hd / 4;
+        let idx_bh = nb.div_ceil(2);
+        let sign_bh = nb.div_ceil(8);
+        let slots = num_pages * page_size * cfg.n_heads;
+        let scales = num_pages * cfg.n_heads;
+        let v_plane = num_pages * page_size * cfg.d_model;
+        Self {
+            page_size,
+            d_model: cfg.d_model,
+            n_layers: cfg.n_layers,
+            n_heads: cfg.n_heads,
+            head_dim: hd,
+            num_pages,
+            nb,
+            idx_bh,
+            sign_bh,
+            k_idx: (0..cfg.n_layers).map(|_| vec![0; slots * idx_bh]).collect(),
+            k_sign: (0..cfg.n_layers).map(|_| vec![0; slots * sign_bh]).collect(),
+            k_scales: (0..cfg.n_layers).map(|_| vec![0.0; scales]).collect(),
+            k_sum_abs: (0..cfg.n_layers).map(|_| vec![0.0; scales]).collect(),
+            k_count: (0..cfg.n_layers).map(|_| vec![0; scales]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0; v_plane]).collect(),
+            v_scales: (0..cfg.n_layers).map(|_| vec![0.0; scales]).collect(),
+            frozen: vec![false; num_pages],
+            tiles: TileCache::new(DEFAULT_TILE_CACHE_TILES),
+            codes: vec![0; cfg.d_model],
+            dequant_ns: AtomicU64::new(0),
+            qk_native: AtomicU64::new(0),
+            qk_dequant: AtomicU64::new(0),
+            qk_ternary: AtomicU64::new(0),
+        }
+    }
+
+    /// K absmean scale of (layer, page, head) (tests / diagnostics).
+    pub fn k_scale(&self, layer: usize, p: PageId, head: usize) -> f32 {
+        self.k_scales[layer][p as usize * self.n_heads + head]
+    }
+
+    /// Absmean accumulator of (layer, page, head): `(Σ|x| kept, count)`.
+    pub fn k_state(&self, layer: usize, p: PageId, head: usize) -> (f32, u32) {
+        let si = p as usize * self.n_heads + head;
+        (self.k_sum_abs[layer][si], self.k_count[layer][si])
+    }
+
+    /// Byte offset of (page, slot, head)'s lane in a per-`bh`-byte plane.
+    #[inline]
+    fn lane_base(&self, p: usize, slot: usize, head: usize, bh: usize) -> usize {
+        ((p * self.page_size + slot) * self.n_heads + head) * bh
+    }
+
+    /// Decode the first `rows` K rows of page `p` into `out`
+    /// (`rows × d_model` floats): codes × per-head absmean scale. Only
+    /// the fallback/tile path uses this — attention walks the packed
+    /// bytes via [`PageStore::block_ternary`] instead.
+    fn dequant_k_into(&self, layer: usize, p: PageId, rows: usize, out: &mut Vec<f32>) {
+        let (d, nh) = (self.d_model, self.n_heads);
+        out.resize(rows * d, 0.0);
+        let sbase = p as usize * nh;
+        for r in 0..rows {
+            for h in 0..nh {
+                let s = self.k_scales[layer][sbase + h];
+                let ib = self.lane_base(p as usize, r, h, self.idx_bh);
+                let mb = self.lane_base(p as usize, r, h, self.sign_bh);
+                let col0 = h * self.head_dim;
+                for b in 0..self.nb {
+                    let nib = (self.k_idx[layer][ib + b / 2] >> ((b % 2) * 4)) & 0x0F;
+                    let mirror = (self.k_sign[layer][mb + b / 8] >> (b % 8)) & 1 == 1;
+                    let pat = decode_block(nib, mirror);
+                    for (lane, &t) in pat.iter().enumerate() {
+                        out[r * d + col0 + b * 4 + lane] = t as f32 * s;
+                    }
+                }
+            }
+        }
+    }
+
+    fn dequant_into(&self, plane: Plane, layer: usize, p: PageId, rows: usize, out: &mut Vec<f32>) {
+        match plane {
+            Plane::K => self.dequant_k_into(layer, p, rows, out),
+            Plane::V => dequant_i8_rows(
+                &self.v[layer],
+                &self.v_scales[layer],
+                p as usize,
+                self.page_size,
+                rows,
+                self.d_model,
+                self.head_dim,
+                self.n_heads,
+                out,
+            ),
+        }
+    }
+}
+
+impl PageStore for TernaryStore {
+    fn dtype(&self) -> KvDtype {
+        KvDtype::Ternary
+    }
+
+    fn reset_page(&mut self, p: PageId) {
+        self.frozen[p as usize] = false;
+        self.tiles.invalidate_page(p);
+        let s0 = p as usize * self.n_heads;
+        for li in 0..self.n_layers {
+            self.k_scales[li][s0..s0 + self.n_heads].fill(0.0);
+            self.k_sum_abs[li][s0..s0 + self.n_heads].fill(0.0);
+            self.k_count[li][s0..s0 + self.n_heads].fill(0);
+            self.v_scales[li][s0..s0 + self.n_heads].fill(0.0);
+        }
+    }
+
+    fn write_row(&mut self, layer: usize, p: PageId, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(slot < self.page_size);
+        debug_assert_eq!(k_row.len(), self.d_model);
+        debug_assert!(!self.frozen[p as usize], "write to a registration-frozen page");
+        let (ps, d, hd, nh) = (self.page_size, self.d_model, self.head_dim, self.n_heads);
+        let mut codes = std::mem::take(&mut self.codes);
+        sparsify34_codes(k_row, &mut codes);
+        for h in 0..nh {
+            let col0 = h * hd;
+            // Running absmean over kept lanes; materialize the scale so
+            // reads are pure loads. Codes never depend on it.
+            let si = p as usize * nh + h;
+            self.k_sum_abs[layer][si] += kept_abs_sum(&k_row[col0..col0 + hd], &codes[col0..col0 + hd]);
+            self.k_count[layer][si] += (3 * hd / 4) as u32;
+            self.k_scales[layer][si] = absmean_scale(self.k_sum_abs[layer][si], self.k_count[layer][si]);
+            // Pack the lane: clear-then-set — neighbouring blocks share
+            // nibble/sign bytes and slots are rewritable after reset.
+            let ib = self.lane_base(p as usize, slot, h, self.idx_bh);
+            let mb = self.lane_base(p as usize, slot, h, self.sign_bh);
+            self.k_idx[layer][ib..ib + self.idx_bh].fill(0);
+            self.k_sign[layer][mb..mb + self.sign_bh].fill(0);
+            for b in 0..self.nb {
+                let (code, mirror) = encode_block(&codes[col0 + b * 4..col0 + b * 4 + 4]);
+                self.k_idx[layer][ib + b / 2] |= code << ((b % 2) * 4);
+                if mirror {
+                    self.k_sign[layer][mb + b / 8] |= 1 << (b % 8);
+                }
+            }
+            // V stays int8: the exact Int8Store write path.
+            Int8Store::write_head(
+                &mut self.v[layer],
+                &mut self.v_scales[layer],
+                v_row,
+                p as usize,
+                slot,
+                h,
+                ps,
+                d,
+                hd,
+                nh,
+            );
+        }
+        self.codes = codes;
+    }
+
+    fn copy_rows(&mut self, src: PageId, dst: PageId, rows: usize) {
+        debug_assert!(rows <= self.page_size);
+        debug_assert_ne!(src, dst, "CoW onto the same page");
+        debug_assert!(!self.frozen[dst as usize], "CoW target must be a fresh page");
+        let (ps, d, nh) = (self.page_size, self.d_model, self.n_heads);
+        let (src, dst) = (src as usize, dst as usize);
+        let (ss, ds) = (src * nh, dst * nh);
+        for li in 0..self.n_layers {
+            let n = rows * nh * self.idx_bh;
+            let (s0, d0) = (src * ps * nh * self.idx_bh, dst * ps * nh * self.idx_bh);
+            self.k_idx[li].copy_within(s0..s0 + n, d0);
+            let n = rows * nh * self.sign_bh;
+            let (s0, d0) = (src * ps * nh * self.sign_bh, dst * ps * nh * self.sign_bh);
+            self.k_sign[li].copy_within(s0..s0 + n, d0);
+            let n = rows * d;
+            let (s0, d0) = (src * ps * d, dst * ps * d);
+            self.v[li].copy_within(s0..s0 + n, d0);
+            // Carry the quantizer state: the copy dequantizes identically
+            // at copy time and later appends continue the donor's absmean
+            // trajectory deterministically.
+            self.k_scales[li].copy_within(ss..ss + nh, ds);
+            self.k_sum_abs[li].copy_within(ss..ss + nh, ds);
+            self.k_count[li].copy_within(ss..ss + nh, ds);
+            self.v_scales[li].copy_within(ss..ss + nh, ds);
+        }
+    }
+
+    fn block<'a>(
+        &'a self,
+        plane: Plane,
+        layer: usize,
+        p: PageId,
+        rows: usize,
+        scratch: &'a mut Vec<f32>,
+    ) -> &'a [f32] {
+        debug_assert!(rows <= self.page_size);
+        let t0 = Instant::now();
+        self.dequant_into(plane, layer, p, rows, scratch);
+        self.dequant_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        &scratch[..rows * self.d_model]
+    }
+
+    fn block_i8(&self, plane: Plane, layer: usize, p: PageId, rows: usize) -> Option<(&[i8], &[f32])> {
+        // Only V has an int8-native form; K is packed tighter still.
+        if !matches!(plane, Plane::V) {
+            return None;
+        }
+        debug_assert!(rows <= self.page_size);
+        let pbase = p as usize * self.page_size * self.d_model;
+        let sbase = p as usize * self.n_heads;
+        Some((
+            &self.v[layer][pbase..pbase + rows * self.d_model],
+            &self.v_scales[layer][sbase..sbase + self.n_heads],
+        ))
+    }
+
+    fn block_ternary(&self, layer: usize, p: PageId, rows: usize) -> Option<TernaryBlock<'_>> {
+        debug_assert!(rows <= self.page_size);
+        let p = p as usize;
+        let ib = self.lane_base(p, 0, 0, self.idx_bh);
+        let mb = self.lane_base(p, 0, 0, self.sign_bh);
+        let sbase = p * self.n_heads;
+        Some(TernaryBlock {
+            idx: &self.k_idx[layer][ib..ib + rows * self.n_heads * self.idx_bh],
+            sign: &self.k_sign[layer][mb..mb + rows * self.n_heads * self.sign_bh],
+            scales: &self.k_scales[layer][sbase..sbase + self.n_heads],
+            idx_bh: self.idx_bh,
+            sign_bh: self.sign_bh,
+        })
+    }
+
+    fn freeze_page(&mut self, p: PageId) {
+        self.frozen[p as usize] = true;
+    }
+
+    fn is_frozen(&self, p: PageId) -> bool {
+        self.frozen[p as usize]
+    }
+
+    fn frozen_tile(&self, plane: Plane, layer: usize, p: PageId) -> Option<Arc<[f32]>> {
+        if self.tiles.cap == 0 || !self.frozen[p as usize] {
+            return None;
+        }
+        let key = (plane, layer as u32, p);
+        if let Some(tile) = self.tiles.get(key) {
+            return Some(tile);
+        }
+        // Miss: build outside the lock — frozen pages are immutable, so
+        // a racing duplicate build produces identical bytes.
+        let t0 = Instant::now();
+        let mut buf = Vec::new();
+        self.dequant_into(plane, layer, p, self.page_size, &mut buf);
+        self.dequant_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        let tile: Arc<[f32]> = Arc::from(buf);
+        self.tiles.insert(key, Arc::clone(&tile));
+        Some(tile)
+    }
+
+    fn set_tile_cache_capacity(&mut self, tiles: usize) {
+        self.tiles = TileCache::new(tiles);
+    }
+
+    fn tile_cache_stats(&self) -> (u64, u64) {
+        self.tiles.stats()
+    }
+
+    fn record_qk_rows(&self, native: u64, dequant: u64, ternary: u64) {
+        self.qk_native.fetch_add(native, Ordering::Relaxed);
+        self.qk_dequant.fetch_add(dequant, Ordering::Relaxed);
+        self.qk_ternary.fetch_add(ternary, Ordering::Relaxed);
+    }
+
+    fn qk_rows(&self) -> (u64, u64, u64) {
+        (
+            self.qk_native.load(Ordering::Relaxed),
+            self.qk_dequant.load(Ordering::Relaxed),
+            self.qk_ternary.load(Ordering::Relaxed),
+        )
+    }
+
+    fn bytes(&self) -> usize {
+        let lane = self.idx_bh + self.sign_bh;
+        let k_plane = self.page_size * self.n_heads * lane + self.n_heads * 4;
+        let v_plane = self.page_size * self.d_model + self.n_heads * 4;
+        self.n_layers * self.num_pages * (k_plane + v_plane)
+    }
+
+    fn bytes_per_token(&self) -> usize {
+        self.k_bytes_per_token() + self.v_bytes_per_token()
+    }
+
+    fn k_bytes_per_token(&self) -> usize {
+        // 5 bits per 4 channels, byte-aligned per head, + the page's
+        // per-head scales amortized over its slots.
+        let lane = self.idx_bh + self.sign_bh;
+        self.n_layers * (self.n_heads * lane + (self.n_heads * 4).div_ceil(self.page_size))
+    }
+
+    fn v_bytes_per_token(&self) -> usize {
+        self.n_layers * (self.d_model + (self.n_heads * 4).div_ceil(self.page_size))
+    }
+
+    fn dequant_nanos(&self) -> u64 {
+        self.dequant_ns.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::page_bytes;
+    use crate::util::Pcg64;
+
+    fn cfg() -> NativeConfig {
+        NativeConfig::named("nano").unwrap()
+    }
+
+    /// Reference dequant of one K row: codes from the pure-fn quantizer
+    /// times the *current* per-head scale.
+    fn reference_k(row: &[f32], scales: &[f32], hd: usize) -> Vec<f32> {
+        let mut codes = vec![0i8; row.len()];
+        sparsify34_codes(row, &mut codes);
+        codes.iter().enumerate().map(|(c, &t)| t as f32 * scales[c / hd]).collect()
+    }
+
+    #[test]
+    fn k_roundtrip_is_codes_times_running_absmean() {
+        let cfg = cfg();
+        let (d, hd) = (cfg.d_model, cfg.head_dim());
+        let mut st = TernaryStore::new(&cfg, 2, 4);
+        st.reset_page(0);
+        let mut rng = Pcg64::seeded(17);
+        let rows: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(d)).collect();
+        for (s, row) in rows.iter().enumerate() {
+            st.write_row(0, 0, s, row, row);
+        }
+        // Scales must equal the batch absmean over all kept lanes.
+        for h in 0..cfg.n_heads {
+            let mut sum = 0.0f32;
+            let mut n = 0u32;
+            for row in &rows {
+                let mut codes = vec![0i8; d];
+                sparsify34_codes(row, &mut codes);
+                let c0 = h * hd;
+                sum += kept_abs_sum(&row[c0..c0 + hd], &codes[c0..c0 + hd]);
+                n += (3 * hd / 4) as u32;
+            }
+            assert!((st.k_scale(0, 0, h) - sum / n as f32).abs() < 1e-6);
+            assert_eq!(st.k_state(0, 0, h), (sum, n));
+        }
+        // Every row dequantizes to its (scale-independent) codes times
+        // the final scale — earlier rows are never requantized.
+        let scales: Vec<f32> = (0..cfg.n_heads).map(|h| st.k_scale(0, 0, h)).collect();
+        let mut scratch = Vec::new();
+        let blk = st.block(Plane::K, 0, 0, 4, &mut scratch).to_vec();
+        for (s, row) in rows.iter().enumerate() {
+            assert_eq!(&blk[s * d..(s + 1) * d], &reference_k(row, &scales, hd)[..], "slot {s}");
+        }
+        assert!(st.dequant_nanos() > 0);
+    }
+
+    #[test]
+    fn block_ternary_exposes_the_packed_lanes_attention_walks() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = TernaryStore::new(&cfg, 2, 4);
+        st.reset_page(1);
+        let mut rng = Pcg64::seeded(23);
+        for s in 0..3 {
+            let row = rng.normal_vec(d);
+            st.write_row(1, 1, s, &row, &row);
+        }
+        let tb = st.block_ternary(1, 1, 3).expect("ternary store is ternary-native");
+        assert_eq!(tb.idx.len(), 3 * cfg.n_heads * tb.idx_bh);
+        assert_eq!(tb.sign.len(), 3 * cfg.n_heads * tb.sign_bh);
+        assert_eq!(tb.scales.len(), cfg.n_heads);
+        // Decode the packed lanes by hand; must equal the block() floats.
+        let mut scratch = Vec::new();
+        let blk = st.block(Plane::K, 1, 1, 3, &mut scratch).to_vec();
+        let (hd, nb) = (cfg.head_dim(), cfg.head_dim() / 4);
+        for r in 0..3 {
+            for h in 0..cfg.n_heads {
+                let ib = (r * cfg.n_heads + h) * tb.idx_bh;
+                let mb = (r * cfg.n_heads + h) * tb.sign_bh;
+                for b in 0..nb {
+                    let nib = (tb.idx[ib + b / 2] >> ((b % 2) * 4)) & 0x0F;
+                    let mirror = (tb.sign[mb + b / 8] >> (b % 8)) & 1 == 1;
+                    let pat = decode_block(nib, mirror);
+                    for (lane, &t) in pat.iter().enumerate() {
+                        assert_eq!(t as f32 * tb.scales[h], blk[r * d + h * hd + b * 4 + lane]);
+                    }
+                }
+            }
+        }
+        // V is int8-native; K deliberately is not.
+        assert!(st.block_i8(Plane::V, 1, 1, 3).is_some());
+        assert!(st.block_i8(Plane::K, 1, 1, 3).is_none());
+    }
+
+    #[test]
+    fn v_plane_bytes_match_int8_store_exactly() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut t = TernaryStore::new(&cfg, 1, 4);
+        let mut q = Int8Store::new(&cfg, 1, 4);
+        t.reset_page(0);
+        q.reset_page(0);
+        let mut rng = Pcg64::seeded(31);
+        for s in 0..4 {
+            let row = rng.normal_vec(d);
+            t.write_row(0, 0, s, &row, &row);
+            q.write_row(0, 0, s, &row, &row);
+        }
+        let (tv, ts) = t.block_i8(Plane::V, 0, 0, 4).unwrap();
+        let (qv, qs) = q.block_i8(Plane::V, 0, 0, 4).unwrap();
+        assert_eq!(tv, qv, "identical writes produce identical V bytes");
+        assert_eq!(ts, qs);
+    }
+
+    #[test]
+    fn byte_accounting_matches_page_bytes_and_the_125_bit_ceiling() {
+        let cfg = cfg();
+        for ps in [4usize, 16] {
+            let st = TernaryStore::new(&cfg, 3, ps);
+            assert_eq!(st.bytes(), 3 * page_bytes(&cfg, ps, KvDtype::Ternary));
+            assert_eq!(st.bytes_per_token(), st.k_bytes_per_token() + st.v_bytes_per_token());
+            // Acceptance ceiling: K bytes per token-slot (per layer) stay
+            // under ⌈0.3125·page_size·head_dim⌉ + 4·heads.
+            let lane = st.idx_bh + st.sign_bh;
+            let k_slot = st.n_heads * lane + (st.n_heads * 4).div_ceil(ps);
+            let ceiling = (0.3125 * ps as f32 * cfg.head_dim() as f32).ceil() as usize + 4 * cfg.n_heads;
+            assert!(k_slot <= ceiling, "K {k_slot} B/slot > ceiling {ceiling}");
+        }
+        // nano @ page 16: K 42 + V 258 = 300 B/token vs 516 int8, 2048 f32.
+        let st = TernaryStore::new(&cfg, 1, 16);
+        assert_eq!((st.k_bytes_per_token(), st.v_bytes_per_token()), (42, 258));
+        let q = Int8Store::new(&cfg, 1, 16);
+        assert!(st.bytes_per_token() < q.bytes_per_token());
+        assert!(st.k_bytes_per_token() * 3 <= q.k_bytes_per_token(), "K shrinks ≥3× vs int8");
+    }
+
+    #[test]
+    fn reset_page_clears_the_absmean_accumulator() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = TernaryStore::new(&cfg, 1, 2);
+        st.reset_page(0);
+        st.write_row(0, 0, 0, &vec![100.0; d], &vec![100.0; d]);
+        assert!(st.k_scale(0, 0, 0) > 50.0);
+        st.reset_page(0);
+        assert_eq!(st.k_scale(0, 0, 0), 0.0);
+        assert_eq!(st.k_state(0, 0, 0), (0.0, 0));
+        // A tiny row after reset gets a tiny scale, not the stale one.
+        st.write_row(0, 0, 0, &vec![0.01; d], &vec![0.01; d]);
+        assert!((st.k_scale(0, 0, 0) - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn copy_rows_carries_bytes_scales_and_accumulator() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = TernaryStore::new(&cfg, 2, 4);
+        st.reset_page(0);
+        st.reset_page(1);
+        let mut rng = Pcg64::seeded(41);
+        for s in 0..3 {
+            let row = rng.normal_vec(d);
+            st.write_row(0, 0, s, &row, &row);
+        }
+        st.copy_rows(0, 1, 3);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        for plane in [Plane::K, Plane::V] {
+            assert_eq!(
+                st.block(plane, 0, 0, 3, &mut a).to_vec(),
+                st.block(plane, 0, 1, 3, &mut b).to_vec(),
+                "copy dequantizes identically ({plane:?})"
+            );
+        }
+        for h in 0..cfg.n_heads {
+            assert_eq!(st.k_state(0, 0, h), st.k_state(0, 1, h), "accumulator carried");
+        }
+        // Appending the same row to donor and copy keeps them identical:
+        // the copy continues the donor's absmean trajectory.
+        let row = rng.normal_vec(d);
+        st.write_row(0, 0, 3, &row, &row);
+        st.write_row(0, 1, 3, &row, &row);
+        assert_eq!(
+            st.block(Plane::K, 0, 0, 4, &mut a).to_vec(),
+            st.block(Plane::K, 0, 1, 4, &mut b).to_vec()
+        );
+    }
+
+    #[test]
+    fn frozen_tile_serves_both_planes_and_reset_thaws() {
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = TernaryStore::new(&cfg, 2, 4);
+        st.reset_page(0);
+        let mut rng = Pcg64::seeded(43);
+        for s in 0..4 {
+            let row = rng.normal_vec(d);
+            st.write_row(0, 0, s, &row, &row);
+        }
+        assert!(st.frozen_tile(Plane::K, 0, 0).is_none(), "unfrozen pages never serve tiles");
+        st.freeze_page(0);
+        assert!(st.is_frozen(0));
+        let mut scratch = Vec::new();
+        for plane in [Plane::K, Plane::V] {
+            let tile = st.frozen_tile(plane, 0, 0).expect("frozen page serves a tile");
+            assert_eq!(tile.len(), 4 * d);
+            assert_eq!(&tile[..], st.block(plane, 0, 0, 4, &mut scratch), "{plane:?}");
+        }
+        let (hits, misses) = st.tile_cache_stats();
+        assert_eq!((hits, misses), (0, 2));
+        st.reset_page(0);
+        assert!(!st.is_frozen(0));
+        assert!(st.frozen_tile(Plane::K, 0, 0).is_none());
+    }
+}

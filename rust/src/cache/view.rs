@@ -14,15 +14,15 @@
 //!   LRU for registration-frozen quantized pages, dequantized into
 //!   caller scratch otherwise. The attention V-accumulation pass (and
 //!   the whole f32 score pass) runs on this.
-//! * [`Rows::for_each_kblock`] — the score-pass walk: yields
-//!   [`KBlock::I8`] (raw int8 page bytes + per-head scales) whenever the
-//!   store has an int8-native representation, so q·k runs as an i32
-//!   integer dot with one scale multiply per (page, head) and the K
-//!   plane is never dequantized at all; falls back to [`KBlock::F32`]
-//!   tiles for f32 storage and contiguous caches.
+//! * [`Rows::for_each_kblock`] — the score-pass walk: yields each page
+//!   at the cheapest representation its store supports —
+//!   [`KBlock::Ternary`] (raw pack34 planes + per-head absmean scales,
+//!   LUT-walked without touching f32 K at all), [`KBlock::I8`] (raw
+//!   int8 page bytes + per-head scales, dotted in i32), falling back to
+//!   [`KBlock::F32`] tiles for f32 storage and contiguous caches.
 
 use super::allocator::{BlockAllocator, PageId};
-use super::store::{PageStore, Plane};
+use super::store::{PageStore, Plane, TernaryBlock};
 use super::table::BlockTable;
 use crate::engine::KvCache;
 
@@ -35,6 +35,11 @@ pub enum KBlock<'a> {
     /// page's `n_heads` per-head scales. Element `(r, h·head_dim + c)`
     /// dequantizes as `data[r·d + h·head_dim + c] as f32 * scales[h]`.
     I8 { data: &'a [i8], scales: &'a [f32] },
+    /// Packed-ternary page block: raw pack34 index/sign lanes plus the
+    /// page's per-head absmean scales ([`TernaryBlock`]). The score pass
+    /// walks it through per-query 32-entry LUTs
+    /// (`simd::qk_lut34_rows`) — K is never dequantized.
+    Ternary(TernaryBlock<'a>),
 }
 
 /// Position-indexed block access into one sequence's K (or V) history at
@@ -99,8 +104,9 @@ impl<'a> Rows<'a> {
 
     /// Score-pass walk: like [`Rows::for_each_block`], but yields each
     /// page at the cheapest representation its store supports —
-    /// [`KBlock::I8`] raw bytes for int8-native stores (no
-    /// dequantization on the q·k path at all), [`KBlock::F32`] tiles
+    /// [`KBlock::Ternary`] packed lanes for ternary-K stores (LUT walk,
+    /// no dequantization), [`KBlock::I8`] raw bytes for int8-native
+    /// stores (i32 dot, no dequantization), [`KBlock::F32`] tiles
     /// otherwise.
     #[inline]
     pub fn for_each_kblock(
@@ -120,9 +126,16 @@ impl<'a> Rows<'a> {
                 while start < t {
                     let rows = page_size.min(t - start);
                     let page = pages[start / page_size];
-                    // Every current quantized store is int8-native, so a
-                    // page either dots raw (I8) or borrows/dequants (F32)
-                    // — the tile cache only ever serves the V-pass walk.
+                    // Cheapest representation first; the tile cache only
+                    // ever serves the V-pass walk. `block_ternary` is
+                    // K-plane-only by contract.
+                    if matches!(plane, Plane::K) {
+                        if let Some(tb) = store.block_ternary(layer, page, rows) {
+                            f(start, KBlock::Ternary(tb), rows);
+                            start += rows;
+                            continue;
+                        }
+                    }
                     if let Some((data, scales)) = store.block_i8(plane, layer, page, rows) {
                         f(start, KBlock::I8 { data, scales }, rows);
                     } else {
@@ -136,12 +149,12 @@ impl<'a> Rows<'a> {
     }
 
     /// Record attention q·k row counts against the backing store (the
-    /// `kv_int8_dot_fraction` gauge). No-op for contiguous caches — the
+    /// per-dtype dot-fraction gauges). No-op for contiguous caches — the
     /// single-stream paths are not metered.
     #[inline]
-    pub fn record_qk(&self, native_rows: u64, dequant_rows: u64) {
+    pub fn record_qk(&self, native_rows: u64, dequant_rows: u64, ternary_rows: u64) {
         if let Rows::Paged { store, .. } = *self {
-            store.record_qk_rows(native_rows, dequant_rows);
+            store.record_qk_rows(native_rows, dequant_rows, ternary_rows);
         }
     }
 
@@ -399,6 +412,65 @@ mod tests {
         let kv = KvBatch::Contig(&mut caches);
         kv.k_rows(0, 0).for_each_kblock(1, &mut scratch, |_, block, _| {
             assert!(matches!(block, super::KBlock::F32(_)));
+        });
+    }
+
+    #[test]
+    fn kblock_walk_yields_ternary_blocks_that_decode_identically() {
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let hd = cfg.head_dim();
+        let mut alloc = BlockAllocator::new_with(&cfg, 4, 4, KvDtype::Ternary);
+        let mut table = BlockTable::new(4);
+        let mut rng = crate::util::Pcg64::seeded(21);
+        for pos in 0..6usize {
+            table.prepare_append(&mut alloc);
+            let (page, slot) = table.slot_for(pos);
+            let row = rng.normal_vec(d);
+            alloc.write_row(0, page, slot, &row, &row);
+            table.advance();
+        }
+        let mut tables = [&mut table];
+        let kv = KvBatch::Paged { alloc: &mut alloc, tables: &mut tables };
+
+        // K must walk as packed-ternary blocks that decode to exactly
+        // the f32 walk's tiles; scratch must stay untouched (the score
+        // pass never materializes a dequantized K tile).
+        let rows = kv.k_rows(0, 0);
+        let reference = collect(&rows, 6);
+        let mut scratch = Vec::new();
+        let mut covered = 0usize;
+        rows.for_each_kblock(6, &mut scratch, |start, block, n| {
+            let super::KBlock::Ternary(tb) = block else {
+                panic!("ternary store must yield packed-ternary K blocks")
+            };
+            for r in 0..n {
+                for h in 0..cfg.n_heads {
+                    let ib = (r * cfg.n_heads + h) * tb.idx_bh;
+                    let mb = (r * cfg.n_heads + h) * tb.sign_bh;
+                    for b in 0..hd / 4 {
+                        let nib = (tb.idx[ib + b / 2] >> ((b % 2) * 4)) & 0x0F;
+                        let mirror = (tb.sign[mb + b / 8] >> (b % 8)) & 1 == 1;
+                        let pat = crate::pack::pack34::decode_block(nib, mirror);
+                        for (lane, &t) in pat.iter().enumerate() {
+                            assert_eq!(
+                                t as f32 * tb.scales[h],
+                                reference[(start + r) * d + h * hd + b * 4 + lane],
+                                "pos {} head {h} block {b}",
+                                start + r
+                            );
+                        }
+                    }
+                }
+            }
+            covered += n;
+        });
+        assert_eq!(covered, 6);
+        assert!(scratch.is_empty(), "K walk never dequantized into scratch");
+
+        // V stays int8-native.
+        kv.v_rows(0, 0).for_each_kblock(6, &mut scratch, |_, block, _| {
+            assert!(matches!(block, super::KBlock::I8 { .. }));
         });
     }
 

@@ -14,16 +14,17 @@
 //! Byte accounting is **dtype-aware**: the pool turns one fixed byte
 //! budget into a page count at the arena's [`KvDtype`]
 //! ([`PagedKv::pages_for_budget`]), so an int8 arena holds ~4× the pages
-//! of an f32 one and page-counted admission scales with it — KV
+//! of an f32 one — and a ternary arena (1.25-bit 3:4 K pages + int8 V)
+//! more still — and page-counted admission scales with it: KV
 //! quantization is a concurrency knob, not just a footprint one.
 //!
-//! Prefix sharing works for **both** dtypes. f32 pools share down to a
-//! page's live prefix; quantized pools share at whole-page granularity
-//! only (`page_exact`), because a frozen page's bytes are a
-//! deterministic function of its full chunk while a *partial* read of
-//! them is quantized at a scale the donor's later rows grew — see
-//! [`PagedKv::new`] and DESIGN.md §4 for the serving-order-invariance
-//! argument.
+//! Prefix sharing works for **every** dtype. f32 pools share down to a
+//! page's live prefix; quantized pools (int8 and ternary) share at
+//! whole-page granularity only (`page_exact`), because a frozen page's
+//! bytes are a deterministic function of its full chunk while a
+//! *partial* read of them is quantized at a scale the donor's later rows
+//! grew — see [`PagedKv::new`] and DESIGN.md §4 for the
+//! serving-order-invariance argument.
 
 use crate::cache::{page_bytes, BlockAllocator, BlockTable, KvDtype, PrefixIndex};
 use crate::engine::NativeConfig;
@@ -137,15 +138,26 @@ impl PagedKv {
         self.alloc.bytes_per_token()
     }
 
+    /// K-plane share of [`PagedKv::bytes_per_token`] — dtype-asymmetric
+    /// stores (ternary: 1.25-bit K, int8 V) split unevenly.
+    pub fn k_bytes_per_token(&self) -> usize {
+        self.alloc.store().k_bytes_per_token()
+    }
+
+    /// V-plane share of [`PagedKv::bytes_per_token`].
+    pub fn v_bytes_per_token(&self) -> usize {
+        self.alloc.store().v_bytes_per_token()
+    }
+
     /// Cumulative nanoseconds the store spent dequantizing page blocks
     /// (0 for f32 — the dequant-overhead gauge).
     pub fn dequant_nanos(&self) -> u64 {
         self.alloc.store().dequant_nanos()
     }
 
-    /// `(int8-native, dequant/borrow)` attention q·k row counts — the
-    /// `kv_int8_dot_fraction` gauge's inputs.
-    pub fn qk_rows(&self) -> (u64, u64) {
+    /// `(int8-native, dequant/borrow, ternary-LUT)` attention q·k row
+    /// counts — inputs of the storage-dtype dot-fraction gauges.
+    pub fn qk_rows(&self) -> (u64, u64, u64) {
         self.alloc.store().qk_rows()
     }
 
@@ -337,6 +349,54 @@ mod tests {
         let quant = PagedKv::new(&cfg, int8_pages, 16, false, KvDtype::Int8);
         assert!(quant.bytes() <= budget);
         assert!(quant.bytes_per_token() * 2 <= 2 * cfg.n_layers * cfg.d_model * 4);
+    }
+
+    #[test]
+    fn budget_buys_most_pages_at_ternary() {
+        // Same byte budget, three dtypes: page counts must be strictly
+        // ordered f32 < int8 < ternary, and the K/V breakdown must show
+        // the ternary pool's K plane at the 1.25-bit rate.
+        let cfg = NativeConfig::named("nano").unwrap();
+        let f32_pages = PagedKv::pages_for_budget(&cfg, 2, 16, KvDtype::F32);
+        let int8_pages = PagedKv::pages_for_budget(&cfg, 2, 16, KvDtype::Int8);
+        let tern_pages = PagedKv::pages_for_budget(&cfg, 2, 16, KvDtype::Ternary);
+        assert!(f32_pages < int8_pages && int8_pages < tern_pages, "{f32_pages}/{int8_pages}/{tern_pages}");
+        let budget = PagedKv::new(&cfg, f32_pages, 16, false, KvDtype::F32).bytes();
+        let tern = PagedKv::new(&cfg, tern_pages, 16, false, KvDtype::Ternary);
+        assert!(tern.bytes() <= budget);
+        assert_eq!(
+            tern.k_bytes_per_token() + tern.v_bytes_per_token(),
+            tern.bytes_per_token()
+        );
+        // nano: ternary K = 42 B/token vs int8 K = 258 B/token.
+        let int8 = PagedKv::new(&cfg, 4, 16, false, KvDtype::Int8);
+        assert!(tern.k_bytes_per_token() * 4 < int8.k_bytes_per_token(), "1.25-bit K plane");
+        assert_eq!(tern.v_bytes_per_token(), int8.v_bytes_per_token(), "V stays int8");
+    }
+
+    #[test]
+    fn ternary_pool_shares_whole_frozen_pages_only() {
+        // Same page_exact protocol as int8: the absmean trajectory of a
+        // page is a function of its full chunk, so partial tail pages are
+        // re-prefilled rather than shared.
+        let cfg = NativeConfig::named("nano").unwrap();
+        let mut kv = PagedKv::new(&cfg, 64, 4, true, KvDtype::Ternary);
+        let prompt: Vec<u32> = (0..8).collect();
+        let (mut t, shared) = kv.lease(&prompt);
+        assert_eq!(shared, 0);
+        for _ in 0..prompt.len() {
+            t.prepare_append(kv.alloc_mut());
+            t.advance();
+        }
+        kv.register(&prompt, &t);
+        assert_eq!(kv.index_pages(), 2);
+        let (mut t2, shared) = kv.lease(&prompt);
+        assert_eq!(shared, 4, "shared span truncates to a whole-page multiple");
+        assert_eq!(t2.shared_prefix_pages(), 1);
+        kv.release(&mut t);
+        kv.release(&mut t2);
+        assert_eq!(kv.flush_index(), 2);
+        assert_eq!(kv.used_pages(), 0);
     }
 
     #[test]

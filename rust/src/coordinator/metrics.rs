@@ -33,6 +33,13 @@ pub struct Metrics {
     /// (scales amortized) — the kv-bytes-per-token gauge; int8 pools
     /// must report at most half the f32 figure.
     pub kv_bytes_per_token: u64,
+    /// K-plane share of `kv_bytes_per_token`. Symmetric dtypes (f32,
+    /// int8) split evenly; ternary pools store K at 1.25 bits/element
+    /// and V at int8, so the breakdown is how the report shows where the
+    /// bytes went.
+    pub kv_bytes_per_token_k: u64,
+    /// V-plane share of `kv_bytes_per_token`.
+    pub kv_bytes_per_token_v: u64,
     /// CPU-seconds the page store spent dequantizing blocks for
     /// attention, summed across all worker threads (0 for f32 pools) —
     /// the dequant-overhead gauge. Because workers dequantize
@@ -43,8 +50,13 @@ pub struct Metrics {
     /// [`Metrics::int8_dot_fraction`].
     pub kv_qk_rows_int8: u64,
     /// Attention q·k rows computed from f32 tiles (borrowed f32 pages or
-    /// dequantized quantized pages) — the fraction's other leg.
+    /// dequantized quantized pages) — the fractions' shared denominator
+    /// leg.
     pub kv_qk_rows_f32: u64,
+    /// Attention q·k rows computed by the 1.25-bit LUT walk over packed
+    /// ternary K pages (no dequantization) — numerator of
+    /// [`Metrics::ternary_dot_fraction`].
+    pub kv_qk_rows_ternary: u64,
     /// Frozen-tile cache hits: V-pass reads of a shared prefix page
     /// served from the store's LRU instead of re-dequantizing.
     pub kv_tile_hits: u64,
@@ -116,15 +128,25 @@ impl Metrics {
         self.kv_dequant_seconds / self.wall_seconds
     }
 
-    /// Fraction of attention q·k rows computed at the storage dtype
-    /// (int8-native i32 dots): ~1 for int8 pools, 0 for f32 pools, 0
-    /// when nothing was recorded.
+    /// Fraction of attention q·k rows computed as int8-native i32 dots:
+    /// ~1 for int8 pools, 0 for f32/ternary pools, 0 when nothing was
+    /// recorded.
     pub fn int8_dot_fraction(&self) -> f64 {
-        let total = self.kv_qk_rows_int8 + self.kv_qk_rows_f32;
+        let total = self.kv_qk_rows_int8 + self.kv_qk_rows_f32 + self.kv_qk_rows_ternary;
         if total == 0 {
             return 0.0;
         }
         self.kv_qk_rows_int8 as f64 / total as f64
+    }
+
+    /// Fraction of attention q·k rows computed by the 1.25-bit ternary
+    /// LUT walk: ~1 for ternary pools, 0 elsewhere / when unrecorded.
+    pub fn ternary_dot_fraction(&self) -> f64 {
+        let total = self.kv_qk_rows_int8 + self.kv_qk_rows_f32 + self.kv_qk_rows_ternary;
+        if total == 0 {
+            return 0.0;
+        }
+        self.kv_qk_rows_ternary as f64 / total as f64
     }
 
     /// Hit rate of the frozen-tile LRU (0 when the cache never ran —
@@ -141,8 +163,8 @@ impl Metrics {
         format!(
             "requests: {}/{} done | tokens: {} | rounds: {} | wall: {:.2}s\n\
              throughput: {:.1} tok/s | latency p50/p99: {:.3}/{:.3}s | ttft p50: {:.3}s\n\
-             kv: {}/{} pages peak ({:.0}% util) | {} B/token | dequant: {:.3} cpu-s\n\
-             int8 q·k: {:.0}% of dot rows | tile cache: {:.0}% hits ({}/{}) | kernel isa: {}\n\
+             kv: {}/{} pages peak ({:.0}% util) | {} B/token (K {} + V {}) | dequant: {:.3} cpu-s\n\
+             int8 q·k: {:.0}% | ternary q·k: {:.0}% of dot rows | tile cache: {:.0}% hits ({}/{}) | kernel isa: {}\n\
              prefix hit-rate: {:.0}% ({} hits) | \
              peak active: {} | context-limit finishes: {}",
             self.requests_done,
@@ -158,8 +180,11 @@ impl Metrics {
             self.kv_pages_total,
             100.0 * self.block_utilization(),
             self.kv_bytes_per_token,
+            self.kv_bytes_per_token_k,
+            self.kv_bytes_per_token_v,
             self.kv_dequant_seconds,
             100.0 * self.int8_dot_fraction(),
+            100.0 * self.ternary_dot_fraction(),
             100.0 * self.tile_cache_hit_rate(),
             self.kv_tile_hits,
             self.kv_tile_hits + self.kv_tile_misses,
@@ -213,6 +238,7 @@ mod tests {
         assert_eq!(z.prefix_hit_rate(), 0.0);
         assert_eq!(z.dequant_overhead(), 0.0);
         assert_eq!(z.int8_dot_fraction(), 0.0);
+        assert_eq!(z.ternary_dot_fraction(), 0.0);
         assert_eq!(z.tile_cache_hit_rate(), 0.0);
     }
 
@@ -226,10 +252,36 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(m.int8_dot_fraction(), 0.75);
+        assert_eq!(m.ternary_dot_fraction(), 0.0);
         assert_eq!(m.tile_cache_hit_rate(), 0.75);
         let r = m.report();
-        assert!(r.contains("int8 q·k: 75% of dot rows"), "{r}");
+        assert!(r.contains("int8 q·k: 75% | ternary q·k: 0% of dot rows"), "{r}");
         assert!(r.contains("tile cache: 75% hits (30/40)"), "{r}");
+    }
+
+    #[test]
+    fn ternary_attention_gauge_math_and_report() {
+        // A ternary pool's score pass is all LUT rows except the f32
+        // leg contributed by contiguous prefill caches.
+        let m = Metrics {
+            kv_qk_rows_int8: 0,
+            kv_qk_rows_f32: 100,
+            kv_qk_rows_ternary: 300,
+            ..Default::default()
+        };
+        assert_eq!(m.ternary_dot_fraction(), 0.75);
+        assert_eq!(m.int8_dot_fraction(), 0.0);
+        let r = m.report();
+        assert!(r.contains("int8 q·k: 0% | ternary q·k: 75% of dot rows"), "{r}");
+        // All three classes share one denominator.
+        let mixed = Metrics {
+            kv_qk_rows_int8: 100,
+            kv_qk_rows_f32: 100,
+            kv_qk_rows_ternary: 200,
+            ..Default::default()
+        };
+        assert_eq!(mixed.int8_dot_fraction(), 0.25);
+        assert_eq!(mixed.ternary_dot_fraction(), 0.5);
     }
 
     #[test]
@@ -252,11 +304,13 @@ mod tests {
             wall_seconds: 2.0,
             kv_dequant_seconds: 0.5,
             kv_bytes_per_token: 516,
+            kv_bytes_per_token_k: 258,
+            kv_bytes_per_token_v: 258,
             ..Default::default()
         };
         assert_eq!(m.dequant_overhead(), 0.25);
         let r = m.report();
-        assert!(r.contains("516 B/token"), "{r}");
+        assert!(r.contains("516 B/token (K 258 + V 258)"), "{r}");
         assert!(r.contains("dequant: 0.500 cpu-s"), "{r}");
         // Summed across workers: more dequant CPU than wall is legal.
         let busy = Metrics { wall_seconds: 1.0, kv_dequant_seconds: 3.0, ..Default::default() };

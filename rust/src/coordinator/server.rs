@@ -22,11 +22,15 @@
 //! int8-natively (i32 q·k dots over raw page bytes — the
 //! `kv_int8_dot_fraction` gauge), and share prefixes at whole-page
 //! granularity with registration-frozen scales, so quantization buys
-//! admission concurrency as well as footprint. Because batched and
-//! single-row kernels are bit-for-bit identical and shared KV pages are
-//! a deterministic function of the token prefix (byte-exact for frozen
-//! int8 pages), a request's tokens do not depend on which sequences
-//! share its rounds, on paging, on prefix hits, or on arrival order.
+//! admission concurrency as well as footprint. Ternary pages push the
+//! K side to 1.25 bits/weight (pack34 3:4-sparse codes, V stays int8)
+//! and run the score pass as per-query LUT walks over the packed codes
+//! (the `kv_qk_rows_ternary` gauge) — K is never dequantized. Because
+//! batched and single-row kernels are bit-for-bit identical and shared
+//! KV pages are a deterministic function of the token prefix
+//! (byte-exact for frozen quantized pages), a request's tokens do not
+//! depend on which sequences share its rounds, on paging, on prefix
+//! hits, or on arrival order.
 //! (Environment is offline, so "arrival" is simulated from the trace
 //! clock; everything downstream of arrival is the real engine.)
 
@@ -51,7 +55,8 @@ pub struct ServerConfig {
     pub kv_capacity: usize,
     /// Positions per KV page.
     pub page_size: usize,
-    /// KV page storage dtype (f32 parity baseline / int8 quantized).
+    /// KV page storage dtype (f32 parity baseline / int8 quantized /
+    /// 1.25-bit ternary K with int8 V).
     pub kv_dtype: KvDtype,
     /// Reuse frozen KV pages across requests sharing a prompt prefix.
     /// Works for both dtypes: f32 pools share down to a page's live
@@ -402,10 +407,13 @@ impl<'m> Server<'m> {
         metrics.kv_pages_end_in_use = kv.used_pages() as u64;
         metrics.kv_bytes = kv.bytes() as u64;
         metrics.kv_bytes_per_token = kv.bytes_per_token() as u64;
+        metrics.kv_bytes_per_token_k = kv.k_bytes_per_token() as u64;
+        metrics.kv_bytes_per_token_v = kv.v_bytes_per_token() as u64;
         metrics.kv_dequant_seconds = kv.dequant_nanos() as f64 * 1e-9;
-        let (qk_i8, qk_f32) = kv.qk_rows();
+        let (qk_i8, qk_f32, qk_ternary) = kv.qk_rows();
         metrics.kv_qk_rows_int8 = qk_i8;
         metrics.kv_qk_rows_f32 = qk_f32;
+        metrics.kv_qk_rows_ternary = qk_ternary;
         let (tile_hits, tile_misses) = kv.tile_cache_stats();
         metrics.kv_tile_hits = tile_hits;
         metrics.kv_tile_misses = tile_misses;
@@ -665,6 +673,66 @@ mod tests {
         for c in c_i8.iter().chain(&c_f32) {
             assert_eq!(c.tokens.len(), 5);
             assert_eq!(c.finish, super::FinishReason::Length);
+        }
+    }
+
+    #[test]
+    fn ternary_kv_serves_at_1_25_bit_k_rate_and_lut_walks_every_row() {
+        let m = model();
+        let base = ServerConfig {
+            batcher: BatcherConfig { max_active: 4, token_budget: 100_000 },
+            kv_capacity: 2,
+            page_size: 16,
+            workers: 2,
+            ..Default::default()
+        };
+        let s = spec(6, 4, 5, 3);
+        let (c_i8, m_i8) = serve_trace(&m, ServerConfig { kv_dtype: KvDtype::Int8, ..base }, s);
+        let (c_t, m_t) = serve_trace(&m, ServerConfig { kv_dtype: KvDtype::Ternary, ..base }, s);
+        assert_eq!(c_i8.len(), 6);
+        assert_eq!(c_t.len(), 6);
+        // K pages drop from int8 to 1.25-bit pack34 codes while V stays
+        // int8, so the same byte budget buys strictly more pages. At the
+        // nano shape (4 heads × hd 32, page_size 16) that is K 42 vs 258
+        // B/token — more than 4× smaller.
+        assert!(
+            m_t.kv_bytes_per_token < m_i8.kv_bytes_per_token,
+            "{} vs {}",
+            m_t.kv_bytes_per_token,
+            m_i8.kv_bytes_per_token
+        );
+        assert_eq!(
+            m_t.kv_bytes_per_token_k + m_t.kv_bytes_per_token_v,
+            m_t.kv_bytes_per_token
+        );
+        assert!(
+            m_t.kv_bytes_per_token_k * 4 < m_i8.kv_bytes_per_token_k,
+            "ternary K must be >4x smaller than int8 K ({} vs {})",
+            m_t.kv_bytes_per_token_k,
+            m_i8.kv_bytes_per_token_k
+        );
+        assert_eq!(m_t.kv_bytes_per_token_v, m_i8.kv_bytes_per_token_v);
+        assert!(m_t.kv_pages_total > m_i8.kv_pages_total);
+        // Score-pass routing: every paged q·k row in the ternary pool is
+        // a LUT walk over packed codes; none takes the int8 or borrowed
+        // f32 path. The V pass still dequantizes tiles, so the dequant
+        // gauge moves — but only from V.
+        assert_eq!(m_t.ternary_dot_fraction(), 1.0, "ternary pool must LUT-walk every row");
+        assert_eq!(m_t.int8_dot_fraction(), 0.0);
+        assert_eq!(m_i8.ternary_dot_fraction(), 0.0);
+        assert!(m_t.kv_dequant_seconds > 0.0);
+        // Every request still runs to its full allowance.
+        for c in &c_t {
+            assert_eq!(c.tokens.len(), 5);
+            assert_eq!(c.finish, super::FinishReason::Length);
+        }
+        // And the quantized decode replays identically per trace.
+        let (mut r1, _) = serve_trace(&m, ServerConfig { kv_dtype: KvDtype::Ternary, ..base }, s);
+        let (mut r2, _) = serve_trace(&m, ServerConfig { kv_dtype: KvDtype::Ternary, ..base }, s);
+        r1.sort_by_key(|c| c.id);
+        r2.sort_by_key(|c| c.id);
+        for (a, b) in r1.iter().zip(&r2) {
+            assert_eq!(a.tokens, b.tokens, "ternary decode must replay identically");
         }
     }
 

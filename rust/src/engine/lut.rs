@@ -25,6 +25,12 @@
 //! * TL2 1.67-bit — 27-entry LUT per 3-segment, 5-bit codes pulled
 //!   from a misaligned bitstream (the decode tax the paper measures);
 //! * I2_S 2-bit — decode-and-add (no LUT, byte aligned).
+//!
+//! The same trick serves the ternary KV cache's attention score pass:
+//! [`build_qk_luts34`] folds one int8-quantized query row into
+//! per-(head, block) 32-entry tables and [`qk_lut34_rows`] walks packed
+//! 3:4 K pages through them — integer-exact, multiplication-free, and
+//! without ever dequantizing K (DESIGN.md §4).
 
 use crate::pack::{Packed34, PackedI2S, PackedTl2};
 
@@ -191,6 +197,91 @@ pub fn gemm_pack34_preluts(
             }
             out[bi * w + jj] = a * p.alpha[j];
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sherry 1.25-bit KV attention: per-query q·k LUT walk
+// ---------------------------------------------------------------------------
+
+/// Build the per-(head, block) 32-entry q·k tables for the ternary-KV
+/// attention score pass.
+///
+/// `q_codes` is one int8-quantized query row (`n_heads × head_dim`, the
+/// output of the attention path's query quantizer). For head `h`, block
+/// `b` and a stored pack34 code `(idx, mirror)`, entry
+/// `luts[(h·nb + b)·32 + mirror·16 + idx]` holds
+///
+/// ```text
+/// Σ_lane decode_block(idx, mirror)[lane] · q̂[h·head_dim + 4b + lane]
+/// ```
+///
+/// as f32 — that block's exact integer contribution to q̂·k̂. The mirror
+/// half of each table is written as the exact negation of the base half.
+/// Every entry is an integer of magnitude ≤ 3·127, so f32 accumulation
+/// over blocks stays exact (≤ 381·nb ≪ 2²⁴): summation order cannot
+/// perturb a q·k sum, which makes the scalar and SIMD walks bit-identical
+/// by construction rather than by careful operation ordering.
+///
+/// `luts` must have length `n_heads * (head_dim/4) * 32`.
+pub fn build_qk_luts34(q_codes: &[i8], head_dim: usize, n_heads: usize, luts: &mut [f32]) {
+    let nb = head_dim / 4;
+    debug_assert_eq!(head_dim % 4, 0);
+    debug_assert_eq!(q_codes.len(), n_heads * head_dim);
+    debug_assert_eq!(luts.len(), n_heads * nb * 32);
+    for h in 0..n_heads {
+        for b in 0..nb {
+            let q = &q_codes[h * head_dim + b * 4..h * head_dim + b * 4 + 4];
+            let out = &mut luts[(h * nb + b) * 32..(h * nb + b) * 32 + 32];
+            for idx in 0..16u8 {
+                let pat = crate::pack::pack34::decode_block(idx, false);
+                let mut s = 0i32;
+                for (lane, &p) in pat.iter().enumerate() {
+                    s += p as i32 * q[lane] as i32;
+                }
+                out[idx as usize] = s as f32;
+                out[16 + idx as usize] = -(s as f32);
+            }
+        }
+    }
+}
+
+/// Scalar q·k LUT walk over one head of a packed 3:4-ternary K plane —
+/// the ground truth the `simd` walks must match bit-for-bit.
+///
+/// `idx` / `sign` are the packed planes laid out as in
+/// [`TernaryBlock`](crate::cache::TernaryBlock): row-major over `rows`
+/// token slots, each slot holding `n_heads` head lanes of `idx_bh` /
+/// `sign_bh` bytes. Block `b` of a lane sits at nibble `b%2` of idx byte
+/// `b/2` and bit `b%8` of sign byte `b/8`. `out[r]` receives the integer
+/// dot q̂_head · k̂_head(row r) as f32 (exact — see [`build_qk_luts34`]);
+/// the caller folds `q_scale · k_page_head_scale · softmax_scale` in
+/// afterwards, so the walk itself is multiplication-free and never
+/// materializes a dequantized K value.
+#[allow(clippy::too_many_arguments)]
+pub fn qk_lut34_rows(
+    idx: &[u8],
+    sign: &[u8],
+    idx_bh: usize,
+    sign_bh: usize,
+    nb: usize,
+    head: usize,
+    n_heads: usize,
+    luts: &[f32],
+    rows: usize,
+    out: &mut [f32],
+) {
+    let lh = &luts[head * nb * 32..(head + 1) * nb * 32];
+    for (r, o) in out.iter_mut().enumerate().take(rows) {
+        let ib = (r * n_heads + head) * idx_bh;
+        let mb = (r * n_heads + head) * sign_bh;
+        let mut acc = 0.0f32;
+        for b in 0..nb {
+            let nib = ((idx[ib + b / 2] >> ((b % 2) * 4)) & 0x0F) as usize;
+            let m = ((sign[mb + b / 8] >> (b % 8)) & 1) as usize;
+            acc += lh[b * 32 + m * 16 + nib];
+        }
+        *o = acc;
     }
 }
 
@@ -523,6 +614,65 @@ mod tests {
             for j in 0..c {
                 let g = y_gold[t * c + j];
                 assert!((y[j] - g).abs() < 1e-3 * (1.0 + g.abs()), "row {t} col {j}: {} vs {g}", y[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn qk_luts34_mirror_half_is_exact_negation() {
+        let (nh, hd) = (2usize, 8usize);
+        let nb = hd / 4;
+        let q: Vec<i8> = (0..nh * hd).map(|i| ((i * 31 + 7) % 255) as i8).collect();
+        let mut luts = vec![0.0f32; nh * nb * 32];
+        build_qk_luts34(&q, hd, nh, &mut luts);
+        for t in 0..nh * nb {
+            for idx in 0..16 {
+                let a = luts[t * 32 + idx];
+                let b = luts[t * 32 + 16 + idx];
+                assert_eq!(a.to_bits(), (-b).to_bits(), "table {t} idx {idx}");
+                assert_eq!(a, a.round(), "entries are integer-valued");
+                assert!(a.abs() <= 3.0 * 127.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qk_lut34_rows_matches_decoded_dot() {
+        // Pack a synthetic K plane by hand (nibble idx + mirror bit-plane,
+        // the TernaryBlock layout), then check the LUT walk against the
+        // decode-then-integer-dot reference for every (row, head).
+        use crate::pack::pack34::decode_block;
+        let (rows, nh, hd) = (5usize, 3usize, 12usize);
+        let nb = hd / 4;
+        let (idx_bh, sign_bh) = (nb.div_ceil(2), nb.div_ceil(8));
+        let mut idx = vec![0u8; rows * nh * idx_bh];
+        let mut sign = vec![0u8; rows * nh * sign_bh];
+        let code = |r: usize, h: usize, b: usize| ((r * 7 + h * 3 + b * 5) % 16) as u8;
+        let mirror = |r: usize, h: usize, b: usize| (r + h + b) % 2 == 0;
+        for r in 0..rows {
+            for h in 0..nh {
+                let lane = r * nh + h;
+                for b in 0..nb {
+                    idx[lane * idx_bh + b / 2] |= code(r, h, b) << ((b % 2) * 4);
+                    sign[lane * sign_bh + b / 8] |= (mirror(r, h, b) as u8) << (b % 8);
+                }
+            }
+        }
+        let q: Vec<i8> = (0..nh * hd).map(|i| ((i * 67 + 19) % 255 - 127) as i8).collect();
+        let mut luts = vec![0.0f32; nh * nb * 32];
+        build_qk_luts34(&q, hd, nh, &mut luts);
+        let mut out = vec![0.0f32; rows];
+        for h in 0..nh {
+            qk_lut34_rows(&idx, &sign, idx_bh, sign_bh, nb, h, nh, &luts, rows, &mut out);
+            for (r, &got) in out.iter().enumerate() {
+                let mut want = 0i32;
+                for b in 0..nb {
+                    let k = decode_block(code(r, h, b), mirror(r, h, b));
+                    for lane in 0..4 {
+                        want += k[lane] as i32 * q[h * hd + b * 4 + lane] as i32;
+                    }
+                }
+                assert_eq!(got, want as f32, "row {r} head {h}");
             }
         }
     }

@@ -10,8 +10,10 @@
 //! drives, which issues one fused LUT-GEMM per layer per decode round.
 //! Attention reads KV history through the `cache` subsystem's block
 //! views at the storage dtype: int8 pages contribute q·k scores as i32
-//! integer dots over raw page bytes, f32 pages as borrowed tiles —
-//! bit-for-bit with the contiguous pre-paging engine (DESIGN.md §4).
+//! integer dots over raw page bytes, 1.25-bit ternary K pages as
+//! per-query LUT walks over their packed pack34 codes (never
+//! dequantized), and f32 pages as borrowed tiles — bit-for-bit with the
+//! contiguous pre-paging engine (DESIGN.md §4).
 //!
 //! Invariants: batched vs single-row kernels are bit-for-bit per format
 //! (`gemv` *is* `gemm_nt` at `B = 1`); decode never feeds a position at

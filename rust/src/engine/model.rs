@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 
 use super::kernel::Scratch;
 use super::linear::QuantLinear;
+use super::lut;
 use crate::cache::{KBlock, KvBatch, Rows};
 use crate::pack::Format;
 use crate::tensor::{ops, Mat};
@@ -320,6 +321,7 @@ impl TernaryModel {
                 scores: self.tiles.lease(),
                 tile: self.tiles.lease(),
                 q_scales: self.tiles.lease(),
+                q_luts: self.tiles.lease(),
                 q_codes: self.qcodes.lease(),
             })
             .collect();
@@ -367,7 +369,8 @@ impl TernaryModel {
                             s.spawn(move || {
                                 attention_blocked(
                                     q_row, kl, vl, t, hd, n_heads, scale, &mut scr.scores,
-                                    &mut scr.tile, &mut scr.q_codes, &mut scr.q_scales, out_row,
+                                    &mut scr.tile, &mut scr.q_codes, &mut scr.q_scales,
+                                    &mut scr.q_luts, out_row,
                                 );
                             });
                         }
@@ -381,7 +384,8 @@ impl TernaryModel {
                             let q_row = &q[bi * d..(bi + 1) * d];
                             attention_blocked(
                                 q_row, kl, vl, pos[bi] + 1, hd, n_heads, scale, &mut scr.scores,
-                                &mut scr.tile, &mut scr.q_codes, &mut scr.q_scales, out_row,
+                                &mut scr.tile, &mut scr.q_codes, &mut scr.q_scales,
+                                &mut scr.q_luts, out_row,
                             );
                         }
                     }
@@ -411,6 +415,7 @@ impl TernaryModel {
         kv.advance();
         for scr in attn_scratch.drain(..) {
             self.qcodes.give(scr.q_codes);
+            self.tiles.give(scr.q_luts);
             self.tiles.give(scr.q_scales);
             self.tiles.give(scr.tile);
             self.tiles.give(scr.scores);
@@ -453,6 +458,7 @@ struct AttnScratch {
     scores: Vec<f32>,
     tile: Vec<f32>,
     q_scales: Vec<f32>,
+    q_luts: Vec<f32>,
     q_codes: Vec<i8>,
 }
 
@@ -461,8 +467,8 @@ struct AttnScratch {
 /// `n_heads × head_dim` symmetric round-to-nearest codes in ±127,
 /// `scales[h] = absmax(q_h) / 127` (an all-zero head keeps scale 0 and
 /// zero codes). Done once per [`attention_blocked`] call — "once per
-/// (head, round)" — and only when the K history is int8-native, so the
-/// f32 path never pays for it.
+/// (head, round)" — and only when the K history is quantized (int8 or
+/// 1.25-bit ternary), so the f32 path never pays for it.
 fn quantize_query(
     q_row: &[f32],
     n_heads: usize,
@@ -495,11 +501,14 @@ fn quantize_query(
 /// Three passes over `t` cached timesteps: (1) every head's query·key
 /// dot products into `scores` (`n_heads × t`), (2) per-head softmax,
 /// (3) weighted-V accumulation. The score pass walks the K history via
-/// [`Rows::for_each_kblock`], so int8 pages are consumed **at their
-/// storage dtype**: the query is quantized once per (head, call)
-/// ([`quantize_query`]) and each page contributes i32 integer dots
-/// scaled by one `q_scale · page_head_scale` product per (page, head) —
-/// the K plane is never dequantized. The V pass walks
+/// [`Rows::for_each_kblock`], so quantized pages are consumed **at their
+/// storage dtype**: the query is quantized once per call
+/// ([`quantize_query`]); int8 pages then contribute i32 integer dots and
+/// 1.25-bit ternary pages contribute per-query LUT walks over their
+/// packed pack34 codes ([`crate::simd::qk_lut34_rows_with`], tables
+/// built once per call by [`lut::build_qk_luts34`]) — either way scaled
+/// by one `q_scale · page_head_scale` product per (page, head), and the
+/// K plane is never dequantized. The V pass walks
 /// [`Rows::for_each_block`] f32 tiles (registration-frozen pages served
 /// from the store's shared LRU tile cache, private pages dequantized
 /// once into `tile`). A page is materialized at most once per pass and
@@ -509,8 +518,8 @@ fn quantize_query(
 /// f32 storage takes the [`KBlock::F32`] arm whose per-element float ops
 /// and ordering match the old position-at-a-time walk exactly, so f32
 /// pages (paged or contiguous) remain **bit-for-bit identical** to the
-/// pre-blocked kernel; the int8 fused dot is deterministic and within
-/// the error bound derived in DESIGN.md §4.
+/// pre-blocked kernel; the int8 fused dot and the ternary LUT walk are
+/// deterministic and within the error bounds derived in DESIGN.md §4.
 #[allow(clippy::too_many_arguments)]
 fn attention_blocked(
     q_row: &[f32],
@@ -524,6 +533,7 @@ fn attention_blocked(
     tile: &mut Vec<f32>,
     q_codes: &mut Vec<i8>,
     q_scales: &mut Vec<f32>,
+    q_luts: &mut Vec<f32>,
     out: &mut [f32],
 ) {
     let d = n_heads * hd;
@@ -533,10 +543,12 @@ fn attention_blocked(
     scores.clear();
     scores.resize(n_heads * t, 0.0);
     // Leased query-quantization buffers; emptied here, filled lazily on
-    // the first int8 block (the f32 path never quantizes q).
+    // the first quantized K block (the f32 path never quantizes q, and
+    // the q·k LUTs are only built when a ternary page shows up).
     q_codes.clear();
     q_scales.clear();
-    let (mut native_rows, mut dequant_rows) = (0u64, 0u64);
+    q_luts.clear();
+    let (mut native_rows, mut dequant_rows, mut ternary_rows) = (0u64, 0u64, 0u64);
     kl.for_each_kblock(t, tile, |start, block, rows| match block {
         KBlock::F32(block) => {
             for r in 0..rows {
@@ -569,8 +581,33 @@ fn attention_blocked(
             }
             native_rows += rows as u64;
         }
+        KBlock::Ternary(tb) => {
+            if q_codes.is_empty() {
+                quantize_query(q_row, n_heads, hd, q_codes, q_scales);
+            }
+            if q_luts.is_empty() {
+                q_luts.resize(n_heads * (hd / 4) * 32, 0.0);
+                lut::build_qk_luts34(q_codes, hd, n_heads, q_luts);
+            }
+            let nb = hd / 4;
+            for hh in 0..n_heads {
+                // The walk writes the raw integer q̂·k̂ sums (exact in f32;
+                // see `lut::build_qk_luts34`), then one multiply per row
+                // folds both quantizer scales and the softmax scale back
+                // in — K stays packed end to end.
+                crate::simd::qk_lut34_rows_with(
+                    isa, tb.idx, tb.sign, tb.idx_bh, tb.sign_bh, nb, hh, n_heads, q_luts,
+                    rows, &mut scores[hh * t + start..hh * t + start + rows],
+                );
+                let s = q_scales[hh] * tb.scales[hh] * scale;
+                for v in &mut scores[hh * t + start..hh * t + start + rows] {
+                    *v *= s;
+                }
+            }
+            ternary_rows += rows as u64;
+        }
     });
-    kl.record_qk(native_rows, dequant_rows);
+    kl.record_qk(native_rows, dequant_rows, ternary_rows);
     for hh in 0..n_heads {
         ops::softmax_inplace(&mut scores[hh * t..(hh + 1) * t]);
     }
@@ -730,6 +767,105 @@ mod tests {
                 }
             }
         });
+        table.release_all(&mut alloc);
+    }
+
+    #[test]
+    fn ternary_fused_qk_stays_within_design_bounds() {
+        // The LUT-routed score pass over packed 1.25-bit K pages must
+        // satisfy both DESIGN.md §4 bounds, elementwise per (row, head):
+        //   Bound 1 (vs dequantized K): the fused and dequant paths share
+        //     the stored codes and scales, so they differ only by query
+        //     rounding over the 3·hd/4 surviving lanes —
+        //     ≤ (3/4)·hd·½·s_q·s_k;
+        //   Bound 2 (vs exact f32 K): add the 3:4 drop mass and the
+        //     absmean magnitude-snap error of the kept lanes.
+        use crate::quant::absmean::sparsify34_codes;
+        let cfg = nano();
+        let d = cfg.d_model;
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let nb = hd / 4;
+        let mut rng = crate::util::Pcg64::seeded(47);
+        let mut alloc =
+            crate::cache::BlockAllocator::new_with(&cfg, 4, 4, crate::cache::KvDtype::Ternary);
+        let mut table = crate::cache::BlockTable::new(4);
+        let mut krows: Vec<Vec<f32>> = Vec::new();
+        for pos in 0..6usize {
+            table.prepare_append(&mut alloc);
+            let (page, slot) = table.slot_for(pos);
+            let row = rng.normal_vec(d);
+            alloc.write_row(0, page, slot, &row, &row);
+            krows.push(row);
+            table.advance();
+        }
+        let q = rng.normal_vec(d);
+        let (mut codes, mut q_scales) = (Vec::new(), Vec::new());
+        super::quantize_query(&q, nh, hd, &mut codes, &mut q_scales);
+        let mut luts = vec![0.0f32; nh * nb * 32];
+        lut::build_qk_luts34(&codes, hd, nh, &mut luts);
+        let mut tables = [&mut table];
+        let kv = KvBatch::Paged { alloc: &mut alloc, tables: &mut tables };
+        let rows_view = kv.k_rows(0, 0);
+        let mut scratch = Vec::new();
+        // Reference: dequantized K pages dotted with the f32 query.
+        let mut dequant = vec![0.0f32; nh * 6];
+        rows_view.for_each_block(6, &mut scratch, |start, block, n| {
+            for r in 0..n {
+                for hh in 0..nh {
+                    dequant[hh * 6 + start + r] = q[hh * hd..(hh + 1) * hd]
+                        .iter()
+                        .zip(&block[r * d + hh * hd..r * d + (hh + 1) * hd])
+                        .map(|(x, y)| x * y)
+                        .sum();
+                }
+            }
+        });
+        // Fused: the LUT walk over the raw packed planes.
+        let mut fused = vec![0.0f32; nh * 6];
+        let mut kscales = vec![0.0f32; nh * 6];
+        rows_view.for_each_kblock(6, &mut scratch, |start, block, n| {
+            let KBlock::Ternary(tb) = block else { panic!("ternary store") };
+            let mut out = vec![0.0f32; n];
+            for hh in 0..nh {
+                lut::qk_lut34_rows(
+                    tb.idx, tb.sign, tb.idx_bh, tb.sign_bh, nb, hh, nh, &luts, n, &mut out,
+                );
+                for (r, &raw) in out.iter().enumerate() {
+                    fused[hh * 6 + start + r] = raw * (q_scales[hh] * tb.scales[hh]);
+                    kscales[hh * 6 + start + r] = tb.scales[hh];
+                }
+            }
+        });
+        for pos in 0..6 {
+            for hh in 0..nh {
+                let s_k = kscales[hh * 6 + pos];
+                let (f, dq) = (fused[hh * 6 + pos], dequant[hh * 6 + pos]);
+                let b1 = 0.75 * hd as f32 * 0.5 * q_scales[hh] * s_k + 1e-5;
+                assert!((f - dq).abs() <= b1, "pos {pos} head {hh}: {f} vs {dq} (bound {b1})");
+            }
+        }
+        let mut kcodes = vec![0i8; d];
+        for (pos, krow) in krows.iter().enumerate() {
+            sparsify34_codes(krow, &mut kcodes);
+            for hh in 0..nh {
+                let s_k = kscales[hh * 6 + pos];
+                let mut exact = 0.0f32;
+                let mut b2 = 0.5 * q_scales[hh] * s_k * (0.75 * hd as f32);
+                for c in hh * hd..(hh + 1) * hd {
+                    exact += q[c] * krow[c];
+                    if kcodes[c] == 0 {
+                        b2 += q[c].abs() * krow[c].abs();
+                    } else {
+                        b2 += q[c].abs() * (krow[c].abs() - s_k).abs();
+                    }
+                }
+                let f = fused[hh * 6 + pos];
+                assert!(
+                    (f - exact).abs() <= b2 + 1e-4,
+                    "pos {pos} head {hh}: {f} vs exact {exact} (bound {b2})"
+                );
+            }
+        }
         table.release_all(&mut alloc);
     }
 

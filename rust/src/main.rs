@@ -51,7 +51,7 @@ fn app() -> App {
                 .flag("tokens", "max new tokens per request", Some("24"))
                 .flag("active", "max concurrent sequences", Some("8"))
                 .flag("page-size", "KV page size (positions)", Some("16"))
-                .flag("kv-dtype", "KV page storage dtype (f32|int8)", Some("f32"))
+                .flag("kv-dtype", "KV page storage dtype (f32|int8|ternary)", Some("f32"))
                 .flag("prefix-sharing", "reuse frozen prefix KV pages (0|1)", Some("1"))
                 .flag("tile-cache", "frozen-tile LRU tiles for int8 pools (0 = off)", Some("64"))
                 .flag("temperature", "sampling temperature (0 = greedy)", Some("0"))
@@ -174,10 +174,10 @@ fn main() -> Result<()> {
                 isa.name()
             );
             let active = args.usize_or("active", 8);
-            let kv_dtype = {
-                let s = args.str_or("kv-dtype", "f32");
-                sherry::cache::KvDtype::parse(&s)
-                    .with_context(|| format!("unknown kv dtype {s:?} (f32|int8)"))?
+            let kv_dtype = match sherry::cache::KvDtype::from_name(&args.str_or("kv-dtype", "f32"))
+            {
+                Ok(d) => d,
+                Err(e) => bail!("{e}"),
             };
             let server_cfg = ServerConfig {
                 batcher: BatcherConfig { max_active: active, ..Default::default() },

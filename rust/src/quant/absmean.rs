@@ -1,0 +1,122 @@
+//! BitNet-b1.58-style absmean ternarization of *live* rows, 3:4-sparse.
+//!
+//! The weight quantizer (`sherry34_quantize`) solves a least-squares
+//! fit over a whole frozen matrix; KV rows arrive one at a time and
+//! must quantize deterministically in write order with no second pass.
+//! This module is that streaming variant, shared by
+//! [`crate::cache::TernaryStore`] and the tests that model it:
+//!
+//! * **Codes are scale-independent.** Per 4-channel block the
+//!   smallest-|x| lane is dropped (stable argmin — ties take the lowest
+//!   index) and the three kept lanes store `sign(x)`, with
+//!   `sign(0) = +1`. No code decision reads the scale, so — unlike
+//!   int8 absmax — later rows can never force a requantization of
+//!   already-written bytes, and every block holds *exactly* one zero
+//!   (the `pack34` codec's precondition) by construction.
+//! * **The scale is a running absmean** over the kept lanes
+//!   (`sum |x| / count`, the b1.58 rule restricted to the active set —
+//!   the same masked absmean the paper's Eq. 18 uses per column). It is
+//!   a pure fold over rows in write order, so a full page's scale is a
+//!   deterministic function of its rows.
+
+/// Ternarize one row slice into 3:4-sparse codes: per 4-channel block,
+/// zero the smallest-|x| lane (stable argmin), `sign(x)` elsewhere with
+/// `sign(0) = +1`. `x.len()` must be a multiple of 4; `codes` is
+/// overwritten elementwise.
+pub fn sparsify34_codes(x: &[f32], codes: &mut [i8]) {
+    assert_eq!(x.len() % 4, 0, "3:4 blocks need a multiple of 4 channels");
+    assert_eq!(codes.len(), x.len());
+    for (xb, cb) in x.chunks_exact(4).zip(codes.chunks_exact_mut(4)) {
+        let mut drop = 0usize;
+        for lane in 1..4 {
+            // Strictly-less keeps the argmin stable (lowest index wins
+            // ties), so codes are a pure function of the row bytes.
+            if xb[lane].abs() < xb[drop].abs() {
+                drop = lane;
+            }
+        }
+        for lane in 0..4 {
+            cb[lane] = if lane == drop {
+                0
+            } else if xb[lane] < 0.0 {
+                -1
+            } else {
+                1
+            };
+        }
+    }
+}
+
+/// Sum of |x| over the kept (non-zero-coded) lanes — the increment the
+/// running absmean accumulator takes for this row. The kept count is
+/// always `3/4 · x.len()`.
+pub fn kept_abs_sum(x: &[f32], codes: &[i8]) -> f32 {
+    debug_assert_eq!(x.len(), codes.len());
+    x.iter()
+        .zip(codes)
+        .filter(|&(_, &c)| c != 0)
+        .map(|(v, _)| v.abs())
+        .sum()
+}
+
+/// The absmean scale for an accumulated `(sum_abs, count)` state;
+/// 0 while nothing has been written (an unwritten slot is never read).
+#[inline]
+pub fn absmean_scale(sum_abs: f32, count: u32) -> f32 {
+    if count == 0 {
+        0.0
+    } else {
+        sum_abs / count as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_drop_exactly_the_argmin_lane() {
+        let x = [3.0, -1.0, 0.5, -2.0, -4.0, 4.0, 0.25, 1.0];
+        let mut c = [9i8; 8];
+        sparsify34_codes(&x, &mut c);
+        assert_eq!(c, [1, -1, 0, -1, -1, 1, 0, 1]);
+    }
+
+    #[test]
+    fn ties_take_the_lowest_index_and_zero_signs_positive() {
+        // |x| ties across lanes 0 and 1 → lane 0 dropped; the kept
+        // exact-zero lane codes +1 so the block still has one zero.
+        let x = [0.0, 0.0, -1.0, 2.0];
+        let mut c = [0i8; 4];
+        sparsify34_codes(&x, &mut c);
+        assert_eq!(c, [0, 1, -1, 1]);
+    }
+
+    #[test]
+    fn every_block_has_exactly_one_zero() {
+        let x: Vec<f32> = (0..64).map(|i| ((i * 37 % 13) as f32 - 6.0) * 0.3).collect();
+        let mut c = vec![0i8; 64];
+        sparsify34_codes(&x, &mut c);
+        for b in c.chunks_exact(4) {
+            assert_eq!(b.iter().filter(|&&v| v == 0).count(), 1, "{b:?}");
+        }
+    }
+
+    #[test]
+    fn running_absmean_matches_batch_recompute() {
+        let rows = [[1.0f32, -2.0, 0.1, 4.0], [0.5, 0.5, 0.5, -8.0]];
+        let mut sum = 0.0f32;
+        let mut n = 0u32;
+        let mut kept_all = Vec::new();
+        for r in &rows {
+            let mut c = [0i8; 4];
+            sparsify34_codes(r, &mut c);
+            sum += kept_abs_sum(r, &c);
+            n += 3;
+            kept_all.extend(r.iter().zip(&c).filter(|&(_, &cc)| cc != 0).map(|(v, _)| v.abs()));
+        }
+        let batch = kept_all.iter().sum::<f32>() / kept_all.len() as f32;
+        assert!((absmean_scale(sum, n) - batch).abs() < 1e-6);
+        assert_eq!(absmean_scale(0.0, 0), 0.0);
+    }
+}

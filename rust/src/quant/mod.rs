@@ -6,6 +6,7 @@
 //! are `(d_in, d_out)` row-major; quantization is per *output channel*
 //! (column) at the default granularity.
 
+pub mod absmean;
 mod arenas;
 mod baselines;
 pub mod error;

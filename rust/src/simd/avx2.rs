@@ -43,6 +43,14 @@ impl Lanes for Avx2 {
     }
 
     #[inline(always)]
+    unsafe fn gather_at(base: *const f32, off: &[i32; super::MAX_LANES]) -> __m256 {
+        // Lane i reads base[off[i]] — one vgatherdps with per-lane
+        // indices loaded straight from the walk's offset array.
+        let idx = _mm256_loadu_si256(off.as_ptr() as *const __m256i);
+        _mm256_i32gather_ps::<4>(base, idx)
+    }
+
+    #[inline(always)]
     unsafe fn xor_sign(v: __m256, sign_bit: u32) -> __m256 {
         let m = _mm256_set1_epi32(sign_bit as i32);
         _mm256_castsi256_ps(_mm256_xor_si256(_mm256_castps_si256(v), m))
@@ -133,6 +141,28 @@ pub(crate) unsafe fn gemm_tl2(
     out: &mut [f32],
 ) {
     walk::gemm_tl2::<Avx2>(p, luts, lut_stride, batch, j0, j1, out)
+}
+
+/// # Safety
+///
+/// AVX2 available; `lut::qk_lut34_rows` bounds (asserted by the dispatch
+/// layer). Offsets are < nb·32 per head table, so no stride guard is
+/// needed.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn qk_lut34_rows(
+    idx: &[u8],
+    sign: &[u8],
+    idx_bh: usize,
+    sign_bh: usize,
+    nb: usize,
+    head: usize,
+    n_heads: usize,
+    luts: &[f32],
+    rows: usize,
+    out: &mut [f32],
+) {
+    walk::qk_lut34_rows::<Avx2>(idx, sign, idx_bh, sign_bh, nb, head, n_heads, luts, rows, out)
 }
 
 /// # Safety

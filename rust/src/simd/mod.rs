@@ -1,11 +1,14 @@
-//! Runtime-dispatched SIMD kernels for the two hottest inner loops:
+//! Runtime-dispatched SIMD kernels for the three hottest inner loops:
 //!
 //! 1. the fused **i8×i8 q·k dot** in the page-blocked attention walk
 //!    (`engine::model::attention_blocked`) — an i32-accumulated dot over
 //!    raw int8 page bytes, one scale multiply per page-head;
 //! 2. the **LUT-GEMM tile walk** (`engine::lut`) — LUT gather + f32
 //!    accumulate over packed weight planes, for all three pack formats
-//!    (Sherry 3:4, TL2, I2_S).
+//!    (Sherry 3:4, TL2, I2_S);
+//! 3. the **ternary-KV q·k LUT walk** ([`qk_lut34_rows`]) — per-query
+//!    32-entry tables indexed by packed 1.25-bit K page codes, one
+//!    gather + add per (block, W rows), never dequantizing K.
 //!
 //! ## Dispatch model
 //!
@@ -359,6 +362,72 @@ pub fn gemm_i2s_with(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Ternary-KV q·k LUT walk
+// ---------------------------------------------------------------------------
+
+/// Per-query LUT walk over one head of a packed 3:4-ternary K plane
+/// through the pinned process ISA. Drop-in for [`lut::qk_lut34_rows`]
+/// (same layout contract: `TernaryBlock` planes, [`lut::build_qk_luts34`]
+/// tables, raw integer sums into `out[..rows]`).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn qk_lut34_rows(
+    idx: &[u8],
+    sign: &[u8],
+    idx_bh: usize,
+    sign_bh: usize,
+    nb: usize,
+    head: usize,
+    n_heads: usize,
+    luts: &[f32],
+    rows: usize,
+    out: &mut [f32],
+) {
+    qk_lut34_rows_with(active(), idx, sign, idx_bh, sign_bh, nb, head, n_heads, luts, rows, out);
+}
+
+/// [`qk_lut34_rows`] through an explicit ISA (parity tests; hot loops
+/// that hoist [`active`]).
+#[allow(clippy::too_many_arguments)]
+pub fn qk_lut34_rows_with(
+    isa: Isa,
+    idx: &[u8],
+    sign: &[u8],
+    idx_bh: usize,
+    sign_bh: usize,
+    nb: usize,
+    head: usize,
+    n_heads: usize,
+    luts: &[f32],
+    rows: usize,
+    out: &mut [f32],
+) {
+    // Mirror the scalar kernel's contract up front: the unsafe gathers
+    // below rely on exactly these bounds. Per-lane gather offsets are
+    // < nb·32 within the head's table, which the LUT-length assert keeps
+    // in bounds for every head < n_heads.
+    assert!(head < n_heads, "head {head} out of range for {n_heads} heads");
+    assert!(nb <= idx_bh * 2 && nb <= sign_bh * 8, "head lane bytes too small for {nb} blocks");
+    assert!(idx.len() >= rows * n_heads * idx_bh, "idx plane too short");
+    assert!(sign.len() >= rows * n_heads * sign_bh, "sign plane too short");
+    assert!(luts.len() >= n_heads * nb * 32, "q·k LUTs too short");
+    assert!(out.len() >= rows, "output row buffer too short");
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: host reports AVX2; bounds asserted above.
+        Isa::Avx2 if avx2_available() => unsafe {
+            avx2::qk_lut34_rows(idx, sign, idx_bh, sign_bh, nb, head, n_heads, luts, rows, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: host reports NEON; bounds asserted above.
+        Isa::Neon if neon_available() => unsafe {
+            neon::qk_lut34_rows(idx, sign, idx_bh, sign_bh, nb, head, n_heads, luts, rows, out)
+        },
+        _ => lut::qk_lut34_rows(idx, sign, idx_bh, sign_bh, nb, head, n_heads, luts, rows, out),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -407,6 +476,49 @@ mod tests {
         // Unavailable ISAs degrade to scalar rather than faulting.
         for isa in Isa::ALL.into_iter().filter(|i| !i.available()) {
             assert_eq!(dot_i8_with(isa, &a, &b), dot_i8_scalar(&a, &b), "{}", isa.name());
+        }
+    }
+
+    #[test]
+    fn qk_lut34_dispatch_is_bit_identical_to_scalar_on_every_isa() {
+        // Synthetic packed K plane in the TernaryBlock layout; row count
+        // is deliberately not a multiple of any lane width so both the
+        // chunked path and the scalar tail run.
+        let (rows, nh, hd) = (13usize, 2usize, 16usize);
+        let nb = hd / 4;
+        let (idx_bh, sign_bh) = (nb.div_ceil(2), nb.div_ceil(8));
+        let mut idx = vec![0u8; rows * nh * idx_bh];
+        let mut sign = vec![0u8; rows * nh * sign_bh];
+        for r in 0..rows {
+            for h in 0..nh {
+                let lane = r * nh + h;
+                for b in 0..nb {
+                    let code = ((r * 11 + h * 5 + b * 3) % 16) as u8;
+                    idx[lane * idx_bh + b / 2] |= code << ((b % 2) * 4);
+                    sign[lane * sign_bh + b / 8] |= (((r + h + b) % 2) as u8) << (b % 8);
+                }
+            }
+        }
+        let q: Vec<i8> = (0..nh * hd).map(|i| ((i * 53 + 29) % 255 - 127) as i8).collect();
+        let mut luts = vec![0.0f32; nh * nb * 32];
+        lut::build_qk_luts34(&q, hd, nh, &mut luts);
+        for head in 0..nh {
+            let mut want = vec![0.0f32; rows];
+            lut::qk_lut34_rows(&idx, &sign, idx_bh, sign_bh, nb, head, nh, &luts, rows, &mut want);
+            for isa in Isa::ALL {
+                let mut got = vec![f32::NAN; rows];
+                qk_lut34_rows_with(
+                    isa, &idx, &sign, idx_bh, sign_bh, nb, head, nh, &luts, rows, &mut got,
+                );
+                for (r, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "{} head {head} row {r}: {g} vs {w}",
+                        isa.name()
+                    );
+                }
+            }
         }
     }
 

@@ -44,6 +44,19 @@ impl Lanes for Neon {
     }
 
     #[inline(always)]
+    unsafe fn gather_at(base: *const f32, off: &[i32; super::MAX_LANES]) -> float32x4_t {
+        // No hardware gather: four scalar loads assembled into a register
+        // (same shape as `gather`, but per-lane offsets).
+        let t = [
+            *base.add(off[0] as usize),
+            *base.add(off[1] as usize),
+            *base.add(off[2] as usize),
+            *base.add(off[3] as usize),
+        ];
+        vld1q_f32(t.as_ptr())
+    }
+
+    #[inline(always)]
     unsafe fn xor_sign(v: float32x4_t, sign_bit: u32) -> float32x4_t {
         vreinterpretq_f32_u32(veorq_u32(vreinterpretq_u32_f32(v), vdupq_n_u32(sign_bit)))
     }
@@ -127,6 +140,27 @@ pub(crate) unsafe fn gemm_tl2(
     out: &mut [f32],
 ) {
     walk::gemm_tl2::<Neon>(p, luts, lut_stride, batch, j0, j1, out)
+}
+
+/// # Safety
+///
+/// NEON available; `lut::qk_lut34_rows` bounds (asserted by the dispatch
+/// layer).
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn qk_lut34_rows(
+    idx: &[u8],
+    sign: &[u8],
+    idx_bh: usize,
+    sign_bh: usize,
+    nb: usize,
+    head: usize,
+    n_heads: usize,
+    luts: &[f32],
+    rows: usize,
+    out: &mut [f32],
+) {
+    walk::qk_lut34_rows::<Neon>(idx, sign, idx_bh, sign_bh, nb, head, n_heads, luts, rows, out)
 }
 
 /// # Safety

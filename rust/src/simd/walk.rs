@@ -15,6 +15,11 @@
 //! the scalar kernel* on the remaining region — parity there is
 //! tautological. The scalar kernels stay untouched as ground truth.
 //!
+//! The ternary-KV q·k walk ([`qk_lut34_rows`]) vectorizes across **K
+//! rows** instead of batch rows and leans on a stronger invariant: its
+//! LUT entries are integer-valued f32s whose sums stay ≪ 2²⁴, so f32
+//! accumulation is exact in any order and parity is structural.
+//!
 //! ## Safety contract (shared by every `unsafe fn` here)
 //!
 //! Callers (the dispatch layer in `simd::mod`) must ensure:
@@ -56,6 +61,13 @@ pub(crate) trait Lanes: Copy {
     /// Strided gather: lane `i` loads `base[i * stride + off]` — one f32
     /// from each of `W` consecutive LUT/activation rows.
     unsafe fn gather(base: *const f32, stride: usize, off: usize) -> Self::V;
+    /// Per-lane indexed gather: lane `i` loads `base[off[i]]`. Unlike
+    /// [`Lanes::gather`] each lane carries its own offset — the ternary
+    /// q·k walk decodes `W` different K rows to `W` different LUT
+    /// entries of one shared table. Requires `off[i] >= 0` and
+    /// `base[off[i]]` in bounds for all `i < W` (lanes `W..MAX_LANES`
+    /// are ignored).
+    unsafe fn gather_at(base: *const f32, off: &[i32; MAX_LANES]) -> Self::V;
     /// XOR `sign_bit` (0 or `1 << 31`) into every lane's bit pattern —
     /// the branchless mirror-sign flip, applied to all rows at once.
     unsafe fn xor_sign(v: Self::V, sign_bit: u32) -> Self::V;
@@ -173,6 +185,71 @@ pub(crate) unsafe fn gemm_pack34<L: Lanes>(
     }
     if r0 < batch {
         lut::gemm_pack34_preluts(p, &luts[r0 * lut_stride..], lut_stride, batch - r0, j0, j1, &mut out[r0 * w..]);
+    }
+}
+
+/// Ternary-KV q·k LUT walk over one head of a packed 3:4 K plane:
+/// chunks of exactly `L::W` K rows advance block-by-block, each lane
+/// decoding its own row's nibble index + mirror bit into an offset of
+/// the head's 32-entry-per-block table ([`lut::build_qk_luts34`]) and
+/// gathering its entry via [`Lanes::gather_at`]; the `W` per-row integer
+/// sums accumulate in vector lanes. Table entries are integer-valued
+/// f32s with exact sums, so the lanes are bit-identical to the scalar
+/// walk ([`lut::qk_lut34_rows`]) regardless of accumulation order.
+/// Rows past the last full chunk go through the scalar kernel.
+///
+/// # Safety
+///
+/// Module safety contract; `lut::qk_lut34_rows` bounds (asserted by the
+/// dispatch layer): `idx.len() >= rows * n_heads * idx_bh`,
+/// `sign.len() >= rows * n_heads * sign_bh`,
+/// `luts.len() >= n_heads * nb * 32`, `out.len() >= rows`,
+/// `head < n_heads`, and `nb` blocks fit the per-lane byte widths
+/// (`nb <= 2*idx_bh`, `nb <= 8*sign_bh`).
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn qk_lut34_rows<L: Lanes>(
+    idx: &[u8],
+    sign: &[u8],
+    idx_bh: usize,
+    sign_bh: usize,
+    nb: usize,
+    head: usize,
+    n_heads: usize,
+    luts: &[f32],
+    rows: usize,
+    out: &mut [f32],
+) {
+    let base = luts.as_ptr().add(head * nb * 32);
+    let mut r0 = 0usize;
+    while r0 + L::W <= rows {
+        let mut acc = L::zero();
+        for b in 0..nb {
+            let mut off = [0i32; MAX_LANES];
+            for (i, o) in off.iter_mut().enumerate().take(L::W) {
+                let lane = (r0 + i) * n_heads + head;
+                let nib = (idx[lane * idx_bh + b / 2] >> ((b % 2) * 4)) & 0x0F;
+                let m = (sign[lane * sign_bh + b / 8] >> (b % 8)) & 1;
+                *o = (b * 32 + (m as usize) * 16 + nib as usize) as i32;
+            }
+            acc = L::add(acc, L::gather_at(base, &off));
+        }
+        L::store(acc, &mut out[r0..]);
+        r0 += L::W;
+    }
+    if r0 < rows {
+        lut::qk_lut34_rows(
+            &idx[r0 * n_heads * idx_bh..],
+            &sign[r0 * n_heads * sign_bh..],
+            idx_bh,
+            sign_bh,
+            nb,
+            head,
+            n_heads,
+            luts,
+            rows - r0,
+            &mut out[r0..],
+        );
     }
 }
 

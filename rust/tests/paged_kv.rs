@@ -570,6 +570,252 @@ fn int8_prefix_sharing_is_serving_order_invariant() {
     assert_eq!(m_a.int8_dot_fraction(), 1.0);
 }
 
+/// Ternary K page round-trip property through the public arena API:
+/// random page sizes, row batches, and magnitude ramps. Every read-back
+/// K element must equal its scale-independent 3:4 code (recomputed with
+/// the pure quantizer, [`sparsify34_codes`]) times the final per-head
+/// running absmean — *exactly*, because pack34 codes are immutable once
+/// written and the scale is materialized from the same `(Σ|x|, count)`
+/// fold the reference replays in write order. Unlike int8 absmax pages
+/// there is no requantization cascade, so this is bit-equality, not a
+/// quanta bound.
+#[test]
+fn prop_ternary_k_roundtrip_is_codes_times_running_absmean() {
+    use sherry::quant::absmean::{absmean_scale, kept_abs_sum, sparsify34_codes};
+    let cfg = NativeConfig::named("nano").unwrap();
+    let d = cfg.d_model;
+    let hd = cfg.head_dim();
+    prop::check(
+        "ternary K page round-trip",
+        40,
+        |rng| {
+            let ps = prop::gens::usize_in(rng, 1, 8);
+            let rows = prop::gens::usize_in(rng, 1, ps);
+            let ramp = rng.below(2) == 1; // magnitude ramp → moving absmean
+            (ps, rows, ramp, rng.next_u64())
+        },
+        |&(ps, rows, ramp, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let mut alloc = BlockAllocator::new_with(&cfg, 2, ps, KvDtype::Ternary);
+            let p = alloc.alloc().unwrap();
+            let mut written: Vec<Vec<f32>> = Vec::new();
+            for s in 0..rows {
+                let mut row = rng.normal_vec(d);
+                if ramp {
+                    for x in &mut row {
+                        *x *= 10f32.powi(s as i32);
+                    }
+                }
+                alloc.write_row(0, p, s, &row, &row);
+                written.push(row);
+            }
+            let mut scratch = Vec::new();
+            let blk = alloc.read_block(Plane::K, 0, p, rows, &mut scratch).to_vec();
+            let blk2 = alloc.read_block(Plane::K, 0, p, rows, &mut scratch).to_vec();
+            if blk != blk2 {
+                return Err("block reads must be pure".into());
+            }
+            // Replay the running absmean fold and compare elementwise.
+            let mut codes = vec![0i8; d];
+            let all_codes: Vec<Vec<i8>> = written
+                .iter()
+                .map(|row| {
+                    sparsify34_codes(row, &mut codes);
+                    codes.clone()
+                })
+                .collect();
+            for h in 0..cfg.n_heads {
+                let (mut sum, mut n) = (0.0f32, 0u32);
+                for (row, c) in written.iter().zip(&all_codes) {
+                    sum += kept_abs_sum(&row[h * hd..(h + 1) * hd], &c[h * hd..(h + 1) * hd]);
+                    n += (3 * hd / 4) as u32;
+                }
+                let s_h = absmean_scale(sum, n);
+                for (r, c) in all_codes.iter().enumerate() {
+                    for col in h * hd..(h + 1) * hd {
+                        let want = c[col] as f32 * s_h;
+                        if blk[r * d + col] != want {
+                            return Err(format!(
+                                "ps={ps} rows={rows} ramp={ramp} slot {r} ch {col}: \
+                                 {} != code {} × scale {s_h}",
+                                blk[r * d + col],
+                                c[col]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Serving-order invariance for ternary prefix sharing — the same
+/// acceptance regression as the int8 variant above, at 1.25 bits. The
+/// absmean accumulator makes this *stricter* than int8: a frozen page's
+/// scale is the running absmean of exactly its own rows, so whole-page
+/// sharing with registration-frozen state is what keeps donor identity
+/// unobservable. Sharing must also leave tokens identical to a
+/// sharing-off run, and every paged q·k row must take the LUT walk.
+#[test]
+fn ternary_prefix_sharing_is_serving_order_invariant() {
+    let m = nano_model(37, Format::Sherry);
+    let shared: Vec<u32> = (40..48).collect(); // two full pages at page_size 4
+    let mk = |id: u64, tail: &[u32]| Request {
+        id,
+        prompt: shared.iter().copied().chain(tail.iter().copied()).collect(),
+        max_new_tokens: 6,
+        arrival: 0.0,
+    };
+    let reqs =
+        [mk(0, &[1, 2, 3]), mk(1, &[7, 8, 9]), mk(2, &[1, 9, 2]), mk(3, &[5])];
+    // max_active 1 strictly serializes: arrival order IS serving order.
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_active: 1, token_budget: 100_000 },
+        page_size: 4,
+        kv_dtype: KvDtype::Ternary,
+        prefix_sharing: true,
+        ..Default::default()
+    };
+    let order_a: Vec<Request> = reqs
+        .iter()
+        .enumerate()
+        .map(|(i, r)| Request { arrival: i as f64 * 1e-4, ..r.clone() })
+        .collect();
+    let order_b: Vec<Request> = reqs
+        .iter()
+        .rev()
+        .enumerate()
+        .map(|(i, r)| Request { arrival: i as f64 * 1e-4, ..r.clone() })
+        .collect();
+    let (mut c_a, m_a) = Server::new(&m, cfg).run(order_a.clone());
+    let (mut c_b, m_b) = Server::new(&m, cfg).run(order_b);
+    let off = ServerConfig { prefix_sharing: false, ..cfg };
+    let (mut c_off, m_off) = Server::new(&m, off).run(order_a);
+    assert_eq!(c_a.len(), reqs.len());
+    assert_eq!(c_b.len(), reqs.len());
+    c_a.sort_by_key(|c| c.id);
+    c_b.sort_by_key(|c| c.id);
+    c_off.sort_by_key(|c| c.id);
+    for ((a, b), o) in c_a.iter().zip(&c_b).zip(&c_off) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(
+            a.tokens, b.tokens,
+            "request {}: completion depends on serving order",
+            a.id
+        );
+        assert_eq!(
+            a.tokens, o.tokens,
+            "request {}: sharing changed ternary tokens",
+            a.id
+        );
+    }
+    // Non-vacuous: both orders shared the full 8-token frozen prefix for
+    // every non-first request, and the score pass was all LUT walks.
+    assert_eq!(m_a.prefix_hit_tokens, 3 * 8, "order A must share the frozen prefix");
+    assert_eq!(m_b.prefix_hit_tokens, 3 * 8, "order B must share the frozen prefix");
+    assert_eq!(m_off.prefix_hit_tokens, 0);
+    assert_eq!(m_a.ternary_dot_fraction(), 1.0);
+    assert_eq!(m_a.int8_dot_fraction(), 0.0);
+}
+
+/// Freeze/thaw + CoW at the arena layer for ternary pages: a frozen
+/// donor page is byte-immutable across a recipient's copy-on-write
+/// divergence, the private copy dequantizes identically over the shared
+/// rows at copy time, and — the quantizer-state claim — appending to the
+/// copy continues the donor's absmean trajectory, bit-identical to a
+/// straight-line table that wrote the same rows on a fresh page.
+/// Releasing the last reference thaws: the recycled page comes back
+/// unfrozen with a cleared accumulator.
+#[test]
+fn ternary_cow_and_freeze_thaw_carry_quantizer_state() {
+    let cfg = NativeConfig::named("nano").unwrap();
+    let d = cfg.d_model;
+    let mut alloc = BlockAllocator::new_with(&cfg, 4, 4, KvDtype::Ternary);
+    let mut rng = Pcg64::seeded(53);
+
+    // Donor fills 3 of 4 slots of one page, then the page freezes (the
+    // registration protocol's effect, driven here through the allocator).
+    let rows: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(d)).collect();
+    let mut donor = BlockTable::new(4);
+    for (pos, row) in rows.iter().enumerate() {
+        donor.prepare_append(&mut alloc);
+        let (page, slot) = donor.slot_for(pos);
+        for li in 0..cfg.n_layers {
+            alloc.write_row(li, page, slot, row, row);
+        }
+        donor.advance();
+    }
+    let shared = donor.pages()[0];
+    alloc.freeze_page(shared);
+    assert!(alloc.store().is_frozen(shared));
+    let mut scratch = Vec::new();
+    let k_snap = alloc.read_block(Plane::K, 0, shared, 3, &mut scratch).to_vec();
+    let v_snap = alloc.read_block(Plane::V, 0, shared, 3, &mut scratch).to_vec();
+
+    // Recipient shares the partially-filled page; appending position 3
+    // diverges inside it → CoW onto a private copy.
+    alloc.retain(shared);
+    let mut recip = BlockTable::from_shared(4, vec![shared], 3);
+    recip.prepare_append(&mut alloc);
+    let (copy, slot) = recip.slot_for(3);
+    assert_ne!(copy, shared, "divergence must land on a private copy");
+    assert_eq!(
+        alloc.read_block(Plane::K, 0, copy, 3, &mut scratch),
+        &k_snap[..],
+        "CoW copy must dequantize identically over the shared K rows"
+    );
+    assert_eq!(alloc.read_block(Plane::V, 0, copy, 3, &mut scratch), &v_snap[..]);
+
+    // Divergent append through the copy; the frozen donor page is
+    // untouched even though the copy's running absmean moves on.
+    let tail = rng.normal_vec(d);
+    for li in 0..cfg.n_layers {
+        alloc.write_row(li, copy, slot, &tail, &tail);
+    }
+    recip.advance();
+    assert_eq!(
+        alloc.read_block(Plane::K, 0, shared, 3, &mut scratch),
+        &k_snap[..],
+        "frozen donor K bytes mutated by a CoW append"
+    );
+    assert_eq!(alloc.read_block(Plane::V, 0, shared, 3, &mut scratch), &v_snap[..]);
+
+    // Trajectory: CoW + append ≡ writing all four rows straight onto a
+    // fresh page — only possible because copy_rows carried the
+    // (Σ|x|, count) accumulator, not just bytes and scales.
+    let mut control = BlockTable::new(4);
+    for (pos, row) in rows.iter().chain(std::iter::once(&tail)).enumerate() {
+        control.prepare_append(&mut alloc);
+        let (page, slot) = control.slot_for(pos);
+        for li in 0..cfg.n_layers {
+            alloc.write_row(li, page, slot, row, row);
+        }
+        control.advance();
+    }
+    let cp = control.pages()[0];
+    for plane in [Plane::K, Plane::V] {
+        let mut s2 = Vec::new();
+        assert_eq!(
+            alloc.read_block(plane, 0, copy, 4, &mut scratch).to_vec(),
+            alloc.read_block(plane, 0, cp, 4, &mut s2),
+            "CoW trajectory diverged from straight-line writes ({plane:?})"
+        );
+    }
+
+    // Thaw: dropping the last reference recycles the page unfrozen and
+    // with a cleared accumulator — the next lease may write it again.
+    donor.release_all(&mut alloc);
+    recip.release_all(&mut alloc);
+    control.release_all(&mut alloc);
+    assert_eq!(alloc.used_pages(), 0);
+    let fresh = alloc.alloc().unwrap();
+    assert!(!alloc.store().is_frozen(fresh), "recycled page must thaw");
+    let row = rng.normal_vec(d);
+    alloc.write_row(0, fresh, 0, &row, &row); // would panic if still frozen
+    alloc.release(fresh);
+}
+
 /// Full-trace refcount hygiene at the serving layer: after heavy mixed
 /// traffic (staggered arrivals, shared prefixes, context-capped
 /// requests) every sequence reference is returned — only the prefix

@@ -1,21 +1,23 @@
-//! Scalar-vs-SIMD bit-for-bit parity suite for the two dispatched hot
+//! Scalar-vs-SIMD bit-for-bit parity suite for the three dispatched hot
 //! loops (satellite of the kernel-dispatch PR; DESIGN.md §5):
 //!
-//! 1. the i8×i8 attention dot (`simd::dot_i8_with`), and
+//! 1. the i8×i8 attention dot (`simd::dot_i8_with`),
 //! 2. the LUT-GEMM tile walks for all three pack formats
-//!    (`simd::gemm_{pack34,tl2}_preluts_with`, `simd::gemm_i2s_with`).
+//!    (`simd::gemm_{pack34,tl2}_preluts_with`, `simd::gemm_i2s_with`), and
+//! 3. the ternary-KV q·k LUT walk over packed pack34 K pages
+//!    (`simd::qk_lut34_rows_with`).
 //!
 //! Equality is **hard** (`f32::to_bits`), never a tolerance: the vector
-//! walks chunk the *batch* dimension so each lane replays the scalar
-//! kernel's operand order exactly, and the i8 dot accumulates in i32
-//! where addition is associative. Every test iterates all `Isa` variants
+//! walks chunk the *batch* (row) dimension so each lane replays the
+//! scalar kernel's operand order exactly, and the i8 dot accumulates in
+//! i32 where addition is associative. Every test iterates all `Isa` variants
 //! — available ones exercise the real vector leaf, unavailable ones
 //! exercise the silent scalar degrade — plus a forced-`Isa::Scalar`
 //! control pinned against the raw `engine::lut` kernels. Nothing here
 //! calls `simd::select`, so the suite never pins the process-global ISA
 //! and stays order-independent with other tests.
 
-use sherry::cache::{F32Store, Int8Store, PageStore, Plane};
+use sherry::cache::{F32Store, Int8Store, PageStore, Plane, TernaryStore};
 use sherry::engine::{lut, NativeConfig};
 use sherry::pack::{Packed34, PackedI2S, PackedTl2};
 use sherry::quant::{absmean_quantize, sherry34_quantize, Granularity};
@@ -360,6 +362,104 @@ fn prop_gemm_parity_random_shapes() {
                 (j0, j0 + 1 + (seed as usize / 7) % (d_out - j0))
             };
             check_gemm_case(&packs, &xs, d_in, batch, j0, j1)
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Ternary-KV q·k LUT walk
+// ---------------------------------------------------------------------------
+
+/// The ternary attention score walk exactly as the engine drives it:
+/// packed idx/sign planes come from a real `TernaryStore` page via
+/// `block_ternary`, the per-query 32-entry LUTs from
+/// `lut::build_qk_luts34` over full-range i8 query codes, and every ISA
+/// runs every row count — empty, sub-chunk, exact vector-width
+/// multiples, one-off tails, and the full odd-sized page.
+#[test]
+fn qk_lut34_parity_on_store_pages_every_isa_and_row_count() {
+    let cfg = NativeConfig::named("nano").unwrap();
+    let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
+    let nb = hd / 4;
+    let ps = 17; // odd: straddles both vector widths' chunk + tail
+    let mut st = TernaryStore::new(&cfg, 1, ps);
+    st.reset_page(0);
+    let mut rng = Pcg64::seeded(55);
+    for s in 0..ps {
+        let row = rng.normal_vec(d);
+        st.write_row(0, 0, s, &row, &row);
+    }
+    let q_codes = i8_pattern(nh * hd, 7);
+    let mut luts = vec![0.0f32; nh * nb * 32];
+    lut::build_qk_luts34(&q_codes, hd, nh, &mut luts);
+    for rows in [0usize, 1, 2, 3, 7, 8, 9, 13, 16, 17] {
+        let tb = st.block_ternary(0, 0, rows).expect("ternary-native view");
+        for h in 0..nh {
+            let mut want = vec![f32::NAN; rows];
+            lut::qk_lut34_rows(
+                tb.idx, tb.sign, tb.idx_bh, tb.sign_bh, nb, h, nh, &luts, rows, &mut want,
+            );
+            for isa in Isa::ALL {
+                let mut got = vec![f32::NAN; rows];
+                simd::qk_lut34_rows_with(
+                    isa, tb.idx, tb.sign, tb.idx_bh, tb.sign_bh, nb, h, nh, &luts, rows, &mut got,
+                );
+                assert_bits_eq(
+                    &got,
+                    &want,
+                    &format!("qk rows={rows} h={h} isa={} (available={})", isa.name(), isa.available()),
+                );
+            }
+        }
+    }
+}
+
+/// Random plane geometry for the dispatched q·k walk: every nibble value
+/// is a valid pack34 code, so raw random bytes are legal planes, and the
+/// LUT entries are arbitrary floats — per-row accumulation order is
+/// identical in every lane, so bit parity must hold even off the integer
+/// lattice `build_qk_luts34` produces.
+#[test]
+fn prop_qk_lut34_parity_random_geometry() {
+    prop::check(
+        "qk_lut34 walk simd == scalar",
+        40,
+        |rng| {
+            let nb = prop::gens::usize_in(rng, 1, 12);
+            let n_heads = prop::gens::usize_in(rng, 1, 5);
+            let rows = prop::gens::usize_in(rng, 0, 33);
+            (nb, n_heads, rows, rng.next_u64())
+        },
+        |&(nb, n_heads, rows, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let idx_bh = nb.div_ceil(2);
+            let sign_bh = nb.div_ceil(8);
+            let idx: Vec<u8> =
+                (0..rows * n_heads * idx_bh).map(|_| rng.next_u64() as u8).collect();
+            let sign: Vec<u8> =
+                (0..rows * n_heads * sign_bh).map(|_| rng.next_u64() as u8).collect();
+            let luts = rng.normal_vec(n_heads * nb * 32);
+            for h in 0..n_heads {
+                let mut want = vec![f32::NAN; rows];
+                lut::qk_lut34_rows(
+                    &idx, &sign, idx_bh, sign_bh, nb, h, n_heads, &luts, rows, &mut want,
+                );
+                for isa in Isa::ALL {
+                    let mut got = vec![f32::NAN; rows];
+                    simd::qk_lut34_rows_with(
+                        isa, &idx, &sign, idx_bh, sign_bh, nb, h, n_heads, &luts, rows, &mut got,
+                    );
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        if g.to_bits() != w.to_bits() {
+                            return Err(format!(
+                                "nb={nb} nh={n_heads} rows={rows} h={h} isa={} [{i}]: {g:?} vs {w:?}",
+                                isa.name()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
         },
     );
 }
