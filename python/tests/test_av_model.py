@@ -1,0 +1,197 @@
+"""Behavioral model of the fixed-point a.V accumulation walk.
+
+Replays `rust/src/simd/mod.rs::av_i8_rows_scalar` (the scalar ground
+truth) and `rust/src/simd/walk.rs::av_i8_rows` (the generic channel-
+chunked vector walk monomorphized by the AVX2/NEON leaves) in numpy,
+and asserts **exact** i32 equality — the same hard-parity contract
+`rust/tests/simd_parity.rs` enforces on the real code (DESIGN.md §4/§5).
+
+Why this works as a model: the walk vectorizes across *head channels*,
+so an i32 "register" lane is exactly the scalar accumulator for one
+output channel, and integer adds/multiplies are associative — lane
+width (W=4 models NEON, W=8 models AVX2) can only change which channels
+share a register, never any value. Channels past the last full chunk
+fall through to the scalar replay, mirroring `walk::av_i8_rows`'s tail.
+
+Also validated here, mirroring
+`engine/model.rs::integer_v_pass_stays_within_design_bound_elementwise`:
+the post-softmax weight quantization rule (`s_a = max/127`,
+`a_hat = round(a/s_a) in [0,127]`) and the DESIGN.md §4 element-wise
+error bound `|Delta out[c]| <= 1/2 * s_a * s_v * sum_r |v_hat_r[c]|`.
+
+numpy-only (no jax/hypothesis): runnable as a plain script in toolchain-
+less environments, and pytest-collectible in CI.
+"""
+
+import numpy as np
+
+F = np.float32
+
+
+# ---------------------------------------------------------------------------
+# Scalar ground truth and the channel-chunked vector walk
+# ---------------------------------------------------------------------------
+
+
+def av_scalar(weights, v, d, col0, hd, rows):
+    """`simd::av_i8_rows_scalar`: out[c] = sum_r w_r * v[r*d + col0 + c],
+    exact i32, zero-weight rows skipped, rows == 0 still zeroes out."""
+    out = np.zeros(hd, np.int64)  # i64 here only to catch i32 overflow
+    for r in range(rows):
+        w = int(weights[r])
+        if w == 0:
+            continue
+        row = v[r * d + col0 : r * d + col0 + hd].astype(np.int64)
+        out += w * row
+    assert np.all(np.abs(out) <= np.iinfo(np.int32).max), "i32 overflow"
+    return out.astype(np.int32)
+
+
+def av_walk(W, weights, v, d, col0, hd, rows):
+    """`walk::av_i8_rows::<L>`: W-channel i32 register chunks accumulated
+    over rows (zero-weight rows skipped on the vector path too), scalar
+    tail for `hd % W` channels at `col0 + c0`."""
+    out = np.full(hd, np.iinfo(np.int32).min, np.int32)  # istore overwrites
+    c0 = 0
+    while c0 + W <= hd:
+        acc = np.zeros(W, np.int32)  # L::izero
+        for r in range(rows):
+            w = np.int32(weights[r])
+            if w == 0:
+                continue
+            lanes = v[r * d + col0 + c0 : r * d + col0 + c0 + W]
+            acc = acc + w * lanes.astype(np.int32)  # L::imac: widen, mul, add
+        out[c0 : c0 + W] = acc  # L::istore
+        c0 += W
+    if c0 < hd:
+        out[c0:] = av_scalar(weights, v, d, col0 + c0, hd - c0, rows)
+    return out
+
+
+def i8_pattern(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(-128, 128, size=n).astype(np.int8)
+
+
+def u8_weights(rows, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(0, 128, size=rows).astype(np.uint8)
+    if rows >= 3:
+        w[0], w[1], w[2] = 0, 127, 1  # skip path + both extremes
+    return w
+
+
+def test_av_walk_matches_scalar_every_width_and_geometry():
+    # Head widths straddle every chunk boundary of both lane widths,
+    # including sub-vector widths and one-off tails; rows include the
+    # empty page (must still zero the output) and a partial page.
+    for hd in [1, 2, 3, 4, 5, 7, 8, 9, 12, 15, 16, 17, 19, 32, 33]:
+        nh = 2
+        d = nh * hd
+        for rows in [0, 1, 3, 9]:
+            v = i8_pattern(rows * d, 100 + hd)
+            w = u8_weights(rows, 200 + hd + rows)
+            for h in range(nh):
+                want = av_scalar(w, v, d, h * hd, hd, rows)
+                for W in (4, 8):  # NEON, AVX2
+                    got = av_walk(W, w, v, d, h * hd, hd, rows)
+                    assert np.array_equal(got, want), (
+                        f"hd={hd} rows={rows} h={h} W={W}: {got} vs {want}"
+                    )
+                if rows == 0:
+                    assert np.all(want == 0), "rows=0 must zero the output"
+
+
+def test_av_walk_random_geometry_sweep():
+    rng = np.random.default_rng(7)
+    for _ in range(64):
+        hd = int(rng.integers(1, 38))
+        nh = int(rng.integers(1, 5))
+        rows = int(rng.integers(0, 22))
+        d = nh * hd
+        v = i8_pattern(rows * d, rng.integers(1 << 30))
+        w = u8_weights(rows, rng.integers(1 << 30))
+        h = int(rng.integers(nh))
+        want = av_scalar(w, v, d, h * hd, hd, rows)
+        for W in (4, 8):
+            got = av_walk(W, w, v, d, h * hd, hd, rows)
+            assert np.array_equal(got, want), f"hd={hd} rows={rows} W={W}"
+
+
+def test_weight_quantization_stays_within_design_bound():
+    # The attention pass-3 rule (`engine/model.rs::attention_blocked`):
+    # per (query, page, head) softmax weights quantize with s_a = max/127,
+    # a_hat = round(a/s_a) clamped to [0, 127]; the fused output
+    # (sum a_hat * v_hat) * s_a * s_v must stay within
+    # 1/2 * s_a * s_v * sum|v_hat| of the dequant path per channel.
+    # Per-page bookkeeping: the 1/2*s_a*s_v factors differ per page, so
+    # the bound accumulates page by page, exactly as the Rust test does.
+    rng = np.random.default_rng(53)
+    hd, pages, page_size = 19, 3, 4
+    for trial in range(32):
+        reference = np.zeros(hd, np.float64)
+        fused = np.zeros(hd, np.float64)
+        bound = np.zeros(hd, np.float64)
+        for _ in range(pages):
+            rows = int(rng.integers(1, page_size + 1))
+            logits = rng.normal(size=rows)
+            a = np.exp(logits - logits.max())
+            a = (a / a.sum()).astype(F)
+            v_hat = i8_pattern(rows * hd, rng.integers(1 << 30))
+            s_v = F(abs(rng.normal()) / 127.0 + 1e-4)
+            s_a = F(F(a.max()) / F(127.0))
+            a_hat = np.clip(np.round(a / s_a), 0.0, 127.0).astype(np.uint8)
+            acc = av_scalar(a_hat, v_hat, hd, 0, hd, rows)
+            fused += acc.astype(np.float64) * float(s_a) * float(s_v)
+            abs_v = np.zeros(hd, np.float64)
+            for r in range(rows):
+                row = v_hat[r * hd : (r + 1) * hd].astype(np.float64)
+                reference += float(a[r]) * row * float(s_v)
+                abs_v += np.abs(row)
+            bound += 0.5 * float(s_a) * float(s_v) * abs_v
+        err = np.abs(fused - reference)
+        assert np.all(err <= bound + 1e-6), (
+            f"trial {trial}: err {err.max()} > bound {bound[err.argmax()]}"
+        )
+        assert np.any(np.abs(fused) > 0), "degenerate all-zero fixture"
+
+
+def test_i16_accumulation_would_overflow():
+    # Teeth for the i32-lane requirement: the extremes the kernel admits
+    # (w = 127, v = -128, several rows) overflow an i16 accumulator
+    # immediately — any implementation that pairs i8 products into i16
+    # (e.g. AVX2 `vpmaddubsw`) would saturate and diverge from scalar.
+    rows, hd = 3, 4
+    w = np.full(rows, 127, np.uint8)
+    v = np.full(rows * hd, -128, np.int8)
+    want = av_scalar(w, v, hd, 0, hd, rows)
+    assert np.all(want == 127 * -128 * rows)
+    assert want.min() < np.iinfo(np.int16).min, (
+        "fixture no longer exceeds i16 — teeth test is vacuous"
+    )
+    i16 = np.clip(want, np.iinfo(np.int16).min, np.iinfo(np.int16).max)
+    assert not np.array_equal(i16, want)
+
+
+def test_misindexed_stride_is_caught():
+    # Sanity: the parity assertions have teeth against layout bugs — a
+    # walk reading with the wrong row stride must differ from scalar for
+    # this fixture (distinct bytes per channel).
+    hd, nh, rows = 8, 2, 5
+    d = nh * hd
+    v = i8_pattern(rows * d, 3)
+    w = u8_weights(rows, 4)
+    w[:] = np.maximum(w, 1)  # no skipped rows: every row must be read
+    want = av_scalar(w, v, d, hd, hd, rows)
+    wrong = av_scalar(w, v, d + 1, hd, hd, rows - 1)  # stride off-by-one
+    assert not np.array_equal(wrong, want), (
+        "stride bug was invisible — the fixture cannot catch misindexing"
+    )
+
+
+if __name__ == "__main__":
+    fns = [v for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for fn in fns:
+        fn()
+        print(f"ok {fn.__name__}")
+    print(f"{len(fns)} behavioral checks passed")

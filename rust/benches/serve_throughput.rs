@@ -22,6 +22,11 @@
 //!    bytes-per-token breakdown, q·k routing fractions (int8 dot vs
 //!    ternary LUT walk) and dequant overhead. Emitted to
 //!    `BENCH_kv_ternary.json`.
+//! 6. Integer a·V sweep: fixed-point V accumulation on/off × {int8,
+//!    ternary} pools — tokens/s, int8 a·V rows, residual dequant and
+//!    tile traffic. Off is the dequant-per-block legacy path; on (the
+//!    default) keeps the whole decode round in integer arithmetic.
+//!    Emitted to `BENCH_int8_vpass.json`.
 //!
 //! Run: `cargo bench --bench serve_throughput`
 
@@ -74,6 +79,7 @@ fn main() {
     kv_quant_sweep(&model);
     int8_attn_sweep(&model);
     ternary_kv_sweep(&model);
+    int8_vpass_sweep(&model);
 }
 
 /// Paged vs contiguous-equivalent KV at a fixed byte budget, with and
@@ -419,6 +425,86 @@ fn ternary_kv_sweep(model: &TernaryModel) {
         records.join(",\n")
     );
     let path = "BENCH_kv_ternary.json";
+    match std::fs::write(path, &json) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}
+
+/// The tentpole knob isolated: the same shared-prefix trace through
+/// int8 and ternary pools with the fixed-point a·V pass on (default)
+/// and off (legacy dequant-per-block V). On, a decode round touches no
+/// f32 K or V page bytes — `av_rows_int8` meters every V row and the
+/// residual dequant gauge stays 0; off, the V pass dequantizes into
+/// scratch/tiles and the dequant and tile columns price it.
+fn int8_vpass_sweep(model: &TernaryModel) {
+    let kv_capacity = 2usize;
+    let spec = TraceSpec {
+        n_requests: 24,
+        mean_interarrival_s: 0.0005,
+        prompt_len: 18,
+        shared_prefix_len: 12,
+        max_new_tokens: 16,
+        seed: 12,
+    };
+
+    println!("\n### Integer a·V accumulation on/off × quantized KV dtype (shared prompt)\n");
+    println!(
+        "| kv dtype | integer a·V | tok/s | int8 a·V rows | tile hits | dequant cpu-s/wall-s |"
+    );
+    println!("|---|---|---|---|---|---|");
+    let mut records = Vec::new();
+    for dtype in [KvDtype::Int8, KvDtype::Ternary] {
+        for integer_av in [true, false] {
+            let server_cfg = ServerConfig {
+                batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+                kv_capacity,
+                page_size: 4,
+                kv_dtype: dtype,
+                prefix_sharing: true,
+                integer_av,
+                workers: 8,
+                ..Default::default()
+            };
+            let (completions, m) = serve_trace(model, server_cfg, spec);
+            assert_eq!(completions.len(), spec.n_requests, "sweep must serve everything");
+            println!(
+                "| {} | {integer_av} | {:.1} | {} | {} | {:.3} |",
+                dtype.name(),
+                m.throughput_tps(),
+                m.kv_av_rows_int8,
+                m.kv_tile_hits,
+                m.dequant_overhead(),
+            );
+            records.push(format!(
+                "    {{\"kv_dtype\": \"{}\", \"integer_av\": {integer_av}, \
+                 \"tok_per_s\": {:.3}, \"av_rows_int8\": {}, \"tile_hits\": {}, \
+                 \"tile_misses\": {}, \"dequant_seconds\": {:.6}, \
+                 \"dequant_overhead\": {:.5}, \"prefix_hit_rate\": {:.4}, \
+                 \"peak_active\": {}, \"ttft_p50_s\": {:.5}, \"isa\": \"{}\"}}",
+                dtype.name(),
+                m.throughput_tps(),
+                m.kv_av_rows_int8,
+                m.kv_tile_hits,
+                m.kv_tile_misses,
+                m.kv_dequant_seconds,
+                m.dequant_overhead(),
+                m.prefix_hit_rate(),
+                m.peak_active,
+                m.ttft_p50(),
+                m.kernel_isa,
+            ));
+        }
+    }
+    println!(
+        "\n(on = softmax weights quantize to u8 fixed point and a·V accumulates in i32 over raw \
+         int8 V bytes — zero hot-path dequant; off = the legacy f32 V walk with tile/scratch fills)"
+    );
+    let json = format!(
+        "{{\n  \"bench\": \"int8_vpass\",\n  \"records\": [\n{}\n  ]\n}}\n",
+        records.join(",\n")
+    );
+    let path = "BENCH_int8_vpass.json";
     match std::fs::write(path, &json) {
         Ok(()) => println!("[bench] wrote {path}"),
         Err(e) => eprintln!("[bench] could not write {path}: {e}"),

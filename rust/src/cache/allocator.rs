@@ -119,6 +119,7 @@ impl BlockAllocator {
         let p = self.free.pop()?;
         debug_assert_eq!(self.refs[p as usize], 0, "free page with live refs");
         self.refs[p as usize] = 1;
+        self.store.set_page_leases(p, 1);
         debug_assert!(!self.store.is_frozen(p), "free page still frozen");
         self.peak_used = self.peak_used.max(self.used_pages());
         Some(p)
@@ -128,6 +129,7 @@ impl BlockAllocator {
     pub fn retain(&mut self, p: PageId) {
         assert!(self.refs[p as usize] > 0, "retain of a free page");
         self.refs[p as usize] += 1;
+        self.store.set_page_leases(p, self.refs[p as usize]);
     }
 
     /// Freeze a live page's bytes and quantizer state (prefix-index
@@ -146,6 +148,12 @@ impl BlockAllocator {
         self.store.set_tile_cache_capacity(tiles);
     }
 
+    /// Enable/disable the integer a·V accumulation path; see
+    /// [`PageStore::set_integer_av`].
+    pub fn set_integer_av(&mut self, on: bool) {
+        self.store.set_integer_av(on);
+    }
+
     /// Drop one reference; the page returns to the free stack at zero.
     /// A freed page is reset immediately (thawed, quantizer state
     /// cleared, cached tiles invalidated) rather than lazily at
@@ -155,7 +163,9 @@ impl BlockAllocator {
         let r = &mut self.refs[p as usize];
         assert!(*r > 0, "double free of page {p}");
         *r -= 1;
-        if *r == 0 {
+        let refs = *r;
+        self.store.set_page_leases(p, refs);
+        if refs == 0 {
             self.free.push(p);
             self.store.reset_page(p);
         }
@@ -297,6 +307,30 @@ mod tests {
         a.release(q);
         let _r = a.alloc().unwrap();
         assert_eq!(a.peak_used(), 2);
+    }
+
+    #[test]
+    fn lease_counts_gate_tile_admission_through_the_allocator() {
+        // Allocator-driven stores admit frozen tiles only once ≥ 2
+        // sequences lease the page on top of the index's reference.
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let mut a = BlockAllocator::new_with(&cfg, 2, 2, KvDtype::Int8);
+        let p = a.alloc().unwrap();
+        for s in 0..2 {
+            a.write_row(0, p, s, &vec![1.0; d], &vec![1.0; d]);
+        }
+        a.freeze_page(p);
+        // refs = 1 (the index alone): zero reader leases → not cached.
+        assert!(a.store().frozen_tile(Plane::V, 0, p).is_some());
+        assert!(a.store().frozen_tile(Plane::V, 0, p).is_some());
+        assert_eq!(a.store().tile_cache_stats(), (0, 2), "single-reader tile never admitted");
+        // Two readers lease on top of the index reference → admitted.
+        a.retain(p);
+        a.retain(p);
+        assert!(a.store().frozen_tile(Plane::V, 0, p).is_some());
+        assert!(a.store().frozen_tile(Plane::V, 0, p).is_some());
+        assert_eq!(a.store().tile_cache_stats(), (1, 3), "admitted on miss 3, hit on access 4");
     }
 
     #[test]

@@ -28,8 +28,10 @@
 //!   pages.
 //! * [`KvBatch`] / [`Rows`] — the engine-facing view; attention walks
 //!   histories as page blocks ([`Rows::for_each_block`] for f32 tiles,
-//!   [`Rows::for_each_kblock`] for dtype-native [`KBlock`]s), and
-//!   contiguous [`KvCache`](crate::engine::KvCache)s are the degenerate
+//!   [`Rows::for_each_kblock`] for dtype-native [`KBlock`]s,
+//!   [`Rows::for_each_vblock`] for dtype-native [`VBlock`]s on the
+//!   integer a·V pass), and contiguous
+//!   [`KvCache`](crate::engine::KvCache)s are the degenerate
 //!   single-block case of the same code path, preserving bit-for-bit
 //!   parity between paged and contiguous decode.
 //!
@@ -63,4 +65,4 @@ pub use store::{
 };
 pub use ternary::TernaryStore;
 pub use table::BlockTable;
-pub use view::{KBlock, KvBatch, Rows};
+pub use view::{KBlock, KvBatch, Rows, VBlock};

@@ -35,7 +35,11 @@
 //! 3. [`PageStore::frozen_tile`] — a dequantized f32 tile of a *frozen*
 //!    (immutable, registration-frozen-scale) page served from a small
 //!    shared LRU cache, so a prefix page read by N sequences in a round
-//!    is expanded once, not N times. Used by the V-accumulation pass.
+//!    is expanded once, not N times. Since the integer a·V pass
+//!    (`simd::av_i8_rows`) consumes raw int8 V bytes directly, this is
+//!    no longer on the quantized decode hot path — it serves the
+//!    residual f32 consumers (integer-V disabled, diagnostics), and
+//!    admission is lease-gated ([`PageStore::set_page_leases`]).
 //! 4. [`PageStore::block`] — dequantize into caller scratch: the
 //!    fallback for private (still-growing) pages.
 //!
@@ -245,6 +249,37 @@ pub trait PageStore: Send + Sync {
         (0, 0, 0)
     }
 
+    /// Record attention a·V rows accumulated int8-natively (fixed-point
+    /// weights × raw int8 V bytes, `simd::av_i8_rows`). No-op for
+    /// stores without an int8 V plane.
+    fn record_av_rows(&self, _int8: u64) {}
+
+    /// Cumulative int8-native a·V row count recorded so far.
+    fn av_rows(&self) -> u64 {
+        0
+    }
+
+    /// Lease notification from the allocator: page `p` now holds `refs`
+    /// live references. Stores with a frozen-tile cache use this to
+    /// gate admission — a frozen (prefix-registered) page's refcount is
+    /// `leases + 1` (the index itself holds one reference), and a tile
+    /// is only worth caching when ≥ 2 sequences actually read it, so
+    /// single-reader pages stop evicting genuinely shared ones. A store
+    /// never notified (direct use, no allocator) admits everything.
+    fn set_page_leases(&mut self, _p: PageId, _refs: u32) {}
+
+    /// Enable/disable the integer a·V accumulation path (the V-plane
+    /// [`PageStore::block_i8`] walk). On by default for stores with an
+    /// int8 V plane; the off position restores the dequantize-tile V
+    /// pass for A/B sweeps. No-op for f32 stores.
+    fn set_integer_av(&mut self, _on: bool) {}
+
+    /// Whether the integer a·V path is enabled (always `false` for
+    /// stores without an int8 V plane).
+    fn integer_av_enabled(&self) -> bool {
+        false
+    }
+
     /// Total arena bytes at this dtype (the KV byte budget).
     fn bytes(&self) -> usize;
 
@@ -431,9 +466,12 @@ impl PageStore for F32Store {
 // ---------------------------------------------------------------------------
 
 /// Default frozen-tile cache capacity (tiles). One tile is
-/// `page_size × d_model` floats, so at the default page size this stays
-/// a few MiB even at bench3b shapes. 0 disables the cache.
-pub const DEFAULT_TILE_CACHE_TILES: usize = 64;
+/// `page_size × d_model` floats. Since the integer a·V pass took the
+/// quantized V walk off the tile cache, only residual f32 consumers
+/// (integer-V disabled, diagnostics) read tiles, so the default is
+/// small; raise it via `--tile-cache` when running with integer-V off.
+/// 0 disables the cache.
+pub const DEFAULT_TILE_CACHE_TILES: usize = 16;
 
 /// Lock shards in the frozen-tile cache. Shared prefix pages are the hot
 /// case — every sequence in a round hits the same few tiles — so the
@@ -547,6 +585,13 @@ impl TileCache {
         }
     }
 
+    /// Count a miss whose tile was built but *not* admitted (the
+    /// lease-count admission gate declined it), so hit/miss accounting
+    /// still balances the access count exactly.
+    pub(crate) fn note_miss(&self) {
+        self.misses.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Drop every cached tile of page `p` (page freed / reallocated).
     pub(crate) fn invalidate_page(&self, p: PageId) {
         if self.cap == 0 {
@@ -630,11 +675,19 @@ pub struct Int8Store {
     frozen: Vec<bool>,
     /// LRU of dequantized full-page tiles for frozen pages.
     tiles: TileCache,
+    /// Allocator-reported refcount per page; `u32::MAX` = never
+    /// notified (no allocator drives this store → admit every tile).
+    lease_refs: Vec<u32>,
+    /// Integer a·V path toggle (default on): serve the V plane through
+    /// `block_i8` so attention accumulates in i32 over raw page bytes.
+    integer_av: bool,
     /// Cumulative block-dequantization time (metrics gauge).
     dequant_ns: AtomicU64,
     /// Attention q·k rows served int8-natively / via dequantized tiles.
     qk_native: AtomicU64,
     qk_dequant: AtomicU64,
+    /// Attention a·V rows accumulated int8-natively.
+    av_int8: AtomicU64,
 }
 
 impl Int8Store {
@@ -655,10 +708,22 @@ impl Int8Store {
             v_scales: (0..cfg.n_layers).map(|_| vec![0.0; scales]).collect(),
             frozen: vec![false; num_pages],
             tiles: TileCache::new(DEFAULT_TILE_CACHE_TILES),
+            lease_refs: vec![u32::MAX; num_pages],
+            integer_av: true,
             dequant_ns: AtomicU64::new(0),
             qk_native: AtomicU64::new(0),
             qk_dequant: AtomicU64::new(0),
+            av_int8: AtomicU64::new(0),
         }
+    }
+
+    /// Tile-cache admission: a frozen page's refcount is `leases + 1`
+    /// (the prefix index holds one reference), and caching only pays
+    /// when ≥ 2 sequences read the tile, so require `refs ≥ 3`. Pages
+    /// of a store never lease-notified (`u32::MAX`) always admit.
+    fn admit_tile(&self, p: PageId) -> bool {
+        let refs = self.lease_refs[p as usize];
+        refs == u32::MAX || refs >= 3
     }
 
     /// Dequantize the first `rows` rows of `(plane, layer, p)` into `out`
@@ -840,7 +905,13 @@ impl PageStore for Int8Store {
         self.dequant_into(plane, layer, p, self.page_size, &mut buf);
         self.dequant_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let tile: Arc<[f32]> = Arc::from(buf);
-        self.tiles.insert(key, Arc::clone(&tile));
+        if self.admit_tile(p) {
+            self.tiles.insert(key, Arc::clone(&tile));
+        } else {
+            // Single-reader page: serve the tile but keep it out of the
+            // cache so it can't evict a genuinely shared one.
+            self.tiles.note_miss();
+        }
         Some(tile)
     }
 
@@ -859,6 +930,26 @@ impl PageStore for Int8Store {
 
     fn qk_rows(&self) -> (u64, u64, u64) {
         (self.qk_native.load(Ordering::Relaxed), self.qk_dequant.load(Ordering::Relaxed), 0)
+    }
+
+    fn record_av_rows(&self, int8: u64) {
+        self.av_int8.fetch_add(int8, Ordering::Relaxed);
+    }
+
+    fn av_rows(&self) -> u64 {
+        self.av_int8.load(Ordering::Relaxed)
+    }
+
+    fn set_page_leases(&mut self, p: PageId, refs: u32) {
+        self.lease_refs[p as usize] = refs;
+    }
+
+    fn set_integer_av(&mut self, on: bool) {
+        self.integer_av = on;
+    }
+
+    fn integer_av_enabled(&self) -> bool {
+        self.integer_av
     }
 
     fn bytes(&self) -> usize {
@@ -1143,6 +1234,49 @@ mod tests {
     }
 
     #[test]
+    fn tile_admission_requires_two_leases() {
+        // The lease-gated admission policy: a frozen page whose lease
+        // count (allocator refcount minus the index's own reference) is
+        // < 2 still *serves* correct tiles, but never occupies the
+        // cache — so single-reader pages can't evict shared ones.
+        let cfg = cfg();
+        let d = cfg.d_model;
+        let mut st = Int8Store::new(&cfg, 2, 2);
+        let mut rng = Pcg64::seeded(31);
+        for p in 0..2u32 {
+            st.reset_page(p);
+            for s in 0..2 {
+                let row = rng.normal_vec(d);
+                st.write_row(0, p, s, &row, &row);
+            }
+            st.freeze_page(p);
+        }
+        // Page 0: index + one sequence → lease count 1 → not admitted.
+        st.set_page_leases(0, 2);
+        let t1 = st.frozen_tile(Plane::V, 0, 0).expect("un-admitted pages still serve tiles");
+        let t2 = st.frozen_tile(Plane::V, 0, 0).unwrap();
+        assert_eq!(&t1[..], &t2[..], "repeated builds dequantize identically");
+        let mut scratch = Vec::new();
+        assert_eq!(&t1[..], st.block(Plane::V, 0, 0, 2, &mut scratch));
+        let (hits, misses) = st.tile_cache_stats();
+        assert_eq!((hits, misses), (0, 2), "both accesses missed: tile never cached");
+
+        // Page 0 gains a second reader → lease count 2 → admitted.
+        st.set_page_leases(0, 3);
+        assert!(st.frozen_tile(Plane::V, 0, 0).is_some());
+        assert!(st.frozen_tile(Plane::V, 0, 0).is_some());
+        let (hits, misses) = st.tile_cache_stats();
+        assert_eq!((hits, misses), (1, 3), "admitted on miss 3, hit on access 4");
+
+        // Page 1 was never lease-notified → default-admit (direct-store
+        // use keeps the pre-admission-policy behavior).
+        assert!(st.frozen_tile(Plane::V, 0, 1).is_some());
+        assert!(st.frozen_tile(Plane::V, 0, 1).is_some());
+        let (hits, misses) = st.tile_cache_stats();
+        assert_eq!((hits, misses), (2, 4));
+    }
+
+    #[test]
     fn qk_row_counters_accumulate_per_store() {
         let cfg = cfg();
         let q = Int8Store::new(&cfg, 1, 4);
@@ -1152,6 +1286,23 @@ mod tests {
         let f = F32Store::new(&cfg, 1, 4);
         f.record_qk_rows(0, 7, 0);
         assert_eq!(f.qk_rows(), (0, 7, 0), "f32 stores only ever count dequant rows");
+    }
+
+    #[test]
+    fn av_row_counter_and_integer_av_toggle() {
+        let cfg = cfg();
+        let mut q = Int8Store::new(&cfg, 1, 4);
+        assert!(q.integer_av_enabled(), "integer a·V defaults on for int8 stores");
+        q.record_av_rows(6);
+        q.record_av_rows(3);
+        assert_eq!(q.av_rows(), 9);
+        q.set_integer_av(false);
+        assert!(!q.integer_av_enabled());
+        let mut f = F32Store::new(&cfg, 1, 4);
+        f.record_av_rows(5);
+        assert_eq!(f.av_rows(), 0, "f32 stores have no int8 a·V plane");
+        f.set_integer_av(true);
+        assert!(!f.integer_av_enabled());
     }
 
     #[test]

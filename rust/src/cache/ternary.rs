@@ -87,14 +87,23 @@ pub struct TernaryStore {
     v_scales: Vec<Vec<f32>>,
     /// Registration-frozen pages (one flag per page, all layers/planes).
     frozen: Vec<bool>,
-    /// LRU of dequantized full-page tiles for frozen pages (V pass).
+    /// LRU of dequantized full-page tiles for frozen pages (residual
+    /// f32 consumers; the integer a·V pass bypasses it).
     tiles: TileCache,
+    /// Allocator-reported refcount per page; `u32::MAX` = never
+    /// notified (no allocator → admit every tile).
+    lease_refs: Vec<u32>,
+    /// Integer a·V path toggle (default on): serve the V plane through
+    /// `block_i8` so attention accumulates in i32 over raw page bytes.
+    integer_av: bool,
     /// Reusable per-write codes scratch (`d_model` lanes).
     codes: Vec<i8>,
     dequant_ns: AtomicU64,
     qk_native: AtomicU64,
     qk_dequant: AtomicU64,
     qk_ternary: AtomicU64,
+    /// Attention a·V rows accumulated int8-natively.
+    av_int8: AtomicU64,
 }
 
 impl TernaryStore {
@@ -127,12 +136,23 @@ impl TernaryStore {
             v_scales: (0..cfg.n_layers).map(|_| vec![0.0; scales]).collect(),
             frozen: vec![false; num_pages],
             tiles: TileCache::new(DEFAULT_TILE_CACHE_TILES),
+            lease_refs: vec![u32::MAX; num_pages],
+            integer_av: true,
             codes: vec![0; cfg.d_model],
             dequant_ns: AtomicU64::new(0),
             qk_native: AtomicU64::new(0),
             qk_dequant: AtomicU64::new(0),
             qk_ternary: AtomicU64::new(0),
+            av_int8: AtomicU64::new(0),
         }
+    }
+
+    /// Tile-cache admission (same policy as `Int8Store`): a frozen
+    /// page's refcount is `leases + 1` (the prefix index holds one),
+    /// so require `refs ≥ 3`; never-notified pages always admit.
+    fn admit_tile(&self, p: PageId) -> bool {
+        let refs = self.lease_refs[p as usize];
+        refs == u32::MAX || refs >= 3
     }
 
     /// K absmean scale of (layer, page, head) (tests / diagnostics).
@@ -352,7 +372,12 @@ impl PageStore for TernaryStore {
         self.dequant_into(plane, layer, p, self.page_size, &mut buf);
         self.dequant_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         let tile: Arc<[f32]> = Arc::from(buf);
-        self.tiles.insert(key, Arc::clone(&tile));
+        if self.admit_tile(p) {
+            self.tiles.insert(key, Arc::clone(&tile));
+        } else {
+            // Single-reader page: serve but never cache.
+            self.tiles.note_miss();
+        }
         Some(tile)
     }
 
@@ -376,6 +401,26 @@ impl PageStore for TernaryStore {
             self.qk_dequant.load(Ordering::Relaxed),
             self.qk_ternary.load(Ordering::Relaxed),
         )
+    }
+
+    fn record_av_rows(&self, int8: u64) {
+        self.av_int8.fetch_add(int8, Ordering::Relaxed);
+    }
+
+    fn av_rows(&self) -> u64 {
+        self.av_int8.load(Ordering::Relaxed)
+    }
+
+    fn set_page_leases(&mut self, p: PageId, refs: u32) {
+        self.lease_refs[p as usize] = refs;
+    }
+
+    fn set_integer_av(&mut self, on: bool) {
+        self.integer_av = on;
+    }
+
+    fn integer_av_enabled(&self) -> bool {
+        self.integer_av
     }
 
     fn bytes(&self) -> usize {

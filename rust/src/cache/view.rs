@@ -7,19 +7,24 @@
 //! (the whole history is a single block for a contiguous cache), walked
 //! in ascending position order, which is what keeps paged decode
 //! bit-for-bit equal to the contiguous baseline (the contiguous path is
-//! literally the degenerate single-block case). Two walks exist:
+//! literally the degenerate single-block case). Three walks exist:
 //!
 //! * [`Rows::for_each_block`] — f32 tiles (`rows × d_model`): borrowed
 //!   from the arena for f32 storage, served from the store's frozen-tile
 //!   LRU for registration-frozen quantized pages, dequantized into
-//!   caller scratch otherwise. The attention V-accumulation pass (and
-//!   the whole f32 score pass) runs on this.
+//!   caller scratch otherwise. The f32 score and V passes run on this.
 //! * [`Rows::for_each_kblock`] — the score-pass walk: yields each page
 //!   at the cheapest representation its store supports —
 //!   [`KBlock::Ternary`] (raw pack34 planes + per-head absmean scales,
 //!   LUT-walked without touching f32 K at all), [`KBlock::I8`] (raw
 //!   int8 page bytes + per-head scales, dotted in i32), falling back to
 //!   [`KBlock::F32`] tiles for f32 storage and contiguous caches.
+//! * [`Rows::for_each_vblock`] — the V-pass walk: [`VBlock::I8`] raw
+//!   int8 V bytes + per-head scales for quantized stores with the
+//!   integer-a·V path enabled (attention accumulates a·V in i32 via
+//!   `simd::av_i8_rows` — V is never dequantized), [`VBlock::F32`]
+//!   tiles otherwise (f32 storage, contiguous caches, integer-V off —
+//!   this fallback is the only remaining frozen-tile consumer).
 
 use super::allocator::{BlockAllocator, PageId};
 use super::store::{PageStore, Plane, TernaryBlock};
@@ -40,6 +45,19 @@ pub enum KBlock<'a> {
     /// walks it through per-query 32-entry LUTs
     /// (`simd::qk_lut34_rows`) — K is never dequantized.
     Ternary(TernaryBlock<'a>),
+}
+
+/// One page block of a sequence's V history, at the cheapest
+/// representation its store supports (see [`Rows::for_each_vblock`]).
+pub enum VBlock<'a> {
+    /// Dequantized (or natively-f32) `rows × d_model` tile.
+    F32(&'a [f32]),
+    /// Int8-native V page block: `rows × d_model` raw bytes plus the
+    /// page's `n_heads` per-head scales. Element `(r, h·head_dim + c)`
+    /// dequantizes as `data[r·d + h·head_dim + c] as f32 * scales[h]`;
+    /// attention instead accumulates `a·V` in i32 over the raw bytes
+    /// and applies `s_a · scales[h]` once per (page, head).
+    I8 { data: &'a [i8], scales: &'a [f32] },
 }
 
 /// Position-indexed block access into one sequence's K (or V) history at
@@ -148,6 +166,51 @@ impl<'a> Rows<'a> {
         }
     }
 
+    /// V-pass walk: like [`Rows::for_each_block`], but yields each page
+    /// at the cheapest representation its store supports —
+    /// [`VBlock::I8`] raw int8 V bytes for quantized stores with the
+    /// integer-a·V path enabled (no dequantization at all),
+    /// [`VBlock::F32`] tiles otherwise (f32 storage, contiguous caches,
+    /// or integer-V toggled off — that fallback is the residual
+    /// frozen-tile / scratch-dequant consumer).
+    #[inline]
+    pub fn for_each_vblock(
+        &self,
+        t: usize,
+        scratch: &mut Vec<f32>,
+        mut f: impl FnMut(usize, VBlock<'_>, usize),
+    ) {
+        match *self {
+            Rows::Contig { buf, d } => {
+                if t > 0 {
+                    f(0, VBlock::F32(&buf[..t * d]), t);
+                }
+            }
+            Rows::Paged { store, plane, layer, pages, page_size, d } => {
+                let integer_av = store.integer_av_enabled();
+                let mut start = 0usize;
+                while start < t {
+                    let rows = page_size.min(t - start);
+                    let page = pages[start / page_size];
+                    if integer_av {
+                        if let Some((data, scales)) = store.block_i8(plane, layer, page, rows) {
+                            f(start, VBlock::I8 { data, scales }, rows);
+                            start += rows;
+                            continue;
+                        }
+                    }
+                    if let Some(tile) = store.frozen_tile(plane, layer, page) {
+                        f(start, VBlock::F32(&tile[..rows * d]), rows);
+                    } else {
+                        let block = store.block(plane, layer, page, rows, scratch);
+                        f(start, VBlock::F32(block), rows);
+                    }
+                    start += rows;
+                }
+            }
+        }
+    }
+
     /// Record attention q·k row counts against the backing store (the
     /// per-dtype dot-fraction gauges). No-op for contiguous caches — the
     /// single-stream paths are not metered.
@@ -155,6 +218,15 @@ impl<'a> Rows<'a> {
     pub fn record_qk(&self, native_rows: u64, dequant_rows: u64, ternary_rows: u64) {
         if let Rows::Paged { store, .. } = *self {
             store.record_qk_rows(native_rows, dequant_rows, ternary_rows);
+        }
+    }
+
+    /// Record int8-native a·V row counts against the backing store (the
+    /// `kv_av_rows_int8` gauge). No-op for contiguous caches.
+    #[inline]
+    pub fn record_av(&self, int8_rows: u64) {
+        if let Rows::Paged { store, .. } = *self {
+            store.record_av_rows(int8_rows);
         }
     }
 
@@ -471,6 +543,83 @@ mod tests {
         // V stays int8-native.
         kv.v_rows(0, 0).for_each_kblock(6, &mut scratch, |_, block, _| {
             assert!(matches!(block, super::KBlock::I8 { .. }));
+        });
+    }
+
+    #[test]
+    fn vblock_walk_yields_int8_blocks_without_touching_scratch() {
+        // Both quantized stores must serve the V pass as raw int8
+        // blocks that dequantize to exactly the f32 walk's tiles, with
+        // no scratch dequantization at all; toggling integer-V off
+        // restores the f32 tile walk with identical values.
+        let cfg = NativeConfig::named("nano").unwrap();
+        let d = cfg.d_model;
+        let hd = cfg.head_dim();
+        for dtype in [KvDtype::Int8, KvDtype::Ternary] {
+            let mut alloc = BlockAllocator::new_with(&cfg, 4, 4, dtype);
+            let mut table = BlockTable::new(4);
+            let mut rng = crate::util::Pcg64::seeded(27);
+            for pos in 0..6usize {
+                table.prepare_append(&mut alloc);
+                let (page, slot) = table.slot_for(pos);
+                let row = rng.normal_vec(d);
+                alloc.write_row(0, page, slot, &row, &row);
+                table.advance();
+            }
+            let mut tables = [&mut table];
+            let kv = KvBatch::Paged { alloc: &mut alloc, tables: &mut tables };
+            let rows = kv.v_rows(0, 0);
+            let reference = collect(&rows, 6);
+            let mut scratch = Vec::new();
+            let mut covered = 0usize;
+            rows.for_each_vblock(6, &mut scratch, |start, block, n| {
+                let super::VBlock::I8 { data, scales } = block else {
+                    panic!("{dtype:?} store must yield int8-native V blocks")
+                };
+                for r in 0..n {
+                    for h in 0..cfg.n_heads {
+                        for c in h * hd..(h + 1) * hd {
+                            assert_eq!(
+                                data[r * d + c] as f32 * scales[h],
+                                reference[(start + r) * d + c],
+                                "pos {} ch {c}",
+                                start + r
+                            );
+                        }
+                    }
+                }
+                covered += n;
+            });
+            assert_eq!(covered, 6);
+            assert!(scratch.is_empty(), "V walk never dequantized into scratch");
+
+            // Toggle off: the walk falls back to f32 tiles, same values.
+            let KvBatch::Paged { alloc, tables } = kv else { unreachable!() };
+            alloc.set_integer_av(false);
+            let kv = KvBatch::Paged { alloc, tables };
+            let rows = kv.v_rows(0, 0);
+            let mut flat = vec![0.0; 6 * d];
+            rows.for_each_vblock(6, &mut scratch, |start, block, n| {
+                let super::VBlock::F32(tile) = block else {
+                    panic!("integer-V off must fall back to f32 tiles")
+                };
+                flat[start * d..(start + n) * d].copy_from_slice(&tile[..n * d]);
+            });
+            assert_eq!(flat, reference, "both V walks dequantize identically");
+        }
+
+        // Contiguous caches yield one F32 block, borrowed bit-for-bit.
+        let mut cache = KvCache::new(&cfg);
+        cache.k[0].extend_from_slice(&vec![2.0; d]);
+        cache.v[0].extend_from_slice(&vec![3.0; d]);
+        cache.len = 1;
+        let mut caches = [&mut cache];
+        let kv = KvBatch::Contig(&mut caches);
+        let mut scratch = Vec::new();
+        kv.v_rows(0, 0).for_each_vblock(1, &mut scratch, |_, block, n| {
+            let super::VBlock::F32(tile) = block else { panic!("contig must yield F32") };
+            assert_eq!(n, 1);
+            assert_eq!(tile, &vec![3.0; d][..]);
         });
     }
 

@@ -161,6 +161,20 @@ impl PagedKv {
         self.alloc.store().qk_rows()
     }
 
+    /// Attention a·V rows accumulated in integer fixed point over raw
+    /// int8 V page bytes (the `kv_av_rows_int8` gauge; 0 for f32 pools
+    /// or with integer-V disabled).
+    pub fn av_rows(&self) -> u64 {
+        self.alloc.store().av_rows()
+    }
+
+    /// Toggle the integer a·V pass (quantized pools only; f32 pools
+    /// ignore it). On by default — off forces the V pass back through
+    /// f32 tiles, the bench sweep's comparison leg.
+    pub fn set_integer_av(&mut self, on: bool) {
+        self.alloc.set_integer_av(on);
+    }
+
     /// `(hits, misses)` of the store's frozen-tile cache.
     pub fn tile_cache_stats(&self) -> (u64, u64) {
         self.alloc.store().tile_cache_stats()

@@ -40,10 +40,13 @@ pub struct Metrics {
     pub kv_bytes_per_token_k: u64,
     /// V-plane share of `kv_bytes_per_token`.
     pub kv_bytes_per_token_v: u64,
-    /// CPU-seconds the page store spent dequantizing blocks for
-    /// attention, summed across all worker threads (0 for f32 pools) —
-    /// the dequant-overhead gauge. Because workers dequantize
-    /// concurrently, this can exceed `wall_seconds`.
+    /// CPU-seconds the page store spent dequantizing blocks into f32,
+    /// summed across all worker threads — **residual** dequantization
+    /// outside the decode hot path. With the integer a·V pass on (the
+    /// default), a quantized pool's decode round reads K and V pages as
+    /// raw bytes and this stays 0; it only grows for f32 consumers
+    /// (integer-V disabled, diagnostics, tile-cache fills). Because
+    /// workers dequantize concurrently, this can exceed `wall_seconds`.
     pub kv_dequant_seconds: f64,
     /// Attention q·k rows computed int8-natively (i32 dot over raw page
     /// bytes, one scale multiply per page-head) — numerator of
@@ -57,6 +60,11 @@ pub struct Metrics {
     /// ternary K pages (no dequantization) — numerator of
     /// [`Metrics::ternary_dot_fraction`].
     pub kv_qk_rows_ternary: u64,
+    /// Attention a·V rows accumulated in integer fixed point (u8 softmax
+    /// weight codes × raw int8 V page bytes, i32 accumulate, one
+    /// `s_a·s_v` fold per page-head) — ~all V rows for quantized pools
+    /// with the integer a·V pass on, 0 for f32 pools or with it off.
+    pub kv_av_rows_int8: u64,
     /// Frozen-tile cache hits: V-pass reads of a shared prefix page
     /// served from the store's LRU instead of re-dequantizing.
     pub kv_tile_hits: u64,
@@ -164,7 +172,7 @@ impl Metrics {
             "requests: {}/{} done | tokens: {} | rounds: {} | wall: {:.2}s\n\
              throughput: {:.1} tok/s | latency p50/p99: {:.3}/{:.3}s | ttft p50: {:.3}s\n\
              kv: {}/{} pages peak ({:.0}% util) | {} B/token (K {} + V {}) | dequant: {:.3} cpu-s\n\
-             int8 q·k: {:.0}% | ternary q·k: {:.0}% of dot rows | tile cache: {:.0}% hits ({}/{}) | kernel isa: {}\n\
+             int8 q·k: {:.0}% | ternary q·k: {:.0}% of dot rows | int8 a·V rows: {} | tile cache: {:.0}% hits ({}/{}) | kernel isa: {}\n\
              prefix hit-rate: {:.0}% ({} hits) | \
              peak active: {} | context-limit finishes: {}",
             self.requests_done,
@@ -185,6 +193,7 @@ impl Metrics {
             self.kv_dequant_seconds,
             100.0 * self.int8_dot_fraction(),
             100.0 * self.ternary_dot_fraction(),
+            self.kv_av_rows_int8,
             100.0 * self.tile_cache_hit_rate(),
             self.kv_tile_hits,
             self.kv_tile_hits + self.kv_tile_misses,
@@ -247,6 +256,7 @@ mod tests {
         let m = Metrics {
             kv_qk_rows_int8: 300,
             kv_qk_rows_f32: 100,
+            kv_av_rows_int8: 400,
             kv_tile_hits: 30,
             kv_tile_misses: 10,
             ..Default::default()
@@ -256,6 +266,7 @@ mod tests {
         assert_eq!(m.tile_cache_hit_rate(), 0.75);
         let r = m.report();
         assert!(r.contains("int8 q·k: 75% | ternary q·k: 0% of dot rows"), "{r}");
+        assert!(r.contains("int8 a·V rows: 400"), "{r}");
         assert!(r.contains("tile cache: 75% hits (30/40)"), "{r}");
     }
 

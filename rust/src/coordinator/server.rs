@@ -25,7 +25,13 @@
 //! admission concurrency as well as footprint. Ternary pages push the
 //! K side to 1.25 bits/weight (pack34 3:4-sparse codes, V stays int8)
 //! and run the score pass as per-query LUT walks over the packed codes
-//! (the `kv_qk_rows_ternary` gauge) — K is never dequantized. Because
+//! (the `kv_qk_rows_ternary` gauge) — K is never dequantized. The a·V
+//! pass is integer too: after softmax, each (page, head) weight group is
+//! quantized to u8 fixed point and accumulated in i32 over raw int8 V
+//! page bytes (the `kv_av_rows_int8` gauge), so with the default
+//! `integer_av` a quantized pool's decode round performs **zero** f32
+//! dequantization of K or V page bytes — `kv_dequant_seconds` meters
+//! only residual dequantization off the hot path. Because
 //! batched and single-row kernels are bit-for-bit identical and shared
 //! KV pages are a deterministic function of the token prefix
 //! (byte-exact for frozen quantized pages), a request's tokens do not
@@ -66,9 +72,17 @@ pub struct ServerConfig {
     pub prefix_sharing: bool,
     /// Frozen-tile LRU capacity (tiles) for quantized pools: a shared
     /// prefix page read by N sequences is dequantized once per cache
-    /// residency instead of N times per round. 0 disables; ignored by
-    /// f32 pools (their block reads are borrows).
+    /// residency instead of N times per round. With `integer_av` on the
+    /// cache is off the decode hot path — it serves residual f32
+    /// consumers only, and admission is lease-gated (≥ 2 leases).
+    /// 0 disables; ignored by f32 pools (their block reads are borrows).
     pub tile_cache_tiles: usize,
+    /// Integer a·V accumulation for quantized pools (default on): the V
+    /// pass quantizes softmax weights to u8 fixed point per (page, head)
+    /// and accumulates in i32 over raw int8 V page bytes — no f32
+    /// dequantization on the decode hot path. Off forces the V pass back
+    /// through f32 tiles (the bench comparison leg); f32 pools ignore it.
+    pub integer_av: bool,
     /// Decode sampling policy (greedy by default).
     pub sampler: SamplerConfig,
     pub workers: usize,
@@ -83,6 +97,7 @@ impl Default for ServerConfig {
             kv_dtype: KvDtype::F32,
             prefix_sharing: true,
             tile_cache_tiles: crate::cache::DEFAULT_TILE_CACHE_TILES,
+            integer_av: true,
             sampler: SamplerConfig::default(),
             workers: ThreadPool::default_size(),
         }
@@ -175,6 +190,7 @@ impl<'m> Server<'m> {
             self.cfg.kv_dtype,
         );
         kv.set_tile_cache_capacity(self.cfg.tile_cache_tiles);
+        kv.set_integer_av(self.cfg.integer_av);
         let mut metrics = Metrics { requests_in: trace.len() as u64, ..Default::default() };
         let mut completions = Vec::new();
         let mut states: Vec<SeqState> = Vec::new();
@@ -414,6 +430,7 @@ impl<'m> Server<'m> {
         metrics.kv_qk_rows_int8 = qk_i8;
         metrics.kv_qk_rows_f32 = qk_f32;
         metrics.kv_qk_rows_ternary = qk_ternary;
+        metrics.kv_av_rows_int8 = kv.av_rows();
         let (tile_hits, tile_misses) = kv.tile_cache_stats();
         metrics.kv_tile_hits = tile_hits;
         metrics.kv_tile_misses = tile_misses;
@@ -661,14 +678,19 @@ mod tests {
             m_f32.kv_bytes_per_token
         );
         assert!(m_i8.kv_pages_total >= 2 * m_f32.kv_pages_total);
-        // Dequant gauge moves only for the quantized pool.
+        // With the integer a·V pass on (the default), the int8 decode hot
+        // path never dequantizes K or V page bytes — the residual dequant
+        // gauge stays 0 for both pools.
         assert_eq!(m_f32.kv_dequant_seconds, 0.0);
-        assert!(m_i8.kv_dequant_seconds > 0.0);
+        assert_eq!(m_i8.kv_dequant_seconds, 0.0, "integer a·V leaves no hot-path dequant");
         // The score pass runs at the storage dtype: every int8 q·k row is
         // an i32 dot over raw page bytes; f32 pools never take that path.
         assert_eq!(m_i8.int8_dot_fraction(), 1.0, "int8 pool must dot int8-natively");
         assert_eq!(m_f32.int8_dot_fraction(), 0.0);
         assert!(m_f32.kv_qk_rows_f32 > 0, "f32 rows are still metered");
+        // And the V pass is metered as integer rows for int8 only.
+        assert!(m_i8.kv_av_rows_int8 > 0, "int8 V rows accumulate in fixed point");
+        assert_eq!(m_f32.kv_av_rows_int8, 0);
         // Every request still runs to its full allowance.
         for c in c_i8.iter().chain(&c_f32) {
             assert_eq!(c.tokens.len(), 5);
@@ -715,12 +737,14 @@ mod tests {
         assert!(m_t.kv_pages_total > m_i8.kv_pages_total);
         // Score-pass routing: every paged q·k row in the ternary pool is
         // a LUT walk over packed codes; none takes the int8 or borrowed
-        // f32 path. The V pass still dequantizes tiles, so the dequant
-        // gauge moves — but only from V.
+        // f32 path. The V pass accumulates integer fixed point over the
+        // shared int8 V plane, so the residual dequant gauge stays 0 —
+        // a ternary decode round touches no f32 K or V page bytes.
         assert_eq!(m_t.ternary_dot_fraction(), 1.0, "ternary pool must LUT-walk every row");
         assert_eq!(m_t.int8_dot_fraction(), 0.0);
         assert_eq!(m_i8.ternary_dot_fraction(), 0.0);
-        assert!(m_t.kv_dequant_seconds > 0.0);
+        assert_eq!(m_t.kv_dequant_seconds, 0.0, "integer a·V leaves no hot-path dequant");
+        assert!(m_t.kv_av_rows_int8 > 0, "ternary V rows accumulate in fixed point");
         // Every request still runs to its full allowance.
         for c in &c_t {
             assert_eq!(c.tokens.len(), 5);
@@ -739,10 +763,12 @@ mod tests {
     #[test]
     fn int8_prefix_sharing_serves_hits_and_tile_cache_works() {
         // Int8 pools now share prefixes (whole frozen pages): a trace
-        // with a common system prompt must record prefix hits, serve the
-        // V pass of shared pages through the frozen-tile cache, and —
-        // the exactness claim — produce the same tokens with sharing on,
-        // sharing off, and the tile cache off.
+        // with a common system prompt must record prefix hits and — the
+        // exactness claim — produce the same tokens with sharing on,
+        // sharing off, and the tile cache off. With the integer a·V pass
+        // on (the default) the frozen-tile cache is bypassed entirely; it
+        // only runs on the residual f32 path (integer-V disabled), where
+        // shared pages must still hit it.
         let m = model();
         let s = TraceSpec {
             n_requests: 8,
@@ -762,9 +788,11 @@ mod tests {
         let on = ServerConfig { prefix_sharing: true, ..base };
         let off = ServerConfig { prefix_sharing: false, ..base };
         let no_cache = ServerConfig { prefix_sharing: true, tile_cache_tiles: 0, ..base };
+        let residual = ServerConfig { prefix_sharing: true, integer_av: false, ..base };
         let (mut c_on, m_on) = serve_trace(&m, on, s);
         let (mut c_off, m_off) = serve_trace(&m, off, s);
         let (mut c_nc, m_nc) = serve_trace(&m, no_cache, s);
+        let (c_res, m_res) = serve_trace(&m, residual, s);
         c_on.sort_by_key(|c| c.id);
         c_off.sort_by_key(|c| c.id);
         c_nc.sort_by_key(|c| c.id);
@@ -776,10 +804,20 @@ mod tests {
         assert!(m_on.prefix_hit_tokens > 0, "int8 pools must record prefix hits now");
         assert_eq!(m_on.prefix_hit_tokens % 4, 0, "int8 spans are whole-page multiples");
         assert_eq!(m_off.prefix_hit_tokens, 0);
-        // Shared V tiles came from the cache; disabling it works too.
-        assert!(m_on.kv_tile_hits > 0, "shared prefix pages must hit the tile cache");
+        // Hot path: integer a·V bypasses the tile cache and dequantizes
+        // nothing, even with sharing on.
+        assert_eq!(m_on.kv_tile_hits + m_on.kv_tile_misses, 0, "integer a·V bypasses tiles");
+        assert_eq!(m_on.kv_dequant_seconds, 0.0);
+        assert!(m_on.kv_av_rows_int8 > 0);
         assert_eq!(m_nc.kv_tile_hits + m_nc.kv_tile_misses, 0);
         let _ = m_nc.tile_cache_hit_rate();
+        // Residual path (integer-V off): the V pass reads f32 tiles
+        // again, shared lease-admitted pages hit the LRU, and the
+        // residual dequant gauge moves.
+        assert_eq!(c_res.len(), 8);
+        assert_eq!(m_res.kv_av_rows_int8, 0, "integer-V off meters no fixed-point rows");
+        assert!(m_res.kv_tile_hits > 0, "shared prefix pages must hit the tile cache");
+        assert!(m_res.kv_dequant_seconds > 0.0, "residual f32 V pass dequantizes");
     }
 
     #[test]

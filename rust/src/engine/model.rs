@@ -12,7 +12,7 @@ use std::collections::BTreeMap;
 use super::kernel::Scratch;
 use super::linear::QuantLinear;
 use super::lut;
-use crate::cache::{KBlock, KvBatch, Rows};
+use crate::cache::{KBlock, KvBatch, Rows, VBlock};
 use crate::pack::Format;
 use crate::tensor::{ops, Mat};
 use crate::util::{BufferPool, Pcg64, ThreadPool};
@@ -151,6 +151,13 @@ pub struct TernaryModel {
     /// by every layer's attention pass, so there is no per-call heap
     /// allocation *or* per-layer pool round-trip.
     qcodes: BufferPool<i8>,
+    /// Leased u8 scratch for the fixed-point a·V pass: softmax weights
+    /// quantized per (page, head) to `[0, 127]` codes. Same lease
+    /// cadence as `qcodes`.
+    wcodes: BufferPool<u8>,
+    /// Leased i32 scratch for the fixed-point a·V pass: one head-wide
+    /// integer channel accumulator.
+    iacc: BufferPool<i32>,
 }
 
 impl TernaryModel {
@@ -183,6 +190,8 @@ impl TernaryModel {
             lm_head: QuantLinear::from_float(get("lm_head"), Format::Dense),
             tiles: BufferPool::new(),
             qcodes: BufferPool::new(),
+            wcodes: BufferPool::new(),
+            iacc: BufferPool::new(),
         }
     }
 
@@ -323,6 +332,8 @@ impl TernaryModel {
                 q_scales: self.tiles.lease(),
                 q_luts: self.tiles.lease(),
                 q_codes: self.qcodes.lease(),
+                a_codes: self.wcodes.lease(),
+                acc: self.iacc.lease(),
             })
             .collect();
 
@@ -370,7 +381,7 @@ impl TernaryModel {
                                 attention_blocked(
                                     q_row, kl, vl, t, hd, n_heads, scale, &mut scr.scores,
                                     &mut scr.tile, &mut scr.q_codes, &mut scr.q_scales,
-                                    &mut scr.q_luts, out_row,
+                                    &mut scr.q_luts, &mut scr.a_codes, &mut scr.acc, out_row,
                                 );
                             });
                         }
@@ -385,7 +396,7 @@ impl TernaryModel {
                             attention_blocked(
                                 q_row, kl, vl, pos[bi] + 1, hd, n_heads, scale, &mut scr.scores,
                                 &mut scr.tile, &mut scr.q_codes, &mut scr.q_scales,
-                                &mut scr.q_luts, out_row,
+                                &mut scr.q_luts, &mut scr.a_codes, &mut scr.acc, out_row,
                             );
                         }
                     }
@@ -414,6 +425,8 @@ impl TernaryModel {
         }
         kv.advance();
         for scr in attn_scratch.drain(..) {
+            self.iacc.give(scr.acc);
+            self.wcodes.give(scr.a_codes);
             self.qcodes.give(scr.q_codes);
             self.tiles.give(scr.q_luts);
             self.tiles.give(scr.q_scales);
@@ -460,6 +473,11 @@ struct AttnScratch {
     q_scales: Vec<f32>,
     q_luts: Vec<f32>,
     q_codes: Vec<i8>,
+    /// Per-(page, head) u8 softmax-weight codes for the fixed-point a·V
+    /// pass.
+    a_codes: Vec<u8>,
+    /// Head-wide i32 channel accumulator for the fixed-point a·V pass.
+    acc: Vec<i32>,
 }
 
 /// Int8-quantize one query row per head into caller buffers (leased
@@ -509,11 +527,20 @@ fn quantize_query(
 /// built once per call by [`lut::build_qk_luts34`]) — either way scaled
 /// by one `q_scale · page_head_scale` product per (page, head), and the
 /// K plane is never dequantized. The V pass walks
-/// [`Rows::for_each_block`] f32 tiles (registration-frozen pages served
-/// from the store's shared LRU tile cache, private pages dequantized
-/// once into `tile`). A page is materialized at most once per pass and
-/// reused for every dot product / accumulation that touches it — the
-/// same amortization `gemm_nt` applies to weight planes.
+/// [`Rows::for_each_vblock`], which yields quantized pages as raw int8
+/// bytes: the softmax weights for each (page, head) group are quantized
+/// to u8 fixed point in one explicit rounding step (`s_a = max/127`,
+/// codes in `[0, 127]`), [`crate::simd::av_i8_rows_with`] accumulates
+/// `â·V̂` in exact i32 across the head's channels, and one `s_a · s_v`
+/// multiply per (page, head) folds both scales back in — V is never
+/// dequantized either, so for quantized stores a decode round touches
+/// no f32 K or V page bytes at all (DESIGN.md §4 derives the bound).
+/// f32 pages (and quantized stores with integer-V disabled) take the
+/// [`VBlock::F32`] arm: registration-frozen pages served from the
+/// store's shared LRU tile cache, private pages dequantized once into
+/// `tile`. A page is materialized at most once per pass and reused for
+/// every dot product / accumulation that touches it — the same
+/// amortization `gemm_nt` applies to weight planes.
 ///
 /// f32 storage takes the [`KBlock::F32`] arm whose per-element float ops
 /// and ordering match the old position-at-a-time walk exactly, so f32
@@ -534,6 +561,8 @@ fn attention_blocked(
     q_codes: &mut Vec<i8>,
     q_scales: &mut Vec<f32>,
     q_luts: &mut Vec<f32>,
+    a_codes: &mut Vec<u8>,
+    acc: &mut Vec<i32>,
     out: &mut [f32],
 ) {
     let d = n_heads * hd;
@@ -612,19 +641,57 @@ fn attention_blocked(
         ops::softmax_inplace(&mut scores[hh * t..(hh + 1) * t]);
     }
     out.fill(0.0);
-    vl.for_each_block(t, tile, |start, block, rows| {
-        for r in 0..rows {
-            let vrow = &block[r * d..(r + 1) * d];
-            for hh in 0..n_heads {
-                let a = scores[hh * t + start + r];
-                let o = &mut out[hh * hd..(hh + 1) * hd];
-                let vh = &vrow[hh * hd..(hh + 1) * hd];
-                for (oo, &vv) in o.iter_mut().zip(vh.iter()) {
-                    *oo += a * vv;
+    let mut av_int8 = 0u64;
+    vl.for_each_vblock(t, tile, |start, block, rows| match block {
+        VBlock::F32(block) => {
+            for r in 0..rows {
+                let vrow = &block[r * d..(r + 1) * d];
+                for hh in 0..n_heads {
+                    let a = scores[hh * t + start + r];
+                    let o = &mut out[hh * hd..(hh + 1) * hd];
+                    let vh = &vrow[hh * hd..(hh + 1) * hd];
+                    for (oo, &vv) in o.iter_mut().zip(vh.iter()) {
+                        *oo += a * vv;
+                    }
                 }
             }
         }
+        VBlock::I8 { data, scales } => {
+            a_codes.clear();
+            a_codes.resize(rows, 0);
+            acc.clear();
+            acc.resize(hd, 0);
+            for hh in 0..n_heads {
+                let w = &scores[hh * t + start..hh * t + start + rows];
+                // Quantize this (page, head) weight group to u8 fixed
+                // point in one explicit rounding step: the group is
+                // exactly the rows one page contributes to one head's
+                // softmax, so s_a = max/127 is the exact absmax scale
+                // (softmax weights are nonnegative) and codes stay in
+                // [0, 127] — products fit i16 and i32 sums are exact.
+                let max = w.iter().fold(0.0f32, |m, &x| m.max(x));
+                if max <= 0.0 || scales[hh] == 0.0 {
+                    // All-zero weights or an all-zero V head contribute
+                    // nothing; skipping keeps s_a well-defined.
+                    continue;
+                }
+                let s_a = max / 127.0;
+                for (c, &x) in a_codes.iter_mut().zip(w) {
+                    *c = (x / s_a).round().clamp(0.0, 127.0) as u8;
+                }
+                crate::simd::av_i8_rows_with(isa, a_codes, data, d, hh * hd, hd, rows, acc);
+                // One f32 multiply per (page, head) folds the weight and
+                // V quantizer scales back in.
+                let s = s_a * scales[hh];
+                let o = &mut out[hh * hd..(hh + 1) * hd];
+                for (oo, &ai) in o.iter_mut().zip(acc.iter()) {
+                    *oo += ai as f32 * s;
+                }
+            }
+            av_int8 += rows as u64;
+        }
     });
+    vl.record_av(av_int8);
 }
 
 /// Index of the maximum logit (first on ties).
@@ -768,6 +835,103 @@ mod tests {
             }
         });
         table.release_all(&mut alloc);
+    }
+
+    #[test]
+    fn integer_v_pass_stays_within_design_bound_elementwise() {
+        // The fixed-point a·V pass must agree with the dequantize-then-f32
+        // accumulation elementwise, within the DESIGN.md §4 weight-rounding
+        // bound: both paths consume the same stored V codes and scales, so
+        // V-side quantization error cancels and only the u8 rounding of
+        // the softmax weights remains —
+        //   |Δout[c]| ≤ Σ_pages ½·s_a · s_v · Σ_r |v̂_r[c]|.
+        // Ternary stores share the int8 V plane, so both dtypes run the
+        // same arm.
+        let cfg = nano();
+        let d = cfg.d_model;
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let t = 6usize;
+        for dtype in [crate::cache::KvDtype::Int8, crate::cache::KvDtype::Ternary] {
+            let mut rng = crate::util::Pcg64::seeded(53);
+            let mut alloc = crate::cache::BlockAllocator::new_with(&cfg, 4, 4, dtype);
+            let mut table = crate::cache::BlockTable::new(4);
+            for pos in 0..t {
+                table.prepare_append(&mut alloc);
+                let (page, slot) = table.slot_for(pos);
+                let row = rng.normal_vec(d);
+                alloc.write_row(0, page, slot, &row, &row);
+                table.advance();
+            }
+            // Realistic nonnegative attention weights: per-head softmax.
+            let mut weights = vec![0.0f32; nh * t];
+            for hh in 0..nh {
+                let logits = rng.normal_vec(t);
+                let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let mut z = 0.0f32;
+                for (wv, &x) in weights[hh * t..(hh + 1) * t].iter_mut().zip(&logits) {
+                    *wv = (x - m).exp();
+                    z += *wv;
+                }
+                for wv in &mut weights[hh * t..(hh + 1) * t] {
+                    *wv /= z;
+                }
+            }
+            let mut tables = [&mut table];
+            let kv = KvBatch::Paged { alloc: &mut alloc, tables: &mut tables };
+            let rows_view = kv.v_rows(0, 0);
+            let mut scratch = Vec::new();
+            // Reference: dequantized V pages accumulated in f32.
+            let mut reference = vec![0.0f32; d];
+            rows_view.for_each_block(t, &mut scratch, |start, block, n| {
+                for r in 0..n {
+                    for hh in 0..nh {
+                        let a = weights[hh * t + start + r];
+                        for c in 0..hd {
+                            reference[hh * hd + c] += a * block[r * d + hh * hd + c];
+                        }
+                    }
+                }
+            });
+            // Fused: the attention_blocked arm — u8-quantized weight
+            // group, i32 accumulate over raw bytes, one s_a·s_v fold.
+            let mut fused = vec![0.0f32; d];
+            let mut bound = vec![0.0f32; d];
+            let mut codes: Vec<u8> = Vec::new();
+            let mut acc = vec![0i32; hd];
+            rows_view.for_each_vblock(t, &mut scratch, |start, block, n| {
+                let VBlock::I8 { data, scales } = block else { panic!("quantized store") };
+                codes.clear();
+                codes.resize(n, 0);
+                for hh in 0..nh {
+                    let w = &weights[hh * t + start..hh * t + start + n];
+                    let max = w.iter().fold(0.0f32, |m, &x| m.max(x));
+                    if max <= 0.0 || scales[hh] == 0.0 {
+                        continue;
+                    }
+                    let s_a = max / 127.0;
+                    for (cd, &x) in codes.iter_mut().zip(w) {
+                        *cd = (x / s_a).round().clamp(0.0, 127.0) as u8;
+                    }
+                    crate::simd::av_i8_rows_scalar(&codes, data, d, hh * hd, hd, n, &mut acc);
+                    for c in 0..hd {
+                        fused[hh * hd + c] += acc[c] as f32 * (s_a * scales[hh]);
+                        let vmag: f32 =
+                            (0..n).map(|r| (data[r * d + hh * hd + c] as f32).abs()).sum();
+                        bound[hh * hd + c] += 0.5 * s_a * scales[hh] * vmag;
+                    }
+                }
+            });
+            for c in 0..d {
+                assert!(
+                    (fused[c] - reference[c]).abs() <= bound[c] + 1e-4,
+                    "{dtype:?} ch {c}: fused {} vs dequant {} (bound {})",
+                    fused[c],
+                    reference[c],
+                    bound[c]
+                );
+            }
+            table.release_all(&mut alloc);
+        }
     }
 
     #[test]

@@ -53,7 +53,8 @@ fn app() -> App {
                 .flag("page-size", "KV page size (positions)", Some("16"))
                 .flag("kv-dtype", "KV page storage dtype (f32|int8|ternary)", Some("f32"))
                 .flag("prefix-sharing", "reuse frozen prefix KV pages (0|1)", Some("1"))
-                .flag("tile-cache", "frozen-tile LRU tiles for int8 pools (0 = off)", Some("64"))
+                .flag("tile-cache", "frozen-tile LRU tiles, residual path (0 = off)", Some("16"))
+                .flag("integer-av", "fixed-point a·V over raw int8 V bytes (0|1)", Some("1"))
                 .flag("temperature", "sampling temperature (0 = greedy)", Some("0"))
                 .flag("top-k", "sample from top-k logits (0 = full vocab)", Some("0"))
                 .flag("top-p", "nucleus sampling mass (1 = off)", Some("1"))
@@ -187,6 +188,7 @@ fn main() -> Result<()> {
                 prefix_sharing: args.usize_or("prefix-sharing", 1) != 0,
                 tile_cache_tiles: args
                     .usize_or("tile-cache", sherry::cache::DEFAULT_TILE_CACHE_TILES),
+                integer_av: args.usize_or("integer-av", 1) != 0,
                 sampler: SamplerConfig {
                     temperature: args.f64_or("temperature", 0.0) as f32,
                     top_k: args.usize_or("top-k", 0),

@@ -71,6 +71,31 @@ impl Lanes for Avx2 {
         debug_assert!(dst.len() >= 8);
         _mm256_storeu_ps(dst.as_mut_ptr(), v);
     }
+
+    type I = __m256i;
+
+    #[inline(always)]
+    unsafe fn izero() -> __m256i {
+        _mm256_setzero_si256()
+    }
+
+    #[inline(always)]
+    unsafe fn imac(acc: __m256i, w: i32, v: *const i8) -> __m256i {
+        // Exactly 8 V bytes sign-extended straight to i32 lanes and
+        // multiplied by the broadcast weight. (The `vpmaddubsw` pairing
+        // trick would mix adjacent channels across lanes; per-channel
+        // widening keeps lane c == channel c, and i32 math is exact
+        // either way.)
+        let bytes = _mm_loadl_epi64(v as *const __m128i);
+        let wide = _mm256_cvtepi8_epi32(bytes);
+        _mm256_add_epi32(acc, _mm256_mullo_epi32(wide, _mm256_set1_epi32(w)))
+    }
+
+    #[inline(always)]
+    unsafe fn istore(acc: __m256i, dst: &mut [i32]) {
+        debug_assert!(dst.len() >= 8);
+        _mm256_storeu_si256(dst.as_mut_ptr() as *mut __m256i, acc);
+    }
 }
 
 /// i8×i8 dot, i32-accumulated: 16 bytes/iter sign-extended to i16 lanes,
@@ -163,6 +188,22 @@ pub(crate) unsafe fn qk_lut34_rows(
     out: &mut [f32],
 ) {
     walk::qk_lut34_rows::<Avx2>(idx, sign, idx_bh, sign_bh, nb, head, n_heads, luts, rows, out)
+}
+
+/// # Safety
+///
+/// AVX2 available; `av_i8_rows` bounds (asserted by the dispatch layer).
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn av_i8_rows(
+    weights: &[u8],
+    v: &[i8],
+    d: usize,
+    col0: usize,
+    hd: usize,
+    rows: usize,
+    out: &mut [i32],
+) {
+    walk::av_i8_rows::<Avx2>(weights, v, d, col0, hd, rows, out)
 }
 
 /// # Safety

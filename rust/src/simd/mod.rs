@@ -1,4 +1,4 @@
-//! Runtime-dispatched SIMD kernels for the three hottest inner loops:
+//! Runtime-dispatched SIMD kernels for the four hottest inner loops:
 //!
 //! 1. the fused **i8×i8 q·k dot** in the page-blocked attention walk
 //!    (`engine::model::attention_blocked`) — an i32-accumulated dot over
@@ -8,7 +8,11 @@
 //!    (Sherry 3:4, TL2, I2_S);
 //! 3. the **ternary-KV q·k LUT walk** ([`qk_lut34_rows`]) — per-query
 //!    32-entry tables indexed by packed 1.25-bit K page codes, one
-//!    gather + add per (block, W rows), never dequantizing K.
+//!    gather + add per (block, W rows), never dequantizing K;
+//! 4. the **fixed-point a·V accumulation** ([`av_i8_rows`]) — u8-quantized
+//!    softmax weights times raw int8 V page bytes, i32-accumulated across
+//!    head channels, one `s_a·s_v` scale multiply per page-head, never
+//!    dequantizing V.
 //!
 //! ## Dispatch model
 //!
@@ -428,6 +432,92 @@ pub fn qk_lut34_rows_with(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Fixed-point a·V accumulation
+// ---------------------------------------------------------------------------
+
+/// Scalar fixed-point a·V accumulation — the ground truth: `out[c] =
+/// Σ_r weights[r] · v[r·d + col0 + c]` for `c < hd`, exactly in i32,
+/// over the first `rows` rows of an int8 V page block of row stride
+/// `d`. `weights[r]` is one softmax weight quantized to `[0, 127]`
+/// (see `engine::model::attention_blocked`); `col0 = head · head_dim`
+/// selects the head's channel window. Products are ≤ 127·128 and page
+/// row counts are small, so i32 never wraps; zero weights are skipped,
+/// which no arrangement of exact integer adds can observe.
+pub fn av_i8_rows_scalar(
+    weights: &[u8],
+    v: &[i8],
+    d: usize,
+    col0: usize,
+    hd: usize,
+    rows: usize,
+    out: &mut [i32],
+) {
+    out[..hd].fill(0);
+    for r in 0..rows {
+        let w = weights[r] as i32;
+        if w == 0 {
+            continue;
+        }
+        let vrow = &v[r * d + col0..r * d + col0 + hd];
+        for (o, &x) in out[..hd].iter_mut().zip(vrow) {
+            *o += w * x as i32;
+        }
+    }
+}
+
+/// Fixed-point a·V accumulation over one head of an int8 V page block
+/// through the pinned process ISA. See [`av_i8_rows_scalar`] for the
+/// layout contract.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn av_i8_rows(
+    weights: &[u8],
+    v: &[i8],
+    d: usize,
+    col0: usize,
+    hd: usize,
+    rows: usize,
+    out: &mut [i32],
+) {
+    av_i8_rows_with(active(), weights, v, d, col0, hd, rows, out);
+}
+
+/// [`av_i8_rows`] through an explicit ISA (parity tests; hot loops that
+/// hoist [`active`]). All paths accumulate in i32 — exact — so every
+/// ISA is bit-for-bit the scalar reference.
+#[allow(clippy::too_many_arguments)]
+pub fn av_i8_rows_with(
+    isa: Isa,
+    weights: &[u8],
+    v: &[i8],
+    d: usize,
+    col0: usize,
+    hd: usize,
+    rows: usize,
+    out: &mut [i32],
+) {
+    // Mirror the scalar kernel's contract up front: the unsafe loads
+    // below rely on exactly these bounds.
+    assert!(col0 + hd <= d, "head window [{col0}, {}) exceeds row stride {d}", col0 + hd);
+    assert!(weights.len() >= rows, "weight row buffer too short");
+    assert!(rows == 0 || v.len() >= (rows - 1) * d + col0 + hd, "V plane too short");
+    assert!(out.len() >= hd, "output channel buffer too short");
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: host reports AVX2; bounds asserted above.
+        Isa::Avx2 if avx2_available() => unsafe {
+            avx2::av_i8_rows(weights, v, d, col0, hd, rows, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: host reports NEON; bounds asserted above.
+        Isa::Neon if neon_available() => unsafe {
+            neon::av_i8_rows(weights, v, d, col0, hd, rows, out)
+        },
+        _ => av_i8_rows_scalar(weights, v, d, col0, hd, rows, out),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -519,6 +609,33 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn av_i8_dispatch_is_bit_identical_to_scalar_on_every_isa() {
+        // Synthetic V page block: head_dim 19 exercises both the chunked
+        // path and the channel tail on every lane width (19 = 2·8+3 =
+        // 4·4+3); rows 13 is a partial page; weights include zeros (the
+        // skip path) and the extremes 1 and 127.
+        let (rows, nh, hd) = (13usize, 2usize, 19usize);
+        let d = nh * hd;
+        let v: Vec<i8> = (0..rows * d).map(|i| ((i * 37 + 11) % 255 - 127) as i8).collect();
+        let weights: Vec<u8> =
+            (0..rows).map(|r| [0u8, 1, 64, 127, 3, 0, 99][r % 7]).collect();
+        for col0 in [0, hd] {
+            let mut want = vec![0i32; hd];
+            av_i8_rows_scalar(&weights, &v, d, col0, hd, rows, &mut want);
+            for isa in Isa::ALL {
+                for r in [rows, 1, 0] {
+                    let mut got = vec![i32::MIN; hd];
+                    av_i8_rows_with(isa, &weights, &v, d, col0, hd, r, &mut got);
+                    let mut w = vec![0i32; hd];
+                    av_i8_rows_scalar(&weights, &v, d, col0, hd, r, &mut w);
+                    assert_eq!(got, w, "{} col0 {col0} rows {r}", isa.name());
+                }
+            }
+            assert_ne!(want, vec![0i32; hd], "nonzero fixture sanity");
         }
     }
 

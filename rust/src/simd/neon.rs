@@ -76,6 +76,30 @@ impl Lanes for Neon {
         debug_assert!(dst.len() >= 4);
         vst1q_f32(dst.as_mut_ptr(), v);
     }
+
+    type I = int32x4_t;
+
+    #[inline(always)]
+    unsafe fn izero() -> int32x4_t {
+        vdupq_n_s32(0)
+    }
+
+    #[inline(always)]
+    unsafe fn imac(acc: int32x4_t, w: i32, v: *const i8) -> int32x4_t {
+        // Exactly 4 V bytes via an unaligned 4-byte read — `vld1_s8`
+        // would read 8 and could overrun the plane at the last chunk —
+        // widened s8 → s16 → s32, then MAC by the broadcast weight.
+        let bytes = (v as *const u32).read_unaligned();
+        let v8 = vcreate_s8(bytes as u64);
+        let v32 = vmovl_s16(vget_low_s16(vmovl_s8(v8)));
+        vmlaq_s32(acc, v32, vdupq_n_s32(w))
+    }
+
+    #[inline(always)]
+    unsafe fn istore(acc: int32x4_t, dst: &mut [i32]) {
+        debug_assert!(dst.len() >= 4);
+        vst1q_s32(dst.as_mut_ptr(), acc);
+    }
 }
 
 /// i8×i8 dot, i32-accumulated: 16 bytes/iter widened through i16 products
@@ -161,6 +185,22 @@ pub(crate) unsafe fn qk_lut34_rows(
     out: &mut [f32],
 ) {
     walk::qk_lut34_rows::<Neon>(idx, sign, idx_bh, sign_bh, nb, head, n_heads, luts, rows, out)
+}
+
+/// # Safety
+///
+/// NEON available; `av_i8_rows` bounds (asserted by the dispatch layer).
+#[target_feature(enable = "neon")]
+pub(crate) unsafe fn av_i8_rows(
+    weights: &[u8],
+    v: &[i8],
+    d: usize,
+    col0: usize,
+    hd: usize,
+    rows: usize,
+    out: &mut [i32],
+) {
+    walk::av_i8_rows::<Neon>(weights, v, d, col0, hd, rows, out)
 }
 
 /// # Safety

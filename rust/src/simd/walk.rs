@@ -20,6 +20,10 @@
 //! LUT entries are integer-valued f32s whose sums stay ≪ 2²⁴, so f32
 //! accumulation is exact in any order and parity is structural.
 //!
+//! The fixed-point a·V walk ([`av_i8_rows`]) vectorizes across **head
+//! channels** and accumulates in i32, which is exact — parity with
+//! scalar is structural for any lane arrangement, like the i8 dot.
+//!
 //! ## Safety contract (shared by every `unsafe fn` here)
 //!
 //! Callers (the dispatch layer in `simd::mod`) must ensure:
@@ -75,6 +79,18 @@ pub(crate) trait Lanes: Copy {
     unsafe fn mul(a: Self::V, b: Self::V) -> Self::V;
     /// Write the `W` lanes to `dst[..W]` (unaligned).
     unsafe fn store(v: Self::V, dst: &mut [f32]);
+
+    /// Integer accumulator register of `W` i32 lanes (the fixed-point
+    /// a·V walk accumulates exactly in i32).
+    type I: Copy;
+    unsafe fn izero() -> Self::I;
+    /// Widening MAC: lane `i` becomes `acc[i] + w · (v[i] as i32)` over
+    /// `W` consecutive int8 V bytes at `v` (exactly `W` bytes are read).
+    /// `w` is a softmax weight quantized to `[0, 127]`, so products are
+    /// ≤ 127·128 and i32 sums stay exact at any page size.
+    unsafe fn imac(acc: Self::I, w: i32, v: *const i8) -> Self::I;
+    /// Write the `W` i32 lanes to `dst[..W]` (unaligned).
+    unsafe fn istore(acc: Self::I, dst: &mut [i32]);
 }
 
 /// Sherry 3:4 walk for one chunk of exactly `L::W` rows. `luts` starts at
@@ -250,6 +266,50 @@ pub(crate) unsafe fn qk_lut34_rows<L: Lanes>(
             rows - r0,
             &mut out[r0..],
         );
+    }
+}
+
+/// Fixed-point a·V accumulation over one head of an int8 V page block:
+/// `out[c] = Σ_r weights[r] · v[r·d + col0 + c]` in exact i32
+/// arithmetic. Vectorizes across **head channels** (`W` i32 lanes per
+/// register), accumulating over rows; channels past the last full
+/// vector go through the scalar kernel
+/// ([`crate::simd::av_i8_rows_scalar`]). Integer addition is
+/// associative, so every lane arrangement is bit-identical to scalar —
+/// and zero weights may be skipped without changing any sum.
+///
+/// # Safety
+///
+/// Module safety contract; `av_i8_rows` bounds (asserted by the
+/// dispatch layer): `col0 + hd <= d`, `weights.len() >= rows`,
+/// `v.len() >= (rows-1)·d + col0 + hd` when `rows > 0`, and
+/// `out.len() >= hd`.
+#[inline(always)]
+pub(crate) unsafe fn av_i8_rows<L: Lanes>(
+    weights: &[u8],
+    v: &[i8],
+    d: usize,
+    col0: usize,
+    hd: usize,
+    rows: usize,
+    out: &mut [i32],
+) {
+    let base = v.as_ptr();
+    let mut c0 = 0usize;
+    while c0 + L::W <= hd {
+        let mut acc = L::izero();
+        for r in 0..rows {
+            let w = weights[r] as i32;
+            if w == 0 {
+                continue;
+            }
+            acc = L::imac(acc, w, base.add(r * d + col0 + c0));
+        }
+        L::istore(acc, &mut out[c0..]);
+        c0 += L::W;
+    }
+    if c0 < hd {
+        super::av_i8_rows_scalar(weights, v, d, col0 + c0, hd - c0, rows, &mut out[c0..]);
     }
 }
 

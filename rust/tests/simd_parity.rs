@@ -1,11 +1,13 @@
-//! Scalar-vs-SIMD bit-for-bit parity suite for the three dispatched hot
+//! Scalar-vs-SIMD bit-for-bit parity suite for the four dispatched hot
 //! loops (satellite of the kernel-dispatch PR; DESIGN.md §5):
 //!
 //! 1. the i8×i8 attention dot (`simd::dot_i8_with`),
 //! 2. the LUT-GEMM tile walks for all three pack formats
-//!    (`simd::gemm_{pack34,tl2}_preluts_with`, `simd::gemm_i2s_with`), and
+//!    (`simd::gemm_{pack34,tl2}_preluts_with`, `simd::gemm_i2s_with`),
 //! 3. the ternary-KV q·k LUT walk over packed pack34 K pages
-//!    (`simd::qk_lut34_rows_with`).
+//!    (`simd::qk_lut34_rows_with`), and
+//! 4. the fixed-point a·V accumulation over raw int8 V page bytes
+//!    (`simd::av_i8_rows_with`).
 //!
 //! Equality is **hard** (`f32::to_bits`), never a tolerance: the vector
 //! walks chunk the *batch* (row) dimension so each lane replays the
@@ -456,6 +458,136 @@ fn prop_qk_lut34_parity_random_geometry() {
                                 isa.name()
                             ));
                         }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fixed-point a·V accumulation walk
+// ---------------------------------------------------------------------------
+
+/// Deterministic u8 weight fill in the kernel's `[0, 127]` contract,
+/// pinning the zero-weight skip path and both extremes.
+fn u8_weights(n: usize, salt: u64) -> Vec<u8> {
+    let mut rng = Pcg64::seeded(salt);
+    let mut w: Vec<u8> = (0..n).map(|_| (rng.next_u64() % 128) as u8).collect();
+    if n >= 3 {
+        w[0] = 0; // the skip path
+        w[1] = 127;
+        w[2] = 1;
+    }
+    w
+}
+
+/// The integer a·V walk exactly as attention drives it: raw int8 V page
+/// bytes from real stores (int8 and ternary share the V plane machinery),
+/// including partial pages and the empty prefix. i32 accumulation is
+/// exact, so parity is hard equality on every ISA.
+#[test]
+fn av_i8_parity_on_store_pages_every_isa_and_row_count() {
+    let cfg = NativeConfig::named("nano").unwrap();
+    let (d, hd, nh) = (cfg.d_model, cfg.head_dim(), cfg.n_heads);
+    let mut rng = Pcg64::seeded(61);
+    let mut i8st = Int8Store::new(&cfg, 2, 4);
+    i8st.reset_page(0);
+    for s in 0..3 {
+        let row = rng.normal_vec(d);
+        i8st.write_row(0, 0, s, &row, &row);
+    }
+    let ps = 17; // odd: straddles both vector widths' row geometry
+    let mut tst = TernaryStore::new(&cfg, 1, ps);
+    tst.reset_page(0);
+    for s in 0..ps {
+        let row = rng.normal_vec(d);
+        tst.write_row(0, 0, s, &row, &row);
+    }
+    let stores: [(&dyn PageStore, &[usize]); 2] = [
+        (&i8st, &[0usize, 1, 3][..]),
+        (&tst, &[0usize, 1, 2, 3, 7, 8, 9, 13, 16, 17][..]),
+    ];
+    for (st, row_counts) in stores {
+        for &rows in row_counts {
+            let (data, scales) = st.block_i8(Plane::V, 0, 0, rows).expect("int8 V view");
+            assert_eq!(data.len(), rows * d);
+            assert_eq!(scales.len(), nh);
+            let weights = u8_weights(rows, 83 + rows as u64);
+            for h in 0..nh {
+                let mut want = vec![0i32; hd];
+                simd::av_i8_rows_scalar(&weights, data, d, h * hd, hd, rows, &mut want);
+                for isa in Isa::ALL {
+                    let mut got = vec![i32::MIN; hd];
+                    simd::av_i8_rows_with(isa, &weights, data, d, h * hd, hd, rows, &mut got);
+                    assert_eq!(
+                        got,
+                        want,
+                        "rows={rows} h={h} isa={} (available={})",
+                        isa.name(),
+                        isa.available()
+                    );
+                }
+            }
+        }
+    }
+    // Control: the f32 store has no int8 view — attention keeps its f32
+    // V arm and never reaches the dispatched walk.
+    let f = F32Store::new(&cfg, 1, 4);
+    assert!(f.block_i8(Plane::V, 0, 0, 1).is_none());
+}
+
+/// Head widths straddle every channel-chunk boundary of both vector
+/// widths (AVX2: 8 i32 lanes, NEON: 4), plus one-off tails and widths
+/// below one vector — the walk's scalar channel tail must engage on
+/// every one of them.
+#[test]
+fn av_i8_parity_odd_and_tail_head_dims() {
+    for hd in [1usize, 2, 3, 4, 5, 7, 8, 9, 12, 15, 16, 17, 19, 32, 33] {
+        let nh = 2;
+        let d = nh * hd;
+        let rows = 9;
+        let v = i8_pattern(rows * d, 1000 + hd as u64);
+        let weights = u8_weights(rows, 2000 + hd as u64);
+        for h in 0..nh {
+            let mut want = vec![0i32; hd];
+            simd::av_i8_rows_scalar(&weights, &v, d, h * hd, hd, rows, &mut want);
+            for isa in Isa::ALL {
+                let mut got = vec![i32::MIN; hd];
+                simd::av_i8_rows_with(isa, &weights, &v, d, h * hd, hd, rows, &mut got);
+                assert_eq!(got, want, "hd={hd} h={h} isa={}", isa.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_av_i8_parity_random_geometry() {
+    prop::check(
+        "av_i8 walk simd == scalar",
+        48,
+        |rng| {
+            let hd = prop::gens::usize_in(rng, 1, 37);
+            let n_heads = prop::gens::usize_in(rng, 1, 4);
+            let rows = prop::gens::usize_in(rng, 0, 21);
+            (hd, n_heads, rows, rng.next_u64())
+        },
+        |&(hd, n_heads, rows, seed)| {
+            let d = n_heads * hd;
+            let v = i8_pattern(rows * d, seed);
+            let weights = u8_weights(rows, seed ^ 0x1234_5678);
+            for h in 0..n_heads {
+                let mut want = vec![0i32; hd];
+                simd::av_i8_rows_scalar(&weights, &v, d, h * hd, hd, rows, &mut want);
+                for isa in Isa::ALL {
+                    let mut got = vec![i32::MIN; hd];
+                    simd::av_i8_rows_with(isa, &weights, &v, d, h * hd, hd, rows, &mut got);
+                    if got != want {
+                        return Err(format!(
+                            "hd={hd} nh={n_heads} rows={rows} h={h} isa={}",
+                            isa.name()
+                        ));
                     }
                 }
             }
