@@ -28,12 +28,38 @@
 //!    default) keeps the whole decode round in integer arithmetic.
 //!    Emitted to `BENCH_int8_vpass.json`.
 //!
+//! Every record carries its sweep knobs plus the headline figures
+//! (tok/s, TTFT p50, inter-token p50/p99) at top level, and the run's
+//! complete `Metrics::snapshot()` tree under `"metrics"` — phase
+//! breakdown, bounded-histogram percentiles, KV gauges and the flight
+//! ring all land in the bench JSON without hand-formatted duplication.
+//!
 //! Run: `cargo bench --bench serve_throughput`
 
 use sherry::cache::KvDtype;
-use sherry::coordinator::{serve_trace, BatcherConfig, ServerConfig, TraceSpec};
+use sherry::coordinator::{serve_trace, BatcherConfig, Metrics, ServerConfig, TraceSpec};
 use sherry::engine::{random_weights, KvCache, NativeConfig, Scratch, TernaryModel};
+use sherry::obs::json::Json;
 use sherry::pack::Format;
+
+/// One sweep record: the cell's knobs, the headline latency/throughput
+/// figures, and the full metrics snapshot.
+fn bench_record(knobs: Json, m: &Metrics) -> Json {
+    knobs
+        .field("tok_per_s", m.throughput_tps())
+        .field("ttft_p50_s", m.ttft_p50())
+        .field("itl_p50_s", m.itl_p50())
+        .field("itl_p99_s", m.itl_p99())
+        .field("metrics", m.snapshot())
+}
+
+fn write_bench(path: &str, bench: &str, records: Vec<Json>) {
+    let doc = Json::obj().field("bench", bench).field("records", Json::Arr(records));
+    match std::fs::write(path, doc.render_pretty()) {
+        Ok(()) => println!("[bench] wrote {path}"),
+        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
+    }
+}
 
 fn main() {
     let cfg = NativeConfig::named("nano").unwrap();
@@ -51,9 +77,9 @@ fn main() {
     let single = 5.0 * (n as f64) / t0.elapsed().as_secs_f64();
 
     println!("\n### Serving throughput vs raw engine (nano, sherry format)\n");
-    println!("| setup | tok/s | vs single-stream |");
-    println!("|---|---|---|");
-    println!("| raw engine single-stream | {single:.1} | 1.00x |");
+    println!("| setup | tok/s | vs single-stream | itl p50/p99 |");
+    println!("|---|---|---|---|");
+    println!("| raw engine single-stream | {single:.1} | 1.00x | - |");
 
     for (label, active, workers) in [("serve 1-way", 1usize, 1usize), ("serve 4-way", 4, 4), ("serve 8-way", 8, 8)] {
         let server_cfg = ServerConfig {
@@ -71,7 +97,13 @@ fn main() {
             seed: 1,
         };
         let (_c, m) = serve_trace(&model, server_cfg, trace);
-        println!("| {label} | {:.1} | {:.2}x |", m.throughput_tps(), m.throughput_tps() / single);
+        println!(
+            "| {label} | {:.1} | {:.2}x | {:.4}/{:.4}s |",
+            m.throughput_tps(),
+            m.throughput_tps() / single,
+            m.itl_p50(),
+            m.itl_p99(),
+        );
     }
     println!("\n(>1x at 4/8-way = batching scales; 1-way ratio shows pure coordinator overhead)");
 
@@ -135,33 +167,19 @@ fn paged_sweep(model: &TernaryModel, single: f64) {
                 100.0 * m.prefix_hit_rate(),
                 100.0 * m.block_utilization(),
             );
-            records.push(format!(
-                "    {{\"layout\": \"{layout}\", \"page_size\": {page_size}, \
-                 \"prefix_sharing\": {sharing}, \"shared_prefix_len\": {shared_len}, \
-                 \"tok_per_s\": {:.3}, \"peak_active\": {}, \"prefix_hit_rate\": {:.4}, \
-                 \"block_utilization\": {:.4}, \"kv_bytes\": {}, \"ttft_p50_s\": {:.5}}}",
-                m.throughput_tps(),
-                m.peak_active,
-                m.prefix_hit_rate(),
-                m.block_utilization(),
-                m.kv_bytes,
-                m.ttft_p50(),
-            ));
+            let knobs = Json::obj()
+                .field("layout", layout)
+                .field("page_size", page_size)
+                .field("prefix_sharing", sharing)
+                .field("shared_prefix_len", shared_len);
+            records.push(bench_record(knobs, &m));
         }
     }
     println!(
         "\n(paged admits more than the contiguous {kv_capacity}-way cap at the same KV bytes; \
          +prefix skips shared-span prefill)"
     );
-    let json = format!(
-        "{{\n  \"bench\": \"serve_paged\",\n  \"records\": [\n{}\n  ]\n}}\n",
-        records.join(",\n")
-    );
-    let path = "BENCH_serve_paged.json";
-    match std::fs::write(path, &json) {
-        Ok(()) => println!("\n[bench] wrote {path}"),
-        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
-    }
+    write_bench("BENCH_serve_paged.json", "serve_paged", records);
 }
 
 /// f32-vs-int8 KV × contiguous-vs-paged layout at one fixed byte budget
@@ -217,36 +235,19 @@ fn kv_quant_sweep(model: &TernaryModel) {
                 m.kv_bytes_per_token,
                 m.dequant_overhead(),
             );
-            records.push(format!(
-                "    {{\"layout\": \"{layout}\", \"page_size\": {page_size}, \
-                 \"kv_dtype\": \"{}\", \"tok_per_s\": {:.3}, \"peak_active\": {}, \
-                 \"kv_bytes\": {}, \"peak_kv_bytes\": {peak_bytes}, \
-                 \"kv_bytes_per_token\": {}, \"dequant_seconds\": {:.6}, \
-                 \"dequant_overhead\": {:.5}, \"ttft_p50_s\": {:.5}}}",
-                dtype.name(),
-                m.throughput_tps(),
-                m.peak_active,
-                m.kv_bytes,
-                m.kv_bytes_per_token,
-                m.kv_dequant_seconds,
-                m.dequant_overhead(),
-                m.ttft_p50(),
-            ));
+            let knobs = Json::obj()
+                .field("layout", layout)
+                .field("page_size", page_size)
+                .field("kv_dtype", dtype.name())
+                .field("peak_kv_bytes", peak_bytes);
+            records.push(bench_record(knobs, &m));
         }
     }
     println!(
         "\n(int8 halves B/token and multiplies admissible pages at the same budget; \
          dequant overhead is the price, amortized per page block)"
     );
-    let json = format!(
-        "{{\n  \"bench\": \"kv_quant\",\n  \"records\": [\n{}\n  ]\n}}\n",
-        records.join(",\n")
-    );
-    let path = "BENCH_kv_quant.json";
-    match std::fs::write(path, &json) {
-        Ok(()) => println!("[bench] wrote {path}"),
-        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
-    }
+    write_bench("BENCH_kv_quant.json", "kv_quant", records);
 }
 
 /// Int8-native attention on a shared-system-prompt trace: the score pass
@@ -302,40 +303,17 @@ fn int8_attn_sweep(model: &TernaryModel) {
             100.0 * m.prefix_hit_rate(),
             m.dequant_overhead(),
         );
-        records.push(format!(
-            "    {{\"kv_dtype\": \"{}\", \"prefix_sharing\": {sharing}, \
-             \"tile_cache_tiles\": {tiles}, \"tok_per_s\": {:.3}, \
-             \"int8_dot_fraction\": {:.4}, \"tile_cache_hit_rate\": {:.4}, \
-             \"tile_hits\": {}, \"tile_misses\": {}, \"prefix_hit_rate\": {:.4}, \
-             \"dequant_seconds\": {:.6}, \"dequant_overhead\": {:.5}, \
-             \"peak_active\": {}, \"ttft_p50_s\": {:.5}, \"isa\": \"{}\"}}",
-            dtype.name(),
-            m.throughput_tps(),
-            m.int8_dot_fraction(),
-            m.tile_cache_hit_rate(),
-            m.kv_tile_hits,
-            m.kv_tile_misses,
-            m.prefix_hit_rate(),
-            m.kv_dequant_seconds,
-            m.dequant_overhead(),
-            m.peak_active,
-            m.ttft_p50(),
-            m.kernel_isa,
-        ));
+        let knobs = Json::obj()
+            .field("kv_dtype", dtype.name())
+            .field("prefix_sharing", sharing)
+            .field("tile_cache_tiles", tiles);
+        records.push(bench_record(knobs, &m));
     }
     println!(
         "\n(int8 rows dot natively — dequant now prices only the V pass; \
          the tile cache amortizes shared-prefix V tiles across sequences)"
     );
-    let json = format!(
-        "{{\n  \"bench\": \"int8_attn\",\n  \"records\": [\n{}\n  ]\n}}\n",
-        records.join(",\n")
-    );
-    let path = "BENCH_int8_attn.json";
-    match std::fs::write(path, &json) {
-        Ok(()) => println!("[bench] wrote {path}"),
-        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
-    }
+    write_bench("BENCH_int8_attn.json", "int8_attn", records);
 }
 
 /// All three KV dtypes head-to-head at one fixed byte budget (2 f32
@@ -390,48 +368,20 @@ fn ternary_kv_sweep(model: &TernaryModel) {
                 100.0 * m.prefix_hit_rate(),
                 m.dequant_overhead(),
             );
-            records.push(format!(
-                "    {{\"kv_dtype\": \"{}\", \"shared_prefix_len\": {shared_len}, \
-                 \"tok_per_s\": {:.3}, \"peak_active\": {}, \"kv_bytes\": {}, \
-                 \"kv_bytes_per_token\": {}, \"kv_bytes_per_token_k\": {}, \
-                 \"kv_bytes_per_token_v\": {}, \"kv_pages_total\": {}, \
-                 \"int8_dot_fraction\": {:.4}, \"ternary_dot_fraction\": {:.4}, \
-                 \"prefix_hit_rate\": {:.4}, \"dequant_seconds\": {:.6}, \
-                 \"dequant_overhead\": {:.5}, \"ttft_p50_s\": {:.5}, \"isa\": \"{}\"}}",
-                dtype.name(),
-                m.throughput_tps(),
-                m.peak_active,
-                m.kv_bytes,
-                m.kv_bytes_per_token,
-                m.kv_bytes_per_token_k,
-                m.kv_bytes_per_token_v,
-                m.kv_pages_total,
-                m.int8_dot_fraction(),
-                m.ternary_dot_fraction(),
-                m.prefix_hit_rate(),
-                m.kv_dequant_seconds,
-                m.dequant_overhead(),
-                m.ttft_p50(),
-                m.kernel_isa,
-            ));
+            let knobs = Json::obj()
+                .field("kv_dtype", dtype.name())
+                .field("shared_prefix_len", shared_len);
+            records.push(bench_record(knobs, &m));
         }
     }
     println!(
         "\n(ternary K is 1.25 bits/channel — the budget buys the most pages; \
          its q·k rows never dequantize K, they walk per-query LUTs over packed codes)"
     );
-    let json = format!(
-        "{{\n  \"bench\": \"kv_ternary\",\n  \"records\": [\n{}\n  ]\n}}\n",
-        records.join(",\n")
-    );
-    let path = "BENCH_kv_ternary.json";
-    match std::fs::write(path, &json) {
-        Ok(()) => println!("[bench] wrote {path}"),
-        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
-    }
+    write_bench("BENCH_kv_ternary.json", "kv_ternary", records);
 }
 
-/// The tentpole knob isolated: the same shared-prefix trace through
+/// The integer-a·V knob isolated: the same shared-prefix trace through
 /// int8 and ternary pools with the fixed-point a·V pass on (default)
 /// and off (legacy dequant-per-block V). On, a decode round touches no
 /// f32 K or V page bytes — `av_rows_int8` meters every V row and the
@@ -476,37 +426,15 @@ fn int8_vpass_sweep(model: &TernaryModel) {
                 m.kv_tile_hits,
                 m.dequant_overhead(),
             );
-            records.push(format!(
-                "    {{\"kv_dtype\": \"{}\", \"integer_av\": {integer_av}, \
-                 \"tok_per_s\": {:.3}, \"av_rows_int8\": {}, \"tile_hits\": {}, \
-                 \"tile_misses\": {}, \"dequant_seconds\": {:.6}, \
-                 \"dequant_overhead\": {:.5}, \"prefix_hit_rate\": {:.4}, \
-                 \"peak_active\": {}, \"ttft_p50_s\": {:.5}, \"isa\": \"{}\"}}",
-                dtype.name(),
-                m.throughput_tps(),
-                m.kv_av_rows_int8,
-                m.kv_tile_hits,
-                m.kv_tile_misses,
-                m.kv_dequant_seconds,
-                m.dequant_overhead(),
-                m.prefix_hit_rate(),
-                m.peak_active,
-                m.ttft_p50(),
-                m.kernel_isa,
-            ));
+            let knobs = Json::obj()
+                .field("kv_dtype", dtype.name())
+                .field("integer_av", integer_av);
+            records.push(bench_record(knobs, &m));
         }
     }
     println!(
         "\n(on = softmax weights quantize to u8 fixed point and a·V accumulates in i32 over raw \
          int8 V bytes — zero hot-path dequant; off = the legacy f32 V walk with tile/scratch fills)"
     );
-    let json = format!(
-        "{{\n  \"bench\": \"int8_vpass\",\n  \"records\": [\n{}\n  ]\n}}\n",
-        records.join(",\n")
-    );
-    let path = "BENCH_int8_vpass.json";
-    match std::fs::write(path, &json) {
-        Ok(()) => println!("[bench] wrote {path}"),
-        Err(e) => eprintln!("[bench] could not write {path}: {e}"),
-    }
+    write_bench("BENCH_int8_vpass.json", "int8_vpass", records);
 }

@@ -1,7 +1,52 @@
-//! Serving metrics registry: counters + latency reservoirs, rendered as a
-//! human-readable report (and consumed by the Table 4 bench harness).
+//! Serving metrics registry: counters, bounded log-linear latency
+//! histograms, per-phase/per-kernel time attribution, and export — the
+//! human report, a machine-readable [`Metrics::snapshot`] JSON tree, and
+//! a Prometheus text exposition ([`Metrics::render_prometheus`]).
 
-use crate::util::stats;
+use crate::obs::hist::LogHistogram;
+use crate::obs::json::Json;
+use crate::obs::ring::FlightRecorder;
+
+/// Seconds the serve loop spent in each coordinator phase (disjoint
+/// spans on the coordinator thread → the sum is ≤ `wall_seconds`;
+/// idle sleeps between arrivals are deliberately unattributed).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseSeconds {
+    /// Arrival intake + page-counted admission.
+    pub admission: f64,
+    /// Radix prefix-index lookups and page leasing.
+    pub prefix_lookup: f64,
+    /// Ragged prefill micro-steps (≥ 1 prompt token fed).
+    pub prefill: f64,
+    /// Pure decode micro-steps.
+    pub decode: f64,
+}
+
+impl PhaseSeconds {
+    pub fn total(&self) -> f64 {
+        self.admission + self.prefix_lookup + self.prefill + self.decode
+    }
+}
+
+/// One dispatched kernel's CPU-seconds over a serve run, keyed kernel ×
+/// ISA × data plane (the kv-dtype for attention kernels, "weights" for
+/// the LUT-GEMM walks). GEMM walks run on the worker pool, so their
+/// CPU-seconds sum across workers and may exceed wall time — same
+/// contract as `kv_dequant_seconds`. Empty unless the process traced at
+/// `--trace kernels`.
+#[derive(Clone, Debug)]
+pub struct KernelStat {
+    /// `obs::Kernel::name()` (e.g. "qk_dot_i8", "gemm_pack34").
+    pub kernel: &'static str,
+    /// `obs::Kernel::plane()` ("int8" | "ternary" | "f32" | "weights").
+    pub plane: &'static str,
+    /// ISA the process dispatched through.
+    pub isa: String,
+    /// CPU-seconds inside the kernel across all threads.
+    pub cpu_seconds: f64,
+    /// Invocations (page blocks / GEMM tile ranges, not rows).
+    pub calls: u64,
+}
 
 /// Aggregated serving metrics.
 #[derive(Default, Clone, Debug)]
@@ -10,12 +55,32 @@ pub struct Metrics {
     pub requests_done: u64,
     pub tokens_generated: u64,
     pub decode_rounds: u64,
-    /// Per-request end-to-end latencies (s).
-    pub latencies: Vec<f64>,
-    /// Per-request time-to-first-token (s).
-    pub ttfts: Vec<f64>,
+    /// Per-request end-to-end latency (bounded log-linear histogram —
+    /// fixed memory however many requests the run serves).
+    pub latency_hist: LogHistogram,
+    /// Per-request time-to-first-token. Requests that finished without
+    /// emitting any token (e.g. oversized prompts) are **excluded** and
+    /// counted in [`Metrics::zero_token_finishes`] instead — recording
+    /// their full latency here would fabricate a first token.
+    pub ttft_hist: LogHistogram,
+    /// Inter-token latency: gap between consecutive token emissions of
+    /// one sequence (first tokens seed the clock, second+ record).
+    pub itl_hist: LogHistogram,
+    /// Decode-round wall duration.
+    pub round_hist: LogHistogram,
+    /// Requests retired with zero generated tokens (no TTFT exists).
+    pub zero_token_finishes: u64,
     /// Wall-clock of the serve loop (s).
     pub wall_seconds: f64,
+    /// Per-phase breakdown of the coordinator loop (all zero when the
+    /// run traced at `--trace off`).
+    pub phases: PhaseSeconds,
+    /// Per-kernel CPU-seconds (empty below `--trace kernels`).
+    pub kernels: Vec<KernelStat>,
+    /// Trace level the run was configured with ("off"|"phases"|"kernels").
+    pub trace_level: String,
+    /// Last [`crate::obs::ring::FLIGHT_RING_CAP`] decode rounds' vitals.
+    pub flight: FlightRecorder,
 
     // --- paged KV cache gauges ---
     /// Pages in the arena.
@@ -40,6 +105,9 @@ pub struct Metrics {
     pub kv_bytes_per_token_k: u64,
     /// V-plane share of `kv_bytes_per_token`.
     pub kv_bytes_per_token_v: u64,
+    /// KV storage dtype of the run's arena ("f32"|"int8"|"ternary";
+    /// empty when never recorded) — keys the kernel breakdown.
+    pub kv_dtype: String,
     /// CPU-seconds the page store spent dequantizing blocks into f32,
     /// summed across all worker threads — **residual** dequantization
     /// outside the decode hot path. With the integer a·V pass on (the
@@ -99,15 +167,29 @@ impl Metrics {
     }
 
     pub fn latency_p50(&self) -> f64 {
-        stats::percentile(&self.latencies, 50.0)
+        self.latency_hist.p50()
     }
 
     pub fn latency_p99(&self) -> f64 {
-        stats::percentile(&self.latencies, 99.0)
+        self.latency_hist.p99()
     }
 
     pub fn ttft_p50(&self) -> f64 {
-        stats::percentile(&self.ttfts, 50.0)
+        self.ttft_hist.p50()
+    }
+
+    pub fn ttft_p99(&self) -> f64 {
+        self.ttft_hist.p99()
+    }
+
+    /// Inter-token latency p50 (0 until any sequence emits twice).
+    pub fn itl_p50(&self) -> f64 {
+        self.itl_hist.p50()
+    }
+
+    /// Inter-token latency p99.
+    pub fn itl_p99(&self) -> f64 {
+        self.itl_hist.p99()
     }
 
     /// Peak fraction of the KV arena in use (0 when unpaged/untracked).
@@ -168,9 +250,12 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests: {}/{} done | tokens: {} | rounds: {} | wall: {:.2}s\n\
              throughput: {:.1} tok/s | latency p50/p99: {:.3}/{:.3}s | ttft p50: {:.3}s\n\
+             itl p50/p99: {:.4}/{:.4}s | round p50/p99: {:.4}/{:.4}s | zero-token finishes: {}\n\
+             phases: admission {:.3}s | prefix {:.3}s | prefill {:.3}s | decode {:.3}s \
+             (sum {:.3}s, trace: {})\n\
              kv: {}/{} pages peak ({:.0}% util) | {} B/token (K {} + V {}) | dequant: {:.3} cpu-s\n\
              int8 q·k: {:.0}% | ternary q·k: {:.0}% of dot rows | int8 a·V rows: {} | tile cache: {:.0}% hits ({}/{}) | kernel isa: {}\n\
              prefix hit-rate: {:.0}% ({} hits) | \
@@ -184,6 +269,17 @@ impl Metrics {
             self.latency_p50(),
             self.latency_p99(),
             self.ttft_p50(),
+            self.itl_p50(),
+            self.itl_p99(),
+            self.round_hist.p50(),
+            self.round_hist.p99(),
+            self.zero_token_finishes,
+            self.phases.admission,
+            self.phases.prefix_lookup,
+            self.phases.prefill,
+            self.phases.decode,
+            self.phases.total(),
+            if self.trace_level.is_empty() { "unrecorded" } else { &self.trace_level },
             self.kv_pages_peak,
             self.kv_pages_total,
             100.0 * self.block_utilization(),
@@ -202,7 +298,205 @@ impl Metrics {
             self.prefix_hits,
             self.peak_active,
             self.context_limit_finishes,
-        )
+        );
+        for k in &self.kernels {
+            s.push_str(&format!(
+                "\nkernel {}[{}/{}]: {:.4} cpu-s over {} calls",
+                k.kernel, k.isa, k.plane, k.cpu_seconds, k.calls
+            ));
+        }
+        s
+    }
+
+    fn hist_json(h: &LogHistogram) -> Json {
+        Json::obj()
+            .field("count", h.count())
+            .field("mean_s", h.mean_secs())
+            .field("min_s", h.min_secs())
+            .field("p50_s", h.p50())
+            .field("p90_s", h.p90())
+            .field("p99_s", h.p99())
+            .field("p999_s", h.p999())
+            .field("max_s", h.max_secs())
+    }
+
+    /// The full metrics tree as a serializable [`Json`] value — what
+    /// `--metrics-json` writes and the bench JSON records embed. Keys
+    /// are stable; the golden round-trip test pins the required set.
+    pub fn snapshot(&self) -> Json {
+        let phases = Json::obj()
+            .field("admission_s", self.phases.admission)
+            .field("prefix_lookup_s", self.phases.prefix_lookup)
+            .field("prefill_s", self.phases.prefill)
+            .field("decode_s", self.phases.decode)
+            .field("total_s", self.phases.total());
+        let kernels = Json::Arr(
+            self.kernels
+                .iter()
+                .map(|k| {
+                    Json::obj()
+                        .field("kernel", k.kernel)
+                        .field("plane", k.plane)
+                        .field("isa", k.isa.clone())
+                        .field("cpu_seconds", k.cpu_seconds)
+                        .field("calls", k.calls)
+                })
+                .collect(),
+        );
+        let kv = Json::obj()
+            .field("dtype", self.kv_dtype.clone())
+            .field("pages_total", self.kv_pages_total)
+            .field("pages_peak", self.kv_pages_peak)
+            .field("pages_index", self.kv_pages_index)
+            .field("pages_end_in_use", self.kv_pages_end_in_use)
+            .field("bytes", self.kv_bytes)
+            .field("bytes_per_token", self.kv_bytes_per_token)
+            .field("bytes_per_token_k", self.kv_bytes_per_token_k)
+            .field("bytes_per_token_v", self.kv_bytes_per_token_v)
+            .field("dequant_seconds", self.kv_dequant_seconds)
+            .field("dequant_overhead", self.dequant_overhead())
+            .field("qk_rows_int8", self.kv_qk_rows_int8)
+            .field("qk_rows_f32", self.kv_qk_rows_f32)
+            .field("qk_rows_ternary", self.kv_qk_rows_ternary)
+            .field("int8_dot_fraction", self.int8_dot_fraction())
+            .field("ternary_dot_fraction", self.ternary_dot_fraction())
+            .field("av_rows_int8", self.kv_av_rows_int8)
+            .field("tile_hits", self.kv_tile_hits)
+            .field("tile_misses", self.kv_tile_misses)
+            .field("tile_cache_hit_rate", self.tile_cache_hit_rate())
+            .field("block_utilization", self.block_utilization());
+        let prefix = Json::obj()
+            .field("prompt_tokens", self.prompt_tokens)
+            .field("hit_tokens", self.prefix_hit_tokens)
+            .field("hits", self.prefix_hits)
+            .field("hit_rate", self.prefix_hit_rate())
+            .field("flushes", self.prefix_flushes);
+        let flight = Json::Arr(
+            self.flight
+                .records()
+                .into_iter()
+                .map(|r| {
+                    Json::obj()
+                        .field("round", r.round)
+                        .field("active", r.active)
+                        .field("pages_in_use", r.pages_in_use)
+                        .field("tokens", r.tokens)
+                        .field("duration_s", r.duration_s)
+                })
+                .collect(),
+        );
+        Json::obj()
+            .field("schema_version", 1u64)
+            .field("requests_in", self.requests_in)
+            .field("requests_done", self.requests_done)
+            .field("tokens_generated", self.tokens_generated)
+            .field("decode_rounds", self.decode_rounds)
+            .field("wall_seconds", self.wall_seconds)
+            .field("throughput_tps", self.throughput_tps())
+            .field("kernel_isa", self.kernel_isa.clone())
+            .field("trace_level", self.trace_level.clone())
+            .field("zero_token_finishes", self.zero_token_finishes)
+            .field("peak_active", self.peak_active)
+            .field("context_limit_finishes", self.context_limit_finishes)
+            .field("latency", Self::hist_json(&self.latency_hist))
+            .field("ttft", Self::hist_json(&self.ttft_hist))
+            .field("inter_token", Self::hist_json(&self.itl_hist))
+            .field("decode_round", Self::hist_json(&self.round_hist))
+            .field("phases", phases)
+            .field("kernels", kernels)
+            .field("kv", kv)
+            .field("prefix", prefix)
+            .field("flight", flight)
+    }
+
+    /// Prometheus text exposition (0.0.4) of the snapshot's scalar
+    /// surface: counters, gauges, histogram quantiles as labeled gauges,
+    /// per-phase seconds, and per-kernel CPU-seconds. Quantiles are
+    /// pre-computed (this is an end-of-run exposition, not a live
+    /// scrape target), which keeps the writer dependency-free.
+    pub fn render_prometheus(&self) -> String {
+        let mut s = String::new();
+        let mut counter = |out: &mut String, name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP sherry_{name} {help}\n# TYPE sherry_{name} counter\nsherry_{name} {v}\n"
+            ));
+        };
+        let mut gauge = |out: &mut String, name: &str, help: &str, v: f64| {
+            out.push_str(&format!(
+                "# HELP sherry_{name} {help}\n# TYPE sherry_{name} gauge\nsherry_{name} {v}\n"
+            ));
+        };
+        counter(&mut s, "requests_total", "Requests submitted", self.requests_in as f64);
+        counter(&mut s, "requests_done_total", "Requests completed", self.requests_done as f64);
+        counter(&mut s, "tokens_generated_total", "Generated tokens", self.tokens_generated as f64);
+        counter(&mut s, "decode_rounds_total", "Fused decode rounds", self.decode_rounds as f64);
+        counter(
+            &mut s,
+            "zero_token_finishes_total",
+            "Requests retired without emitting a token",
+            self.zero_token_finishes as f64,
+        );
+        gauge(&mut s, "wall_seconds", "Serve-loop wall clock", self.wall_seconds);
+        gauge(&mut s, "throughput_tps", "Generated tokens per second", self.throughput_tps());
+        gauge(&mut s, "kv_pages_peak", "High-water KV pages in use", self.kv_pages_peak as f64);
+        gauge(&mut s, "kv_pages_total", "KV pages in the arena", self.kv_pages_total as f64);
+        gauge(
+            &mut s,
+            "kv_dequant_cpu_seconds",
+            "Residual dequantization CPU-seconds",
+            self.kv_dequant_seconds,
+        );
+        gauge(&mut s, "peak_active", "Peak concurrent sequences", self.peak_active as f64);
+        for (name, help, h) in [
+            ("latency_seconds", "End-to-end request latency", &self.latency_hist),
+            ("ttft_seconds", "Time to first token", &self.ttft_hist),
+            ("inter_token_seconds", "Inter-token latency", &self.itl_hist),
+            ("decode_round_seconds", "Decode round duration", &self.round_hist),
+        ] {
+            s.push_str(&format!(
+                "# HELP sherry_{name} {help} (log-linear histogram summary)\n\
+                 # TYPE sherry_{name} summary\n"
+            ));
+            for (q, v) in [
+                ("0.5", h.p50()),
+                ("0.9", h.p90()),
+                ("0.99", h.p99()),
+                ("0.999", h.p999()),
+            ] {
+                s.push_str(&format!("sherry_{name}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            s.push_str(&format!("sherry_{name}_count {}\n", h.count()));
+            s.push_str(&format!("sherry_{name}_sum {}\n", h.mean_secs() * h.count() as f64));
+        }
+        s.push_str(
+            "# HELP sherry_phase_seconds Coordinator time per phase\n\
+             # TYPE sherry_phase_seconds gauge\n",
+        );
+        for (phase, v) in [
+            ("admission", self.phases.admission),
+            ("prefix_lookup", self.phases.prefix_lookup),
+            ("prefill", self.phases.prefill),
+            ("decode", self.phases.decode),
+        ] {
+            s.push_str(&format!("sherry_phase_seconds{{phase=\"{phase}\"}} {v}\n"));
+        }
+        if !self.kernels.is_empty() {
+            s.push_str(
+                "# HELP sherry_kernel_cpu_seconds CPU-seconds per dispatched kernel\n\
+                 # TYPE sherry_kernel_cpu_seconds gauge\n",
+            );
+            for k in &self.kernels {
+                s.push_str(&format!(
+                    "sherry_kernel_cpu_seconds{{kernel=\"{}\",isa=\"{}\",plane=\"{}\"}} {}\n",
+                    k.kernel, k.isa, k.plane, k.cpu_seconds
+                ));
+                s.push_str(&format!(
+                    "sherry_kernel_calls{{kernel=\"{}\",isa=\"{}\",plane=\"{}\"}} {}\n",
+                    k.kernel, k.isa, k.plane, k.calls
+                ));
+            }
+        }
+        s
     }
 }
 
@@ -326,5 +620,156 @@ mod tests {
         // Summed across workers: more dequant CPU than wall is legal.
         let busy = Metrics { wall_seconds: 1.0, kv_dequant_seconds: 3.0, ..Default::default() };
         assert_eq!(busy.dequant_overhead(), 3.0);
+    }
+
+    fn sample_metrics() -> Metrics {
+        let mut m = Metrics {
+            requests_in: 4,
+            requests_done: 4,
+            tokens_generated: 40,
+            decode_rounds: 10,
+            wall_seconds: 0.5,
+            trace_level: "phases".to_string(),
+            kernel_isa: "scalar".to_string(),
+            kv_dtype: "int8".to_string(),
+            zero_token_finishes: 1,
+            phases: PhaseSeconds {
+                admission: 0.01,
+                prefix_lookup: 0.002,
+                prefill: 0.08,
+                decode: 0.3,
+            },
+            kernels: vec![KernelStat {
+                kernel: "qk_dot_i8",
+                plane: "int8",
+                isa: "scalar".to_string(),
+                cpu_seconds: 0.123,
+                calls: 77,
+            }],
+            ..Default::default()
+        };
+        for x in [0.01, 0.02, 0.03, 0.5] {
+            m.latency_hist.record_secs(x);
+            m.ttft_hist.record_secs(x / 2.0);
+        }
+        for _ in 0..36 {
+            m.itl_hist.record_secs(0.01);
+        }
+        for _ in 0..10 {
+            m.round_hist.record_secs(0.04);
+        }
+        m.flight.push(crate::obs::ring::RoundRecord {
+            round: 9,
+            active: 4,
+            pages_in_use: 7,
+            tokens: 4,
+            duration_s: 0.04,
+        });
+        m
+    }
+
+    #[test]
+    fn report_surfaces_phase_itl_and_kernel_lines() {
+        let r = sample_metrics().report();
+        assert!(r.contains("itl p50/p99: 0.0100/0.0100s"), "{r}");
+        assert!(r.contains("round p50/p99: 0.0400/0.0400s"), "{r}");
+        assert!(r.contains("zero-token finishes: 1"), "{r}");
+        assert!(
+            r.contains("phases: admission 0.010s | prefix 0.002s | prefill 0.080s | decode 0.300s"),
+            "{r}"
+        );
+        assert!(r.contains("(sum 0.392s, trace: phases)"), "{r}");
+        assert!(r.contains("kernel qk_dot_i8[scalar/int8]: 0.1230 cpu-s over 77 calls"), "{r}");
+        // Default metrics keep the report well-formed with no kernels.
+        let bare = Metrics::default().report();
+        assert!(bare.contains("trace: unrecorded"), "{bare}");
+        assert!(!bare.contains("kernel qk"), "{bare}");
+    }
+
+    #[test]
+    fn snapshot_round_trips_with_all_required_keys() {
+        // The golden test: snapshot → render → parse must preserve every
+        // required key, and the values must match the source metrics.
+        let m = sample_metrics();
+        let snap = m.snapshot();
+        for text in [snap.render(), snap.render_pretty()] {
+            let back = Json::parse(&text).expect("snapshot must parse back");
+            assert_eq!(back, snap, "round-trip must be lossless");
+        }
+        for key in [
+            "schema_version",
+            "requests_in",
+            "requests_done",
+            "tokens_generated",
+            "decode_rounds",
+            "wall_seconds",
+            "throughput_tps",
+            "kernel_isa",
+            "trace_level",
+            "zero_token_finishes",
+            "peak_active",
+            "context_limit_finishes",
+            "latency",
+            "ttft",
+            "inter_token",
+            "decode_round",
+            "phases",
+            "kernels",
+            "kv",
+            "prefix",
+            "flight",
+        ] {
+            assert!(snap.get(key).is_some(), "snapshot missing key {key}");
+        }
+        assert_eq!(snap.get("wall_seconds").unwrap().as_f64(), Some(0.5));
+        assert_eq!(snap.get("trace_level").unwrap().as_str(), Some("phases"));
+        let hist = snap.get("latency").unwrap();
+        for key in ["count", "mean_s", "min_s", "p50_s", "p90_s", "p99_s", "p999_s", "max_s"] {
+            assert!(hist.get(key).is_some(), "histogram summary missing {key}");
+        }
+        assert_eq!(hist.get("count").unwrap().as_f64(), Some(4.0));
+        let phases = snap.get("phases").unwrap();
+        let sum: f64 = ["admission_s", "prefix_lookup_s", "prefill_s", "decode_s"]
+            .iter()
+            .map(|k| phases.get(k).unwrap().as_f64().unwrap())
+            .sum();
+        assert!(sum >= 0.0);
+        assert!(sum <= m.wall_seconds, "phase seconds must sum to <= wall");
+        let kernels = snap.get("kernels").unwrap().as_arr().unwrap();
+        assert_eq!(kernels[0].get("kernel").unwrap().as_str(), Some("qk_dot_i8"));
+        assert_eq!(kernels[0].get("plane").unwrap().as_str(), Some("int8"));
+        let kv = snap.get("kv").unwrap();
+        assert_eq!(kv.get("dtype").unwrap().as_str(), Some("int8"));
+        let flight = snap.get("flight").unwrap().as_arr().unwrap();
+        assert_eq!(flight[0].get("round").unwrap().as_f64(), Some(9.0));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_the_core_families() {
+        let text = sample_metrics().render_prometheus();
+        for needle in [
+            "# TYPE sherry_requests_total counter",
+            "sherry_tokens_generated_total 40",
+            "# TYPE sherry_latency_seconds summary",
+            "sherry_inter_token_seconds{quantile=\"0.99\"}",
+            "sherry_phase_seconds{phase=\"decode\"} 0.3",
+            "sherry_kernel_cpu_seconds{kernel=\"qk_dot_i8\",isa=\"scalar\",plane=\"int8\"} 0.123",
+            "sherry_zero_token_finishes_total 1",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn histograms_replace_reservoirs_with_fixed_memory() {
+        // The tentpole bound: a million recorded latencies must not grow
+        // per-request storage (the old Vec<f64> reservoirs did).
+        let mut m = Metrics::default();
+        for i in 0..100_000u64 {
+            m.latency_hist.record(1_000_000 + i * 17);
+        }
+        assert_eq!(m.latency_hist.count(), 100_000);
+        assert!(m.latency_p50() > 0.0);
+        assert!(m.latency_p99() >= m.latency_p50());
     }
 }

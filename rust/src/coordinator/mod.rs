@@ -32,7 +32,7 @@ mod server;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use kvpool::PagedKv;
-pub use metrics::Metrics;
+pub use metrics::{KernelStat, Metrics, PhaseSeconds};
 pub use sampler::{Sampler, SamplerConfig};
 pub use server::{serve_trace, Server, ServerConfig, TraceSpec};
 

@@ -43,11 +43,13 @@
 use std::time::Instant;
 
 use super::{
-    Batcher, BatcherConfig, Completion, FinishReason, Metrics, PagedKv, Request, Sampler,
-    SamplerConfig,
+    Batcher, BatcherConfig, Completion, FinishReason, KernelStat, Metrics, PagedKv, Request,
+    Sampler, SamplerConfig,
 };
 use crate::cache::{BlockTable, KvBatch, KvDtype};
 use crate::engine::TernaryModel;
+use crate::obs::ring::RoundRecord;
+use crate::obs::{self, Phase, PhaseClock, TraceLevel};
 use crate::util::{Pcg64, ThreadPool};
 
 /// Server configuration.
@@ -86,6 +88,13 @@ pub struct ServerConfig {
     /// Decode sampling policy (greedy by default).
     pub sampler: SamplerConfig,
     pub workers: usize,
+    /// Tracing depth for this run (`--trace`): `Off` disables the phase
+    /// clock entirely (spans cost one branch, no clock reads — the f32
+    /// parity path is untouched bit-for-bit); `Phases` (default) times
+    /// the coordinator phases; `Kernels` additionally meters the
+    /// dispatched hot loops (which is gated on the *process* trace level,
+    /// `obs::set_trace_level`, since kernels run below the coordinator).
+    pub trace: TraceLevel,
 }
 
 impl Default for ServerConfig {
@@ -100,6 +109,9 @@ impl Default for ServerConfig {
             integer_av: true,
             sampler: SamplerConfig::default(),
             workers: ThreadPool::default_size(),
+            // Inherit the process level so `sherry serve --trace ...`
+            // (which pins it before building the config) propagates.
+            trace: obs::trace_level(),
         }
     }
 }
@@ -159,6 +171,9 @@ struct SeqState {
     fed: usize,
     tokens: Vec<u32>,
     first_token_at: Option<f64>,
+    /// Trace-clock time of the last emitted token — seeds the
+    /// inter-token-latency histogram from the second emission on.
+    last_emit_at: Option<f64>,
     finish: Option<FinishReason>,
 }
 
@@ -192,6 +207,12 @@ impl<'m> Server<'m> {
         kv.set_tile_cache_capacity(self.cfg.tile_cache_tiles);
         kv.set_integer_av(self.cfg.integer_av);
         let mut metrics = Metrics { requests_in: trace.len() as u64, ..Default::default() };
+        // Per-run phase clock (no global state: concurrent runs in one
+        // process, e.g. parallel tests, never cross-attribute). Kernel
+        // counters ARE process-global, so snapshot a baseline and report
+        // this run as the delta.
+        let phases = PhaseClock::new(self.cfg.trace != TraceLevel::Off);
+        let kernel_base = obs::kernel_totals();
         let mut completions = Vec::new();
         let mut states: Vec<SeqState> = Vec::new();
         let mut scratch = crate::engine::Scratch::default();
@@ -200,12 +221,17 @@ impl<'m> Server<'m> {
 
         while next_arrival < trace.len() || !batcher.is_idle() {
             // Admit arrivals whose time has come on the wall clock.
-            let now = clock(t0);
-            while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
-                batcher.submit(trace[next_arrival].clone());
-                next_arrival += 1;
+            {
+                let _s = phases.span(Phase::Admission);
+                let now = clock(t0);
+                while next_arrival < trace.len() && trace[next_arrival].arrival <= now {
+                    batcher.submit(trace[next_arrival].clone());
+                    next_arrival += 1;
+                }
             }
-            // Idle with future arrivals: sleep toward the next one.
+            // Idle with future arrivals: sleep toward the next one (the
+            // sleep is deliberately unattributed — it is idle wall time,
+            // not coordinator work, so phase seconds stay ≤ wall).
             if batcher.is_idle() {
                 if next_arrival >= trace.len() {
                     break;
@@ -219,30 +245,41 @@ impl<'m> Server<'m> {
             // arena's free pages, net of what already-active sequences
             // may still claim — so a decode step can never hit arena
             // exhaustion mid-round.
-            let outstanding: usize = states
-                .iter()
-                .map(|st| st.page_need.saturating_sub(st.table.owned_pages()))
-                .sum();
-            let free = kv.free_pages().saturating_sub(outstanding);
-            let before = batcher.active_len();
-            let admitted = batcher.admit_pages(free, |r| kv.page_need(r));
-            if admitted == 0
-                && batcher.active_len() == 0
-                && batcher.waiting_len() > 0
-                && kv.index_pages() > 0
-            {
-                // Frozen prefix pages are starving admission: evict the
-                // index's zero-lease nodes (with the active set empty
-                // every frozen page qualifies; LRU ordering over the
-                // unreferenced set is a ROADMAP item) and retry so the
-                // queue head cannot deadlock.
-                metrics.prefix_flushes += 1;
-                kv.flush_index();
-                batcher.admit_pages(kv.free_pages(), |r| kv.page_need(r));
-            }
+            let before = {
+                let _s = phases.span(Phase::Admission);
+                let outstanding: usize = states
+                    .iter()
+                    .map(|st| st.page_need.saturating_sub(st.table.owned_pages()))
+                    .sum();
+                let free = kv.free_pages().saturating_sub(outstanding);
+                let before = batcher.active_len();
+                let admitted = batcher.admit_pages(free, |r| kv.page_need(r));
+                if admitted == 0
+                    && batcher.active_len() == 0
+                    && batcher.waiting_len() > 0
+                    && kv.index_pages() > 0
+                {
+                    // Frozen prefix pages are starving admission: evict
+                    // the index's zero-lease nodes (with the active set
+                    // empty every frozen page qualifies; LRU ordering
+                    // over the unreferenced set is a ROADMAP item) and
+                    // retry so the queue head cannot deadlock.
+                    metrics.prefix_flushes += 1;
+                    kv.flush_index();
+                    batcher.admit_pages(kv.free_pages(), |r| kv.page_need(r));
+                }
+                before
+            };
             for idx in before..batcher.active_len() {
                 let req = &batcher.active()[idx].0;
-                let (table, shared) = kv.lease(&req.prompt);
+                // Radix-index walk + page leasing is its own phase;
+                // everything else in admitting a request is Admission.
+                // (Sibling spans, never nested — the sum stays ≤ wall.)
+                let (table, shared) = {
+                    let _s = phases.span(Phase::PrefixLookup);
+                    kv.lease(&req.prompt)
+                };
+                let _s = phases.span(Phase::Admission);
                 // Only positions up to the context limit are ever
                 // prefilled; count the denominator accordingly.
                 metrics.prompt_tokens += req.prompt.len().min(seq_cap) as u64;
@@ -265,6 +302,7 @@ impl<'m> Server<'m> {
                     fed: shared,
                     tokens: Vec::new(),
                     first_token_at: None,
+                    last_emit_at: None,
                     finish: None,
                     table,
                 });
@@ -286,12 +324,15 @@ impl<'m> Server<'m> {
             // across its sequences. A sequence at the context limit is
             // never fed (the engine's overflow contract): it finishes
             // gracefully with FinishReason::ContextLimit below.
+            let round_start = Instant::now();
+            let mut round_tokens = 0u32;
             let mut emitted = vec![false; states.len()];
             {
                 let active = batcher.active();
                 loop {
                     // (state index, token, emits-an-output)
                     let mut plan: Vec<(usize, u32, bool)> = Vec::new();
+                    let mut feeds_prompt = false;
                     for (i, st) in states.iter_mut().enumerate() {
                         if st.finish.is_some() {
                             continue;
@@ -316,11 +357,17 @@ impl<'m> Server<'m> {
                             }
                             let emits = st.fed + 1 == req.prompt.len();
                             plan.push((i, req.prompt[st.fed], emits));
+                            feeds_prompt = true;
                         }
                     }
                     if plan.is_empty() {
                         break;
                     }
+                    // A micro-step feeding any prompt token is prefill
+                    // work; a pure-generation step is decode. The span
+                    // covers the fused forward and sampling.
+                    let _step =
+                        phases.span(if feeds_prompt { Phase::Prefill } else { Phase::Decode });
                     let toks: Vec<u32> = plan.iter().map(|&(_, t, _)| t).collect();
                     // Disjoint &mut block tables for the selected
                     // sequences (plan indices are strictly ascending).
@@ -355,12 +402,22 @@ impl<'m> Server<'m> {
                             st.tokens.push(next);
                             emitted[i] = true;
                             tokens_done += 1;
+                            round_tokens += 1;
                         }
                     }
                 }
             }
             metrics.decode_rounds += 1;
             metrics.peak_active = metrics.peak_active.max(states.len() as u64);
+            let round_s = round_start.elapsed().as_secs_f64();
+            metrics.round_hist.record_secs(round_s);
+            metrics.flight.push(RoundRecord {
+                round: metrics.decode_rounds - 1,
+                active: states.len() as u32,
+                pages_in_use: kv.used_pages() as u32,
+                tokens: round_tokens,
+                duration_s: round_s,
+            });
 
             // Bookkeeping: freeze prefilled prompts into the prefix
             // index, record first-token times, advance, retire.
@@ -369,6 +426,15 @@ impl<'m> Server<'m> {
             for (i, st) in states.iter_mut().enumerate() {
                 if st.first_token_at.is_none() && !st.tokens.is_empty() {
                     st.first_token_at = Some(now);
+                }
+                if emitted[i] {
+                    // Inter-token latency: gap between consecutive
+                    // emissions of one sequence (the first emission only
+                    // seeds the clock).
+                    if let Some(prev) = st.last_emit_at {
+                        metrics.itl_hist.record_secs(now - prev);
+                    }
+                    st.last_emit_at = Some(now);
                 }
                 if st.prompt_done && !st.registered {
                     kv.register(&batcher.active()[i].0.prompt, &st.table);
@@ -408,8 +474,15 @@ impl<'m> Server<'m> {
                     ttft: st.first_token_at.unwrap_or(now) - arrival,
                     latency: now - arrival,
                 });
-                metrics.ttfts.push(st.first_token_at.unwrap_or(now) - arrival);
-                metrics.latencies.push(now - arrival);
+                // A request that never emitted has no first token: folding
+                // its full latency into the TTFT histogram (the seed's
+                // `unwrap_or(now)`) would fabricate a sample, so it is
+                // counted separately instead.
+                match st.first_token_at {
+                    Some(t) => metrics.ttft_hist.record_secs(t - arrival),
+                    None => metrics.zero_token_finishes += 1,
+                }
+                metrics.latency_hist.record_secs(now - arrival);
             }
             batcher.retire(&finished);
         }
@@ -434,7 +507,29 @@ impl<'m> Server<'m> {
         let (tile_hits, tile_misses) = kv.tile_cache_stats();
         metrics.kv_tile_hits = tile_hits;
         metrics.kv_tile_misses = tile_misses;
-        metrics.kernel_isa = crate::simd::active().name().to_string();
+        let isa = crate::simd::active().name();
+        metrics.kernel_isa = isa.to_string();
+        metrics.kv_dtype = self.cfg.kv_dtype.name().to_string();
+        metrics.trace_level = self.cfg.trace.name().to_string();
+        metrics.phases.admission = phases.seconds(Phase::Admission);
+        metrics.phases.prefix_lookup = phases.seconds(Phase::PrefixLookup);
+        metrics.phases.prefill = phases.seconds(Phase::Prefill);
+        metrics.phases.decode = phases.seconds(Phase::Decode);
+        // Kernel CPU-seconds this run contributed (empty unless the
+        // process traced at `kernels`). GEMM walks run on the worker
+        // pool, so their seconds sum across workers like
+        // `kv_dequant_seconds` does and may exceed wall time.
+        metrics.kernels = obs::kernel_totals()
+            .delta_since(&kernel_base)
+            .into_iter()
+            .map(|d| KernelStat {
+                kernel: d.kernel.name(),
+                plane: d.kernel.plane(),
+                isa: isa.to_string(),
+                cpu_seconds: d.nanos as f64 * 1e-9,
+                calls: d.calls,
+            })
+            .collect();
         (completions, metrics)
     }
 }
@@ -883,5 +978,149 @@ mod tests {
             metrics.peak_active
         );
         assert_eq!(metrics.kv_pages_total, 2 * 16); // same byte budget
+    }
+
+    #[test]
+    fn phase_seconds_are_nonnegative_and_sum_to_at_most_wall() {
+        // The tentpole acceptance test: the trace report must break wall
+        // time into admission / prefix lookup / prefill / decode, with
+        // disjoint spans (sum ≤ wall) and real work attributed.
+        let m = model();
+        let cfg = ServerConfig { trace: TraceLevel::Phases, ..Default::default() };
+        let (completions, metrics) = serve_trace(&m, cfg, spec(6, 4, 5, 1));
+        assert_eq!(completions.len(), 6);
+        let p = metrics.phases;
+        for (name, v) in [
+            ("admission", p.admission),
+            ("prefix_lookup", p.prefix_lookup),
+            ("prefill", p.prefill),
+            ("decode", p.decode),
+        ] {
+            assert!(v >= 0.0, "{name} must be non-negative, got {v}");
+        }
+        // Instant-nanos rounding can only lose time, never add it, but
+        // leave a whisker of epsilon for the f64 conversions.
+        assert!(
+            p.total() <= metrics.wall_seconds + 1e-6,
+            "phase sum {} must be ≤ wall {}",
+            p.total(),
+            metrics.wall_seconds
+        );
+        // Real work ran, so the forward-pass phases must have moved, and
+        // prompts exist, so prefill specifically is nonzero.
+        assert!(p.prefill > 0.0, "prompt feeding must attribute prefill time");
+        assert!(p.decode > 0.0, "generation must attribute decode time");
+        assert_eq!(metrics.trace_level, "phases");
+        assert_eq!(metrics.kv_dtype, "f32");
+        // Round-duration histogram: one sample per decode round.
+        assert_eq!(metrics.round_hist.count(), metrics.decode_rounds);
+        assert!(metrics.round_hist.p50() > 0.0);
+        // 5 tokens per request → 4 inter-token gaps each.
+        assert_eq!(metrics.itl_hist.count(), 6 * 4);
+        assert!(metrics.itl_p50() >= 0.0 && metrics.itl_p99() >= metrics.itl_p50());
+        // Latency/TTFT histograms replaced the reservoirs one-for-one.
+        assert_eq!(metrics.latency_hist.count(), 6);
+        assert_eq!(metrics.ttft_hist.count(), 6);
+        assert_eq!(metrics.zero_token_finishes, 0);
+        // And the snapshot carries the same invariant.
+        let snap = metrics.snapshot();
+        let phases = snap.get("phases").unwrap();
+        assert!(phases.get("total_s").unwrap().as_f64().unwrap() <= metrics.wall_seconds + 1e-6);
+    }
+
+    #[test]
+    fn trace_off_records_no_phases_and_identical_tokens() {
+        // `--trace off` is the zero-overhead contract: no phase clock
+        // reads, and — since tracing never touches kernel inputs — the
+        // f32 parity path produces bit-for-bit the same tokens.
+        let m = model();
+        let s = spec(4, 3, 4, 7);
+        let off = ServerConfig { trace: TraceLevel::Off, ..Default::default() };
+        let on = ServerConfig { trace: TraceLevel::Phases, ..Default::default() };
+        let (mut c_off, m_off) = serve_trace(&m, off, s);
+        let (mut c_on, _) = serve_trace(&m, on, s);
+        assert_eq!(m_off.phases.total(), 0.0, "off-level runs must not attribute time");
+        assert_eq!(m_off.trace_level, "off");
+        c_off.sort_by_key(|c| c.id);
+        c_on.sort_by_key(|c| c.id);
+        for (a, b) in c_off.iter().zip(&c_on) {
+            assert_eq!(a.tokens, b.tokens, "tracing changed tokens for request {}", a.id);
+        }
+        // Latency accounting is unconditional — only attribution is off.
+        assert_eq!(m_off.latency_hist.count(), 4);
+        assert_eq!(m_off.round_hist.count(), m_off.decode_rounds);
+    }
+
+    #[test]
+    fn zero_token_finish_is_excluded_from_ttft() {
+        // The seed folded `first_token_at.unwrap_or(now)` into the TTFT
+        // reservoir, so a request that never emitted recorded its FULL
+        // latency as a time-to-first-token. It must be excluded and
+        // counted separately instead.
+        let m = model();
+        let (completions, metrics) =
+            serve_trace(&m, ServerConfig::default(), spec(1, 80, 4, 3));
+        assert_eq!(completions.len(), 1);
+        assert!(completions[0].tokens.is_empty());
+        assert_eq!(metrics.zero_token_finishes, 1);
+        assert!(metrics.ttft_hist.is_empty(), "no first token → no TTFT sample");
+        assert_eq!(metrics.latency_hist.count(), 1, "latency is still a real sample");
+        assert!(metrics.report().contains("zero-token finishes: 1"), "{}", metrics.report());
+    }
+
+    #[test]
+    fn flight_recorder_captures_every_round_up_to_capacity() {
+        let m = model();
+        let (_, metrics) = serve_trace(&m, ServerConfig::default(), spec(5, 3, 6, 17));
+        assert_eq!(metrics.flight.total(), metrics.decode_rounds);
+        let recs = metrics.flight.records();
+        assert_eq!(
+            recs.len(),
+            (metrics.decode_rounds as usize).min(crate::obs::ring::FLIGHT_RING_CAP)
+        );
+        let mut tokens_in_flight = 0u64;
+        for r in &recs {
+            assert!(r.duration_s >= 0.0);
+            assert!(u64::from(r.pages_in_use) <= metrics.kv_pages_peak);
+            tokens_in_flight += u64::from(r.tokens);
+        }
+        // Short run: the ring did not wrap, so its tokens are ALL tokens.
+        assert_eq!(tokens_in_flight, metrics.tokens_generated);
+        for w in recs.windows(2) {
+            assert_eq!(w[1].round, w[0].round + 1, "rounds are recorded in order");
+        }
+    }
+
+    #[test]
+    fn kernel_tracing_attributes_cpu_seconds_by_kernel_and_plane() {
+        // `--trace kernels`: the dispatched hot loops must show up keyed
+        // kernel × ISA × data plane. (The level is process-global; other
+        // suites only ever *raise* it transiently, which can add entries
+        // but never remove the ones this run produces.)
+        let prior = obs::trace_level();
+        obs::set_trace_level(TraceLevel::Kernels);
+        let m = model();
+        let cfg = ServerConfig { trace: TraceLevel::Kernels, ..Default::default() };
+        let (completions, metrics) = serve_trace(&m, cfg, spec(4, 4, 5, 1));
+        obs::set_trace_level(prior);
+        assert_eq!(completions.len(), 4);
+        assert!(!metrics.kernels.is_empty(), "kernels level must attribute kernel time");
+        let isa = crate::simd::active().name();
+        for k in &metrics.kernels {
+            assert!(k.cpu_seconds >= 0.0);
+            assert!(k.calls > 0, "delta reporting skips idle kernels");
+            assert_eq!(k.isa, isa);
+            assert!(["int8", "ternary", "f32", "weights"].contains(&k.plane), "{}", k.kernel);
+        }
+        // A Sherry-format model forwards through the pack34 tile walk,
+        // and an f32 pool's attention runs the f32 arms.
+        let names: Vec<&str> = metrics.kernels.iter().map(|k| k.kernel).collect();
+        assert!(names.contains(&"gemm_pack34"), "{names:?}");
+        assert!(names.contains(&"qk_f32"), "{names:?}");
+        assert!(names.contains(&"av_f32"), "{names:?}");
+        // The report and snapshot carry the breakdown.
+        assert!(metrics.report().contains("kernel gemm_pack34["), "{}", metrics.report());
+        let snap = metrics.snapshot();
+        assert!(!snap.get("kernels").unwrap().as_arr().unwrap().is_empty());
     }
 }

@@ -578,8 +578,12 @@ fn attention_blocked(
     q_scales.clear();
     q_luts.clear();
     let (mut native_rows, mut dequant_rows, mut ternary_rows) = (0u64, 0u64, 0u64);
+    // Each match arm opens a `KernelSpan` over its whole page block (one
+    // Instant pair per block at `--trace kernels`, one relaxed load and
+    // no clock reads below it) — tracing never touches the numerics.
     kl.for_each_kblock(t, tile, |start, block, rows| match block {
         KBlock::F32(block) => {
+            let _k = crate::obs::KernelSpan::enter(crate::obs::Kernel::QkF32);
             for r in 0..rows {
                 let krow = &block[r * d..(r + 1) * d];
                 for hh in 0..n_heads {
@@ -592,6 +596,7 @@ fn attention_blocked(
             dequant_rows += rows as u64;
         }
         KBlock::I8 { data, scales } => {
+            let _k = crate::obs::KernelSpan::enter(crate::obs::Kernel::QkDotI8);
             if q_codes.is_empty() {
                 quantize_query(q_row, n_heads, hd, q_codes, q_scales);
             }
@@ -611,6 +616,7 @@ fn attention_blocked(
             native_rows += rows as u64;
         }
         KBlock::Ternary(tb) => {
+            let _k = crate::obs::KernelSpan::enter(crate::obs::Kernel::QkLut34);
             if q_codes.is_empty() {
                 quantize_query(q_row, n_heads, hd, q_codes, q_scales);
             }
@@ -644,6 +650,7 @@ fn attention_blocked(
     let mut av_int8 = 0u64;
     vl.for_each_vblock(t, tile, |start, block, rows| match block {
         VBlock::F32(block) => {
+            let _k = crate::obs::KernelSpan::enter(crate::obs::Kernel::AvF32);
             for r in 0..rows {
                 let vrow = &block[r * d..(r + 1) * d];
                 for hh in 0..n_heads {
@@ -657,6 +664,7 @@ fn attention_blocked(
             }
         }
         VBlock::I8 { data, scales } => {
+            let _k = crate::obs::KernelSpan::enter(crate::obs::Kernel::AvI8);
             a_codes.clear();
             a_codes.resize(rows, 0);
             acc.clear();

@@ -23,6 +23,7 @@
 //! | [`engine`] | `TernaryKernel` LUT-GEMM dispatch, quantized linears, the native transformer |
 //! | [`cache`] | Paged KV arena: `PageStore` dtypes, block tables, radix prefix sharing |
 //! | [`coordinator`] | Continuous batching, paged-KV leasing, sampling, serving metrics |
+//! | [`obs`] | Phase/kernel tracing, log-linear histograms, JSON/Prometheus export |
 //! | [`train`] / [`runtime`] | QAT driver over the AOT PJRT train-step (stubbed without `pjrt`) |
 //! | [`simd`] | Runtime-dispatched AVX2/NEON/scalar kernel capability layer |
 //! | [`eval`] / [`exp`] | Task harness and paper table/figure drivers |
@@ -49,6 +50,7 @@ pub mod engine;
 pub mod eval;
 pub mod exp;
 pub mod linalg;
+pub mod obs;
 pub mod pack;
 pub mod quant;
 pub mod runtime;

@@ -59,7 +59,10 @@ fn app() -> App {
                 .flag("top-k", "sample from top-k logits (0 = full vocab)", Some("0"))
                 .flag("top-p", "nucleus sampling mass (1 = off)", Some("1"))
                 .flag("rep-penalty", "repetition penalty (1 = off)", Some("1"))
-                .flag("kernel-isa", "kernel ISA (auto|scalar|avx2|neon)", Some("auto")),
+                .flag("kernel-isa", "kernel ISA (auto|scalar|avx2|neon)", Some("auto"))
+                .flag("trace", "tracing depth (off|phases|kernels)", Some("phases"))
+                .flag("metrics-json", "write the metrics snapshot JSON here", None)
+                .flag("metrics-prom", "write a Prometheus text exposition here", None),
         )
         .command(
             Command::new("generate", "greedy generation from a checkpoint")
@@ -166,13 +169,20 @@ fn main() -> Result<()> {
             };
             let format = parse_format(&args.str_or("format", "sherry"))?;
             let isa = select_kernel_isa(&args.str_or("kernel-isa", "auto"))?;
+            let trace_name = args.str_or("trace", "phases");
+            let trace = sherry::obs::TraceLevel::parse(&trace_name)
+                .with_context(|| format!("unknown trace level '{trace_name}' (off|phases|kernels)"))?;
+            // Pin the process level before the first forward pass so
+            // kernel spans in the hot loops see it.
+            sherry::obs::set_trace_level(trace);
             let model = TernaryModel::build(native, &params, format);
             println!(
-                "[serve] {} model, format {} ({:.2} MB), kernel isa {}",
+                "[serve] {} model, format {} ({:.2} MB), kernel isa {}, trace {}",
                 cfg_name,
                 format.name(),
                 model.bytes() as f64 / 1e6,
-                isa.name()
+                isa.name(),
+                trace.name()
             );
             let active = args.usize_or("active", 8);
             let kv_dtype = match sherry::cache::KvDtype::from_name(&args.str_or("kv-dtype", "f32"))
@@ -196,9 +206,10 @@ fn main() -> Result<()> {
                     repetition_penalty: args.f64_or("rep-penalty", 1.0) as f32,
                     ..Default::default()
                 },
+                trace,
                 ..Default::default()
             };
-            let trace = TraceSpec {
+            let trace_spec = TraceSpec {
                 n_requests: args.usize_or("requests", 16),
                 mean_interarrival_s: args.f64_or("interarrival", 0.01),
                 prompt_len: args.usize_or("prompt", 8),
@@ -206,8 +217,18 @@ fn main() -> Result<()> {
                 max_new_tokens: args.usize_or("tokens", 24),
                 seed: 0,
             };
-            let (_completions, metrics) = serve_trace(&model, server_cfg, trace);
+            let (_completions, metrics) = serve_trace(&model, server_cfg, trace_spec);
             println!("{}", metrics.report());
+            if let Some(path) = args.get("metrics-json") {
+                std::fs::write(path, metrics.snapshot().render_pretty())
+                    .with_context(|| format!("writing metrics snapshot to {path}"))?;
+                println!("[serve] metrics snapshot → {path}");
+            }
+            if let Some(path) = args.get("metrics-prom") {
+                std::fs::write(path, metrics.render_prometheus())
+                    .with_context(|| format!("writing Prometheus exposition to {path}"))?;
+                println!("[serve] Prometheus exposition → {path}");
+            }
         }
         "generate" => {
             let cfg_name = args.str_or("config", "nano");

@@ -1,0 +1,281 @@
+//! Bounded log-linear (HDR-style) histograms for latency metrics.
+//!
+//! Values are recorded as u64 nanoseconds into buckets that are linear
+//! within each power-of-two octave: [`SUB_BUCKET_BITS`] = 5 gives 32
+//! sub-buckets per octave, so a bucket spanning `[v, v + v/32)` quotes
+//! its midpoint with relative error ≤ 1/64 ≈ 1.56% — inside the ~2%
+//! bound DESIGN.md §9 documents. Values below 32ns are exact. Memory is
+//! **fixed**: at most [`N_BUCKETS`] u64 counts (~15 KiB), allocated
+//! lazily on the first record, no matter how many samples arrive — the
+//! property that replaces the serving metrics' unbounded `Vec<f64>`
+//! reservoirs. Exact count/sum/min/max are tracked alongside, so `mean`,
+//! `min` and `max` carry no quantization error and percentile estimates
+//! are clamped into `[min, max]`.
+
+/// Sub-bucket resolution bits: 32 linear sub-buckets per octave.
+pub const SUB_BUCKET_BITS: u32 = 5;
+const SUB: usize = 1 << SUB_BUCKET_BITS; // 32
+
+/// Total buckets covering the full u64 range: one linear run for values
+/// < 32, then 59 octaves × 32 sub-buckets up to 2^64.
+pub const N_BUCKETS: usize = SUB * (64 - SUB_BUCKET_BITS as usize + 1); // 1920
+
+/// Bucket index for a value (total order, adjacent buckets contiguous).
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < SUB as u64 {
+        return v as usize; // exact below one octave of sub-buckets
+    }
+    let h = 63 - v.leading_zeros(); // floor(log2 v), ≥ SUB_BUCKET_BITS
+    let octave = (h - SUB_BUCKET_BITS + 1) as usize;
+    let sub = ((v >> (h - SUB_BUCKET_BITS)) as usize) & (SUB - 1);
+    octave * SUB + sub
+}
+
+/// Lowest value mapping to `index` and the bucket's width.
+fn bucket_bounds(index: usize) -> (u64, u64) {
+    if index < SUB {
+        return (index as u64, 1);
+    }
+    let octave = (index / SUB) as u32;
+    let sub = (index % SUB) as u64;
+    let width = 1u64 << (octave - 1);
+    ((SUB as u64 + sub) << (octave - 1), width)
+}
+
+/// The value a bucket reports for everything it absorbed (midpoint).
+fn representative(index: usize) -> u64 {
+    let (lo, width) = bucket_bounds(index);
+    lo + width / 2
+}
+
+/// Fixed-memory log-linear histogram of nanosecond values.
+#[derive(Clone, Default)]
+pub struct LogHistogram {
+    /// Lazily allocated (`N_BUCKETS` once the first value arrives) so an
+    /// empty histogram in a Metrics struct costs three words.
+    counts: Vec<u64>,
+    count: u64,
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one value in nanoseconds.
+    pub fn record(&mut self, nanos: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0u64; N_BUCKETS];
+        }
+        self.counts[bucket_index(nanos)] += 1;
+        if self.count == 0 {
+            self.min = nanos;
+            self.max = nanos;
+        } else {
+            self.min = self.min.min(nanos);
+            self.max = self.max.max(nanos);
+        }
+        self.count += 1;
+        self.sum = self.sum.saturating_add(nanos);
+    }
+
+    /// Record a duration in seconds (negative / non-finite clamp to 0).
+    pub fn record_secs(&mut self, secs: f64) {
+        let nanos = if secs.is_finite() && secs > 0.0 { (secs * 1e9).round() as u64 } else { 0 };
+        self.record(nanos);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact minimum in seconds (0 when empty).
+    pub fn min_secs(&self) -> f64 {
+        self.min as f64 * 1e-9
+    }
+
+    /// Exact maximum in seconds (0 when empty).
+    pub fn max_secs(&self) -> f64 {
+        self.max as f64 * 1e-9
+    }
+
+    /// Exact mean in seconds (0 when empty).
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.count as f64 * 1e-9
+    }
+
+    /// Nearest-rank percentile estimate in seconds, `p` in [0, 100]:
+    /// the midpoint of the bucket holding the ⌈p·count/100⌉-th smallest
+    /// sample, clamped into the exact `[min, max]` — so single-valued
+    /// histograms and the extreme percentiles are exact, and everything
+    /// else is within the bucket's ≤ 1.56% relative error.
+    pub fn percentile_secs(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let est = representative(i).clamp(self.min, self.max);
+                return est as f64 * 1e-9;
+            }
+        }
+        self.max_secs()
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile_secs(50.0)
+    }
+
+    pub fn p90(&self) -> f64 {
+        self.percentile_secs(90.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile_secs(99.0)
+    }
+
+    pub fn p999(&self) -> f64 {
+        self.percentile_secs(99.9)
+    }
+}
+
+// Manual Debug: a 1920-bucket dump would swamp every `{:?}` of Metrics.
+impl std::fmt::Debug for LogHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LogHistogram")
+            .field("count", &self.count)
+            .field("min_s", &self.min_secs())
+            .field("p50_s", &self.p50())
+            .field("max_s", &self.max_secs())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotonic_and_contains_value() {
+        // Probe around every power of two (the octave boundaries where
+        // the index math could go wrong) plus a mid-bucket offset.
+        let mut vals: Vec<u64> = vec![0, u64::MAX];
+        for shift in 0..64u32 {
+            let p = 1u128 << shift;
+            for near in [-1i128, 0, 1, 17] {
+                let v = p + near;
+                if (0..=u64::MAX as u128).contains(&(v as u128)) && v >= 0 {
+                    vals.push(v as u64);
+                }
+            }
+        }
+        vals.sort_unstable();
+        vals.dedup();
+        let mut prev = 0usize;
+        for v in vals {
+            let i = bucket_index(v);
+            assert!(i < N_BUCKETS, "v={v} i={i}");
+            assert!(i >= prev, "index must be monotone in the value (v={v})");
+            let (lo, w) = bucket_bounds(i);
+            assert!(v >= lo, "v={v} below bucket lo={lo}");
+            assert!((v - lo) < w.max(1), "v={v} past bucket [{lo}, {lo}+{w})");
+            prev = i;
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        for v in 0..SUB as u64 {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(representative(v as usize), v);
+        }
+    }
+
+    #[test]
+    fn relative_error_is_within_bound() {
+        // Midpoint error ≤ width/2 / lo = 2^(o-1) / (2·(32+sub)·2^(o-1))
+        // ≤ 1/64 for every bucket past the exact run.
+        for v in [33u64, 100, 1_000, 123_456, 10_000_000_000, u64::MAX / 3] {
+            let rep = representative(bucket_index(v));
+            let err = (rep as f64 - v as f64).abs() / v as f64;
+            assert!(err <= 1.0 / 64.0 + 1e-12, "v={v} rep={rep} err={err}");
+        }
+    }
+
+    #[test]
+    fn percentiles_track_exact_sorting_within_documented_error() {
+        // The satellite acceptance test: recorded percentiles vs. exact
+        // sorted percentiles on a skewed sample, within the ≤ 2%
+        // documented relative error (actual bound 1/64).
+        let mut h = LogHistogram::new();
+        let mut xs: Vec<u64> = Vec::new();
+        let mut state = 0x9e3779b97f4a7c15u64;
+        for _ in 0..10_000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // Log-uniform-ish spread over ~5 decades of nanoseconds.
+            let v = 1_000 + (state >> 40) * ((state >> 20) & 0xfff) % 100_000_000;
+            xs.push(v);
+            h.record(v);
+        }
+        xs.sort_unstable();
+        for p in [50.0, 90.0, 99.0, 99.9] {
+            let rank = ((p / 100.0) * xs.len() as f64).ceil().max(1.0) as usize - 1;
+            let exact = xs[rank] as f64 * 1e-9;
+            let got = h.percentile_secs(p);
+            let err = (got - exact).abs() / exact;
+            assert!(err <= 0.02, "p{p}: got {got}, exact {exact}, err {err}");
+        }
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.min_secs(), xs[0] as f64 * 1e-9);
+        assert_eq!(h.max_secs(), *xs.last().unwrap() as f64 * 1e-9);
+    }
+
+    #[test]
+    fn memory_is_fixed_no_matter_the_sample_count() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.counts.capacity(), 0, "empty histogram holds no buckets");
+        for i in 0..100_000u64 {
+            h.record(i * 31);
+        }
+        assert_eq!(h.counts.len(), N_BUCKETS, "bucket storage never grows past the fixed cap");
+        assert_eq!(h.count(), 100_000);
+    }
+
+    #[test]
+    fn single_value_percentiles_are_exact_and_empty_is_zero() {
+        let mut h = LogHistogram::new();
+        h.record_secs(0.125);
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(h.percentile_secs(p), 0.125, "clamp to [min,max] makes this exact");
+        }
+        assert_eq!(h.mean_secs(), 0.125);
+        let e = LogHistogram::new();
+        assert_eq!(e.p50(), 0.0);
+        assert_eq!(e.mean_secs(), 0.0);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn record_secs_clamps_junk() {
+        let mut h = LogHistogram::new();
+        h.record_secs(-1.0);
+        h.record_secs(f64::NAN);
+        h.record_secs(f64::INFINITY);
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max_secs(), 0.0, "junk inputs land at 0, never panic");
+    }
+}

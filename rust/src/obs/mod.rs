@@ -1,0 +1,446 @@
+//! Low-overhead serving observability: phase/kernel tracing, bounded
+//! log-linear latency histograms, and structured metrics export.
+//!
+//! Three pieces (DESIGN.md §9):
+//!
+//! 1. **Phase spans** — a [`PhaseClock`] owned by one serve run times the
+//!    coordinator loop's disjoint phases (admission, prefix lookup,
+//!    ragged prefill, decode) with RAII guards over monotonic
+//!    [`Instant`]s. The coordinator is single-threaded, spans never
+//!    nest, and idle sleeps are deliberately untimed, so the phase total
+//!    is always ≤ the run's wall seconds (asserted in tests).
+//! 2. **Kernel spans** — [`KernelSpan`] guards at the `simd::` dispatch
+//!    call sites attribute CPU-seconds to the dispatched hot loops (the
+//!    i8 q·k dot, the ternary q·k LUT walk, the fixed-point a·V
+//!    accumulation, the three LUT-GEMM tile walks, and the f32 fallback
+//!    arms). Kernel accounting is process-global ([`kernel_totals`])
+//!    because the engine call sites have no server handle; a run
+//!    captures a baseline at start and reports the delta, like
+//!    `kv_dequant_seconds`. GEMM walks run on worker threads, so their
+//!    CPU-seconds sum across workers and may exceed wall time.
+//! 3. **Trace levels** — the process-global [`TraceLevel`] gates kernel
+//!    spans: at `Off` and `Phases` a [`KernelSpan`] costs exactly one
+//!    relaxed atomic load and performs **no clock reads**, so leaving
+//!    the guards compiled into the hot loops is free in the sense the
+//!    `--trace` contract documents. Phase spans are gated per run by
+//!    `ServerConfig::trace` (an `Off` run's clock records nothing), so
+//!    parallel tests never race on phase state.
+//!
+//! [`hist::LogHistogram`] (bounded HDR-style percentiles),
+//! [`json::Json`] (dependency-free serialization for
+//! `Metrics::snapshot()`), and [`ring::FlightRecorder`] (per-round
+//! flight recorder) round out the subsystem.
+
+pub mod hist;
+pub mod json;
+pub mod ring;
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Trace levels
+// ---------------------------------------------------------------------------
+
+/// How much the serving stack traces. Ordered: each level includes the
+/// previous one's instrumentation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum TraceLevel {
+    /// No clock reads anywhere: phase spans are disabled per run and a
+    /// kernel span is one relaxed atomic load.
+    Off,
+    /// Coordinator phase spans (admission / prefix lookup / prefill /
+    /// decode) — a handful of `Instant` reads per round.
+    #[default]
+    Phases,
+    /// Phases plus per-kernel CPU-second attribution at the `simd::`
+    /// dispatch sites (one `Instant` pair per page block / GEMM tile
+    /// range, never per row).
+    Kernels,
+}
+
+impl TraceLevel {
+    /// Every level, in CLI-listing order.
+    pub const ALL: [TraceLevel; 3] = [TraceLevel::Off, TraceLevel::Phases, TraceLevel::Kernels];
+
+    /// Stable lowercase name (CLI values, metrics report, snapshot).
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Phases => "phases",
+            TraceLevel::Kernels => "kernels",
+        }
+    }
+
+    /// Parse a CLI spelling.
+    pub fn parse(s: &str) -> Option<TraceLevel> {
+        match s {
+            "off" => Some(TraceLevel::Off),
+            "phases" => Some(TraceLevel::Phases),
+            "kernels" => Some(TraceLevel::Kernels),
+            _ => None,
+        }
+    }
+
+    fn from_u8(v: u8) -> TraceLevel {
+        match v {
+            0 => TraceLevel::Off,
+            2 => TraceLevel::Kernels,
+            _ => TraceLevel::Phases,
+        }
+    }
+}
+
+/// Process-global trace level; default `Phases`. Kernel spans read this
+/// (they have no per-run handle); the serve loop's phase clock is gated
+/// by `ServerConfig::trace` instead, so runs don't race on it.
+static LEVEL: AtomicU8 = AtomicU8::new(TraceLevel::Phases as u8);
+
+/// Set the process trace level (the `--trace` flag).
+pub fn set_trace_level(level: TraceLevel) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// The current process trace level.
+pub fn trace_level() -> TraceLevel {
+    TraceLevel::from_u8(LEVEL.load(Ordering::Relaxed))
+}
+
+/// Are kernel spans live? One relaxed load — the entire cost of a
+/// [`KernelSpan`] below the `Kernels` level.
+#[inline]
+pub fn kernels_on() -> bool {
+    LEVEL.load(Ordering::Relaxed) >= TraceLevel::Kernels as u8
+}
+
+// ---------------------------------------------------------------------------
+// Kernel spans
+// ---------------------------------------------------------------------------
+
+/// The dispatched hot loops whose CPU-seconds the tracer attributes.
+/// `Qk*`/`Av*` are the page-blocked attention arms (keyed by the KV
+/// plane they walk); `Gemm*` are the LUT-GEMM tile walks over packed
+/// weight planes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernel {
+    /// `simd::dot_i8` rows over raw int8 K page bytes.
+    QkDotI8,
+    /// `simd::qk_lut34_rows` LUT walks over packed 1.25-bit K pages.
+    QkLut34,
+    /// The f32 q·k fallback arm (borrowed f32 pages / dequantized tiles).
+    QkF32,
+    /// `simd::av_i8_rows` fixed-point accumulation over int8 V pages.
+    AvI8,
+    /// The f32 a·V fallback arm.
+    AvF32,
+    /// `simd::gemm_pack34_preluts` — the Sherry 3:4 tile walk.
+    GemmPack34,
+    /// `simd::gemm_tl2_preluts` — the TL2 tile walk.
+    GemmTl2,
+    /// `simd::gemm_i2s` — the I2_S decode-and-add walk.
+    GemmI2S,
+}
+
+/// Number of kernel slots (array sizing).
+pub const N_KERNELS: usize = 8;
+
+impl Kernel {
+    /// Every kernel, in slot order.
+    pub const ALL: [Kernel; N_KERNELS] = [
+        Kernel::QkDotI8,
+        Kernel::QkLut34,
+        Kernel::QkF32,
+        Kernel::AvI8,
+        Kernel::AvF32,
+        Kernel::GemmPack34,
+        Kernel::GemmTl2,
+        Kernel::GemmI2S,
+    ];
+
+    /// Stable snake_case name (snapshot keys, Prometheus labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Kernel::QkDotI8 => "qk_dot_i8",
+            Kernel::QkLut34 => "qk_lut34",
+            Kernel::QkF32 => "qk_f32",
+            Kernel::AvI8 => "av_i8",
+            Kernel::AvF32 => "av_f32",
+            Kernel::GemmPack34 => "gemm_pack34",
+            Kernel::GemmTl2 => "gemm_tl2",
+            Kernel::GemmI2S => "gemm_i2s",
+        }
+    }
+
+    /// The data plane the kernel walks — the kv-dtype key for attention
+    /// kernels ("int8" / "ternary" / "f32"), "weights" for the GEMM
+    /// walks over packed weight planes.
+    pub fn plane(self) -> &'static str {
+        match self {
+            Kernel::QkDotI8 | Kernel::AvI8 => "int8",
+            Kernel::QkLut34 => "ternary",
+            Kernel::QkF32 | Kernel::AvF32 => "f32",
+            Kernel::GemmPack34 | Kernel::GemmTl2 | Kernel::GemmI2S => "weights",
+        }
+    }
+
+    fn slot(self) -> usize {
+        self as usize
+    }
+}
+
+// `static [AtomicU64; N]` needs a const initializer element; the interior
+// mutability is the point here (the const is only an array seed).
+#[allow(clippy::declare_interior_mutable_const)]
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+static KERNEL_NANOS: [AtomicU64; N_KERNELS] = [ATOMIC_ZERO; N_KERNELS];
+static KERNEL_CALLS: [AtomicU64; N_KERNELS] = [ATOMIC_ZERO; N_KERNELS];
+
+/// RAII guard timing one kernel invocation (one page block or one GEMM
+/// tile range — never one row). Below [`TraceLevel::Kernels`] the guard
+/// holds no `Instant` and drop is a no-op: enter + drop cost one relaxed
+/// atomic load total, which is the `--trace off`/`phases` overhead
+/// contract. Tracing never touches kernel inputs or outputs, so numeric
+/// parity (bit-for-bit f32, exact i32) is unaffected at every level.
+pub struct KernelSpan {
+    kernel: Kernel,
+    start: Option<Instant>,
+}
+
+impl KernelSpan {
+    #[inline]
+    pub fn enter(kernel: Kernel) -> Self {
+        let start = if kernels_on() { Some(Instant::now()) } else { None };
+        Self { kernel, start }
+    }
+}
+
+impl Drop for KernelSpan {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            let slot = self.kernel.slot();
+            KERNEL_NANOS[slot].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            KERNEL_CALLS[slot].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A point-in-time copy of the process-global kernel counters. A serve
+/// run snapshots one at start and reports [`KernelTotals::delta_since`]
+/// at the end, so concurrent runs only ever over-attribute (never lose)
+/// kernel time — the same cross-run-additive contract as
+/// `kv_dequant_seconds`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct KernelTotals {
+    nanos: [u64; N_KERNELS],
+    calls: [u64; N_KERNELS],
+}
+
+/// One kernel's accumulated time since a baseline.
+#[derive(Clone, Copy, Debug)]
+pub struct KernelDelta {
+    pub kernel: Kernel,
+    pub nanos: u64,
+    pub calls: u64,
+}
+
+impl KernelTotals {
+    /// Per-kernel deltas vs. an earlier snapshot, skipping kernels that
+    /// never ran in between.
+    pub fn delta_since(&self, base: &KernelTotals) -> Vec<KernelDelta> {
+        Kernel::ALL
+            .into_iter()
+            .map(|k| {
+                let s = k.slot();
+                KernelDelta {
+                    kernel: k,
+                    nanos: self.nanos[s].saturating_sub(base.nanos[s]),
+                    calls: self.calls[s].saturating_sub(base.calls[s]),
+                }
+            })
+            .filter(|d| d.calls > 0)
+            .collect()
+    }
+}
+
+/// Snapshot the process-global kernel counters.
+pub fn kernel_totals() -> KernelTotals {
+    let mut t = KernelTotals::default();
+    for k in Kernel::ALL {
+        let s = k.slot();
+        t.nanos[s] = KERNEL_NANOS[s].load(Ordering::Relaxed);
+        t.calls[s] = KERNEL_CALLS[s].load(Ordering::Relaxed);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Phase spans
+// ---------------------------------------------------------------------------
+
+/// The coordinator loop's disjoint phases.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Arrival intake + page-counted admission (excluding prefix lookup).
+    Admission,
+    /// Radix prefix-index lookup and page leasing (`PagedKv::lease`).
+    PrefixLookup,
+    /// Ragged prefill micro-steps (any sequence fed a prompt token).
+    Prefill,
+    /// Pure decode micro-steps (every fed token is generated).
+    Decode,
+}
+
+/// Number of phases (array sizing).
+pub const N_PHASES: usize = 4;
+
+impl Phase {
+    /// Every phase, in report order.
+    pub const ALL: [Phase; N_PHASES] =
+        [Phase::Admission, Phase::PrefixLookup, Phase::Prefill, Phase::Decode];
+
+    /// Stable snake_case name (snapshot keys, Prometheus labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Admission => "admission",
+            Phase::PrefixLookup => "prefix_lookup",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+        }
+    }
+
+    fn slot(self) -> usize {
+        self as usize
+    }
+}
+
+/// Per-run phase accumulator. One instance per serve run (no global
+/// state → parallel tests can't race); atomics make it `Sync` so spans
+/// borrow `&self`. Spans on the run's single coordinator thread are
+/// strictly disjoint by construction — the serve loop never nests them —
+/// so `total_seconds()` ≤ wall seconds.
+#[derive(Debug, Default)]
+pub struct PhaseClock {
+    enabled: bool,
+    nanos: [AtomicU64; N_PHASES],
+}
+
+impl PhaseClock {
+    /// A clock that records (`enabled`) or ignores every span
+    /// (`!enabled`, the `--trace off` run mode: no clock reads at all).
+    pub fn new(enabled: bool) -> Self {
+        Self { enabled, ..Default::default() }
+    }
+
+    /// Open a span; time accrues to `phase` when the guard drops.
+    #[inline]
+    pub fn span(&self, phase: Phase) -> PhaseSpan<'_> {
+        let start = if self.enabled { Some(Instant::now()) } else { None };
+        PhaseSpan { clock: self, phase, start }
+    }
+
+    /// Seconds accumulated in one phase.
+    pub fn seconds(&self, phase: Phase) -> f64 {
+        self.nanos[phase.slot()].load(Ordering::Relaxed) as f64 * 1e-9
+    }
+
+    /// Seconds across all phases (≤ wall when spans are disjoint).
+    pub fn total_seconds(&self) -> f64 {
+        Phase::ALL.into_iter().map(|p| self.seconds(p)).sum()
+    }
+}
+
+/// RAII guard for one phase span.
+pub struct PhaseSpan<'a> {
+    clock: &'a PhaseClock,
+    phase: Phase,
+    start: Option<Instant>,
+}
+
+impl Drop for PhaseSpan<'_> {
+    #[inline]
+    fn drop(&mut self) {
+        if let Some(t0) = self.start {
+            self.clock.nanos[self.phase.slot()]
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_level_parse_roundtrips() {
+        for l in TraceLevel::ALL {
+            assert_eq!(TraceLevel::parse(l.name()), Some(l));
+        }
+        assert_eq!(TraceLevel::parse("verbose"), None);
+        assert!(TraceLevel::Off < TraceLevel::Phases);
+        assert!(TraceLevel::Phases < TraceLevel::Kernels);
+    }
+
+    #[test]
+    fn kernel_names_and_planes_are_stable() {
+        for k in Kernel::ALL {
+            assert!(!k.name().is_empty());
+            assert!(["int8", "ternary", "f32", "weights"].contains(&k.plane()), "{}", k.name());
+        }
+        assert_eq!(Kernel::QkLut34.plane(), "ternary");
+        assert_eq!(Kernel::GemmPack34.plane(), "weights");
+    }
+
+    #[test]
+    fn phase_clock_accumulates_and_disabled_clock_stays_zero() {
+        let c = PhaseClock::new(true);
+        {
+            let _s = c.span(Phase::Decode);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(c.seconds(Phase::Decode) > 0.0);
+        assert_eq!(c.seconds(Phase::Admission), 0.0);
+        assert!(c.total_seconds() >= c.seconds(Phase::Decode));
+
+        let off = PhaseClock::new(false);
+        {
+            let _s = off.span(Phase::Decode);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(off.total_seconds(), 0.0, "disabled clocks record nothing");
+    }
+
+    #[test]
+    fn kernel_spans_record_only_at_kernels_level() {
+        // Global level: other tests in the process may have set it; only
+        // delta-based invariants are asserted. Deltas snapshot around a
+        // span opened at an explicitly raised level, then restore.
+        let before_level = trace_level();
+        set_trace_level(TraceLevel::Phases);
+        let base = kernel_totals();
+        {
+            let _s = KernelSpan::enter(Kernel::GemmTl2);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        // Concurrent tests can only have run *other* kernels at Kernels
+        // level — nobody else times GemmTl2 in this suite without first
+        // raising the level, so a Phases-level span must not move it.
+        set_trace_level(TraceLevel::Kernels);
+        {
+            let _s = KernelSpan::enter(Kernel::GemmTl2);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let delta = kernel_totals().delta_since(&base);
+        let tl2 = delta.iter().find(|d| d.kernel == Kernel::GemmTl2);
+        let tl2 = tl2.expect("Kernels-level span must be recorded");
+        assert!(tl2.nanos >= 1_000_000, "~2ms span, got {}ns", tl2.nanos);
+        assert!(tl2.calls >= 1);
+        set_trace_level(before_level);
+    }
+
+    #[test]
+    fn delta_since_skips_idle_kernels() {
+        let t = kernel_totals();
+        assert!(t.delta_since(&t).is_empty(), "zero-delta snapshot reports nothing");
+    }
+}

@@ -268,6 +268,9 @@ pub fn gemm_pack34_preluts_with(
     assert_eq!(out.len(), batch * (j1 - j0));
     assert!(lut_stride >= nb * 16, "LUT stride too small for d_in");
     assert!(luts.len() >= batch * lut_stride);
+    // One span per tile range (workers call this per output-channel
+    // tile); below `--trace kernels` it costs one relaxed atomic load.
+    let _k = crate::obs::KernelSpan::enter(crate::obs::Kernel::GemmPack34);
     match isa {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: host reports AVX2; bounds asserted above; stride fits
@@ -315,6 +318,7 @@ pub fn gemm_tl2_preluts_with(
     assert_eq!(out.len(), batch * (j1 - j0));
     assert!(lut_stride >= ng * lut::TL2_LUT_STRIDE, "LUT stride too small for d_in");
     assert!(luts.len() >= batch * lut_stride);
+    let _k = crate::obs::KernelSpan::enter(crate::obs::Kernel::GemmTl2);
     match isa {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: host reports AVX2; bounds asserted above; stride fits
@@ -352,6 +356,7 @@ pub fn gemm_i2s_with(
     assert!(j0 <= j1 && j1 <= p.d_out);
     assert_eq!(xs.len(), batch * d_in);
     assert_eq!(out.len(), batch * (j1 - j0));
+    let _k = crate::obs::KernelSpan::enter(crate::obs::Kernel::GemmI2S);
     match isa {
         #[cfg(target_arch = "x86_64")]
         // SAFETY: host reports AVX2; bounds asserted above; activation

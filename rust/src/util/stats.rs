@@ -22,13 +22,16 @@ pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
 
-/// Linear-interpolated percentile, p in [0, 100].
+/// Linear-interpolated percentile, p in [0, 100]. NaN inputs sort to the
+/// top (`total_cmp`'s IEEE 754 total order) instead of panicking the
+/// comparator, so a poisoned sample degrades a tail percentile rather
+/// than taking down a whole bench/experiment run.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
     let mut s: Vec<f64> = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -104,6 +107,32 @@ mod tests {
         assert_eq!(h.iter().sum::<u64>(), 4); // -0.1 excluded
         assert_eq!(h[0], 1); // 0.0
         assert_eq!(h[1], 3); // 0.5 (boundary), 0.99, 1.0 (hi → last bin)
+    }
+
+    #[test]
+    fn histogram_includes_the_hi_edge_and_excludes_outside() {
+        // Regression: x == hi must land in the top bucket (the seed once
+        // dropped the closed upper edge), while values strictly outside
+        // [lo, hi] stay excluded on both sides.
+        let h = histogram(&[1.0f32], 0.0, 1.0, 4);
+        assert_eq!(h, vec![0, 0, 0, 1], "x == hi belongs to the last bin");
+        let h = histogram(&[-0.001f32, 1.001], 0.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<u64>(), 0, "outside values never count");
+        // Degenerate range records nothing instead of dividing by zero.
+        let h = histogram(&[0.5f32], 1.0, 1.0, 4);
+        assert_eq!(h.iter().sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn percentile_and_median_survive_nan() {
+        // Regression: `partial_cmp().unwrap()` panicked on any NaN in the
+        // sample; total_cmp sorts NaN above every number instead.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(median(&xs), 2.5, "NaN sorts last; the finite half still interpolates");
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!(percentile(&xs, 100.0).is_nan(), "the NaN surfaces at the top, not as a panic");
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(median(&all_nan).is_nan());
     }
 
     #[test]
