@@ -34,9 +34,13 @@ fn main() -> anyhow::Result<()> {
         shared_prefix_len: 8,
         max_new_tokens: 32,
         seed: 3,
+        // A third of the traffic rides the Batch class: it yields to
+        // Interactive arrivals (and is preempted under page pressure).
+        batch_fraction: 0.33,
+        ..Default::default()
     };
     let server_cfg = ServerConfig {
-        batcher: BatcherConfig { max_active: 6, token_budget: 6 * (12 + 32) },
+        batcher: BatcherConfig { max_active: 6, token_budget: 6 * (12 + 32), ..Default::default() },
         kv_capacity: 6,
         page_size: 8,
         workers: 6,

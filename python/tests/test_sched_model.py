@@ -1,0 +1,323 @@
+"""Behavioral model of the Rust two-class priority batcher.
+
+Replays `rust/src/coordinator/batcher.rs` — the continuous batcher
+behind the SLO scheduler (DESIGN.md §10) — in plain python and asserts
+the scheduling laws the Rust unit and property tests pin:
+
+* strict priority with FIFO order inside a class: the Interactive queue
+  drains head-first, then Batch; a blocked head blocks the whole wave
+  (no lower class ever backfills past it),
+* aging: a Batch entry that has waited past the threshold moves to the
+  Interactive queue's tail, relative order among promotees preserved,
+  and its *intrinsic* class never changes,
+* preemption parking: a preempted active sequence returns to the front
+  of its class queue with its generated count carried, so re-admission
+  resumes the allowance instead of restarting it,
+* accounting: `reserved` always equals the active set's worst-case
+  token sum (prompt + full allowance), and the max_active / token
+  budget / page caps hold at every step (modulo the documented
+  lone-oversized token exception),
+* liveness: every submitted request eventually completes under any
+  interleaving of submit / admit / advance / retire / preempt with a
+  sane page supply.
+
+numpy-only (no jax/hypothesis): runnable as a plain script in
+toolchain-less environments, and pytest-collectible in CI.
+"""
+
+import math
+
+import numpy as np
+
+INTERACTIVE = 0  # Priority::Interactive.index()
+BATCH = 1  # Priority::Batch.index()
+
+
+class Request:
+    """Mirror of coordinator::Request (the scheduling-relevant fields)."""
+
+    def __init__(self, rid, prompt_len, max_new, priority=INTERACTIVE, arrival=0.0):
+        self.id = rid
+        self.prompt_len = prompt_len
+        self.max_new = max_new
+        self.priority = priority
+        self.arrival = arrival
+
+    @property
+    def need(self):
+        return self.prompt_len + self.max_new
+
+
+class Waiting:
+    def __init__(self, req, generated, enqueued_at):
+        self.req = req
+        self.generated = generated
+        self.enqueued_at = enqueued_at
+
+
+class BatcherModel:
+    """Mirror of batcher.rs::Batcher."""
+
+    def __init__(self, max_active, token_budget, aging_threshold_s=5.0):
+        self.max_active = max_active
+        self.token_budget = token_budget
+        self.aging_threshold_s = aging_threshold_s
+        self.queues = [[], []]  # [interactive, batch], index == priority
+        self.active = []  # list of [Request, generated]
+        self.reserved = 0
+        self.admissions = 0
+        self.aged_promotions = 0
+
+    def submit(self, req):
+        at = req.arrival if math.isfinite(req.arrival) else 0.0
+        self.queues[req.priority].append(Waiting(req, 0, at))
+
+    def waiting_len(self):
+        return sum(len(q) for q in self.queues)
+
+    def head_priority(self):
+        """Intrinsic class of the next admission candidate (not queue
+        residence — an aged-up Batch head still reports BATCH)."""
+        for q in self.queues:
+            if q:
+                return q[0].req.priority
+        return None
+
+    def _age(self, now):
+        if not math.isfinite(self.aging_threshold_s):
+            return
+        kept, promoted = [], []
+        for w in self.queues[BATCH]:
+            if now - w.enqueued_at >= self.aging_threshold_s:
+                promoted.append(w)
+            else:
+                kept.append(w)
+        self.queues[BATCH] = kept
+        self.queues[INTERACTIVE].extend(promoted)  # tail, order preserved
+        self.aged_promotions += len(promoted)
+
+    def admit_pages(self, free_pages, page_cost, now):
+        self._age(now)
+        admitted = 0
+        for q in self.queues:
+            while q:
+                if len(self.active) >= self.max_active:
+                    return admitted
+                head = q[0]
+                # A blocked head blocks the whole wave. Token budget has
+                # the lone-oversized exception; pages do not (the server
+                # sizes the arena to ≥ one worst-case sequence).
+                if self.reserved + head.req.need > self.token_budget and self.active:
+                    return admitted
+                if page_cost(head.req) > free_pages:
+                    return admitted
+                q.pop(0)
+                self.reserved += head.req.need
+                free_pages -= page_cost(head.req)
+                self.active.append([head.req, head.generated])
+                self.admissions += 1
+                admitted += 1
+        return admitted
+
+    def admit(self):
+        return self.admit_pages(float("inf"), lambda r: 0, 0.0)
+
+    def preempt(self, i, now):
+        """swap_remove + park at the *front* of the intrinsic class queue,
+        generated count carried."""
+        req, generated = self.active[i]
+        self.active[i] = self.active[-1]
+        self.active.pop()
+        self.reserved -= req.need
+        self.queues[req.priority].insert(0, Waiting(req, generated, now))
+
+    def advance(self, i):
+        self.active[i][1] += 1
+        return self.active[i][1] >= self.active[i][0].max_new
+
+    def retire(self, finished):
+        out = []
+        for i in reversed(finished):
+            req, generated = self.active[i]
+            self.active[i] = self.active[-1]
+            self.active.pop()
+            self.reserved -= req.need
+            out.append((req, generated))
+        out.reverse()
+        return out
+
+    def is_idle(self):
+        return self.waiting_len() == 0 and not self.active
+
+
+def test_strict_priority_with_fifo_within_class():
+    b = BatcherModel(max_active=3, token_budget=1000)
+    b.submit(Request(1, 4, 4, BATCH))
+    b.submit(Request(2, 4, 4, INTERACTIVE))
+    b.submit(Request(3, 4, 4, INTERACTIVE))
+    b.submit(Request(4, 4, 4, BATCH))
+    assert b.admit() == 3
+    # Interactive arrivals (FIFO among themselves) beat the older Batch.
+    assert [a[0].id for a in b.active] == [2, 3, 1]
+    assert b.waiting_len() == 1
+
+
+def test_blocked_head_is_never_backfilled():
+    b = BatcherModel(max_active=4, token_budget=20)
+    b.submit(Request(1, 8, 4, INTERACTIVE))  # 12 — admitted
+    b.submit(Request(2, 8, 4, INTERACTIVE))  # 12 — blocks the wave
+    b.submit(Request(3, 1, 1, BATCH))  # 2 — would fit, must wait anyway
+    assert b.admit() == 1
+    assert [a[0].id for a in b.active] == [1]
+    assert b.waiting_len() == 2
+
+
+def test_lone_oversized_request_still_admits():
+    # Larger than the whole budget: admitted when alone rather than
+    # deadlocking the queue (tokens are a soft cap, unlike pages).
+    b = BatcherModel(max_active=4, token_budget=10)
+    b.submit(Request(1, 50, 10))
+    assert b.admit() == 1
+
+
+def test_page_cap_has_no_oversized_exception():
+    # Pages are physical memory: a head needing more than the supply
+    # blocks even when the active set is empty.
+    b = BatcherModel(max_active=4, token_budget=10_000)
+    b.submit(Request(1, 16, 16))
+    cost = lambda r: (r.need + 3) // 4
+    assert b.admit_pages(7, cost, 0.0) == 0
+    assert b.admit_pages(8, cost, 0.0) == 1
+
+
+def test_aging_promotes_to_interactive_tail_and_keeps_intrinsic_class():
+    b = BatcherModel(max_active=1, token_budget=1000, aging_threshold_s=2.0)
+    b.submit(Request(1, 4, 4, BATCH, arrival=0.0))
+    b.submit(Request(2, 4, 4, INTERACTIVE))
+    # Below the threshold: strict priority holds.
+    assert b.admit_pages(float("inf"), lambda r: 0, 1.0) == 1
+    assert b.active[0][0].id == 2
+    assert b.aged_promotions == 0
+    b.retire([0])
+    # Past the threshold: promoted even in a page-blocked wave.
+    assert b.admit_pages(0, lambda r: 1, 3.0) == 0
+    assert b.aged_promotions == 1
+    assert len(b.queues[INTERACTIVE]) == 1
+    # A newer Interactive arrival ranks behind the promotee, and the
+    # promotee's intrinsic class is still BATCH at the head.
+    b.submit(Request(3, 4, 4, INTERACTIVE))
+    assert b.head_priority() == BATCH
+    assert b.admit_pages(float("inf"), lambda r: 0, 3.0) == 1
+    assert b.active[0][0].id == 1
+    assert b.active[0][0].priority == BATCH
+
+
+def test_aging_preserves_relative_order_among_promotees():
+    b = BatcherModel(max_active=0, token_budget=1000, aging_threshold_s=1.0)
+    for rid in (1, 2, 3):
+        b.submit(Request(rid, 4, 4, BATCH, arrival=0.0))
+    b.admit_pages(float("inf"), lambda r: 0, 5.0)  # max_active 0: only ages
+    assert [w.req.id for w in b.queues[INTERACTIVE]] == [1, 2, 3]
+    assert b.aged_promotions == 3
+
+
+def test_infinite_threshold_disables_aging():
+    b = BatcherModel(max_active=1, token_budget=1000, aging_threshold_s=float("inf"))
+    b.submit(Request(1, 4, 4, BATCH))
+    b.submit(Request(2, 4, 4, INTERACTIVE))
+    assert b.admit_pages(float("inf"), lambda r: 0, 1e12) == 1
+    assert b.active[0][0].id == 2
+    assert b.aged_promotions == 0
+
+
+def test_preempt_parks_at_front_and_resumes_allowance():
+    b = BatcherModel(max_active=2, token_budget=1000)
+    for rid in (1, 2, 3):
+        b.submit(Request(rid, 4, 6, BATCH))
+    assert b.admit() == 2
+    assert not b.advance(0)  # id 1: generated 1 of 6
+    reserved = b.reserved
+    b.preempt(0, 1.0)
+    assert b.reserved == reserved - 10
+    # Parked at the front: re-admission picks id 1 before id 3.
+    assert b.admit() == 1
+    assert b.active[1][0].id == 1
+    assert b.active[1][1] == 1, "generated count survives parking"
+    # Remaining allowance resumes: 5 more tokens finish it.
+    for k in range(5):
+        assert b.advance(1) == (k == 4)
+
+
+def test_non_finite_arrival_is_clamped_for_aging():
+    b = BatcherModel(max_active=0, token_budget=1000, aging_threshold_s=1.0)
+    b.submit(Request(1, 4, 4, BATCH, arrival=float("nan")))
+    b.admit_pages(float("inf"), lambda r: 0, 2.0)  # nan would poison waited
+    assert b.aged_promotions == 1
+
+
+def test_random_interleavings_hold_every_invariant():
+    """Mirror of the Rust prop test: random submit / admit_pages /
+    advance / retire / preempt interleavings, checking the FIFO-head
+    law, the accounting law, the caps, and liveness."""
+    rng = np.random.default_rng(7)
+    for _ in range(80):
+        n = int(rng.integers(1, 25))
+        reqs = [
+            Request(
+                rid,
+                int(rng.integers(1, 21)),
+                int(rng.integers(1, 11)),
+                BATCH if rng.integers(0, 2) else INTERACTIVE,
+            )
+            for rid in range(n)
+        ]
+        max_active = int(rng.integers(1, 7))
+        budget = int(rng.integers(10, 121))
+        b = BatcherModel(max_active, budget, aging_threshold_s=float("inf"))
+        page_cost = lambda r: (r.need + 3) // 4
+        expect = [[], []]  # per-class expected FIFO order of waiting ids
+        next_submit = 0
+        completed = 0
+        steps = 0
+        while completed < n:
+            steps += 1
+            assert steps < 20_000, "livelock"
+            pages = int(rng.integers(0, 41))
+            knob = int(rng.integers(0, 10))
+            if next_submit < n and knob % 3 != 0:
+                r = reqs[next_submit]
+                b.submit(r)
+                expect[r.priority].append(r.id)
+                next_submit += 1
+            before = len(b.active)
+            b.admit_pages(pages, page_cost, 0.0)
+            for req, _ in b.active[before:]:
+                q = req.priority
+                assert expect[q] and expect[q][0] == req.id, (
+                    f"class {q} admitted {req.id}, head {expect[q][:1]}"
+                )
+                expect[q].pop(0)
+                assert not (q == BATCH and expect[INTERACTIVE]), (
+                    f"batch {req.id} admitted past waiting interactive head"
+                )
+            total = sum(req.need for req, _ in b.active)
+            assert b.reserved == total, f"reserved {b.reserved} != {total}"
+            assert len(b.active) <= max_active
+            if len(b.active) > 1:
+                assert total <= budget, f"budget exceeded: {total} > {budget}"
+            if len(b.active) > 1 and knob == 9:
+                i = knob % len(b.active)
+                victim = b.active[i][0]
+                b.preempt(i, 0.0)
+                expect[victim.priority].insert(0, victim.id)
+            finished = [i for i in range(len(b.active)) if b.advance(i)]
+            completed += len(b.retire(finished))
+        assert b.is_idle(), "requests left behind"
+
+
+if __name__ == "__main__":
+    fns = [v for k, v in sorted(globals().items()) if k.startswith("test_")]
+    for fn in fns:
+        fn()
+        print(f"ok {fn.__name__}")
+    print(f"{len(fns)} behavioral checks passed")

@@ -27,6 +27,11 @@
 //!    tile traffic. Off is the dequant-per-block legacy path; on (the
 //!    default) keeps the whole decode round in integer arithmetic.
 //!    Emitted to `BENCH_int8_vpass.json`.
+//! 7. SLO serving sweep: chunked-vs-monolithic prefill × priority mix ×
+//!    preemption policy under page pressure — per-class p50/p99 TTFT and
+//!    inter-token latency, preemption/restore counters. The forced-
+//!    preemption leg must actually preempt (asserted). Emitted to
+//!    `BENCH_slo_serving.json`.
 //!
 //! Every record carries its sweep knobs plus the headline figures
 //! (tok/s, TTFT p50, inter-token p50/p99) at top level, and the run's
@@ -37,7 +42,9 @@
 //! Run: `cargo bench --bench serve_throughput`
 
 use sherry::cache::KvDtype;
-use sherry::coordinator::{serve_trace, BatcherConfig, Metrics, ServerConfig, TraceSpec};
+use sherry::coordinator::{
+    serve_trace, BatcherConfig, Metrics, Preemption, Priority, Server, ServerConfig, TraceSpec,
+};
 use sherry::engine::{random_weights, KvCache, NativeConfig, Scratch, TernaryModel};
 use sherry::obs::json::Json;
 use sherry::pack::Format;
@@ -83,7 +90,7 @@ fn main() {
 
     for (label, active, workers) in [("serve 1-way", 1usize, 1usize), ("serve 4-way", 4, 4), ("serve 8-way", 8, 8)] {
         let server_cfg = ServerConfig {
-            batcher: BatcherConfig { max_active: active, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: active, token_budget: 100_000, ..Default::default() },
             kv_capacity: active,
             workers,
             ..Default::default()
@@ -95,6 +102,7 @@ fn main() {
             shared_prefix_len: 0,
             max_new_tokens: 24,
             seed: 1,
+            ..Default::default()
         };
         let (_c, m) = serve_trace(&model, server_cfg, trace);
         println!(
@@ -112,6 +120,7 @@ fn main() {
     int8_attn_sweep(&model);
     ternary_kv_sweep(&model);
     int8_vpass_sweep(&model);
+    slo_serving_sweep(&model);
 }
 
 /// Paged vs contiguous-equivalent KV at a fixed byte budget, with and
@@ -132,6 +141,7 @@ fn paged_sweep(model: &TernaryModel, single: f64) {
         shared_prefix_len: shared,
         max_new_tokens: 16,
         seed: 12,
+        ..Default::default()
     };
 
     println!(
@@ -149,7 +159,7 @@ fn paged_sweep(model: &TernaryModel, single: f64) {
     ] {
         for shared_len in [0usize, 12] {
             let server_cfg = ServerConfig {
-                batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+                batcher: BatcherConfig { max_active: 16, token_budget: 100_000, ..Default::default() },
                 kv_capacity,
                 page_size,
                 prefix_sharing: sharing,
@@ -197,6 +207,7 @@ fn kv_quant_sweep(model: &TernaryModel) {
         shared_prefix_len: 0,
         max_new_tokens: 16,
         seed: 12,
+        ..Default::default()
     };
 
     println!(
@@ -210,7 +221,7 @@ fn kv_quant_sweep(model: &TernaryModel) {
     for (layout, page_size) in [("contiguous", seq_len), ("paged", 16usize)] {
         for dtype in [KvDtype::F32, KvDtype::Int8] {
             let server_cfg = ServerConfig {
-                batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+                batcher: BatcherConfig { max_active: 16, token_budget: 100_000, ..Default::default() },
                 kv_capacity,
                 page_size,
                 kv_dtype: dtype,
@@ -266,6 +277,7 @@ fn int8_attn_sweep(model: &TernaryModel) {
         shared_prefix_len: 12,
         max_new_tokens: 16,
         seed: 12,
+        ..Default::default()
     };
 
     println!("\n### Int8-native attention × prefix sharing × tile cache (shared prompt)\n");
@@ -281,7 +293,7 @@ fn int8_attn_sweep(model: &TernaryModel) {
         (KvDtype::Int8, true, 64),
     ] {
         let server_cfg = ServerConfig {
-            batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: 16, token_budget: 100_000, ..Default::default() },
             kv_capacity,
             page_size: 4,
             kv_dtype: dtype,
@@ -331,6 +343,7 @@ fn ternary_kv_sweep(model: &TernaryModel) {
         shared_prefix_len: shared,
         max_new_tokens: 16,
         seed: 12,
+        ..Default::default()
     };
 
     println!(
@@ -344,7 +357,7 @@ fn ternary_kv_sweep(model: &TernaryModel) {
     for dtype in KvDtype::ALL {
         for shared_len in [0usize, 12] {
             let server_cfg = ServerConfig {
-                batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+                batcher: BatcherConfig { max_active: 16, token_budget: 100_000, ..Default::default() },
                 kv_capacity,
                 page_size: 4,
                 kv_dtype: dtype,
@@ -396,6 +409,7 @@ fn int8_vpass_sweep(model: &TernaryModel) {
         shared_prefix_len: 12,
         max_new_tokens: 16,
         seed: 12,
+        ..Default::default()
     };
 
     println!("\n### Integer a·V accumulation on/off × quantized KV dtype (shared prompt)\n");
@@ -407,7 +421,7 @@ fn int8_vpass_sweep(model: &TernaryModel) {
     for dtype in [KvDtype::Int8, KvDtype::Ternary] {
         for integer_av in [true, false] {
             let server_cfg = ServerConfig {
-                batcher: BatcherConfig { max_active: 16, token_budget: 100_000 },
+                batcher: BatcherConfig { max_active: 16, token_budget: 100_000, ..Default::default() },
                 kv_capacity,
                 page_size: 4,
                 kv_dtype: dtype,
@@ -437,4 +451,150 @@ fn int8_vpass_sweep(model: &TernaryModel) {
          int8 V bytes — zero hot-path dequant; off = the legacy f32 V walk with tile/scratch fills)"
     );
     write_bench("BENCH_int8_vpass.json", "int8_vpass", records);
+}
+
+/// SLO scheduling head-to-head: monolithic vs chunked prefill ×
+/// Interactive/Batch mix × preemption policy on a page-tight arena.
+/// Tokens per request are invariant across every cell by the scheduling
+/// contract (pinned in `tests/scheduling.rs`); the sweep prices what
+/// each policy does to the per-class tail — chunking bounds the decode
+/// stall a new prompt injects, preemption moves the Batch class out of
+/// an Interactive arrival's way at a restore-prefill cost.
+fn slo_serving_sweep(model: &TernaryModel) {
+    let kv_capacity = 2usize;
+    let page_size = 4usize;
+    let trace = |batch_fraction: f64| TraceSpec {
+        n_requests: 24,
+        mean_interarrival_s: 0.0005,
+        prompt_len: 18,
+        shared_prefix_len: 0,
+        max_new_tokens: 16,
+        seed: 12,
+        batch_fraction,
+        ..Default::default()
+    };
+
+    println!("\n### SLO scheduling: chunked prefill × priority mix × preemption\n");
+    println!(
+        "| prefill | preemption | batch mix | tok/s | int ttft p50/p99 | int itl p50/p99 | bat ttft p50/p99 | preempts | restored tok |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
+    let mut records = Vec::new();
+    for (label, chunk, policy) in [
+        ("monolithic", 0usize, Preemption::Never),
+        ("chunked", page_size, Preemption::Never),
+        ("chunked+preempt", page_size, Preemption::Always),
+    ] {
+        for batch_fraction in [0.0f64, 0.5] {
+            let server_cfg = ServerConfig {
+                batcher: BatcherConfig { max_active: 4, token_budget: 100_000, ..Default::default() },
+                kv_capacity,
+                page_size,
+                prefill_chunk_tokens: chunk,
+                preemption: policy,
+                workers: 4,
+                ..Default::default()
+            };
+            let spec = trace(batch_fraction);
+            let (completions, m) = serve_trace(model, server_cfg, spec);
+            assert_eq!(completions.len(), spec.n_requests, "sweep must serve everything");
+            let it = Priority::Interactive.index();
+            let bt = Priority::Batch.index();
+            println!(
+                "| {label} | {} | {batch_fraction} | {:.1} | {:.3}/{:.3}s | {:.4}/{:.4}s | {:.3}/{:.3}s | {} | {} |",
+                policy.name(),
+                m.throughput_tps(),
+                m.ttft_class[it].p50(),
+                m.ttft_class[it].p99(),
+                m.itl_class[it].p50(),
+                m.itl_class[it].p99(),
+                m.ttft_class[bt].p50(),
+                m.ttft_class[bt].p99(),
+                m.preemptions,
+                m.restored_tokens,
+            );
+            let knobs = Json::obj()
+                .field("prefill_chunk_tokens", chunk)
+                .field("preemption", policy.name())
+                .field("batch_fraction", batch_fraction)
+                .field("ttft_p50_interactive_s", m.ttft_class[it].p50())
+                .field("ttft_p99_interactive_s", m.ttft_class[it].p99())
+                .field("itl_p50_interactive_s", m.itl_class[it].p50())
+                .field("itl_p99_interactive_s", m.itl_class[it].p99())
+                .field("ttft_p50_batch_s", m.ttft_class[bt].p50())
+                .field("ttft_p99_batch_s", m.ttft_class[bt].p99())
+                .field("itl_p50_batch_s", m.itl_class[bt].p50())
+                .field("itl_p99_batch_s", m.itl_class[bt].p99())
+                .field("preemptions", m.preemptions)
+                .field("restored_tokens", m.restored_tokens);
+            records.push(bench_record(knobs, &m));
+        }
+    }
+    // Dedicated pressure leg. The matrix cells above share one Poisson
+    // trace, so whether an Interactive arrival actually catches a Batch
+    // request mid-decode depends on host speed. Here the backlog is
+    // shaped by hand — every Batch request arrives at t=0 with a long
+    // token allowance, Interactive requests land while that backlog is
+    // still decoding — so preemption fires on any host.
+    let server_cfg = ServerConfig {
+        batcher: BatcherConfig { max_active: 4, token_budget: 100_000, ..Default::default() },
+        kv_capacity,
+        page_size,
+        prefill_chunk_tokens: page_size,
+        preemption: Preemption::Always,
+        workers: 4,
+        ..Default::default()
+    };
+    let mut reqs = trace(0.5).generate(model.cfg.vocab_size);
+    for r in &mut reqs {
+        match r.priority {
+            Priority::Batch => {
+                r.arrival = 0.0;
+                r.max_new_tokens = 40;
+            }
+            // The Batch backlog above is hundreds of engine rounds; the
+            // first Interactive arrival lands ~0.5 ms in, far before the
+            // backlog can drain on any host.
+            Priority::Interactive => r.arrival = 0.0005 + 0.0005 * r.id as f64,
+        }
+    }
+    let n = reqs.len();
+    let (completions, m) = Server::new(model, server_cfg).run(reqs);
+    assert_eq!(completions.len(), n, "pressure leg must serve everything");
+    assert!(m.preemptions > 0, "pressure leg must preempt");
+    let it = Priority::Interactive.index();
+    let bt = Priority::Batch.index();
+    println!(
+        "| pressure (batch backlog) | always | 0.5 | {:.1} | {:.3}/{:.3}s | {:.4}/{:.4}s | {:.3}/{:.3}s | {} | {} |",
+        m.throughput_tps(),
+        m.ttft_class[it].p50(),
+        m.ttft_class[it].p99(),
+        m.itl_class[it].p50(),
+        m.itl_class[it].p99(),
+        m.ttft_class[bt].p50(),
+        m.ttft_class[bt].p99(),
+        m.preemptions,
+        m.restored_tokens,
+    );
+    let knobs = Json::obj()
+        .field("leg", "pressure")
+        .field("prefill_chunk_tokens", page_size)
+        .field("preemption", Preemption::Always.name())
+        .field("batch_fraction", 0.5)
+        .field("ttft_p50_interactive_s", m.ttft_class[it].p50())
+        .field("ttft_p99_interactive_s", m.ttft_class[it].p99())
+        .field("itl_p50_interactive_s", m.itl_class[it].p50())
+        .field("itl_p99_interactive_s", m.itl_class[it].p99())
+        .field("ttft_p50_batch_s", m.ttft_class[bt].p50())
+        .field("ttft_p99_batch_s", m.ttft_class[bt].p99())
+        .field("itl_p50_batch_s", m.itl_class[bt].p50())
+        .field("itl_p99_batch_s", m.itl_class[bt].p99())
+        .field("preemptions", m.preemptions)
+        .field("restored_tokens", m.restored_tokens);
+    records.push(bench_record(knobs, &m));
+    println!(
+        "\n(matrix cells share seeds and completions — the scheduling contract; the pressure \
+         leg shapes a batch backlog by hand so the preempt counters are live on any host)"
+    );
+    write_bench("BENCH_slo_serving.json", "slo_serving", records);
 }

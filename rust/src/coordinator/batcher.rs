@@ -1,14 +1,32 @@
 //! Continuous batcher: admits waiting requests into the active decode set
-//! under a token budget, FIFO within arrival order (no starvation).
+//! under a token budget — strict priority across the two [`Priority`]
+//! classes, FIFO within one, Batch-class starvation bounded by aging.
 //!
 //! The active set is the decode round's batch: the server feeds every
 //! active sequence's next token through one fused
 //! `TernaryModel::forward_batch` call per (micro-)step, so admission here
 //! directly sets the LUT-GEMM batch width the kernels amortize over.
+//!
+//! Scheduling rules, in the order they are applied each admission wave:
+//!
+//! 1. **Aging**: any Batch-class entry that has waited at least
+//!    [`BatcherConfig::aging_threshold_s`] is promoted to the tail of the
+//!    Interactive queue (relative order among promotees preserved). This
+//!    bounds starvation under sustained Interactive load.
+//! 2. **Strict priority, FIFO within a class**: the Interactive queue is
+//!    drained head-first, then the Batch queue. A head that does not fit
+//!    (max_active / token budget / page cost) blocks the whole wave — a
+//!    lower class never backfills past a blocked higher-class head, so
+//!    admission order stays a deterministic function of the queue state.
+//! 3. **Preemption parking** ([`Batcher::preempt`]): a preempted active
+//!    sequence returns to the *front* of its class queue (it was admitted
+//!    before everything waiting there) with its generated-token count
+//!    carried along, so a later re-admission resumes its allowance
+//!    instead of restarting it.
 
 use std::collections::VecDeque;
 
-use super::Request;
+use super::{Priority, Request};
 
 /// Batching policy knobs.
 #[derive(Clone, Copy, Debug)]
@@ -17,36 +35,87 @@ pub struct BatcherConfig {
     pub max_active: usize,
     /// Max total resident tokens (prompt + generated) across active seqs.
     pub token_budget: usize,
+    /// Seconds a Batch-class request may wait before it is promoted to
+    /// the Interactive queue's tail (the starvation bound).
+    /// `f64::INFINITY` disables aging.
+    pub aging_threshold_s: f64,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        Self { max_active: 8, token_budget: 4096 }
+        Self { max_active: 8, token_budget: 4096, aging_threshold_s: 5.0 }
     }
 }
 
-/// FIFO continuous batcher.
+/// A queued request plus the scheduling state that must survive parking.
+struct Waiting {
+    req: Request,
+    /// Tokens already generated — nonzero only for preempted sequences
+    /// parked for restore (their allowance resumes, not restarts).
+    generated: usize,
+    /// Trace-clock time this entry (re-)entered a queue; aging input.
+    enqueued_at: f64,
+}
+
+/// Two-class priority batcher (strict priority, FIFO within a class).
 pub struct Batcher {
     cfg: BatcherConfig,
-    waiting: VecDeque<Request>,
+    /// Per-class wait queues, indexed by `Priority::index()`.
+    queues: [VecDeque<Waiting>; Priority::COUNT],
     active: Vec<(Request, usize)>, // (request, generated so far)
     /// Tokens reserved by the active set (kept incrementally so admission
     /// is O(1) per candidate instead of re-summing the active set).
     reserved: usize,
+    /// Monotone admission stamp; the server uses it to pick the
+    /// most-recently-admitted victim under preemption.
+    admissions: u64,
+    aged_promotions: u64,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
-        Self { cfg, waiting: VecDeque::new(), active: Vec::new(), reserved: 0 }
+        Self {
+            cfg,
+            queues: [VecDeque::new(), VecDeque::new()],
+            active: Vec::new(),
+            reserved: 0,
+            admissions: 0,
+            aged_promotions: 0,
+        }
     }
 
-    /// Enqueue an arriving request.
+    /// Enqueue an arriving request into its class queue. Non-finite
+    /// arrival stamps (a NaN in a hand-built trace) are clamped to 0.0 so
+    /// aging arithmetic stays well-defined.
     pub fn submit(&mut self, r: Request) {
-        self.waiting.push_back(r);
+        let at = if r.arrival.is_finite() { r.arrival } else { 0.0 };
+        self.queues[r.priority.index()].push_back(Waiting { generated: 0, enqueued_at: at, req: r });
     }
 
+    /// Total waiting entries across both class queues.
     pub fn waiting_len(&self) -> usize {
-        self.waiting.len()
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Waiting entries in one class queue (post-aging residence, not the
+    /// requests' intrinsic class: promoted Batch entries count as
+    /// Interactive here).
+    pub fn waiting_len_class(&self, p: Priority) -> usize {
+        self.queues[p.index()].len()
+    }
+
+    /// Intrinsic priority of the next admission candidate (the head of
+    /// the highest non-empty queue), or `None` when nothing waits. The
+    /// server compares this against active sequences to pick preemption
+    /// victims — intrinsic, not queue residence, so an aged-up Batch
+    /// request never preempts a Batch peer.
+    pub fn head_priority(&self) -> Option<Priority> {
+        for p in Priority::ALL {
+            if let Some(w) = self.queues[p.index()].front() {
+                return Some(w.req.priority);
+            }
+        }
+        None
     }
 
     pub fn active_len(&self) -> usize {
@@ -59,42 +128,98 @@ impl Batcher {
         self.reserved
     }
 
-    /// Admit as many waiting requests as fit (FIFO; head-of-line blocking
-    /// by design so no request starves).
-    pub fn admit(&mut self) -> usize {
-        self.admit_pages(usize::MAX, |_| 0)
+    /// Batch→Interactive promotions performed by aging so far.
+    pub fn aged_promotions(&self) -> u64 {
+        self.aged_promotions
     }
 
-    /// Page-counted FIFO admission for the paged KV arena: admit waiting
-    /// requests while their worst-case page need (per `page_cost`, which
-    /// the server backs with the prefix index so shared prefixes cost
-    /// nothing) fits in `free_pages`, alongside the usual `max_active`
-    /// and token-budget caps. Unlike the token budget there is no
+    /// Admit as many waiting requests as fit (strict priority, FIFO
+    /// within a class; head-of-line blocking by design so no request
+    /// starves). `now = 0.0` — aging never fires for a fresh queue.
+    pub fn admit(&mut self) -> usize {
+        self.admit_pages(usize::MAX, |_| 0, 0.0)
+    }
+
+    /// Promote Batch entries that have waited past the aging threshold to
+    /// the Interactive queue's tail, preserving their relative order.
+    fn age(&mut self, now: f64) {
+        if !self.cfg.aging_threshold_s.is_finite() {
+            return;
+        }
+        let mut i = 0;
+        while i < self.queues[Priority::Batch.index()].len() {
+            let waited = now - self.queues[Priority::Batch.index()][i].enqueued_at;
+            if waited >= self.cfg.aging_threshold_s {
+                let w = self.queues[Priority::Batch.index()].remove(i).unwrap();
+                self.queues[Priority::Interactive.index()].push_back(w);
+                self.aged_promotions += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Page-counted priority admission for the paged KV arena: admit
+    /// waiting requests while their worst-case page need (per
+    /// `page_cost`, which the server backs with the prefix index so
+    /// shared prefixes cost nothing) fits in `free_pages`, alongside the
+    /// usual `max_active` and token-budget caps. `now` is the trace
+    /// clock, consumed by aging. Unlike the token budget there is no
     /// lone-oversized exception — pages are physical memory; the server
     /// sizes the arena to at least one worst-case sequence so the queue
     /// head always becomes admissible once the arena drains.
-    pub fn admit_pages<F>(&mut self, mut free_pages: usize, page_cost: F) -> usize
+    pub fn admit_pages<F>(&mut self, mut free_pages: usize, page_cost: F, now: f64) -> usize
     where
         F: Fn(&Request) -> usize,
     {
+        self.age(now);
         let mut admitted = 0;
-        while self.active.len() < self.cfg.max_active {
-            let Some(front) = self.waiting.front() else { break };
-            let need = front.prompt.len() + front.max_new_tokens;
-            if self.reserved + need > self.cfg.token_budget && !self.active.is_empty() {
-                break; // wait for space; never skip the head
+        'wave: for q in 0..self.queues.len() {
+            loop {
+                if self.active.len() >= self.cfg.max_active {
+                    break 'wave;
+                }
+                let Some(front) = self.queues[q].front() else { break };
+                let need = front.req.prompt.len() + front.req.max_new_tokens;
+                // A blocked head blocks the whole wave — never skipped
+                // within its class and never backfilled past by a lower
+                // class (that would be priority inversion in reverse:
+                // Batch work grabbing pages an Interactive head is
+                // waiting on).
+                if self.reserved + need > self.cfg.token_budget && !self.active.is_empty() {
+                    break 'wave;
+                }
+                if page_cost(&front.req) > free_pages {
+                    break 'wave;
+                }
+                let w = self.queues[q].pop_front().unwrap();
+                self.reserved += need;
+                free_pages -= page_cost(&w.req);
+                self.active.push((w.req, w.generated));
+                self.admissions += 1;
+                admitted += 1;
             }
-            let pages = page_cost(front);
-            if pages > free_pages {
-                break;
-            }
-            let r = self.waiting.pop_front().unwrap();
-            self.reserved += need;
-            free_pages -= pages;
-            self.active.push((r, 0));
-            admitted += 1;
         }
         admitted
+    }
+
+    /// Monotone count of admissions so far (the server stamps each
+    /// `SeqState` with this to identify the most recent victim).
+    pub fn admissions(&self) -> u64 {
+        self.admissions
+    }
+
+    /// Preempt active sequence `i`: remove it from the active set
+    /// (`swap_remove`, which the server mirrors on its state vector),
+    /// release its token reservation, and park it at the *front* of its
+    /// class queue — it was admitted before anything now waiting there,
+    /// so the front slot preserves FIFO order. Its generated count rides
+    /// along so the eventual re-admission resumes the allowance.
+    pub fn preempt(&mut self, i: usize, now: f64) {
+        let (req, generated) = self.active.swap_remove(i);
+        self.reserved -= req.prompt.len() + req.max_new_tokens;
+        let q = req.priority.index();
+        self.queues[q].push_front(Waiting { generated, enqueued_at: now, req });
     }
 
     /// Record one generated token for active seq `i`; returns true if the
@@ -124,7 +249,7 @@ impl Batcher {
     }
 
     pub fn is_idle(&self) -> bool {
-        self.waiting.is_empty() && self.active.is_empty()
+        self.waiting_len() == 0 && self.active.is_empty()
     }
 }
 
@@ -134,12 +259,16 @@ mod tests {
     use crate::util::prop;
 
     fn req(id: u64, prompt_len: usize, gen: usize) -> Request {
-        Request { id, prompt: vec![1; prompt_len], max_new_tokens: gen, arrival: 0.0 }
+        Request { id, prompt: vec![1; prompt_len], max_new_tokens: gen, ..Default::default() }
+    }
+
+    fn breq(id: u64, prompt_len: usize, gen: usize) -> Request {
+        Request { priority: Priority::Batch, ..req(id, prompt_len, gen) }
     }
 
     #[test]
     fn fifo_admission() {
-        let mut b = Batcher::new(BatcherConfig { max_active: 2, token_budget: 1000 });
+        let mut b = Batcher::new(BatcherConfig { max_active: 2, token_budget: 1000, ..Default::default() });
         b.submit(req(1, 4, 4));
         b.submit(req(2, 4, 4));
         b.submit(req(3, 4, 4));
@@ -151,7 +280,7 @@ mod tests {
 
     #[test]
     fn token_budget_respected() {
-        let mut b = Batcher::new(BatcherConfig { max_active: 10, token_budget: 20 });
+        let mut b = Batcher::new(BatcherConfig { max_active: 10, token_budget: 20, ..Default::default() });
         b.submit(req(1, 8, 4)); // needs 12
         b.submit(req(2, 8, 4)); // would exceed 20
         assert_eq!(b.admit(), 1);
@@ -163,35 +292,35 @@ mod tests {
     fn oversized_request_admitted_when_alone() {
         // A request larger than the budget must still run (alone) rather
         // than deadlock the queue.
-        let mut b = Batcher::new(BatcherConfig { max_active: 4, token_budget: 10 });
+        let mut b = Batcher::new(BatcherConfig { max_active: 4, token_budget: 10, ..Default::default() });
         b.submit(req(1, 50, 10));
         assert_eq!(b.admit(), 1);
     }
 
     #[test]
     fn admit_pages_counts_free_pages() {
-        let mut b = Batcher::new(BatcherConfig { max_active: 8, token_budget: 10_000 });
+        let mut b = Batcher::new(BatcherConfig { max_active: 8, token_budget: 10_000, ..Default::default() });
         for i in 0..4 {
             b.submit(req(i, 4, 4)); // 8 positions → 2 pages at page_size 4
         }
         let cost = |r: &Request| (r.prompt.len() + r.max_new_tokens).div_ceil(4);
-        assert_eq!(b.admit_pages(5, cost), 2, "2 pages each, 5 free → 2 admitted");
+        assert_eq!(b.admit_pages(5, cost, 0.0), 2, "2 pages each, 5 free → 2 admitted");
         assert_eq!(b.waiting_len(), 2);
         // Freeing pages admits the FIFO head next.
-        assert_eq!(b.admit_pages(2, cost), 1);
+        assert_eq!(b.admit_pages(2, cost, 0.0), 1);
         assert_eq!(b.active()[2].0.id, 2);
     }
 
     #[test]
     fn admit_pages_still_respects_max_active_and_token_budget() {
-        let mut b = Batcher::new(BatcherConfig { max_active: 1, token_budget: 1000 });
+        let mut b = Batcher::new(BatcherConfig { max_active: 1, token_budget: 1000, ..Default::default() });
         b.submit(req(1, 2, 2));
         b.submit(req(2, 2, 2));
-        assert_eq!(b.admit_pages(100, |_| 1), 1, "max_active caps page admission");
-        let mut b = Batcher::new(BatcherConfig { max_active: 8, token_budget: 10 });
+        assert_eq!(b.admit_pages(100, |_| 1, 0.0), 1, "max_active caps page admission");
+        let mut b = Batcher::new(BatcherConfig { max_active: 8, token_budget: 10, ..Default::default() });
         b.submit(req(1, 4, 4));
         b.submit(req(2, 4, 4));
-        assert_eq!(b.admit_pages(100, |_| 1), 1, "token budget caps page admission");
+        assert_eq!(b.admit_pages(100, |_| 1, 0.0), 1, "token budget caps page admission");
     }
 
     #[test]
@@ -211,7 +340,7 @@ mod tests {
 
     #[test]
     fn reserved_tokens_track_admit_and_retire() {
-        let mut b = Batcher::new(BatcherConfig { max_active: 4, token_budget: 100 });
+        let mut b = Batcher::new(BatcherConfig { max_active: 4, token_budget: 100, ..Default::default() });
         b.submit(req(1, 4, 6)); // 10
         b.submit(req(2, 3, 7)); // 10
         assert_eq!(b.reserved_tokens(), 0);
@@ -221,6 +350,244 @@ mod tests {
         assert_eq!(b.reserved_tokens(), 10);
         b.retire(&[0]);
         assert_eq!(b.reserved_tokens(), 0);
+    }
+
+    #[test]
+    fn interactive_admits_before_earlier_batch() {
+        // Strict priority: a Batch request submitted first still yields
+        // to a later Interactive arrival at admission time.
+        let mut b = Batcher::new(BatcherConfig { max_active: 1, ..Default::default() });
+        b.submit(breq(1, 4, 4));
+        b.submit(req(2, 4, 4));
+        assert_eq!(b.admit(), 1);
+        assert_eq!(b.active()[0].0.id, 2, "interactive preferred over older batch");
+        assert_eq!(b.waiting_len_class(Priority::Batch), 1);
+    }
+
+    #[test]
+    fn blocked_interactive_head_is_never_backfilled_by_batch() {
+        // An Interactive head too big for the remaining budget blocks the
+        // wave: the small Batch request behind it must NOT sneak in and
+        // grab the capacity the head is waiting for.
+        let mut b = Batcher::new(BatcherConfig { max_active: 4, token_budget: 20, ..Default::default() });
+        b.submit(req(1, 8, 4)); // 12 — admitted
+        b.submit(req(2, 8, 4)); // 12 — blocks (would exceed 20)
+        b.submit(breq(3, 1, 1)); // 2 — would fit, must wait anyway
+        assert_eq!(b.admit(), 1);
+        assert_eq!(b.active()[0].0.id, 1);
+        assert_eq!(b.waiting_len(), 2);
+    }
+
+    #[test]
+    fn aging_promotes_old_batch_requests() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 1,
+            token_budget: 1000,
+            aging_threshold_s: 2.0,
+        });
+        b.submit(breq(1, 4, 4)); // arrival 0.0
+        b.submit(req(2, 4, 4));
+        // Below the threshold: strict priority holds.
+        assert_eq!(b.admit_pages(usize::MAX, |_| 0, 1.0), 1);
+        assert_eq!(b.active()[0].0.id, 2);
+        assert_eq!(b.aged_promotions(), 0);
+        b.retire(&[0]);
+        // Past the threshold the Batch entry is promoted to the
+        // Interactive queue's tail (a page-blocked wave still ages).
+        assert_eq!(b.admit_pages(0, |_| 1, 3.0), 0);
+        assert_eq!(b.aged_promotions(), 1);
+        assert_eq!(b.waiting_len_class(Priority::Interactive), 1);
+        // A newer Interactive arrival now ranks BEHIND the promotee —
+        // aging bounds how long Batch work can be overtaken.
+        b.submit(req(3, 4, 4));
+        assert_eq!(b.admit_pages(usize::MAX, |_| 0, 3.0), 1);
+        assert_eq!(b.active()[0].0.id, 1, "aged batch request admitted first");
+        assert_eq!(b.aged_promotions(), 1);
+        // Its intrinsic class is unchanged (per-class metrics, preemption
+        // comparisons), only its queue residence moved.
+        assert_eq!(b.active()[0].0.priority, Priority::Batch);
+    }
+
+    #[test]
+    fn infinite_aging_threshold_disables_promotion() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_active: 1,
+            token_budget: 1000,
+            aging_threshold_s: f64::INFINITY,
+        });
+        b.submit(breq(1, 4, 4));
+        b.submit(req(2, 4, 4));
+        assert_eq!(b.admit_pages(usize::MAX, |_| 0, 1e12), 1);
+        assert_eq!(b.active()[0].0.id, 2);
+        assert_eq!(b.aged_promotions(), 0);
+    }
+
+    #[test]
+    fn preempt_parks_at_front_with_generated_count() {
+        let mut b = Batcher::new(BatcherConfig { max_active: 2, ..Default::default() });
+        b.submit(breq(1, 4, 6));
+        b.submit(breq(2, 4, 6));
+        b.submit(breq(3, 4, 6));
+        assert_eq!(b.admit(), 2);
+        assert!(!b.advance(0)); // id 1 has generated 1 of 6
+        let reserved = b.reserved_tokens();
+        b.preempt(0, 1.0);
+        assert_eq!(b.active_len(), 1);
+        assert_eq!(b.reserved_tokens(), reserved - 10);
+        // Parked at the front: re-admission picks id 1 before id 3.
+        assert_eq!(b.admit(), 1);
+        assert_eq!(b.active()[1].0.id, 1);
+        assert_eq!(b.active()[1].1, 1, "generated count survives parking");
+        // Its remaining allowance resumes: 5 more tokens finish it.
+        for k in 0..5 {
+            let done = b.advance(1);
+            assert_eq!(done, k == 4, "token {k}");
+        }
+    }
+
+    #[test]
+    fn head_priority_reports_intrinsic_class() {
+        let mut b = Batcher::new(BatcherConfig { aging_threshold_s: 1.0, ..Default::default() });
+        assert_eq!(b.head_priority(), None);
+        b.submit(breq(1, 4, 4));
+        assert_eq!(b.head_priority(), Some(Priority::Batch));
+        b.submit(req(2, 4, 4));
+        assert_eq!(b.head_priority(), Some(Priority::Interactive));
+        // Age the Batch entry into the Interactive queue: residence moves
+        // but the reported class stays Batch once it reaches the head.
+        let mut b = Batcher::new(BatcherConfig { max_active: 0, aging_threshold_s: 1.0, ..Default::default() });
+        b.submit(breq(3, 4, 4));
+        b.admit_pages(usize::MAX, |_| 0, 2.0);
+        assert_eq!(b.waiting_len_class(Priority::Interactive), 1);
+        assert_eq!(b.head_priority(), Some(Priority::Batch));
+    }
+
+    /// Satellite regression: the accounting invariants under random
+    /// interleavings of submit / admit_pages / advance / retire /
+    /// preempt — `reserved` always equals the active set's worst-case
+    /// token sum, the caps always hold (modulo the documented
+    /// lone-oversized exception), and admission never skips a class
+    /// queue's head (FIFO within class, strict priority across, aging
+    /// disabled here so the expected order is exact).
+    #[test]
+    fn prop_accounting_and_fifo_order_under_random_interleavings() {
+        prop::check(
+            "batcher accounting invariants",
+            60,
+            |rng| {
+                let n = prop::gens::usize_in(rng, 1, 24);
+                let reqs: Vec<(usize, usize, bool)> = (0..n)
+                    .map(|_| {
+                        (
+                            prop::gens::usize_in(rng, 1, 20),
+                            prop::gens::usize_in(rng, 1, 10),
+                            prop::gens::usize_in(rng, 0, 1) == 1, // batch class?
+                        )
+                    })
+                    .collect();
+                let max_active = prop::gens::usize_in(rng, 1, 6);
+                let budget = prop::gens::usize_in(rng, 10, 120);
+                // Per-step op seeds: page supply, preempt choice.
+                let ops: Vec<(usize, usize)> = (0..400)
+                    .map(|_| (prop::gens::usize_in(rng, 0, 40), prop::gens::usize_in(rng, 0, 9)))
+                    .collect();
+                (reqs, max_active, budget, ops)
+            },
+            |(reqs, max_active, budget, ops)| {
+                let mut b = Batcher::new(BatcherConfig {
+                    max_active: *max_active,
+                    token_budget: *budget,
+                    aging_threshold_s: f64::INFINITY,
+                });
+                // Model: per-class expected FIFO order of waiting ids.
+                let mut expect: [std::collections::VecDeque<u64>; 2] =
+                    [Default::default(), Default::default()];
+                let mut next_submit = 0usize;
+                let mut completed = 0usize;
+                let mut step = 0usize;
+                let page_cost = |r: &Request| (r.prompt.len() + r.max_new_tokens).div_ceil(4);
+                while completed < reqs.len() {
+                    let (pages, knob) = ops[step % ops.len()];
+                    step += 1;
+                    if step > 20_000 {
+                        return Err("livelock".into());
+                    }
+                    // Interleave submissions with scheduling steps.
+                    if next_submit < reqs.len() && knob % 3 != 0 {
+                        let (p, g, batch) = reqs[next_submit];
+                        let pr = if batch { Priority::Batch } else { Priority::Interactive };
+                        b.submit(Request {
+                            id: next_submit as u64,
+                            prompt: vec![1; p],
+                            max_new_tokens: g,
+                            priority: pr,
+                            ..Default::default()
+                        });
+                        expect[pr.index()].push_back(next_submit as u64);
+                        next_submit += 1;
+                    }
+                    let before = b.active_len();
+                    b.admit_pages(pages, page_cost, 0.0);
+                    // FIFO-head law: the admitted ids must be exactly the
+                    // heads of the model queues, interactive first.
+                    for (r, _) in &b.active()[before..] {
+                        let q = r.priority.index();
+                        let head = expect[q].pop_front();
+                        if head != Some(r.id) {
+                            return Err(format!(
+                                "class {q} admitted {} but head was {head:?}",
+                                r.id
+                            ));
+                        }
+                        if q == 1 && !expect[0].is_empty() {
+                            return Err(format!(
+                                "batch {} admitted past waiting interactive head",
+                                r.id
+                            ));
+                        }
+                    }
+                    // Accounting law: reserved == Σ active worst case.
+                    let sum: usize = b
+                        .active()
+                        .iter()
+                        .map(|(r, _)| r.prompt.len() + r.max_new_tokens)
+                        .sum();
+                    if b.reserved_tokens() != sum {
+                        return Err(format!(
+                            "reserved {} != active sum {sum}",
+                            b.reserved_tokens()
+                        ));
+                    }
+                    if b.active_len() > *max_active {
+                        return Err("max_active exceeded".into());
+                    }
+                    if b.active_len() > 1 && sum > *budget {
+                        return Err(format!("budget exceeded: {sum} > {budget}"));
+                    }
+                    // Occasionally preempt a random active sequence; it
+                    // must reappear at its class head.
+                    if b.active_len() > 1 && knob == 9 {
+                        let i = knob % b.active_len();
+                        let (victim, _) = &b.active()[i];
+                        let (vid, vq) = (victim.id, victim.priority.index());
+                        b.preempt(i, 0.0);
+                        expect[vq].push_front(vid);
+                    }
+                    // Advance everyone one token; retire the finished.
+                    let mut finished = Vec::new();
+                    for i in 0..b.active_len() {
+                        if b.advance(i) {
+                            finished.push(i);
+                        }
+                    }
+                    completed += b.retire(&finished).len();
+                }
+                if !b.is_idle() {
+                    return Err("requests left behind".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]
@@ -238,7 +605,11 @@ mod tests {
                 (reqs, max_active, budget)
             },
             |(reqs, max_active, budget)| {
-                let mut b = Batcher::new(BatcherConfig { max_active: *max_active, token_budget: *budget });
+                let mut b = Batcher::new(BatcherConfig {
+                    max_active: *max_active,
+                    token_budget: *budget,
+                    ..Default::default()
+                });
                 for (i, &(p, g)) in reqs.iter().enumerate() {
                     b.submit(req(i as u64, p, g));
                 }

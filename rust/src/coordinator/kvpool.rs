@@ -289,7 +289,7 @@ mod tests {
     }
 
     fn req(prompt: Vec<u32>, gen: usize) -> Request {
-        Request { id: 0, prompt, max_new_tokens: gen, arrival: 0.0 }
+        Request { id: 0, prompt, max_new_tokens: gen, ..Default::default() }
     }
 
     #[test]

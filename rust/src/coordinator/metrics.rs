@@ -3,6 +3,7 @@
 //! human report, a machine-readable [`Metrics::snapshot`] JSON tree, and
 //! a Prometheus text exposition ([`Metrics::render_prometheus`]).
 
+use super::Priority;
 use crate::obs::hist::LogHistogram;
 use crate::obs::json::Json;
 use crate::obs::ring::FlightRecorder;
@@ -144,6 +145,34 @@ pub struct Metrics {
     /// "scalar" | "avx2" | "neon"; empty when never recorded) — lets
     /// benches and reports attribute numbers to the vector path that ran.
     pub kernel_isa: String,
+
+    // --- scheduling (SLO) gauges ---
+    /// Per-class time-to-first-token, indexed by [`Priority::index`].
+    /// Same exclusion rule as [`Metrics::ttft_hist`].
+    pub ttft_class: [LogHistogram; Priority::COUNT],
+    /// Per-class inter-token latency, indexed by [`Priority::index`].
+    /// Preemption gaps land in the victim's class — the per-class view
+    /// is how the report shows who paid for an SLO.
+    pub itl_class: [LogHistogram; Priority::COUNT],
+    /// Active sequences preempted: pages released, decode state parked,
+    /// request re-queued at its class front for a later restore.
+    pub preemptions: u64,
+    /// Tokens re-fed during restores (prompt re-prefill beyond the
+    /// shared-prefix span + no-emit replay of generated tokens) — the
+    /// compute cost preemption traded for pages.
+    pub restored_tokens: u64,
+    /// Prefill chunks fed: one per (sequence, round) that consumed
+    /// prompt or replay tokens. A monolithic prefill is one chunk.
+    pub prefill_chunks: u64,
+    /// Batch→Interactive promotions by the batcher's aging bound.
+    pub aged_promotions: u64,
+    /// Completions that finished after their request's deadline.
+    pub deadline_misses: u64,
+    /// Preemption policy the run was configured with
+    /// ("never"|"pressure"|"always"; empty when unrecorded).
+    pub preemption_policy: String,
+    /// Configured prefill chunk size in tokens (0 = monolithic).
+    pub prefill_chunk_tokens: u64,
 
     // --- prefix sharing / concurrency gauges ---
     /// Prompt tokens across admitted requests.
@@ -299,6 +328,30 @@ impl Metrics {
             self.peak_active,
             self.context_limit_finishes,
         );
+        s.push_str(&format!(
+            "\nsched: chunk {} tok ({} chunks) | preemptions {} (restored {} tok) | \
+             aged promotions {} | deadline misses {} | policy {}",
+            self.prefill_chunk_tokens,
+            self.prefill_chunks,
+            self.preemptions,
+            self.restored_tokens,
+            self.aged_promotions,
+            self.deadline_misses,
+            if self.preemption_policy.is_empty() { "unrecorded" } else { &self.preemption_policy },
+        ));
+        for p in Priority::ALL {
+            let (t, i) = (&self.ttft_class[p.index()], &self.itl_class[p.index()]);
+            s.push_str(&format!(
+                "\nclass {}: ttft p50/p99 {:.3}/{:.3}s over {} | itl p50/p99 {:.4}/{:.4}s over {}",
+                p.name(),
+                t.p50(),
+                t.p99(),
+                t.count(),
+                i.p50(),
+                i.p99(),
+                i.count(),
+            ));
+        }
         for k in &self.kernels {
             s.push_str(&format!(
                 "\nkernel {}[{}/{}]: {:.4} cpu-s over {} calls",
@@ -381,10 +434,31 @@ impl Metrics {
                         .field("active", r.active)
                         .field("pages_in_use", r.pages_in_use)
                         .field("tokens", r.tokens)
+                        .field("prefill_tokens", r.prefill_tokens)
                         .field("duration_s", r.duration_s)
                 })
                 .collect(),
         );
+        let classes = Json::Arr(
+            Priority::ALL
+                .iter()
+                .map(|&p| {
+                    Json::obj()
+                        .field("class", p.name())
+                        .field("ttft", Self::hist_json(&self.ttft_class[p.index()]))
+                        .field("inter_token", Self::hist_json(&self.itl_class[p.index()]))
+                })
+                .collect(),
+        );
+        let sched = Json::obj()
+            .field("prefill_chunk_tokens", self.prefill_chunk_tokens)
+            .field("prefill_chunks", self.prefill_chunks)
+            .field("preemption_policy", self.preemption_policy.clone())
+            .field("preemptions", self.preemptions)
+            .field("restored_tokens", self.restored_tokens)
+            .field("aged_promotions", self.aged_promotions)
+            .field("deadline_misses", self.deadline_misses)
+            .field("classes", classes);
         Json::obj()
             .field("schema_version", 1u64)
             .field("requests_in", self.requests_in)
@@ -406,6 +480,7 @@ impl Metrics {
             .field("kernels", kernels)
             .field("kv", kv)
             .field("prefix", prefix)
+            .field("sched", sched)
             .field("flight", flight)
     }
 
@@ -447,6 +522,31 @@ impl Metrics {
             self.kv_dequant_seconds,
         );
         gauge(&mut s, "peak_active", "Peak concurrent sequences", self.peak_active as f64);
+        counter(
+            &mut s,
+            "preemptions_total",
+            "Sequences preempted to free KV pages",
+            self.preemptions as f64,
+        );
+        counter(
+            &mut s,
+            "restored_tokens_total",
+            "Tokens re-fed while restoring preempted sequences",
+            self.restored_tokens as f64,
+        );
+        counter(&mut s, "prefill_chunks_total", "Prefill chunks fed", self.prefill_chunks as f64);
+        counter(
+            &mut s,
+            "aged_promotions_total",
+            "Batch requests promoted to the interactive queue by aging",
+            self.aged_promotions as f64,
+        );
+        counter(
+            &mut s,
+            "deadline_misses_total",
+            "Completions that finished past their deadline",
+            self.deadline_misses as f64,
+        );
         for (name, help, h) in [
             ("latency_seconds", "End-to-end request latency", &self.latency_hist),
             ("ttft_seconds", "Time to first token", &self.ttft_hist),
@@ -467,6 +567,29 @@ impl Metrics {
             }
             s.push_str(&format!("sherry_{name}_count {}\n", h.count()));
             s.push_str(&format!("sherry_{name}_sum {}\n", h.mean_secs() * h.count() as f64));
+        }
+        for (name, help, hists) in [
+            ("class_ttft_seconds", "Time to first token per priority class", &self.ttft_class),
+            ("class_inter_token_seconds", "Inter-token latency per priority class", &self.itl_class),
+        ] {
+            s.push_str(&format!(
+                "# HELP sherry_{name} {help} (log-linear histogram summary)\n\
+                 # TYPE sherry_{name} summary\n"
+            ));
+            for p in Priority::ALL {
+                let h = &hists[p.index()];
+                for (q, v) in [("0.5", h.p50()), ("0.99", h.p99())] {
+                    s.push_str(&format!(
+                        "sherry_{name}{{class=\"{}\",quantile=\"{q}\"}} {v}\n",
+                        p.name()
+                    ));
+                }
+                s.push_str(&format!(
+                    "sherry_{name}_count{{class=\"{}\"}} {}\n",
+                    p.name(),
+                    h.count()
+                ));
+            }
         }
         s.push_str(
             "# HELP sherry_phase_seconds Coordinator time per phase\n\
@@ -646,11 +769,22 @@ mod tests {
                 cpu_seconds: 0.123,
                 calls: 77,
             }],
+            preemptions: 2,
+            restored_tokens: 12,
+            prefill_chunks: 6,
+            aged_promotions: 1,
+            deadline_misses: 1,
+            preemption_policy: "pressure".to_string(),
+            prefill_chunk_tokens: 16,
             ..Default::default()
         };
         for x in [0.01, 0.02, 0.03, 0.5] {
             m.latency_hist.record_secs(x);
             m.ttft_hist.record_secs(x / 2.0);
+            m.ttft_class[0].record_secs(x / 2.0);
+            m.itl_class[0].record_secs(x / 4.0);
+            m.ttft_class[1].record_secs(x * 2.0);
+            m.itl_class[1].record_secs(x);
         }
         for _ in 0..36 {
             m.itl_hist.record_secs(0.01);
@@ -663,6 +797,7 @@ mod tests {
             active: 4,
             pages_in_use: 7,
             tokens: 4,
+            prefill_tokens: 2,
             duration_s: 0.04,
         });
         m
@@ -680,9 +815,17 @@ mod tests {
         );
         assert!(r.contains("(sum 0.392s, trace: phases)"), "{r}");
         assert!(r.contains("kernel qk_dot_i8[scalar/int8]: 0.1230 cpu-s over 77 calls"), "{r}");
+        assert!(
+            r.contains("sched: chunk 16 tok (6 chunks) | preemptions 2 (restored 12 tok)"),
+            "{r}"
+        );
+        assert!(r.contains("policy pressure"), "{r}");
+        assert!(r.contains("class interactive: ttft p50/p99"), "{r}");
+        assert!(r.contains("class batch: ttft p50/p99"), "{r}");
         // Default metrics keep the report well-formed with no kernels.
         let bare = Metrics::default().report();
         assert!(bare.contains("trace: unrecorded"), "{bare}");
+        assert!(bare.contains("policy unrecorded"), "{bare}");
         assert!(!bare.contains("kernel qk"), "{bare}");
     }
 
@@ -717,6 +860,7 @@ mod tests {
             "kernels",
             "kv",
             "prefix",
+            "sched",
             "flight",
         ] {
             assert!(snap.get(key).is_some(), "snapshot missing key {key}");
@@ -742,6 +886,22 @@ mod tests {
         assert_eq!(kv.get("dtype").unwrap().as_str(), Some("int8"));
         let flight = snap.get("flight").unwrap().as_arr().unwrap();
         assert_eq!(flight[0].get("round").unwrap().as_f64(), Some(9.0));
+        assert_eq!(flight[0].get("prefill_tokens").unwrap().as_f64(), Some(2.0));
+        let sched = snap.get("sched").unwrap();
+        assert_eq!(sched.get("preemptions").unwrap().as_f64(), Some(2.0));
+        assert_eq!(sched.get("restored_tokens").unwrap().as_f64(), Some(12.0));
+        assert_eq!(sched.get("prefill_chunk_tokens").unwrap().as_f64(), Some(16.0));
+        assert_eq!(sched.get("preemption_policy").unwrap().as_str(), Some("pressure"));
+        let classes = sched.get("classes").unwrap().as_arr().unwrap();
+        assert_eq!(classes.len(), 2);
+        assert_eq!(classes[0].get("class").unwrap().as_str(), Some("interactive"));
+        assert_eq!(classes[1].get("class").unwrap().as_str(), Some("batch"));
+        for c in classes {
+            for key in ["ttft", "inter_token"] {
+                let h = c.get(key).unwrap();
+                assert_eq!(h.get("count").unwrap().as_f64(), Some(4.0));
+            }
+        }
     }
 
     #[test]
@@ -755,6 +915,12 @@ mod tests {
             "sherry_phase_seconds{phase=\"decode\"} 0.3",
             "sherry_kernel_cpu_seconds{kernel=\"qk_dot_i8\",isa=\"scalar\",plane=\"int8\"} 0.123",
             "sherry_zero_token_finishes_total 1",
+            "sherry_preemptions_total 2",
+            "sherry_restored_tokens_total 12",
+            "sherry_prefill_chunks_total 6",
+            "sherry_deadline_misses_total 1",
+            "sherry_class_ttft_seconds{class=\"interactive\",quantile=\"0.5\"}",
+            "sherry_class_inter_token_seconds_count{class=\"batch\"} 4",
         ] {
             assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
         }

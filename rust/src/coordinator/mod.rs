@@ -13,11 +13,12 @@
 //! Invariants the whole layer is tested against:
 //!
 //! * a request's tokens are a function of the request alone — never of
-//!   batching, paging, KV dtype knobs (tile cache, sharing), or arrival
-//!   order (greedy sampling; non-greedy draws are reproducible per
-//!   request id);
+//!   batching, paging, KV dtype knobs (tile cache, sharing), arrival
+//!   order, prefill chunking, or preemption (greedy sampling; non-greedy
+//!   draws are reproducible per request id);
 //! * admission reserves worst-case pages, so decode can never exhaust
-//!   the arena mid-round, and FIFO order is preserved (no starvation);
+//!   the arena mid-round; scheduling is strict priority across classes
+//!   and FIFO within one, with aging bounding Batch-class starvation;
 //! * every page reference a sequence takes is returned at retirement —
 //!   at trace end only the prefix index holds pages;
 //! * a sequence at the context limit finishes with
@@ -34,7 +35,53 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use kvpool::PagedKv;
 pub use metrics::{KernelStat, Metrics, PhaseSeconds};
 pub use sampler::{Sampler, SamplerConfig};
-pub use server::{serve_trace, Server, ServerConfig, TraceSpec};
+pub use server::{serve_trace, Preemption, Server, ServerConfig, TraceSpec};
+
+/// Scheduling class of a request. Admission is strict priority across
+/// classes and FIFO within one; starvation of [`Priority::Batch`] work is
+/// bounded by the batcher's aging threshold (old Batch requests are
+/// promoted to the Interactive queue's tail). Preemption only ever runs
+/// *down* the order: an Interactive arrival may preempt a Batch sequence,
+/// never a peer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive foreground traffic (the default).
+    Interactive,
+    /// Throughput-oriented background traffic; yields to Interactive.
+    Batch,
+}
+
+impl Priority {
+    /// All classes, in admission order (highest priority first).
+    pub const ALL: [Priority; 2] = [Priority::Interactive, Priority::Batch];
+    /// Number of classes (per-class queue/histogram array length).
+    pub const COUNT: usize = 2;
+
+    /// Dense index for per-class arrays (admission order).
+    pub fn index(self) -> usize {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+
+    /// Stable lowercase name (CLI values, metric labels, JSON keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Parse a CLI/class name produced by [`Priority::name`].
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
 
 /// An inference request.
 #[derive(Clone, Debug)]
@@ -44,6 +91,25 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Arrival time offset (seconds from trace start).
     pub arrival: f64,
+    /// Scheduling class (see [`Priority`]).
+    pub priority: Priority,
+    /// Optional latency SLO in seconds from arrival. Purely
+    /// observational: a completion later than this increments the
+    /// `deadline_misses` counter; it never changes scheduling.
+    pub deadline: Option<f64>,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Self {
+            id: 0,
+            prompt: Vec::new(),
+            max_new_tokens: 0,
+            arrival: 0.0,
+            priority: Priority::Interactive,
+            deadline: None,
+        }
+    }
 }
 
 /// Why a request stopped generating.

@@ -39,18 +39,73 @@
 //! hits, or on arrival order.
 //! (Environment is offline, so "arrival" is simulated from the trace
 //! clock; everything downstream of arrival is the real engine.)
+//!
+//! Scheduling is SLO-aware. **Chunked prefill** caps how many prompt
+//! tokens one sequence may feed per round
+//! ([`ServerConfig::prefill_chunk_tokens`], default one page; 0 =
+//! legacy monolithic), so a long prompt interleaves with decode
+//! micro-steps instead of stalling every resident decoder behind its
+//! whole prompt. **Priority classes** ([`super::Priority`]) give the
+//! batcher strict-priority, per-class FIFO queues with an aging bound
+//! on Batch starvation. **Preemption** ([`Preemption`]) responds to
+//! page pressure by parking the most recently admitted lower-priority
+//! active sequence — its pages are released, its sampler and generated
+//! tokens survive in a parked record, and a later re-admission rebuilds
+//! its KV state by re-prefilling the prompt (through the prefix index,
+//! where frozen full pages replay byte-exact) and replaying the
+//! already-generated tokens without emitting. Because KV pages are a
+//! deterministic function of the token prefix, the restored sequence
+//! continues with exactly the tokens it would have produced unpreempted.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use super::{
-    Batcher, BatcherConfig, Completion, FinishReason, KernelStat, Metrics, PagedKv, Request,
-    Sampler, SamplerConfig,
+    Batcher, BatcherConfig, Completion, FinishReason, KernelStat, Metrics, PagedKv, Priority,
+    Request, Sampler, SamplerConfig,
 };
 use crate::cache::{BlockTable, KvBatch, KvDtype};
 use crate::engine::TernaryModel;
 use crate::obs::ring::RoundRecord;
 use crate::obs::{self, Phase, PhaseClock, TraceLevel};
 use crate::util::{Pcg64, ThreadPool};
+
+/// When the scheduler may preempt an active sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Preemption {
+    /// Never preempt: a blocked queue head waits for natural retirements
+    /// (the index-flush pressure valve still applies). The comparison
+    /// baseline for the invariance tests.
+    Never,
+    /// Preempt only when an admission wave admits nothing while a
+    /// strictly higher-priority request waits at a queue head (default).
+    UnderPressure,
+    /// Preempt whenever a strictly higher-priority request waits at a
+    /// queue head, even with pages to spare — the forcing leg for tests
+    /// and the pressure bench.
+    Always,
+}
+
+impl Preemption {
+    /// Stable lowercase name (CLI values, metric labels).
+    pub fn name(self) -> &'static str {
+        match self {
+            Preemption::Never => "never",
+            Preemption::UnderPressure => "pressure",
+            Preemption::Always => "always",
+        }
+    }
+
+    /// Parse a CLI name produced by [`Preemption::name`].
+    pub fn parse(s: &str) -> Option<Preemption> {
+        match s {
+            "never" => Some(Preemption::Never),
+            "pressure" => Some(Preemption::UnderPressure),
+            "always" => Some(Preemption::Always),
+            _ => None,
+        }
+    }
+}
 
 /// Server configuration.
 #[derive(Clone, Copy, Debug)]
@@ -85,6 +140,15 @@ pub struct ServerConfig {
     /// dequantization on the decode hot path. Off forces the V pass back
     /// through f32 tiles (the bench comparison leg); f32 pools ignore it.
     pub integer_av: bool,
+    /// Max prompt (or restore-replay) tokens one sequence feeds per
+    /// decode round — chunked prefill. Default is one page
+    /// (`page_size`); 0 means the legacy monolithic prefill (the whole
+    /// prompt inside the sequence's first round). Chunking never changes
+    /// tokens (micro-steps are fused and order-free); it bounds how long
+    /// a long prompt can stall the resident decoders.
+    pub prefill_chunk_tokens: usize,
+    /// Preemption policy under page pressure (see [`Preemption`]).
+    pub preemption: Preemption,
     /// Decode sampling policy (greedy by default).
     pub sampler: SamplerConfig,
     pub workers: usize,
@@ -107,6 +171,10 @@ impl Default for ServerConfig {
             prefix_sharing: true,
             tile_cache_tiles: crate::cache::DEFAULT_TILE_CACHE_TILES,
             integer_av: true,
+            // One page per round per sequence: matches the default
+            // `page_size` above so a chunk fills exactly one fresh page.
+            prefill_chunk_tokens: 16,
+            preemption: Preemption::UnderPressure,
             sampler: SamplerConfig::default(),
             workers: ThreadPool::default_size(),
             // Inherit the process level so `sherry serve --trace ...`
@@ -127,10 +195,34 @@ pub struct TraceSpec {
     pub shared_prefix_len: usize,
     pub max_new_tokens: usize,
     pub seed: u64,
+    /// Fraction of requests drawn as [`Priority::Batch`] (0.0 = all
+    /// Interactive — the legacy trace, byte-identical RNG stream).
+    pub batch_fraction: f64,
+    /// Per-request latency deadline in seconds from arrival (0.0 =
+    /// none). Observational only — see [`Request::deadline`].
+    pub deadline_s: f64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        Self {
+            n_requests: 16,
+            mean_interarrival_s: 0.0,
+            prompt_len: 8,
+            shared_prefix_len: 0,
+            max_new_tokens: 16,
+            seed: 0,
+            batch_fraction: 0.0,
+            deadline_s: 0.0,
+        }
+    }
 }
 
 impl TraceSpec {
-    /// Materialize the request trace.
+    /// Materialize the request trace. With `batch_fraction == 0.0` the
+    /// RNG stream is identical to the pre-priority trace generator, so
+    /// every existing seeded trace replays byte-for-byte; a nonzero
+    /// fraction draws one extra uniform per request for its class.
     pub fn generate(&self, vocab: usize) -> Vec<Request> {
         let mut rng = Pcg64::new(self.seed, 31);
         let shared: Vec<u32> = (0..self.shared_prefix_len.min(self.prompt_len))
@@ -143,7 +235,20 @@ impl TraceSpec {
                 let mut prompt = shared.clone();
                 let tail = (shared.len()..self.prompt_len).map(|_| rng.below(vocab as u64) as u32);
                 prompt.extend(tail);
-                Request { id: i as u64, prompt, max_new_tokens: self.max_new_tokens, arrival: t }
+                let priority = if self.batch_fraction > 0.0 && rng.next_f64() < self.batch_fraction
+                {
+                    Priority::Batch
+                } else {
+                    Priority::Interactive
+                };
+                Request {
+                    id: i as u64,
+                    prompt,
+                    max_new_tokens: self.max_new_tokens,
+                    arrival: t,
+                    priority,
+                    deadline: (self.deadline_s > 0.0).then_some(self.deadline_s),
+                }
             })
             .collect()
     }
@@ -169,12 +274,33 @@ struct SeqState {
     /// Prompt tokens consumed so far — starts at the shared-prefix span,
     /// whose KV pages came from the index, skipping their prefill.
     fed: usize,
+    /// Restore replay (empty except after a preemption): the tokens this
+    /// sequence had generated before being parked, minus the last one
+    /// (which becomes `last_token`, the next decode feed). They are fed
+    /// after the prompt without emitting — pure KV rebuild.
+    pending: Vec<u32>,
+    /// Replay tokens consumed so far (`pending[..replayed]` are fed).
+    replayed: usize,
+    /// Admission stamp (monotone): preemption picks the most recently
+    /// admitted victim, so long-running work is disturbed last.
+    admitted_seq: u64,
     tokens: Vec<u32>,
     first_token_at: Option<f64>,
     /// Trace-clock time of the last emitted token — seeds the
     /// inter-token-latency histogram from the second emission on.
     last_emit_at: Option<f64>,
     finish: Option<FinishReason>,
+}
+
+/// Decode state that survives a preemption (everything a restored
+/// sequence needs beyond what re-prefilling the prompt rebuilds). Keyed
+/// by request id while the request waits in the batcher's class queue.
+struct ParkedSeq {
+    sampler: Sampler,
+    tokens: Vec<u32>,
+    last_token: u32,
+    first_token_at: Option<f64>,
+    last_emit_at: Option<f64>,
 }
 
 impl<'m> Server<'m> {
@@ -185,7 +311,17 @@ impl<'m> Server<'m> {
 
     /// Run a full trace to completion; returns (completions, metrics).
     pub fn run(&self, mut trace: Vec<Request>) -> (Vec<Completion>, Metrics) {
-        trace.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        // A non-finite arrival in a hand-built trace used to panic the
+        // sort (`partial_cmp().unwrap()`); worse, a NaN that merely
+        // sorted last would never satisfy `arrival <= now` and livelock
+        // the intake loop. Clamp to "arrives immediately" and sort with
+        // the total order (same fix PR 9 applied to `util::stats`).
+        for r in &mut trace {
+            if !r.arrival.is_finite() {
+                r.arrival = 0.0;
+            }
+        }
+        trace.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let t0 = Instant::now();
         let clock = |t0: Instant| t0.elapsed().as_secs_f64();
         let seq_cap = self.model.cfg.seq_len;
@@ -215,9 +351,17 @@ impl<'m> Server<'m> {
         let kernel_base = obs::kernel_totals();
         let mut completions = Vec::new();
         let mut states: Vec<SeqState> = Vec::new();
+        // Decode state of preempted sequences, keyed by request id; the
+        // request itself waits (front-parked) in the batcher.
+        let mut parked: HashMap<u64, ParkedSeq> = HashMap::new();
         let mut scratch = crate::engine::Scratch::default();
         let mut next_arrival = 0usize;
         let mut tokens_done = 0u64;
+        // 0 = legacy monolithic prefill: the whole prompt in one round.
+        let chunk = match self.cfg.prefill_chunk_tokens {
+            0 => usize::MAX,
+            c => c,
+        };
 
         while next_arrival < trace.len() || !batcher.is_idle() {
             // Admit arrivals whose time has come on the wall clock.
@@ -244,33 +388,71 @@ impl<'m> Server<'m> {
             // allocation (minus fully shared prefix pages) against the
             // arena's free pages, net of what already-active sequences
             // may still claim — so a decode step can never hit arena
-            // exhaustion mid-round.
-            let before = {
+            // exhaustion mid-round. When a wave admits nothing while a
+            // strictly higher-priority request heads a queue, preempt
+            // the most recently admitted lower-priority sequence and
+            // retry (policy-gated); the index flush stays as the last
+            // resort when preemption has no victims to offer.
+            {
                 let _s = phases.span(Phase::Admission);
-                let outstanding: usize = states
-                    .iter()
-                    .map(|st| st.page_need.saturating_sub(st.table.owned_pages()))
-                    .sum();
-                let free = kv.free_pages().saturating_sub(outstanding);
-                let before = batcher.active_len();
-                let admitted = batcher.admit_pages(free, |r| kv.page_need(r));
-                if admitted == 0
-                    && batcher.active_len() == 0
-                    && batcher.waiting_len() > 0
-                    && kv.index_pages() > 0
-                {
-                    // Frozen prefix pages are starving admission: evict
-                    // the index's zero-lease nodes (with the active set
-                    // empty every frozen page qualifies; LRU ordering
-                    // over the unreferenced set is a ROADMAP item) and
-                    // retry so the queue head cannot deadlock.
-                    metrics.prefix_flushes += 1;
-                    kv.flush_index();
-                    batcher.admit_pages(kv.free_pages(), |r| kv.page_need(r));
+                let now = clock(t0);
+                loop {
+                    let outstanding: usize = states
+                        .iter()
+                        .map(|st| st.page_need.saturating_sub(st.table.owned_pages()))
+                        .sum();
+                    let free = kv.free_pages().saturating_sub(outstanding);
+                    let admitted = batcher.admit_pages(free, |r| kv.page_need(r), now);
+                    let victim = match (self.cfg.preemption, batcher.head_priority()) {
+                        (Preemption::Never, _) | (_, None) => None,
+                        (Preemption::UnderPressure, Some(head)) if admitted > 0 => {
+                            let _ = head;
+                            None
+                        }
+                        (Preemption::UnderPressure, Some(head))
+                        | (Preemption::Always, Some(head)) => (0..states.len())
+                            .filter(|&i| batcher.active()[i].0.priority > head)
+                            .max_by_key(|&i| states[i].admitted_seq),
+                    };
+                    let Some(victim) = victim else {
+                        if admitted == 0
+                            && batcher.active_len() == 0
+                            && batcher.waiting_len() > 0
+                            && kv.index_pages() > 0
+                        {
+                            // Frozen prefix pages are starving admission:
+                            // evict the index's zero-lease nodes (with the
+                            // active set empty every frozen page qualifies;
+                            // LRU ordering over the unreferenced set is a
+                            // ROADMAP item) and retry so the queue head
+                            // cannot deadlock.
+                            metrics.prefix_flushes += 1;
+                            kv.flush_index();
+                            batcher.admit_pages(kv.free_pages(), |r| kv.page_need(r), now);
+                        }
+                        break;
+                    };
+                    // Park the victim: return its pages to the arena,
+                    // stash the decode state that re-prefilling cannot
+                    // rebuild, and front-queue the request in its class.
+                    let req_id = batcher.active()[victim].0.id;
+                    batcher.preempt(victim, now);
+                    let mut st = states.swap_remove(victim);
+                    kv.release(&mut st.table);
+                    parked.insert(
+                        req_id,
+                        ParkedSeq {
+                            sampler: st.sampler,
+                            tokens: st.tokens,
+                            last_token: st.last_token,
+                            first_token_at: st.first_token_at,
+                            last_emit_at: st.last_emit_at,
+                        },
+                    );
+                    metrics.preemptions += 1;
                 }
-                before
-            };
-            for idx in before..batcher.active_len() {
+            }
+            for idx in states.len()..batcher.active_len() {
                 let req = &batcher.active()[idx].0;
                 // Radix-index walk + page leasing is its own phase;
                 // everything else in admitting a request is Admission.
@@ -287,22 +469,57 @@ impl<'m> Server<'m> {
                 if shared > 0 {
                     metrics.prefix_hits += 1;
                 }
-                let mut sampler = Sampler::for_request(&self.cfg.sampler, req.id);
-                for &t in &req.prompt {
-                    // Repetition-penalty support set spans the prompt too
-                    // (no-op when the penalty is off).
-                    sampler.observe(t);
-                }
+                // A preempted request re-admits as a *restore*: the
+                // parked record supplies the sampler (already past the
+                // prompt and every generated token — re-observing would
+                // skew repetition state) and the generated stream. All
+                // but the last generated token are queued for no-emit
+                // replay after the prompt; the last becomes the next
+                // decode feed. KV pages are a deterministic function of
+                // the token prefix, so the rebuilt state is exactly the
+                // pre-preemption state and the continuation is
+                // token-identical.
+                let (sampler, tokens, last_token, first_token_at, last_emit_at, pending) =
+                    match parked.remove(&req.id) {
+                        Some(p) => {
+                            let pending: Vec<u32> = p.tokens[..p.tokens.len().saturating_sub(1)]
+                                .to_vec();
+                            metrics.restored_tokens += (req.prompt.len().min(seq_cap) as u64)
+                                .saturating_sub(shared as u64)
+                                + pending.len() as u64;
+                            (
+                                p.sampler,
+                                p.tokens,
+                                p.last_token,
+                                p.first_token_at,
+                                p.last_emit_at,
+                                pending,
+                            )
+                        }
+                        None => {
+                            let mut sampler = Sampler::for_request(&self.cfg.sampler, req.id);
+                            for &t in &req.prompt {
+                                // Repetition-penalty support set spans the
+                                // prompt too (no-op when the penalty is
+                                // off).
+                                sampler.observe(t);
+                            }
+                            (sampler, Vec::new(), 0, None, None, Vec::new())
+                        }
+                    };
                 states.push(SeqState {
                     sampler,
                     page_need: kv.pages_for(req, shared),
-                    last_token: 0,
-                    prompt_done: req.prompt.is_empty(),
+                    last_token,
+                    prompt_done: req.prompt.is_empty() && pending.is_empty(),
                     registered: false,
                     fed: shared,
-                    tokens: Vec::new(),
-                    first_token_at: None,
-                    last_emit_at: None,
+                    pending,
+                    replayed: 0,
+                    admitted_seq: batcher.admissions() - (batcher.active_len() - idx) as u64,
+                    tokens,
+                    first_token_at,
+                    last_emit_at,
                     finish: None,
                     table,
                 });
@@ -327,6 +544,11 @@ impl<'m> Server<'m> {
             let round_start = Instant::now();
             let mut round_tokens = 0u32;
             let mut emitted = vec![false; states.len()];
+            // Prefill/replay tokens fed per sequence this round — the
+            // chunk budget. A sequence that exhausts its chunk stops
+            // feeding until the next round, so resident decoders are
+            // never stalled behind more than one chunk of any prompt.
+            let mut fed_round = vec![0usize; states.len()];
             {
                 let active = batcher.active();
                 loop {
@@ -347,7 +569,7 @@ impl<'m> Server<'m> {
                                 continue;
                             }
                             plan.push((i, st.last_token, true));
-                        } else if st.fed < req.prompt.len() {
+                        } else if fed_round[i] < chunk {
                             if st.table.len() >= seq_cap {
                                 // Prompt longer than the context: finish
                                 // with whatever was produced (possibly
@@ -355,8 +577,26 @@ impl<'m> Server<'m> {
                                 st.finish = Some(FinishReason::ContextLimit);
                                 continue;
                             }
-                            let emits = st.fed + 1 == req.prompt.len();
-                            plan.push((i, req.prompt[st.fed], emits));
+                            if st.fed < req.prompt.len() {
+                                // Emit only off the true last prompt token
+                                // of a sequence that has never emitted — a
+                                // restored sequence already produced its
+                                // first token pre-preemption (tokens is
+                                // non-empty even when the replay queue is
+                                // not: one generated token restores with an
+                                // empty `pending`), and its next emission
+                                // comes from the decode feed of
+                                // `last_token` after the rebuild.
+                                let emits = st.fed + 1 == req.prompt.len()
+                                    && st.pending.is_empty()
+                                    && st.tokens.is_empty();
+                                plan.push((i, req.prompt[st.fed], emits));
+                            } else {
+                                // Restore replay: re-feed an already
+                                // generated token to rebuild its KV page
+                                // without emitting it again.
+                                plan.push((i, st.pending[st.replayed], false));
+                            }
                             feeds_prompt = true;
                         }
                     }
@@ -391,8 +631,15 @@ impl<'m> Server<'m> {
                     for (row, &(i, _, emits)) in plan.iter().enumerate() {
                         let st = &mut states[i];
                         if !st.prompt_done {
-                            st.fed += 1;
-                            if st.fed == active[i].0.prompt.len() {
+                            if st.fed < active[i].0.prompt.len() {
+                                st.fed += 1;
+                            } else {
+                                st.replayed += 1;
+                            }
+                            fed_round[i] += 1;
+                            if st.fed == active[i].0.prompt.len()
+                                && st.replayed == st.pending.len()
+                            {
                                 st.prompt_done = true;
                             }
                         }
@@ -409,6 +656,9 @@ impl<'m> Server<'m> {
             }
             metrics.decode_rounds += 1;
             metrics.peak_active = metrics.peak_active.max(states.len() as u64);
+            // One chunk = one (sequence, round) pair that fed prefill or
+            // replay tokens; a monolithic prefill counts as one chunk.
+            metrics.prefill_chunks += fed_round.iter().filter(|&&f| f > 0).count() as u64;
             let round_s = round_start.elapsed().as_secs_f64();
             metrics.round_hist.record_secs(round_s);
             metrics.flight.push(RoundRecord {
@@ -416,6 +666,7 @@ impl<'m> Server<'m> {
                 active: states.len() as u32,
                 pages_in_use: kv.used_pages() as u32,
                 tokens: round_tokens,
+                prefill_tokens: fed_round.iter().sum::<usize>() as u32,
                 duration_s: round_s,
             });
 
@@ -430,9 +681,14 @@ impl<'m> Server<'m> {
                 if emitted[i] {
                     // Inter-token latency: gap between consecutive
                     // emissions of one sequence (the first emission only
-                    // seeds the clock).
+                    // seeds the clock). A preemption gap lands here too —
+                    // that is the point: the victim's ITL tail is the
+                    // price the Batch class pays, and the per-class
+                    // histogram shows it.
                     if let Some(prev) = st.last_emit_at {
                         metrics.itl_hist.record_secs(now - prev);
+                        metrics.itl_class[batcher.active()[i].0.priority.index()]
+                            .record_secs(now - prev);
                     }
                     st.last_emit_at = Some(now);
                 }
@@ -458,9 +714,9 @@ impl<'m> Server<'m> {
             // retire uses swap_remove; mirror it on `states`.
             for &i in finished.iter().rev() {
                 let mut st = states.swap_remove(i);
-                let (req_id, arrival) = {
+                let (req_id, arrival, class, deadline) = {
                     let r = &batcher.active()[i].0;
-                    (r.id, r.arrival)
+                    (r.id, r.arrival, r.priority, r.deadline)
                 };
                 kv.release(&mut st.table);
                 let finish = st.finish.unwrap_or(FinishReason::Length);
@@ -479,10 +735,16 @@ impl<'m> Server<'m> {
                 // `unwrap_or(now)`) would fabricate a sample, so it is
                 // counted separately instead.
                 match st.first_token_at {
-                    Some(t) => metrics.ttft_hist.record_secs(t - arrival),
+                    Some(t) => {
+                        metrics.ttft_hist.record_secs(t - arrival);
+                        metrics.ttft_class[class.index()].record_secs(t - arrival);
+                    }
                     None => metrics.zero_token_finishes += 1,
                 }
                 metrics.latency_hist.record_secs(now - arrival);
+                if deadline.is_some_and(|d| now - arrival > d) {
+                    metrics.deadline_misses += 1;
+                }
             }
             batcher.retire(&finished);
         }
@@ -490,6 +752,9 @@ impl<'m> Server<'m> {
         metrics.requests_done = completions.len() as u64;
         metrics.tokens_generated = tokens_done;
         metrics.wall_seconds = clock(t0);
+        metrics.aged_promotions = batcher.aged_promotions();
+        metrics.preemption_policy = self.cfg.preemption.name().to_string();
+        metrics.prefill_chunk_tokens = self.cfg.prefill_chunk_tokens as u64;
         metrics.kv_pages_total = kv.num_pages() as u64;
         metrics.kv_pages_peak = kv.peak_used() as u64;
         metrics.kv_pages_index = kv.index_pages() as u64;
@@ -565,6 +830,7 @@ mod tests {
             shared_prefix_len: 0,
             max_new_tokens: gen,
             seed,
+            ..Default::default()
         }
     }
 
@@ -627,7 +893,7 @@ mod tests {
         // fewer-way batching, not starve or mispair sequences.
         let m = model();
         let cfg = ServerConfig {
-            batcher: BatcherConfig { max_active: 4, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: 4, token_budget: 100_000, ..Default::default() },
             kv_capacity: 1,
             page_size: 16,
             workers: 2,
@@ -651,7 +917,7 @@ mod tests {
     fn respects_max_active() {
         let m = model();
         let cfg = ServerConfig {
-            batcher: BatcherConfig { max_active: 2, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: 2, token_budget: 100_000, ..Default::default() },
             kv_capacity: 2,
             workers: 2,
             ..Default::default()
@@ -670,7 +936,7 @@ mod tests {
         // not panic the serving loop. (nano seq_len = 64.)
         let m = model();
         let cfg = ServerConfig {
-            batcher: BatcherConfig { max_active: 2, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: 2, token_budget: 100_000, ..Default::default() },
             ..Default::default()
         };
         let s = spec(2, 4, 500, 13);
@@ -717,13 +983,14 @@ mod tests {
             shared_prefix_len: 18,
             max_new_tokens: 6,
             seed: 21,
+            ..Default::default()
         };
         // max_active 2 serializes admission waves: the first wave's
         // prompts are frozen into the index before later waves are
         // admitted, so prefix hits are deterministic (no wall-clock
         // dependence).
         let base = ServerConfig {
-            batcher: BatcherConfig { max_active: 2, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: 2, token_budget: 100_000, ..Default::default() },
             page_size: 4,
             ..Default::default()
         };
@@ -752,7 +1019,7 @@ mod tests {
     fn int8_kv_serves_all_requests_and_halves_bytes_per_token() {
         let m = model();
         let base = ServerConfig {
-            batcher: BatcherConfig { max_active: 4, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: 4, token_budget: 100_000, ..Default::default() },
             kv_capacity: 2,
             page_size: 16,
             workers: 2,
@@ -797,7 +1064,7 @@ mod tests {
     fn ternary_kv_serves_at_1_25_bit_k_rate_and_lut_walks_every_row() {
         let m = model();
         let base = ServerConfig {
-            batcher: BatcherConfig { max_active: 4, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: 4, token_budget: 100_000, ..Default::default() },
             kv_capacity: 2,
             page_size: 16,
             workers: 2,
@@ -872,10 +1139,11 @@ mod tests {
             shared_prefix_len: 18,
             max_new_tokens: 6,
             seed: 21,
+            ..Default::default()
         };
         // max_active 2 serializes admission waves (deterministic hits).
         let base = ServerConfig {
-            batcher: BatcherConfig { max_active: 2, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: 2, token_budget: 100_000, ..Default::default() },
             page_size: 4,
             kv_dtype: KvDtype::Int8,
             ..Default::default()
@@ -965,7 +1233,7 @@ mod tests {
         // pages than a worst-case sequence.
         let m = model();
         let cfg = ServerConfig {
-            batcher: BatcherConfig { max_active: 8, token_budget: 100_000 },
+            batcher: BatcherConfig { max_active: 8, token_budget: 100_000, ..Default::default() },
             kv_capacity: 2,
             page_size: 4,
             ..Default::default()

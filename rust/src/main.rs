@@ -11,7 +11,9 @@
 use anyhow::{bail, Context, Result};
 
 use sherry::cli::{App, Command, Parsed};
-use sherry::coordinator::{serve_trace, BatcherConfig, SamplerConfig, ServerConfig, TraceSpec};
+use sherry::coordinator::{
+    serve_trace, BatcherConfig, Preemption, SamplerConfig, ServerConfig, TraceSpec,
+};
 use sherry::engine::{random_weights, NativeConfig, TernaryModel};
 use sherry::pack::{enumerate_nm_formats, Format};
 use sherry::quant::Schedule;
@@ -51,6 +53,11 @@ fn app() -> App {
                 .flag("tokens", "max new tokens per request", Some("24"))
                 .flag("active", "max concurrent sequences", Some("8"))
                 .flag("page-size", "KV page size (positions)", Some("16"))
+                .flag("prefill-chunk", "prefill chunk tokens (page = page size, 0 = monolithic)", Some("page"))
+                .flag("preemption", "preemption policy (never|pressure|always)", Some("pressure"))
+                .flag("aging-threshold", "seconds before Batch requests age up (0 = off)", Some("5"))
+                .flag("batch-fraction", "fraction of trace requests in the Batch class", Some("0"))
+                .flag("deadline", "per-request deadline seconds (0 = none)", Some("0"))
                 .flag("kv-dtype", "KV page storage dtype (f32|int8|ternary)", Some("f32"))
                 .flag("prefix-sharing", "reuse frozen prefix KV pages (0|1)", Some("1"))
                 .flag("tile-cache", "frozen-tile LRU tiles, residual path (0 = off)", Some("16"))
@@ -190,10 +197,30 @@ fn main() -> Result<()> {
                 Ok(d) => d,
                 Err(e) => bail!("{e}"),
             };
+            let page_size = args.usize_or("page-size", 16);
+            let chunk_arg = args.str_or("prefill-chunk", "page");
+            let prefill_chunk_tokens = if chunk_arg == "page" {
+                page_size
+            } else {
+                chunk_arg.parse().with_context(|| {
+                    format!("bad --prefill-chunk '{chunk_arg}' (page | token count | 0)")
+                })?
+            };
+            let preemption_name = args.str_or("preemption", "pressure");
+            let preemption = Preemption::parse(&preemption_name).with_context(|| {
+                format!("unknown preemption policy '{preemption_name}' (never|pressure|always)")
+            })?;
+            let aging = args.f64_or("aging-threshold", 5.0);
             let server_cfg = ServerConfig {
-                batcher: BatcherConfig { max_active: active, ..Default::default() },
+                batcher: BatcherConfig {
+                    max_active: active,
+                    aging_threshold_s: if aging > 0.0 { aging } else { f64::INFINITY },
+                    ..Default::default()
+                },
                 kv_capacity: active,
-                page_size: args.usize_or("page-size", 16),
+                page_size,
+                prefill_chunk_tokens,
+                preemption,
                 kv_dtype,
                 prefix_sharing: args.usize_or("prefix-sharing", 1) != 0,
                 tile_cache_tiles: args
@@ -216,6 +243,8 @@ fn main() -> Result<()> {
                 shared_prefix_len: args.usize_or("shared-prefix", 0),
                 max_new_tokens: args.usize_or("tokens", 24),
                 seed: 0,
+                batch_fraction: args.f64_or("batch-fraction", 0.0),
+                deadline_s: args.f64_or("deadline", 0.0),
             };
             let (_completions, metrics) = serve_trace(&model, server_cfg, trace_spec);
             println!("{}", metrics.report());

@@ -106,6 +106,7 @@ fn train_checkpoint_serve_roundtrip() {
             shared_prefix_len: 0,
             max_new_tokens: 6,
             seed: 0,
+            ..Default::default()
         },
     );
     assert_eq!(completions.len(), 4);
@@ -160,6 +161,7 @@ fn batched_coordinator_serves_all_formats_without_artifacts() {
         shared_prefix_len: 0,
         max_new_tokens: 5,
         seed: 3,
+        ..Default::default()
     };
     for format in Format::ALL {
         let model = TernaryModel::build(native_cfg, &weights, format);

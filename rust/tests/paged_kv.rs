@@ -121,9 +121,10 @@ fn mixed_trace_token_parity_sharing_on_and_off() {
         shared_prefix_len: 12,
         max_new_tokens: 8,
         seed: 29,
+        ..Default::default()
     };
     let base = ServerConfig {
-        batcher: BatcherConfig { max_active: 5, token_budget: 100_000 },
+        batcher: BatcherConfig { max_active: 5, token_budget: 100_000, ..Default::default() },
         kv_capacity: 4,
         page_size: 4,
         ..Default::default()
@@ -641,14 +642,14 @@ fn int8_prefix_sharing_is_serving_order_invariant() {
         id,
         prompt: shared.iter().copied().chain(tail.iter().copied()).collect(),
         max_new_tokens: 6,
-        arrival: 0.0,
+        ..Default::default()
     };
     let reqs =
         [mk(0, &[1, 2, 3]), mk(1, &[7, 8, 9]), mk(2, &[1, 9, 2]), mk(3, &[5])];
     // max_active 1 strictly serializes: arrival order IS serving order,
     // so the two runs exercise different donor/recipient assignments.
     let cfg = ServerConfig {
-        batcher: BatcherConfig { max_active: 1, token_budget: 100_000 },
+        batcher: BatcherConfig { max_active: 1, token_budget: 100_000, ..Default::default() },
         page_size: 4,
         kv_dtype: KvDtype::Int8,
         prefix_sharing: true,
@@ -781,13 +782,13 @@ fn ternary_prefix_sharing_is_serving_order_invariant() {
         id,
         prompt: shared.iter().copied().chain(tail.iter().copied()).collect(),
         max_new_tokens: 6,
-        arrival: 0.0,
+        ..Default::default()
     };
     let reqs =
         [mk(0, &[1, 2, 3]), mk(1, &[7, 8, 9]), mk(2, &[1, 9, 2]), mk(3, &[5])];
     // max_active 1 strictly serializes: arrival order IS serving order.
     let cfg = ServerConfig {
-        batcher: BatcherConfig { max_active: 1, token_budget: 100_000 },
+        batcher: BatcherConfig { max_active: 1, token_budget: 100_000, ..Default::default() },
         page_size: 4,
         kv_dtype: KvDtype::Ternary,
         prefix_sharing: true,
@@ -940,7 +941,7 @@ fn ternary_cow_and_freeze_thaw_carry_quantizer_state() {
 fn serve_trace_returns_all_page_references() {
     let m = nano_model(23, Format::I2S);
     let cfg = ServerConfig {
-        batcher: BatcherConfig { max_active: 6, token_budget: 100_000 },
+        batcher: BatcherConfig { max_active: 6, token_budget: 100_000, ..Default::default() },
         kv_capacity: 3,
         page_size: 4,
         ..Default::default()
@@ -952,6 +953,7 @@ fn serve_trace_returns_all_page_references() {
         shared_prefix_len: 5,
         max_new_tokens: 70, // exceeds nano's 64-token context → capped
         seed: 31,
+        ..Default::default()
     };
     let (completions, metrics) = serve_trace(&m, cfg, spec);
     assert_eq!(completions.len(), 12);

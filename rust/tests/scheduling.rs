@@ -1,0 +1,322 @@
+//! SLO-aware scheduling: the serving-invariant suite.
+//!
+//! The scheduling contract (DESIGN.md §10): a request's tokens are a
+//! function of the request alone — chunked prefill, priority classes,
+//! and preemption may reorder *when* work runs, never *what* it
+//! produces. These tests pin that contract end-to-end across all three
+//! KV storage dtypes, plus the graceful-degradation edges (oversized
+//! requests, non-finite arrivals) and the scheduling metrics surface.
+
+use sherry::cache::KvDtype;
+use sherry::coordinator::{
+    serve_trace, BatcherConfig, Completion, FinishReason, Preemption, Priority, Request,
+    Server, ServerConfig, TraceSpec,
+};
+use sherry::engine::{random_weights, NativeConfig, TernaryModel};
+use sherry::pack::Format;
+
+fn nano_model(seed: u64) -> TernaryModel {
+    let cfg = NativeConfig::named("nano").unwrap();
+    TernaryModel::build(cfg, &random_weights(&cfg, seed), Format::Sherry)
+}
+
+fn by_id(mut completions: Vec<Completion>) -> Vec<Completion> {
+    completions.sort_by_key(|c| c.id);
+    completions
+}
+
+/// A page-tight configuration (2 f32 cache-equivalents, small pages,
+/// more admission slots than pages) so chunking and preemption actually
+/// engage instead of idling behind a roomy arena.
+fn tight_cfg(dtype: KvDtype, chunk: usize, preemption: Preemption) -> ServerConfig {
+    ServerConfig {
+        batcher: BatcherConfig { max_active: 4, token_budget: 100_000, ..Default::default() },
+        kv_capacity: 2,
+        page_size: 4,
+        kv_dtype: dtype,
+        prefill_chunk_tokens: chunk,
+        preemption,
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+/// A mixed-priority bursty trace: multi-chunk prompts, arrivals close
+/// enough that waves overlap and queues form.
+fn mixed_trace(batch_fraction: f64) -> TraceSpec {
+    TraceSpec {
+        n_requests: 12,
+        mean_interarrival_s: 0.0005,
+        prompt_len: 18,
+        shared_prefix_len: 0,
+        max_new_tokens: 12,
+        seed: 11,
+        batch_fraction,
+        ..Default::default()
+    }
+}
+
+fn assert_same_tokens(a: &[Completion], b: &[Completion], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: request count");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.id, y.id, "{what}: id alignment");
+        assert_eq!(x.tokens, y.tokens, "{what}: tokens of request {}", x.id);
+        assert_eq!(x.finish, y.finish, "{what}: finish of request {}", x.id);
+    }
+}
+
+/// The acceptance matrix: for one KV dtype, serve the same seeded trace
+/// under every scheduling policy combination and require per-request
+/// token identity with the monolithic / never-preempt baseline.
+fn scheduling_policies_are_token_invariant(dtype: KvDtype) {
+    let m = nano_model(5);
+    let spec = mixed_trace(0.5);
+    let (base, base_m) = serve_trace(&m, tight_cfg(dtype, 0, Preemption::Never), spec);
+    let base = by_id(base);
+    assert_eq!(base.len(), spec.n_requests, "{dtype:?}: baseline must serve everything");
+    assert_eq!(base_m.prefill_chunk_tokens, 0);
+    for (label, chunk, policy) in [
+        ("chunked", 4usize, Preemption::Never),
+        ("fine-chunked", 2, Preemption::Never),
+        ("monolithic+preempt", 0, Preemption::Always),
+        ("chunked+preempt", 4, Preemption::Always),
+    ] {
+        let (got, gm) = serve_trace(&m, tight_cfg(dtype, chunk, policy), spec);
+        assert_same_tokens(&base, &by_id(got), &format!("{dtype:?}/{label}"));
+        if chunk != 0 {
+            // A chunked prompt (18 tokens) needs multiple (seq, round)
+            // chunks; monolithic feeds each prompt inside one round.
+            assert!(
+                gm.prefill_chunks > base_m.prefill_chunks,
+                "{dtype:?}/{label}: chunking must split prefill \
+                 ({} vs monolithic {})",
+                gm.prefill_chunks,
+                base_m.prefill_chunks
+            );
+        }
+    }
+    // Sharing off is the same contract with the prefix index out of the
+    // restore path: re-prefill rebuilds everything from scratch.
+    let mut off = tight_cfg(dtype, 4, Preemption::Always);
+    off.prefix_sharing = false;
+    let mut off_base = tight_cfg(dtype, 0, Preemption::Never);
+    off_base.prefix_sharing = false;
+    let (want, _) = serve_trace(&m, off_base, spec);
+    let (got, _) = serve_trace(&m, off, spec);
+    assert_same_tokens(&by_id(want), &by_id(got), &format!("{dtype:?}/sharing-off"));
+}
+
+#[test]
+fn scheduling_policies_are_token_invariant_f32() {
+    scheduling_policies_are_token_invariant(KvDtype::F32);
+}
+
+#[test]
+fn scheduling_policies_are_token_invariant_int8() {
+    scheduling_policies_are_token_invariant(KvDtype::Int8);
+}
+
+#[test]
+fn scheduling_policies_are_token_invariant_ternary() {
+    scheduling_policies_are_token_invariant(KvDtype::Ternary);
+}
+
+/// Chunked prefill's round-level shape: one sequence with an 18-token
+/// prompt and a 2-token chunk must spread its prefill over ≥ 9 rounds,
+/// never feeding more than the chunk in any one round — visible through
+/// the flight recorder's per-round `prefill_tokens`.
+#[test]
+fn chunk_budget_bounds_prefill_tokens_per_round() {
+    let m = nano_model(5);
+    let spec = TraceSpec { n_requests: 1, prompt_len: 18, max_new_tokens: 4, seed: 2, ..Default::default() };
+    let (completions, metrics) = serve_trace(&m, tight_cfg(KvDtype::F32, 2, Preemption::Never), spec);
+    assert_eq!(completions.len(), 1);
+    assert_eq!(completions[0].tokens.len(), 4);
+    let records = metrics.flight.records();
+    let fed: u32 = records.iter().map(|r| r.prefill_tokens).sum();
+    assert_eq!(fed, 18, "whole prompt fed through chunks");
+    assert!(
+        records.iter().all(|r| r.prefill_tokens <= 2),
+        "no round may exceed the 2-token chunk: {records:?}"
+    );
+    assert_eq!(metrics.prefill_chunks, 9, "ceil(18 / 2) chunks");
+    // 9 chunked-prefill rounds (the first token emits off the last
+    // prompt feed, inside round 9) + 3 pure decode rounds.
+    assert_eq!(metrics.decode_rounds, 12);
+    // Monolithic: the same prompt is one chunk inside one round.
+    let (_, mono) = serve_trace(&m, tight_cfg(KvDtype::F32, 0, Preemption::Never), spec);
+    assert_eq!(mono.prefill_chunks, 1);
+    assert_eq!(mono.decode_rounds, 4);
+    assert_eq!(mono.flight.records().iter().map(|r| r.prefill_tokens).max(), Some(18));
+}
+
+/// Forced preemption end-to-end: one admission slot, a pile of Batch
+/// work submitted at t=0, and an Interactive request arriving while the
+/// Batch backlog decodes. `Preemption::Always` must park a Batch victim
+/// for the Interactive arrival, restore it later (restored tokens > 0),
+/// and the per-class histograms must attribute every retirement — all
+/// with tokens identical to the never-preempt run.
+#[test]
+fn forced_preemption_restores_token_identical_sequences() {
+    let m = nano_model(5);
+    let mk_trace = || -> Vec<Request> {
+        let mut reqs: Vec<Request> = (0..8)
+            .map(|i| Request {
+                id: i,
+                prompt: vec![(3 + i) as u32 % 16, 7, 11, 2],
+                max_new_tokens: 48,
+                arrival: 0.0,
+                priority: Priority::Batch,
+                ..Default::default()
+            })
+            .collect();
+        // Arrives after the Batch backlog is decoding (the backlog is
+        // ≳ 384 engine rounds — orders of magnitude past 0.5 ms).
+        reqs.push(Request {
+            id: 8,
+            prompt: vec![1, 2, 3, 4],
+            max_new_tokens: 8,
+            arrival: 0.0005,
+            priority: Priority::Interactive,
+            ..Default::default()
+        });
+        reqs
+    };
+    let cfg = |preemption| ServerConfig {
+        batcher: BatcherConfig { max_active: 1, token_budget: 100_000, ..Default::default() },
+        kv_capacity: 1,
+        page_size: 4,
+        preemption,
+        workers: 2,
+        ..Default::default()
+    };
+    let (never, _) = Server::new(&m, cfg(Preemption::Never)).run(mk_trace());
+    let (always, metrics) = Server::new(&m, cfg(Preemption::Always)).run(mk_trace());
+    assert_same_tokens(&by_id(never), &by_id(always), "preempt-vs-never");
+    assert!(metrics.preemptions >= 1, "the Interactive arrival must preempt");
+    assert!(metrics.restored_tokens > 0, "a restore re-prefills at least one token");
+    assert_eq!(metrics.preemption_policy, "always");
+    let it = Priority::Interactive.index();
+    let bt = Priority::Batch.index();
+    assert_eq!(metrics.ttft_class[it].count(), 1, "one Interactive retirement");
+    assert_eq!(metrics.ttft_class[bt].count(), 8, "eight Batch retirements");
+    assert!(metrics.itl_class[bt].count() > 0, "Batch sequences emit multiple tokens");
+    assert_eq!(
+        metrics.ttft_class[it].count() + metrics.ttft_class[bt].count(),
+        metrics.ttft_hist.count(),
+        "per-class TTFT histograms partition the aggregate"
+    );
+}
+
+/// Satellite regression (trace sort): non-finite arrivals used to panic
+/// the serve loop's `partial_cmp().unwrap()` — and a NaN that merely
+/// sorted last would livelock intake. They now mean "arrives
+/// immediately" and the run completes with finite latencies.
+#[test]
+fn non_finite_arrivals_complete_with_finite_latencies() {
+    let m = nano_model(5);
+    let trace = vec![
+        Request { id: 0, prompt: vec![1, 2, 3], max_new_tokens: 3, arrival: f64::NAN, ..Default::default() },
+        Request { id: 1, prompt: vec![4, 5, 6], max_new_tokens: 3, arrival: 0.001, ..Default::default() },
+        Request { id: 2, prompt: vec![7, 8, 9], max_new_tokens: 3, arrival: f64::INFINITY, ..Default::default() },
+        Request { id: 3, prompt: vec![2, 4, 6], max_new_tokens: 3, arrival: f64::NEG_INFINITY, ..Default::default() },
+    ];
+    let (completions, metrics) = Server::new(&m, ServerConfig::default()).run(trace);
+    assert_eq!(completions.len(), 4, "no panic, no livelock");
+    assert_eq!(metrics.requests_done, 4);
+    for c in &completions {
+        assert_eq!(c.tokens.len(), 3);
+        assert!(c.latency.is_finite() && c.latency >= 0.0, "request {}: {}", c.id, c.latency);
+        assert!(c.ttft.is_finite() && c.ttft >= 0.0);
+    }
+}
+
+/// Satellite regression (oversized requests): a request whose worst-case
+/// span exceeds the context limit — or whose page need would exceed a
+/// minimal arena — must finish gracefully via `ContextLimit` (possibly
+/// with zero tokens for an over-long prompt), never deadlock admission.
+/// The arena contract backing this: `PagedKv::new` raises the page count
+/// to at least one worst-case (context-limit-capped) sequence.
+#[test]
+fn oversized_requests_finish_gracefully_on_a_minimal_arena() {
+    let m = nano_model(5);
+    let seq_cap = m.cfg.seq_len; // nano: 64
+    let cfg = ServerConfig {
+        batcher: BatcherConfig { max_active: 2, token_budget: 100_000, ..Default::default() },
+        kv_capacity: 1, // minimal byte budget: the arena is exactly one worst case
+        page_size: 16,
+        workers: 2,
+        ..Default::default()
+    };
+    let trace = vec![
+        // Generation allowance far past the context limit.
+        Request { id: 0, prompt: vec![1, 2, 3, 4], max_new_tokens: 10 * seq_cap, ..Default::default() },
+        // Prompt alone past the context limit: truncated prefill, zero tokens.
+        Request { id: 1, prompt: vec![7; seq_cap + 9], max_new_tokens: 4, arrival: 0.0002, ..Default::default() },
+        // A normal request sharing the queue with the oversized ones.
+        Request { id: 2, prompt: vec![5, 6], max_new_tokens: 4, arrival: 0.0004, ..Default::default() },
+    ];
+    let (completions, metrics) = Server::new(&m, cfg).run(trace);
+    let completions = by_id(completions);
+    assert_eq!(completions.len(), 3, "oversized requests must not deadlock the queue");
+    assert_eq!(completions[0].finish, FinishReason::ContextLimit);
+    assert_eq!(completions[0].tokens.len(), seq_cap - 4, "decoded up to the context limit");
+    assert_eq!(completions[1].finish, FinishReason::ContextLimit);
+    assert!(completions[1].tokens.is_empty(), "over-long prompt produces no tokens");
+    assert_eq!(completions[2].finish, FinishReason::Length);
+    assert_eq!(completions[2].tokens.len(), 4);
+    assert_eq!(metrics.context_limit_finishes, 2);
+    assert_eq!(metrics.zero_token_finishes, 1);
+    assert_eq!(metrics.kv_pages_end_in_use, metrics.kv_pages_index, "all pages returned");
+}
+
+/// Deadline accounting is observational: an unmeetable deadline counts
+/// every completion as a miss, a generous one counts none, and the
+/// tokens are identical either way.
+#[test]
+fn deadline_misses_count_without_changing_tokens() {
+    let m = nano_model(5);
+    let spec = |deadline_s: f64| TraceSpec {
+        n_requests: 5,
+        prompt_len: 6,
+        max_new_tokens: 6,
+        seed: 4,
+        deadline_s,
+        ..Default::default()
+    };
+    let (tight, tm) = serve_trace(&m, ServerConfig::default(), spec(1e-12));
+    let (loose, lm) = serve_trace(&m, ServerConfig::default(), spec(1e9));
+    let (none, nm) = serve_trace(&m, ServerConfig::default(), spec(0.0));
+    assert_eq!(tm.deadline_misses, 5, "1 ps deadline: every completion misses");
+    assert_eq!(lm.deadline_misses, 0);
+    assert_eq!(nm.deadline_misses, 0, "0.0 disables deadlines entirely");
+    assert_same_tokens(&by_id(tight), &by_id(loose), "deadline knob");
+    assert_same_tokens(&by_id(loose), &by_id(none), "deadline off");
+}
+
+/// The priority mix surfaces in the per-class histograms and the trace
+/// generator's legacy stream stays intact: `batch_fraction == 0` draws
+/// the exact pre-priority RNG sequence, so the same seed with and
+/// without the field yields identical prompts and arrivals.
+#[test]
+fn per_class_histograms_partition_retirements() {
+    let m = nano_model(5);
+    let spec = mixed_trace(0.5);
+    let reqs = spec.generate(m.cfg.vocab_size);
+    let n_batch = reqs.iter().filter(|r| r.priority == Priority::Batch).count() as u64;
+    assert!(n_batch > 0 && n_batch < spec.n_requests as u64, "seed 11 mixes both classes");
+    let (completions, metrics) =
+        serve_trace(&m, tight_cfg(KvDtype::F32, 4, Preemption::UnderPressure), spec);
+    assert_eq!(completions.len(), spec.n_requests);
+    let it = Priority::Interactive.index();
+    let bt = Priority::Batch.index();
+    assert_eq!(metrics.ttft_class[bt].count(), n_batch);
+    assert_eq!(metrics.ttft_class[it].count(), spec.n_requests as u64 - n_batch);
+    // Legacy stream: zero batch fraction reproduces the same prompts.
+    let legacy = TraceSpec { batch_fraction: 0.0, ..spec }.generate(m.cfg.vocab_size);
+    for (a, b) in reqs.iter().zip(&legacy) {
+        assert_eq!(a.prompt, b.prompt, "prompt stream must not shift");
+        assert_eq!(a.arrival, b.arrival, "arrival stream must not shift");
+    }
+    assert!(legacy.iter().all(|r| r.priority == Priority::Interactive));
+}
